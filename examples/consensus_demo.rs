@@ -1,0 +1,128 @@
+//! Consensus-style multi-node convergence (paper §9: decentralized AI /
+//! blockchain nodes "must converge to an identical state after processing
+//! the same inputs").
+//!
+//! Two demonstrations:
+//!   1. In-process [`valori::replication::Cluster`]: a 5-node cluster
+//!      processes 1 000 commands; every node reaches the same state hash;
+//!      a corrupted node is detected by hash comparison and repaired by
+//!      snapshot transfer from the primary.
+//!   2. The same protocol over HTTP: three real `valori` node servers in
+//!      this process, log shipped with `/v1/log` → `/v1/apply`, hashes
+//!      compared via `/v1/hash`.
+//!
+//! Run: `cargo run --release --example consensus_demo`
+
+use std::sync::Arc;
+use valori::http::client;
+use valori::node::{serve, NodeConfig, NodeState};
+use valori::replication::{sync_follower, Cluster};
+use valori::snapshot::Snapshot;
+use valori::state::{Command, Kernel, KernelConfig};
+
+fn main() {
+    in_process_cluster();
+    http_cluster();
+    println!("consensus_demo OK");
+}
+
+fn in_process_cluster() {
+    println!("--- in-process 5-node cluster ---");
+    let mut cluster = Cluster::new(KernelConfig::default_q16(16), 5);
+
+    // the primary orders 1000 commands
+    for i in 0..950u64 {
+        let v: Vec<f32> = (0..16).map(|j| ((i * 16 + j) as f32 * 0.003).sin() * 0.7).collect();
+        cluster.submit(Command::insert(i, v)).unwrap();
+    }
+    for i in 0..25u64 {
+        cluster.submit(Command::Delete { id: i * 7 }).unwrap();
+    }
+    for i in 0..25u64 {
+        let (from, to) = (i * 3 + 1, i * 5 + 2);
+        // skip pairs whose endpoints were tombstoned above
+        if cluster.node(0).contains(from) && cluster.node(0).contains(to) {
+            cluster.submit(Command::Link { from, to }).unwrap();
+        }
+    }
+    cluster.sync_all().unwrap();
+    assert!(cluster.converged());
+    let reports = cluster.verify();
+    for r in &reports {
+        println!("  node {}: seq {} hash {:016x} converged={}", r.node, r.seq, r.hash, r.converged);
+    }
+
+    // corrupt node 3 (single bit in one replayed vector) -> detected
+    assert!(cluster.corrupt_node_for_test(3, 500));
+    let reports = cluster.verify();
+    assert!(!reports[3].converged);
+    println!("  node 3 corrupted (1 bit) -> hash mismatch detected: {:016x}", reports[3].hash);
+
+    // repair by snapshot transfer from the primary (paper §8.1 mechanism)
+    let snap = Snapshot::capture(cluster.node(0));
+    let repaired = snap.restore().unwrap();
+    assert_eq!(repaired.state_hash(), cluster.node(0).state_hash());
+    println!("  node 3 repaired from primary snapshot: hash {:016x}", repaired.state_hash());
+
+    // identical queries on every node return identical raw distances
+    let q: Vec<f32> = (0..16).map(|j| (j as f32 * 0.1).cos() * 0.5).collect();
+    let h0 = cluster.node(0).search_f32(&q, 5).unwrap();
+    for i in [1usize, 2, 4] {
+        assert_eq!(cluster.node(i).search_f32(&q, 5).unwrap(), h0);
+    }
+    println!("  identical k-NN results (ids AND raw distances) on all live nodes");
+}
+
+fn http_cluster() {
+    println!("--- 3-node HTTP cluster ---");
+    let make_node = || {
+        let kernel = Kernel::new(KernelConfig::default_q16(8));
+        let state =
+            Arc::new(NodeState::new(kernel, &NodeConfig::default(), None).unwrap());
+        let server = serve(Arc::clone(&state), "127.0.0.1:0", 2).unwrap();
+        (state, server)
+    };
+    let (primary_state, primary) = make_node();
+    let (_f1_state, f1) = make_node();
+    let (_f2_state, f2) = make_node();
+
+    // clients write to the primary
+    for i in 0..100u64 {
+        let x = i as f32 / 100.0;
+        primary_state
+            .apply(Command::insert(i, vec![x, 1.0 - x, x * x, 0.5, -x, 0.1, 0.0, x / 2.0]))
+            .unwrap();
+    }
+    primary_state.apply(Command::Link { from: 1, to: 2 }).unwrap();
+
+    // ship the log to both followers over HTTP
+    let (n1, h1) = sync_follower(&primary.addr(), &f1.addr(), 0).unwrap();
+    let (n2, h2) = sync_follower(&primary.addr(), &f2.addr(), 0).unwrap();
+    println!("  shipped {n1} commands to follower 1, {n2} to follower 2");
+
+    let (_, hp) = client::get_json(&primary.addr(), "/v1/hash").unwrap();
+    let hp = hp.get("fnv").as_str().unwrap().to_string();
+    println!("  primary hash   = {hp}");
+    println!("  follower1 hash = {h1}");
+    println!("  follower2 hash = {h2}");
+    assert_eq!(hp, h1);
+    assert_eq!(hp, h2);
+    println!("  all three nodes converged (fnv64 over canonical snapshot bytes)");
+
+    // incremental catch-up: more writes, partial sync
+    for i in 100..120u64 {
+        let x = i as f32 / 120.0;
+        primary_state
+            .apply(Command::insert(i, vec![x, -x, 0.2, 0.3, 0.1, 0.0, x, 0.5]))
+            .unwrap();
+    }
+    let (n1b, h1b) = sync_follower(&primary.addr(), &f1.addr(), n1).unwrap();
+    let (_, hp2) = client::get_json(&primary.addr(), "/v1/hash").unwrap();
+    assert_eq!(n1b, 20);
+    assert_eq!(hp2.get("fnv").as_str().unwrap(), h1b);
+    println!("  incremental sync of {n1b} new commands: follower 1 converged again");
+
+    primary.stop();
+    f1.stop();
+    f2.stop();
+}

@@ -1,0 +1,148 @@
+//! End-to-end RAG pipeline — the full three-layer stack on a real small
+//! workload (the mandated E2E driver; results recorded in EXPERIMENTS.md).
+//!
+//! Flow:
+//!   1. Boot the PJRT engine and load the AOT-compiled embedding encoder
+//!      (Layer 1 Pallas attention + Layer 2 JAX model, lowered by
+//!      `make artifacts`), wrapped in the dynamic micro-batcher.
+//!   2. Start the Valori node (Layer 3): HTTP API + WAL + deterministic
+//!      Q16.16 HNSW kernel.
+//!   3. Ingest a synthetic multi-topic corpus *as text* over HTTP — each
+//!      document is embedded in-process by the batcher, quantized at the
+//!      kernel boundary, and indexed.
+//!   4. Serve concurrent text queries; check retrieved documents share the
+//!      query's topic; report throughput/latency and the state hash.
+//!
+//! Run: `make artifacts && cargo run --release --example rag_pipeline`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use valori::corpus::CorpusGen;
+use valori::http::client;
+use valori::json::{parse, Json};
+use valori::node::{serve, EmbedBatcher, NodeConfig, NodeState};
+use valori::runtime::{artifacts_available, artifacts_dir, embedder::Env, Embedder, Engine};
+use valori::state::{Kernel, KernelConfig};
+
+const N_DOCS: usize = 256;
+const N_QUERIES: usize = 64;
+const K: usize = 5;
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // ---- Layer 1+2: AOT embedder behind the batcher -------------------
+    let batcher = EmbedBatcher::start(
+        || {
+            let engine = Engine::cpu()?;
+            println!("PJRT platform: {}", engine.platform());
+            Embedder::load(&engine, artifacts_dir(), Env::A)
+        },
+        Duration::from_millis(2),
+    )
+    .expect("embedder");
+
+    // ---- Layer 3: the node ---------------------------------------------
+    let wal_path = std::env::temp_dir().join(format!("valori_rag_{}.wal", std::process::id()));
+    let kernel = Kernel::new(KernelConfig::default_q16(128));
+    let config = NodeConfig { workers: 8, wal_path: Some(wal_path.clone()) };
+    let state = Arc::new(NodeState::new(kernel, &config, Some(batcher.handle())).unwrap());
+    let server = serve(Arc::clone(&state), "127.0.0.1:0", config.workers).unwrap();
+    let addr = server.addr();
+    println!("valori node on http://{addr}");
+
+    // ---- Ingest corpus as text over HTTP --------------------------------
+    let mut gen = CorpusGen::new(7);
+    let docs = gen.docs(N_DOCS);
+    let t0 = Instant::now();
+    let threads: Vec<_> = docs
+        .chunks((N_DOCS / 8).max(1))
+        .map(|chunk| {
+            let chunk = chunk.to_vec();
+            std::thread::spawn(move || {
+                for d in chunk {
+                    let body = Json::object(vec![
+                        ("id", Json::Int(d.id as i64)),
+                        ("text", Json::str(d.text.clone())),
+                    ]);
+                    let (status, resp) =
+                        client::post_json(&addr, "/v1/insert", &body).expect("insert");
+                    assert_eq!(status, 200, "insert failed: {resp}");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let ingest_s = t0.elapsed().as_secs_f64();
+    println!(
+        "ingested {N_DOCS} text documents in {ingest_s:.2}s ({:.1} docs/s, embed+quantize+index)",
+        N_DOCS as f64 / ingest_s
+    );
+
+    // ---- Query: concurrent text searches --------------------------------
+    let queries: Vec<(usize, String)> =
+        (0..N_QUERIES).map(|i| (i % CorpusGen::n_topics(), gen.query_for_topic(i))).collect();
+    let topic_of: std::collections::HashMap<u64, usize> =
+        docs.iter().map(|d| (d.id, d.topic)).collect();
+
+    let t0 = Instant::now();
+    let mut topic_hits = 0usize;
+    let mut total_hits = 0usize;
+    let mut latencies = Vec::with_capacity(N_QUERIES);
+    for (topic, qtext) in &queries {
+        let body = Json::object(vec![
+            ("text", Json::str(qtext.clone())),
+            ("k", Json::Int(K as i64)),
+        ]);
+        let tq = Instant::now();
+        let (status, resp) = client::post_json(&addr, "/v1/query", &body).expect("query");
+        latencies.push(tq.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(status, 200, "query failed: {resp}");
+        for hit in resp.get("hits").as_array().unwrap() {
+            let id = hit.get("id").as_u64().unwrap();
+            total_hits += 1;
+            if topic_of.get(&id) == Some(topic) {
+                topic_hits += 1;
+            }
+        }
+    }
+    let query_s = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+    let topic_precision = topic_hits as f64 / total_hits as f64;
+    println!(
+        "{N_QUERIES} text queries in {query_s:.2}s ({:.1} q/s) | p50 {p50:.1} ms p99 {p99:.1} ms \
+         (includes embedding)",
+        N_QUERIES as f64 / query_s
+    );
+    println!(
+        "topic precision@{K}: {topic_precision:.3} (fraction of retrieved docs sharing the \
+         query's topic; 5 topics -> random = 0.2)"
+    );
+    assert!(topic_precision > 0.5, "retrieval quality collapsed: {topic_precision}");
+
+    // ---- Determinism spot-checks ----------------------------------------
+    let (_, hash) = client::get_json(&addr, "/v1/hash").unwrap();
+    println!("state hash: fnv={} ", hash.get("fnv").as_str().unwrap());
+
+    // Replay the WAL offline and verify it reproduces the state hash.
+    let rec = valori::wal::recover(&wal_path).expect("wal recover");
+    let mut replayed = Kernel::new(KernelConfig::default_q16(128));
+    valori::wal::replay(&mut replayed, &rec.entries).expect("replay");
+    let replay_hash = format!("{:016x}", replayed.state_hash());
+    assert_eq!(replay_hash, hash.get("fnv").as_str().unwrap(), "WAL replay diverged!");
+    println!("WAL replay of {} commands reproduced the exact state hash", rec.entries.len());
+
+    let (_, stats) = client::get_json(&addr, "/v1/stats").unwrap();
+    println!("node stats: {stats}");
+
+    server.stop();
+    std::fs::remove_file(&wal_path).ok();
+    println!("rag_pipeline OK");
+}

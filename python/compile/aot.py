@@ -1,0 +1,146 @@
+"""AOT compiler: lower every Layer-1/Layer-2 computation to HLO text.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's XLA
+(xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir:
+
+  embedder_enva.hlo.txt   encoder, env A (Pallas attention, sum pooling)
+  embedder_envb.hlo.txt   encoder, env B (jnp attention, cumsum pooling)
+  quantize.hlo.txt        f32[B,D] -> Q16.16 i32[B,D]   (Pallas kernel)
+  distance_q16_l2.hlo.txt   i32[D], i32[N,D] -> i64[N]  (Pallas kernel)
+  distance_q16_dot.hlo.txt  i32[D], i32[N,D] -> i64[N]  (Pallas kernel)
+  distance_f32_l2.hlo.txt   f32[D], f32[N,D] -> f32[N]  (float baseline)
+  weights/<name>.bin      little-endian weight tensors (HLO params)
+  manifest.json           parameter order/shapes/dtypes + model constants
+
+Python runs ONCE at build time (make artifacts); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # i64 accumulators in the kernels
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import fixedpoint as fp  # noqa: E402
+
+DB_ROWS = 1024  # fixed AOT shape for the distance executables (rust pads)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_embedder(env: str) -> str:
+    w = model.init_weights(0)
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in w]
+    ids_spec = jax.ShapeDtypeStruct((model.BATCH, model.SEQ_LEN), jnp.int32)
+    lowered = jax.jit(model.embed_fn(env)).lower(*specs, ids_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_quantize() -> str:
+    spec = jax.ShapeDtypeStruct((model.BATCH, model.D_MODEL), jnp.float32)
+
+    def fn(x):
+        return (fp.quantize(x),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_distance(kind: str) -> str:
+    q = jax.ShapeDtypeStruct((model.D_MODEL,), jnp.int32)
+    db = jax.ShapeDtypeStruct((DB_ROWS, model.D_MODEL), jnp.int32)
+    kernel = fp.l2sq_q16 if kind == "l2" else fp.dot_q16
+
+    def fn(query, database):
+        return (kernel(query, database),)
+
+    return to_hlo_text(jax.jit(fn).lower(q, db))
+
+
+def lower_distance_f32() -> str:
+    q = jax.ShapeDtypeStruct((model.D_MODEL,), jnp.float32)
+    db = jax.ShapeDtypeStruct((DB_ROWS, model.D_MODEL), jnp.float32)
+
+    def fn(query, database):
+        diff = database - query[None, :]
+        return (jnp.sum(diff * diff, axis=1),)
+
+    return to_hlo_text(jax.jit(fn).lower(q, db))
+
+
+def export_weights(out_dir: str) -> dict:
+    """Write weight binaries + the parameter manifest the Rust side reads."""
+    w = model.init_weights(0)
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    params = []
+    for name, arr in zip(model.Weights._fields, w):
+        arr = np.asarray(arr, dtype=np.float32)
+        path = os.path.join(wdir, f"{name}.bin")
+        arr.astype("<f4").tofile(path)
+        params.append({"name": name, "shape": list(arr.shape), "dtype": "f32"})
+    manifest = {
+        "params": params,  # HLO parameter order; token_ids is appended last
+        "model": {
+            "vocab": model.VOCAB,
+            "d_model": model.D_MODEL,
+            "n_heads": model.N_HEADS,
+            "n_layers": model.N_LAYERS,
+            "d_ff": model.D_FF,
+            "seq_len": model.SEQ_LEN,
+            "batch": model.BATCH,
+            "pad_id": model.PAD_ID,
+            "db_rows": DB_ROWS,
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = {
+        "embedder_enva.hlo.txt": lambda: lower_embedder("a"),
+        "embedder_envb.hlo.txt": lambda: lower_embedder("b"),
+        "quantize.hlo.txt": lower_quantize,
+        "distance_q16_l2.hlo.txt": lambda: lower_distance("l2"),
+        "distance_q16_dot.hlo.txt": lambda: lower_distance("dot"),
+        "distance_f32_l2.hlo.txt": lower_distance_f32,
+    }
+    for fname, job in jobs.items():
+        text = job()
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    export_weights(args.out_dir)
+    print(f"wrote {args.out_dir}/weights + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: fused masked scaled-dot-product attention.
+
+This is the compute hot-spot of the embedding encoder (Layer 2). One grid
+step handles one (batch, head) pair; Q, K, V tiles for that pair live in
+VMEM for the whole step, so HBM traffic is one read of Q/K/V and one write
+of O per pair — the FlashAttention-style schedule expressed with BlockSpec
+instead of CUDA threadblocks (DESIGN §3 Hardware-Adaptation).
+
+VMEM footprint per grid step (S=64, Dh=32, f32):
+  Q,K,V,O: 4 * 64*32*4 B = 32 KiB;  scores: 64*64*4 B = 16 KiB  -> ~48 KiB,
+  a comfortable fit in the ~16 MiB TPU VMEM budget; the MXU sees
+  (64x32)@(32x64) and (64x64)@(64x32) matmuls in f32 (bf16-ready).
+
+CPU note: lowered with interpret=True — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Numerics are validated
+against `ref.attention_ref` in python/tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale):
+    """One (batch, head): softmax(Q K^T * scale + bias) V, all in VMEM."""
+    q = q_ref[0, 0]          # [S, Dh]
+    k = k_ref[0, 0]          # [S, Dh]
+    v = v_ref[0, 0]          # [S, Dh]
+    bias = bias_ref[0]       # [S]  additive key bias
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + bias[None, :]
+    # numerically-stable row softmax
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attention(q, k, v, bias, interpret=True):
+    """Fused attention via Pallas.
+
+    Args:
+      q, k, v: f32[B, H, S, Dh]
+      bias:    f32[B, S]
+      interpret: keep True on CPU (see module docstring).
+
+    Returns:
+      f32[B, H, S, Dh]
+    """
+    b, h, s, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    grid = (b, h)
+    qkv_spec = pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0))
+    bias_spec = pl.BlockSpec((1, s), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[qkv_spec, qkv_spec, qkv_spec, bias_spec],
+        out_specs=qkv_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, bias)

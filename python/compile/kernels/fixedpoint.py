@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernels: the Q16.16 boundary + integer distance scan.
+
+These are the *deterministic* kernels: integer-only math past the quantize
+boundary, designed to bit-match the Rust kernel (rust/src/distance) under
+the boundary contract (|raw| <= 2^18, D <= 16384 -> i64 accumulation never
+saturates). Experiment E9 (rust/tests/cross_impl.rs) verifies the bit
+identity end-to-end through PJRT.
+
+TPU mapping: integer ops run on the VPU (8x128 lanes). The distance kernel
+tiles the database into (TILE_N, D) VMEM blocks; the query tile is
+broadcast to every grid step. Requires jax_enable_x64 for the i64
+accumulators (enabled in aot.py and the tests; build-time only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q16_SCALE = 1 << 16
+I32_MIN = -(1 << 31)
+I32_MAX = (1 << 31) - 1
+
+# Database tile rows per grid step. 512 rows x 128 dims x 4 B = 256 KiB in
+# VMEM (plus the i64 accumulator tile) — well under budget.
+TILE_N = 512
+
+
+def _quantize_kernel(x_ref, o_ref):
+    """f32 -> Q16.16 raw int32 (round-ties-even, saturating)."""
+    x = x_ref[...]
+    scaled = x * jnp.float32(Q16_SCALE)
+    scaled = jnp.nan_to_num(scaled, nan=0.0, posinf=float(I32_MAX), neginf=float(I32_MIN))
+    r = jnp.rint(scaled)
+    r = jnp.clip(r, float(I32_MIN), float(I32_MAX))
+    o_ref[...] = r.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize(x, interpret=True):
+    """Quantize a batch of float vectors to Q16.16 raw. f32[B,D] -> i32[B,D]."""
+    return pl.pallas_call(
+        _quantize_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=interpret,
+    )(x)
+
+
+def _l2sq_kernel(q_ref, db_ref, o_ref):
+    """One DB tile: int64 squared-L2 distances against the shared query."""
+    q = q_ref[...].astype(jnp.int64)          # [D]
+    db = db_ref[...].astype(jnp.int64)        # [TILE_N, D]
+    diff = db - q[None, :]
+    o_ref[...] = jnp.sum(diff * diff, axis=1)  # [TILE_N] i64
+
+
+def _dot_kernel(q_ref, db_ref, o_ref):
+    """One DB tile: int64 dot products against the shared query."""
+    q = q_ref[...].astype(jnp.int64)
+    db = db_ref[...].astype(jnp.int64)
+    o_ref[...] = jnp.sum(db * q[None, :], axis=1)
+
+
+def _distance_call(kernel, query, db, interpret):
+    n, d = db.shape
+    assert n % TILE_N == 0, f"db rows ({n}) must be a multiple of TILE_N ({TILE_N})"
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),          # query: same block each step
+            pl.BlockSpec((TILE_N, d), lambda i: (i, 0)),  # db: tile i
+        ],
+        out_specs=pl.BlockSpec((TILE_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int64),
+        interpret=interpret,
+    )(query, db)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def l2sq_q16(query, db, interpret=True):
+    """Integer squared-L2 distances. i32[D], i32[N,D] -> i64[N]."""
+    return _distance_call(_l2sq_kernel, query, db, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dot_q16(query, db, interpret=True):
+    """Integer dot products. i32[D], i32[N,D] -> i64[N]."""
+    return _distance_call(_dot_kernel, query, db, interpret)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops. pytest checks kernel == reference
+(bit-exactly for the integer kernels, to float tolerance for attention).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Q16.16 constants (must match rust/src/fixed/format.rs)
+Q16_FRAC_BITS = 16
+Q16_SCALE = 1 << Q16_FRAC_BITS
+I32_MIN = -(1 << 31)
+I32_MAX = (1 << 31) - 1
+
+
+def attention_ref(q, k, v, bias):
+    """Masked scaled-dot-product attention.
+
+    Args:
+      q, k, v: f32[B, H, S, Dh]
+      bias:    f32[B, S] additive key bias (0 for real tokens, -1e9 for pad)
+
+    Returns:
+      f32[B, H, S, Dh]
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    # scores[b, h, i, j] = q . k * scale + bias[b, j]
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k) * scale
+    scores = scores + bias[:, None, None, :]
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhij,bhjd->bhid", p, v)
+
+
+def quantize_ref(x):
+    """f32 -> Q16.16 raw int32, round-ties-even, saturating.
+
+    Must bit-match `FixedVector::from_f32` on the Rust side (DESIGN §6):
+    one correctly-rounded multiply + jnp.rint (banker's rounding) + clip.
+    """
+    scaled = jnp.asarray(x, jnp.float32) * jnp.float32(Q16_SCALE)
+    scaled = jnp.nan_to_num(scaled, nan=0.0, posinf=float(I32_MAX), neginf=float(I32_MIN))
+    r = jnp.rint(scaled)
+    r = jnp.clip(r, float(I32_MIN), float(I32_MAX))
+    return r.astype(jnp.int32)
+
+
+def dequantize_ref(raw):
+    """Q16.16 raw int32 -> f32 (observability only)."""
+    return raw.astype(jnp.float32) / jnp.float32(Q16_SCALE)
+
+
+def l2sq_q16_ref(query, db):
+    """Integer squared-L2 distances, i64 accumulation.
+
+    Args:
+      query: int32[D]    Q16.16 raw
+      db:    int32[N, D] Q16.16 raw
+
+    Returns:
+      int64[N] — wide Q32.32 distances; bit-matches rust `l2sq_q16` under
+      the boundary contract (|raw| <= 2^18, D <= 16384).
+    """
+    q = query.astype(jnp.int64)
+    d = db.astype(jnp.int64)
+    diff = d - q[None, :]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def dot_q16_ref(query, db):
+    """Integer dot products, i64 accumulation. int64[N]."""
+    q = query.astype(jnp.int64)
+    d = db.astype(jnp.int64)
+    return jnp.sum(d * q[None, :], axis=1)
+
+
+def layernorm_ref(x, g, b, eps=1e-5):
+    """LayerNorm over the last axis (float domain — outside the boundary)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b

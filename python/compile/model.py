@@ -1,0 +1,198 @@
+"""Layer-2: the MiniLM-shaped JAX embedding encoder.
+
+Substitute for `sentence-transformers/all-MiniLM-L6-v2` (DESIGN §2): a
+4-layer post-LN transformer encoder, d_model=128, 4 heads, FFN 512,
+vocab 4096, seq 64, masked-mean pooling + L2 normalization. Weights are
+deterministic (PRNGKey(0)) and are *runtime parameters* of the lowered HLO,
+exported separately as little-endian binaries — exactly how a served model
+ships, and it keeps the HLO text small.
+
+Two lowerings of the same mathematics simulate the paper's two machines
+(Table 1, §2.1 mechanism — reduction order / fused-kernel differences):
+
+* env A — attention through the Pallas fused kernel; plain f32 evaluation
+  (one rounding per operation).
+* env B — attention through the pure-jnp reference path; the encoder is
+  evaluated with extended-precision (f64) intermediates and rounded to f32
+  once at the end — precisely the FMA/extended-precision mechanism of
+  paper §2.1 ("a×b+c can be computed with a single rounding step (FMA) or
+  two; these yield slightly different results"), as an x87/FMA/TF32-style
+  backend legally does. The divergence compounds through layers exactly
+  like it does across real ISAs. (A pure *reordering* difference is not
+  enough here: XLA CPU's default fast-math reassociates f32 reductions,
+  folding both orders into the same code — itself a tidy demonstration of
+  how compilers legally change float results.)
+
+Both are IEEE-754-legal evaluations of the same function; their outputs
+differ at the bit level on the same host, which is the root cause the
+paper demonstrates across x86 vs ARM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import ref as kref
+
+# Architecture constants — shared with the Rust runtime via the weight
+# manifest written by aot.py.
+VOCAB = 4096
+D_MODEL = 128
+N_HEADS = 4
+D_HEAD = D_MODEL // N_HEADS
+N_LAYERS = 4
+D_FF = 512
+SEQ_LEN = 64
+BATCH = 8
+
+PAD_ID = 0  # token id 0 is reserved for padding
+
+
+class Weights(NamedTuple):
+    """Stacked per-layer weights (leading axis = layer) + embeddings."""
+
+    tok_emb: jax.Array   # [VOCAB, D_MODEL]
+    pos_emb: jax.Array   # [SEQ_LEN, D_MODEL]
+    ln1_g: jax.Array     # [L, D]
+    ln1_b: jax.Array     # [L, D]
+    wqkv: jax.Array      # [L, D, 3D]
+    bqkv: jax.Array      # [L, 3D]
+    wo: jax.Array        # [L, D, D]
+    bo: jax.Array        # [L, D]
+    ln2_g: jax.Array     # [L, D]
+    ln2_b: jax.Array     # [L, D]
+    w1: jax.Array        # [L, D, F]
+    b1: jax.Array        # [L, F]
+    w2: jax.Array        # [L, F, D]
+    b2: jax.Array        # [L, D]
+    lnf_g: jax.Array     # [D]
+    lnf_b: jax.Array     # [D]
+
+
+def init_weights(seed: int = 0) -> Weights:
+    """Deterministic Xavier-ish init from a fixed PRNG key."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 16)
+    L, D, F = N_LAYERS, D_MODEL, D_FF
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(jnp.float32(fan_in)))
+
+    # Residual-branch outputs (wo, w2) are scaled down (µP-style small
+    # init) so the residual stream stays dominated by the token-identity
+    # signal: an *untrained* encoder then still maps texts with shared
+    # vocabulary near each other (bag-of-words-like), which the corpus
+    # retrieval experiments need, while keeping real transformer compute
+    # in the pipeline.
+    return Weights(
+        tok_emb=dense(ks[0], (VOCAB, D), D) * 4.0,  # wider spread for token identity
+        pos_emb=dense(ks[1], (SEQ_LEN, D), D) * 0.3,
+        ln1_g=jnp.ones((L, D), jnp.float32),
+        ln1_b=jnp.zeros((L, D), jnp.float32),
+        wqkv=dense(ks[2], (L, D, 3 * D), D),
+        bqkv=jnp.zeros((L, 3 * D), jnp.float32),
+        wo=dense(ks[3], (L, D, D), D) * 0.1,
+        bo=jnp.zeros((L, D), jnp.float32),
+        ln2_g=jnp.ones((L, D), jnp.float32),
+        ln2_b=jnp.zeros((L, D), jnp.float32),
+        w1=dense(ks[4], (L, D, F), D),
+        b1=jnp.zeros((L, F), jnp.float32),
+        w2=dense(ks[5], (L, F, D), F) * 0.1,
+        b2=jnp.zeros((L, D), jnp.float32),
+        lnf_g=jnp.ones((D,), jnp.float32),
+        lnf_b=jnp.zeros((D,), jnp.float32),
+    )
+
+
+def _attention_env_a(q, k, v, bias):
+    """env A: the Pallas fused kernel (interpret mode on CPU)."""
+    return attn_kernel.attention(q, k, v, bias)
+
+
+def _attention_env_b(q, k, v, bias):
+    """env B: mathematically identical pure-jnp path (different fusion /
+    reduction structure after XLA lowering)."""
+    return kref.attention_ref(q, k, v, bias)
+
+
+def encoder(w: Weights, token_ids, env: str = "a"):
+    """Embed a batch of token sequences.
+
+    Args:
+      w: model weights.
+      token_ids: int32[B, S]; id 0 = padding.
+      env: "a" or "b" — which evaluation environment to simulate.
+
+    Returns:
+      f32[B, D_MODEL], L2-normalized embeddings.
+    """
+    assert env in ("a", "b")
+    attn_fn = _attention_env_a if env == "a" else _attention_env_b
+    b, s = token_ids.shape
+
+    mask = (token_ids != PAD_ID).astype(jnp.float32)            # [B, S]
+    bias = (1.0 - mask) * jnp.float32(-1e9)                      # additive key bias
+
+    x = w.tok_emb[token_ids] + w.pos_emb[None, :s, :]            # [B, S, D]
+
+    # env B evaluates the encoder with extended-precision intermediates
+    # (f64) and rounds to f32 once at the end — the legal IEEE-754
+    # evaluation an FMA/x87/TF32-style backend produces (paper §2.1: one
+    # rounding vs two). The divergence then compounds through every layer,
+    # as it does across real ISAs. env A is plain f32 throughout.
+    if env == "b":
+        x = x.astype(jnp.float64)
+        bias = bias.astype(jnp.float64)
+
+    for layer in range(N_LAYERS):
+        h = kref.layernorm_ref(x, w.ln1_g[layer], w.ln1_b[layer])
+        qkv = h @ w.wqkv[layer] + w.bqkv[layer]                  # [B, S, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, N_HEADS, D_HEAD).transpose(0, 2, 1, 3)
+
+        o = attn_fn(heads(q), heads(k), heads(v), bias)          # [B, H, S, Dh]
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, D_MODEL)
+        x = x + o @ w.wo[layer] + w.bo[layer]
+
+        h2 = kref.layernorm_ref(x, w.ln2_g[layer], w.ln2_b[layer])
+        ff = jax.nn.gelu(h2 @ w.w1[layer] + w.b1[layer])
+        x = x + ff @ w.w2[layer] + w.b2[layer]
+
+    x = kref.layernorm_ref(x, w.lnf_g, w.lnf_b)                  # [B, S, D]
+
+    # Masked mean pooling. env A: f32 accumulation (a rounding per step).
+    # env B: f64 intermediate accumulation, rounded once at the end — the
+    # FMA/extended-precision mechanism of paper §2.1. Mathematically the
+    # same mean; bitwise different.
+    xm = x * mask[:, :, None].astype(x.dtype)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0).astype(x.dtype)
+    pooled = jnp.sum(xm, axis=1)
+    norm_sq = jnp.sum(pooled * pooled, axis=-1, keepdims=True)
+    pooled = pooled / denom
+    norm = jnp.sqrt(norm_sq) / denom
+    out = pooled / jnp.maximum(norm, 1e-9)
+    # single final rounding for env B (f64 -> f32)
+    return out.astype(jnp.float32)
+
+
+def embed_fn(env: str):
+    """The function aot.py lowers: (weights..., token_ids) -> (embeddings,)."""
+
+    def fn(*args):
+        w = Weights(*args[:-1])
+        token_ids = args[-1]
+        return (encoder(w, token_ids, env=env),)
+
+    return fn
+
+
+@functools.lru_cache(maxsize=2)
+def jitted_encoder(env: str):
+    return jax.jit(functools.partial(encoder, env=env), static_argnames=())

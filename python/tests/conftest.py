@@ -1,0 +1,14 @@
+"""Shared test config: enable x64 before any jax computation (the integer
+distance kernels accumulate in i64), and expose common fixtures."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

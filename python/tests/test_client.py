@@ -1,0 +1,110 @@
+"""Integration: the Python FFI/HTTP client against a real `valori serve`
+process (Figure 1's Python interface layer, end to end).
+
+Skipped when the release binary has not been built yet.
+"""
+
+import os
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from valori_client import ValoriClient, ValoriError, replicate  # noqa: E402
+
+BIN = os.path.join(os.path.dirname(__file__), "..", "..", "target", "release", "valori")
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@pytest.fixture(scope="module")
+def node():
+    if not os.path.exists(BIN):
+        pytest.skip("release binary not built (cargo build --release)")
+    port = free_port()
+    proc = subprocess.Popen(
+        [BIN, "serve", "--addr", f"127.0.0.1:{port}", "--dim", "4", "--no-embedder"],
+        stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL,
+    )
+    client = ValoriClient(f"http://127.0.0.1:{port}")
+    for _ in range(100):
+        if client.health():
+            break
+        time.sleep(0.05)
+    else:
+        proc.kill()
+        pytest.skip("node did not come up")
+    yield client
+    proc.send_signal(signal.SIGKILL)
+    proc.wait()
+
+
+def test_insert_query_roundtrip(node):
+    node.insert(1, vector=[0.1, 0.2, 0.3, 0.4])
+    node.insert(2, vector=[0.9, 0.8, 0.7, 0.6])
+    hits = node.query(vector=[0.1, 0.2, 0.3, 0.4], k=2)
+    assert hits[0]["id"] == 1
+    assert hits[0]["dist_raw"] == 0
+
+
+def test_batch_link_meta_delete(node):
+    node.insert_batch([(10, [0.5, 0, 0, 0]), (11, [0, 0.5, 0, 0])])
+    node.link(10, 11)
+    node.set_meta(10, "source", "pytest")
+    stats = node.stats()
+    assert stats["vectors"] >= 4
+    node.delete(11)
+    with pytest.raises(ValoriError) as e:
+        node.delete(11)
+    assert e.value.status == 404
+
+
+def test_duplicate_id_is_conflict(node):
+    with pytest.raises(ValoriError) as e:
+        node.insert(1, vector=[0, 0, 0, 0])
+    assert e.value.status == 409
+
+
+def test_state_hash_shape(node):
+    h = node.state_hash()
+    assert len(h["fnv"]) == 16
+    assert len(h["sha256"]) == 64
+    assert h["seq"] > 0
+
+
+def test_log_feed_and_python_side_replication(node):
+    if not os.path.exists(BIN):
+        pytest.skip("no binary")
+    # spin a follower and replicate from python (the §9 protocol)
+    port = free_port()
+    proc = subprocess.Popen(
+        [BIN, "serve", "--addr", f"127.0.0.1:{port}", "--dim", "4", "--no-embedder"],
+        stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL,
+    )
+    try:
+        follower = ValoriClient(f"http://127.0.0.1:{port}")
+        for _ in range(100):
+            if follower.health():
+                break
+            time.sleep(0.05)
+        follower_hash = replicate(node, follower)
+        assert follower_hash == node.state_hash()["fnv"]
+    finally:
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+
+
+def test_text_endpoints_without_embedder(node):
+    with pytest.raises(ValoriError) as e:
+        node.query(text="anything", k=3)
+    assert e.value.status == 503

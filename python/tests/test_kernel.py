@@ -1,0 +1,190 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The integer kernels (quantize, distances) must match bit-exactly — they sit
+inside the determinism boundary. Attention is float (outside the boundary)
+and is checked to tolerance. Hypothesis sweeps shapes/values.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn
+from compile.kernels import fixedpoint as fp
+from compile.kernels import ref
+
+Q16_SCALE = 1 << 16
+
+
+# ---------------------------------------------------------------- attention
+class TestAttention:
+    def _rand_qkv(self, rng, b=2, h=2, s=16, dh=8):
+        shape = (b, h, s, dh)
+        q = rng.standard_normal(shape, dtype=np.float32)
+        k = rng.standard_normal(shape, dtype=np.float32)
+        v = rng.standard_normal(shape, dtype=np.float32)
+        bias = np.zeros((b, s), dtype=np.float32)
+        return q, k, v, bias
+
+    def test_matches_reference_unmasked(self, rng):
+        q, k, v, bias = self._rand_qkv(rng)
+        out = np.asarray(attn.attention(q, k, v, bias))
+        want = np.asarray(ref.attention_ref(q, k, v, bias))
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    def test_matches_reference_masked(self, rng):
+        q, k, v, bias = self._rand_qkv(rng, b=3, s=12)
+        bias[:, 7:] = -1e9  # pad out the tail keys
+        out = np.asarray(attn.attention(q, k, v, bias))
+        want = np.asarray(ref.attention_ref(q, k, v, bias))
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    def test_fully_masked_key_gets_no_weight(self, rng):
+        q, k, v, bias = self._rand_qkv(rng, b=1, h=1, s=4, dh=4)
+        bias[:, 3] = -1e9
+        v2 = v.copy()
+        v2[:, :, 3, :] = 1e6  # junk in the masked position
+        out1 = np.asarray(attn.attention(q, k, v, bias))
+        out2 = np.asarray(attn.attention(q, k, v2, bias))
+        np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+    def test_softmax_rows_are_convex_combination(self, rng):
+        q, k, v, bias = self._rand_qkv(rng, b=1, h=1, s=8, dh=4)
+        out = np.asarray(attn.attention(q, k, v, bias))
+        # outputs stay within the convex hull bounds of v rows
+        assert out.max() <= v.max() + 1e-4
+        assert out.min() >= v.min() - 1e-4
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        s=st.integers(2, 24),
+        dh=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, b, h, s, dh, seed):
+        rng = np.random.default_rng(seed)
+        q = rng.standard_normal((b, h, s, dh), dtype=np.float32)
+        k = rng.standard_normal((b, h, s, dh), dtype=np.float32)
+        v = rng.standard_normal((b, h, s, dh), dtype=np.float32)
+        bias = np.where(rng.random((b, s)) < 0.2, -1e9, 0.0).astype(np.float32)
+        # never mask *all* keys of a row (softmax would be degenerate)
+        bias[:, 0] = 0.0
+        out = np.asarray(attn.attention(q, k, v, bias))
+        want = np.asarray(ref.attention_ref(q, k, v, bias))
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- quantize
+def quantize_numpy(x):
+    """Independent numpy model of the Rust boundary (round-ties-even,
+    saturating) — NOT implemented via the jnp reference."""
+    scaled = np.asarray(x, np.float64) * Q16_SCALE
+    scaled = np.nan_to_num(scaled, nan=0.0, posinf=2**31 - 1, neginf=-(2**31))
+    r = np.rint(scaled)  # banker's rounding
+    r = np.clip(r, -(2**31), 2**31 - 1)
+    return r.astype(np.int32)
+
+
+class TestQuantize:
+    def test_matches_ref_and_numpy(self, rng):
+        x = rng.uniform(-2.0, 2.0, size=(8, 128)).astype(np.float32)
+        out = np.asarray(fp.quantize(x))
+        np.testing.assert_array_equal(out, np.asarray(ref.quantize_ref(x)))
+        np.testing.assert_array_equal(out, quantize_numpy(x.astype(np.float64)))
+
+    def test_exact_values(self):
+        x = np.array([[0.0, 1.0, -1.0, 0.5, -0.5]], dtype=np.float32)
+        out = np.asarray(fp.quantize(x))[0]
+        np.testing.assert_array_equal(out, [0, 65536, -65536, 32768, -32768])
+
+    def test_ties_round_to_even(self):
+        # 2.5/65536 ties between raw 2 and 3 -> 2 ; 3.5/65536 -> 4
+        x = np.array([[2.5 / 65536, 3.5 / 65536, -2.5 / 65536]], dtype=np.float32)
+        out = np.asarray(fp.quantize(x))[0]
+        np.testing.assert_array_equal(out, [2, 4, -2])
+
+    def test_saturation(self):
+        x = np.array([[1e30, -1e30, np.inf, -np.inf]], dtype=np.float32)
+        out = np.asarray(fp.quantize(x))[0]
+        np.testing.assert_array_equal(out, [2**31 - 1, -(2**31), 2**31 - 1, -(2**31)])
+
+    def test_nan_maps_to_zero(self):
+        x = np.array([[np.nan]], dtype=np.float32)
+        assert np.asarray(fp.quantize(x))[0, 0] == 0
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([0.01, 1.0, 100.0, 30000.0]))
+    def test_hypothesis_matches_numpy(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        x = (rng.standard_normal((4, 64)) * scale).astype(np.float32)
+        out = np.asarray(fp.quantize(x))
+        np.testing.assert_array_equal(out, quantize_numpy(x.astype(np.float64)))
+
+
+# ---------------------------------------------------------------- distances
+def rust_model_l2(query, db):
+    """Independent numpy model of rust `l2sq_q16` (i64 accumulate)."""
+    q = query.astype(np.int64)
+    d = db.astype(np.int64)
+    diff = d - q[None, :]
+    return np.sum(diff * diff, axis=1)
+
+
+def rust_model_dot(query, db):
+    q = query.astype(np.int64)
+    d = db.astype(np.int64)
+    return np.sum(d * q[None, :], axis=1)
+
+
+class TestDistances:
+    def _rand_q16(self, rng, n, d, bound=2**18):
+        return rng.integers(-bound, bound, size=(n, d), dtype=np.int64).astype(np.int32)
+
+    def test_l2_bit_exact(self, rng):
+        db = self._rand_q16(rng, fp.TILE_N * 2, 128)
+        q = self._rand_q16(rng, 1, 128)[0]
+        out = np.asarray(fp.l2sq_q16(q, db))
+        assert out.dtype == np.int64
+        np.testing.assert_array_equal(out, np.asarray(ref.l2sq_q16_ref(q, db)))
+        np.testing.assert_array_equal(out, rust_model_l2(q, db))
+
+    def test_dot_bit_exact(self, rng):
+        db = self._rand_q16(rng, fp.TILE_N, 128)
+        q = self._rand_q16(rng, 1, 128)[0]
+        out = np.asarray(fp.dot_q16(q, db))
+        np.testing.assert_array_equal(out, np.asarray(ref.dot_q16_ref(q, db)))
+        np.testing.assert_array_equal(out, rust_model_dot(q, db))
+
+    def test_zero_distance_to_self(self, rng):
+        db = self._rand_q16(rng, fp.TILE_N, 64)
+        out = np.asarray(fp.l2sq_q16(db[0], db))
+        assert out[0] == 0
+        assert (out >= 0).all()
+
+    def test_rejects_non_tile_multiple(self, rng):
+        db = self._rand_q16(rng, fp.TILE_N + 1, 64)
+        q = db[0]
+        with pytest.raises(AssertionError):
+            fp.l2sq_q16(q, db)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        d=st.sampled_from([8, 64, 128, 384]),
+        tiles=st.integers(1, 3),
+    )
+    def test_hypothesis_bit_exact(self, seed, d, tiles):
+        rng = np.random.default_rng(seed)
+        db = self._rand_q16(rng, fp.TILE_N * tiles, d)
+        q = self._rand_q16(rng, 1, d)[0]
+        np.testing.assert_array_equal(np.asarray(fp.l2sq_q16(q, db)), rust_model_l2(q, db))
+        np.testing.assert_array_equal(np.asarray(fp.dot_q16(q, db)), rust_model_dot(q, db))
+
+    def test_determinism_across_runs(self, rng):
+        db = self._rand_q16(rng, fp.TILE_N, 128)
+        q = self._rand_q16(rng, 1, 128)[0]
+        a = np.asarray(fp.l2sq_q16(q, db))
+        for _ in range(3):
+            np.testing.assert_array_equal(a, np.asarray(fp.l2sq_q16(q, db)))

@@ -1,0 +1,133 @@
+"""Python client for a running Valori node — the "Python FFI" interface
+layer of the paper's Figure 1, implemented over the node's HTTP API.
+
+Stdlib-only (urllib), so it works in any environment the node runs in.
+
+    from valori_client import ValoriClient
+    c = ValoriClient("http://127.0.0.1:7431")
+    c.insert(1, text="Revenue for April")
+    hits = c.query(text="profit in april", k=5)
+    print(c.state_hash())
+
+Determinism note: the client is *outside* the boundary; everything it
+submits is validated and quantized by the kernel, and `state_hash()` /
+`log()` expose the replica-comparison surface.
+"""
+
+from __future__ import annotations
+
+import json
+import urllib.error
+import urllib.request
+from typing import Any, Optional
+
+
+class ValoriError(RuntimeError):
+    """Server-side rejection (4xx/5xx) with the decoded error message."""
+
+    def __init__(self, status: int, message: str):
+        super().__init__(f"valori: HTTP {status}: {message}")
+        self.status = status
+        self.message = message
+
+
+class ValoriClient:
+    def __init__(self, base_url: str = "http://127.0.0.1:7431", timeout: float = 30.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+
+    # ------------------------------------------------------------- http
+    def _request(self, method: str, path: str, body: Optional[dict] = None) -> Any:
+        data = json.dumps(body).encode() if body is not None else None
+        req = urllib.request.Request(
+            self.base_url + path, data=data, method=method,
+            headers={"content-type": "application/json"},
+        )
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                return json.loads(resp.read().decode())
+        except urllib.error.HTTPError as e:
+            try:
+                payload = json.loads(e.read().decode())
+                msg = payload.get("error", str(payload))
+            except Exception:
+                msg = e.reason
+            raise ValoriError(e.code, msg) from None
+
+    # ------------------------------------------------------------ writes
+    def insert(self, id: int, vector: Optional[list] = None, text: Optional[str] = None) -> int:
+        """Insert a vector (or a text, embedded server-side). Returns seq."""
+        body: dict = {"id": id}
+        if vector is not None:
+            body["vector"] = vector
+        elif text is not None:
+            body["text"] = text
+        else:
+            raise ValueError("need vector or text")
+        return self._request("POST", "/v1/insert", body)["seq"]
+
+    def insert_batch(self, items: list) -> int:
+        """Insert [(id, vector), ...] atomically (canonical id order)."""
+        body = {"items": [{"id": i, "vector": v} for i, v in items]}
+        return self._request("POST", "/v1/insert_batch", body)["seq"]
+
+    def delete(self, id: int) -> None:
+        self._request("POST", "/v1/delete", {"id": id})
+
+    def link(self, from_id: int, to_id: int) -> None:
+        self._request("POST", "/v1/link", {"from": from_id, "to": to_id})
+
+    def unlink(self, from_id: int, to_id: int) -> None:
+        self._request("POST", "/v1/unlink", {"from": from_id, "to": to_id})
+
+    def set_meta(self, id: int, key: str, value: str) -> None:
+        self._request("POST", "/v1/meta", {"id": id, "key": key, "value": value})
+
+    # ------------------------------------------------------------- reads
+    def query(self, vector: Optional[list] = None, text: Optional[str] = None, k: int = 10) -> list:
+        """k-NN search; returns [{id, dist, dist_raw}, ...]."""
+        body: dict = {"k": k}
+        if vector is not None:
+            body["vector"] = vector
+        elif text is not None:
+            body["text"] = text
+        else:
+            raise ValueError("need vector or text")
+        return self._request("POST", "/v1/query", body)["hits"]
+
+    def embed(self, texts: list) -> list:
+        """Embed texts through the node's AOT model (no insertion)."""
+        return self._request("POST", "/v1/embed", {"texts": texts})["embeddings"]
+
+    def stats(self) -> dict:
+        return self._request("GET", "/v1/stats")
+
+    def state_hash(self) -> dict:
+        """{'fnv': hex, 'sha256': hex, 'seq': int} — compare across nodes."""
+        return self._request("GET", "/v1/hash")
+
+    def log(self, from_seq: int = 0) -> dict:
+        """Canonical command feed (hex-encoded) for replication/audit."""
+        return self._request("GET", f"/v1/log?from={from_seq}")
+
+    def apply(self, hex_commands: list) -> dict:
+        """Apply canonical commands (follower ingest)."""
+        return self._request("POST", "/v1/apply", {"commands": hex_commands})
+
+    def health(self) -> bool:
+        try:
+            return bool(self._request("GET", "/v1/health").get("ok"))
+        except Exception:
+            return False
+
+
+def replicate(primary: "ValoriClient", follower: "ValoriClient", from_seq: int = 0) -> str:
+    """Ship the primary's log to a follower; returns the follower's hash.
+
+    The §9 convergence protocol in four lines of Python.
+    """
+    feed = primary.log(from_seq)
+    cmds = feed["commands"]
+    if cmds:
+        return follower.apply(cmds)["hash"]
+    return follower.state_hash()["fnv"]

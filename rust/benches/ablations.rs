@@ -1,0 +1,120 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. HNSW neighbor selection: diversity heuristic vs simple M-closest
+//!    (recall on clustered data — why we ship the heuristic).
+//! 2. ef_search sweep: the recall/latency trade-off behind the default.
+//! 3. Precision-contract ablation: recall of Q8.24 / Q16.16 / Q32.32
+//!    against the f32 ranking (Table 2's contract axis, quantified).
+//! 4. Wide-accumulator necessity: i32 accumulation (naive) overflows and
+//!    corrupts rankings; i64 does not (paper §5.1's accumulator rule).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use valori::distance::{Metric, Scalar};
+use valori::experiments::{recall_overlap, synthetic_embeddings};
+use valori::fixed::{FixedFormat, Q16_16, Q32_32, Q8_24};
+use valori::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
+
+fn main() {
+    ef_search_sweep();
+    contract_recall();
+    accumulator_width();
+}
+
+fn ef_search_sweep() {
+    println!("\n=== ablation: ef_search (clustered 2000×64, 16 clusters, k=10) ===");
+    let data = synthetic_embeddings(2000, 64, 16, 3);
+    let queries = synthetic_embeddings(40, 64, 16, 99);
+    println!("{:>10} {:>10} {:>14}", "ef_search", "recall@10", "p50 latency");
+    for efs in [16usize, 32, 64, 128, 256] {
+        let params = HnswParams { ef_search: efs, ..Default::default() };
+        let mut h: Hnsw<i32> = Hnsw::new(64, Metric::L2, params);
+        let mut f: FlatIndex<i32> = FlatIndex::new(64, Metric::L2);
+        for (id, v) in data.iter().enumerate() {
+            let raw: Vec<i32> = v.iter().map(|&x| Q16_16::quantize(x as f64)).collect();
+            h.insert(id as u64, raw.clone());
+            f.insert(id as u64, raw);
+        }
+        let mut sum = 0.0;
+        let mut times = Vec::new();
+        for q in &queries {
+            let raw: Vec<i32> = q.iter().map(|&x| Q16_16::quantize(x as f64)).collect();
+            let t0 = std::time::Instant::now();
+            let hh: Vec<u64> = h.search(&raw, 10).iter().map(|x| x.id).collect();
+            times.push(t0.elapsed().as_nanos() as f64);
+            let fh: Vec<u64> = f.search(&raw, 10).iter().map(|x| x.id).collect();
+            sum += recall_overlap(&fh, &hh);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "{:>10} {:>10.3} {:>14}",
+            efs,
+            sum / queries.len() as f64,
+            valori::bench::fmt_ns(times[times.len() / 2])
+        );
+    }
+    println!("(default ef_search = 128: past the knee of the recall curve)");
+}
+
+fn contract_recall() {
+    println!("\n=== ablation: precision contract vs f32 ranking (1000×128, k=10) ===");
+    let data = synthetic_embeddings(1000, 128, 12, 21);
+    let queries = synthetic_embeddings(50, 128, 12, 77);
+    // exact f32 ground truth
+    let mut exact: FlatIndex<f32> = FlatIndex::new(128, Metric::L2);
+    for (id, v) in data.iter().enumerate() {
+        exact.insert(id as u64, v.clone());
+    }
+
+    fn run_contract<F: FixedFormat>(
+        data: &[Vec<f32>],
+        queries: &[Vec<f32>],
+        exact: &FlatIndex<f32>,
+    ) -> f64
+    where
+        F::Raw: Scalar,
+    {
+        let mut flat: FlatIndex<F::Raw> = FlatIndex::new(128, Metric::L2);
+        for (id, v) in data.iter().enumerate() {
+            flat.insert(id as u64, v.iter().map(|&x| F::quantize(x as f64)).collect());
+        }
+        let mut sum = 0.0;
+        for q in queries {
+            let raw: Vec<F::Raw> = q.iter().map(|&x| F::quantize(x as f64)).collect();
+            let got: Vec<u64> = flat.search(&raw, 10).iter().map(|x| x.id).collect();
+            let want: Vec<u64> = exact.search(q, 10).iter().map(|x| x.id).collect();
+            sum += recall_overlap(&want, &got);
+        }
+        sum / queries.len() as f64
+    }
+
+    println!("{:>8} {:>12}", "format", "recall@10");
+    println!("{:>8} {:>12.4}", "Q8.24", run_contract::<Q8_24>(&data, &queries, &exact));
+    println!("{:>8} {:>12.4}", "Q16.16", run_contract::<Q16_16>(&data, &queries, &exact));
+    println!("{:>8} {:>12.4}", "Q32.32", run_contract::<Q32_32>(&data, &queries, &exact));
+    println!("(exact scans: differences are pure quantization, no index noise)");
+}
+
+fn accumulator_width() {
+    println!("\n=== ablation: accumulator width (paper §5.1 'use i64 or wider') ===");
+    // adversarial-but-legal inputs: max-magnitude contract values, all
+    // aligned so the true sum is far outside i32 range
+    let dim = 4096;
+    let a: Vec<i32> = (0..dim).map(|_| 1 << 18).collect();
+    let b: Vec<i32> = (0..dim).map(|_| 1 << 18).collect();
+    // correct: i64 accumulation
+    let correct = valori::distance::dot_q16(&a, &b);
+    // naive: i32 accumulation wraps
+    let mut naive: i32 = 0;
+    let mut wrapped = false;
+    for i in 0..dim {
+        let prod = (a[i] as i64) * (b[i] as i64);
+        let (acc, over) = naive.overflowing_add(prod as i32);
+        naive = acc;
+        wrapped |= over || prod > i32::MAX as i64 || prod < i32::MIN as i64;
+    }
+    println!("i64 accumulator: {correct} (exact)");
+    println!("i32 accumulator: {naive} (wrapped: {wrapped}) — silently wrong rankings");
+    assert_ne!(correct, naive as i64);
+    println!("(this is why the boundary contract + wide accumulators are non-negotiable)");
+}

@@ -1,0 +1,163 @@
+//! End-to-end serving benchmark (Figure 1's full stack): HTTP node +
+//! dynamic batcher + AOT embedder + deterministic kernel, measured from a
+//! client's point of view.
+//!
+//! Run: `make artifacts && cargo bench --bench e2e_throughput`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use valori::corpus::CorpusGen;
+use valori::http::client;
+use valori::json::Json;
+use valori::node::{serve, EmbedBatcher, NodeConfig, NodeState};
+use valori::runtime::{artifacts_available, artifacts_dir, embedder::Env, Embedder, Engine};
+use valori::state::{Kernel, KernelConfig};
+
+fn main() {
+    let quick = std::env::var("VALORI_BENCH_QUICK").is_ok();
+    let n_docs = if quick { 64 } else { 256 };
+    let n_queries = if quick { 64 } else { 256 };
+
+    // ---- vector-only serving (no embedder needed) -----------------------
+    vector_api_throughput(n_docs * 4, n_queries * 4);
+
+    // ---- full text path (needs artifacts) --------------------------------
+    if !artifacts_available() {
+        println!("\n(artifacts not built — skipping the text/embedding path)");
+        return;
+    }
+    text_api_throughput(n_docs, n_queries);
+}
+
+fn vector_api_throughput(n_docs: usize, n_queries: usize) {
+    let kernel = Kernel::new(KernelConfig::default_q16(128));
+    let state =
+        Arc::new(NodeState::new(kernel, &NodeConfig { workers: 8, wal_path: None }, None).unwrap());
+    let server = serve(Arc::clone(&state), "127.0.0.1:0", 8).unwrap();
+    let addr = server.addr();
+
+    let vectors = valori::experiments::synthetic_embeddings(n_docs, 128, 16, 5);
+    let t0 = Instant::now();
+    for (id, v) in vectors.iter().enumerate() {
+        let body = Json::object(vec![
+            ("id", Json::Int(id as i64)),
+            ("vector", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
+        ]);
+        let (status, _) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+        assert_eq!(status, 200);
+    }
+    let insert_s = t0.elapsed().as_secs_f64();
+
+    let queries = valori::experiments::synthetic_embeddings(n_queries, 128, 16, 9);
+    let t0 = Instant::now();
+    let mut lat = Vec::with_capacity(n_queries);
+    for q in &queries {
+        let body = Json::object(vec![
+            ("vector", Json::Array(q.iter().map(|&x| Json::Float(x as f64)).collect())),
+            ("k", Json::Int(10)),
+        ]);
+        let tq = Instant::now();
+        let (status, _) = client::post_json(&addr, "/v1/query", &body).unwrap();
+        lat.push(tq.elapsed().as_secs_f64() * 1e6);
+        assert_eq!(status, 200);
+    }
+    let query_s = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    println!("\n=== e2e vector API over HTTP ({n_docs} inserts, {n_queries} queries) ===");
+    println!(
+        "inserts: {:.0}/s | queries: {:.0}/s | query p50 {:.0} µs p99 {:.0} µs (incl. HTTP + JSON)",
+        n_docs as f64 / insert_s,
+        n_queries as f64 / query_s,
+        lat[lat.len() / 2],
+        lat[(lat.len() * 99 / 100).min(lat.len() - 1)]
+    );
+    server.stop();
+}
+
+fn text_api_throughput(n_docs: usize, n_queries: usize) {
+    let batcher = EmbedBatcher::start(
+        || {
+            let engine = Engine::cpu()?;
+            Embedder::load(&engine, artifacts_dir(), Env::A)
+        },
+        Duration::from_millis(2),
+    )
+    .expect("embedder");
+    let kernel = Kernel::new(KernelConfig::default_q16(128));
+    let state = Arc::new(
+        NodeState::new(kernel, &NodeConfig { workers: 8, wal_path: None }, Some(batcher.handle()))
+            .unwrap(),
+    );
+    let server = serve(Arc::clone(&state), "127.0.0.1:0", 8).unwrap();
+    let addr = server.addr();
+
+    let mut gen = CorpusGen::new(17);
+    let docs = gen.docs(n_docs);
+
+    // Concurrent text ingest: 8 client threads → the batcher fuses
+    // embedding calls into full batches.
+    let t0 = Instant::now();
+    let threads: Vec<_> = docs
+        .chunks(n_docs.div_ceil(8))
+        .map(|chunk| {
+            let chunk = chunk.to_vec();
+            std::thread::spawn(move || {
+                for d in chunk {
+                    let body = Json::object(vec![
+                        ("id", Json::Int(d.id as i64)),
+                        ("text", Json::str(d.text.clone())),
+                    ]);
+                    let (status, _) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+                    assert_eq!(status, 200);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let ingest_s = t0.elapsed().as_secs_f64();
+
+    // Concurrent text queries.
+    let queries: Vec<String> = (0..n_queries).map(|i| gen.query_for_topic(i)).collect();
+    let t0 = Instant::now();
+    let threads: Vec<_> = queries
+        .chunks(n_queries.div_ceil(8))
+        .map(|chunk| {
+            let chunk = chunk.to_vec();
+            std::thread::spawn(move || {
+                let mut lat = Vec::new();
+                for q in chunk {
+                    let body =
+                        Json::object(vec![("text", Json::str(q)), ("k", Json::Int(10))]);
+                    let tq = Instant::now();
+                    let (status, _) = client::post_json(&addr, "/v1/query", &body).unwrap();
+                    lat.push(tq.elapsed().as_secs_f64() * 1e3);
+                    assert_eq!(status, 200);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = threads.into_iter().flat_map(|t| t.join().unwrap()).collect();
+    let query_s = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let (_, stats) = client::get_json(&addr, "/v1/stats").unwrap();
+    println!("\n=== e2e text API over HTTP ({n_docs} docs, {n_queries} queries, 8 clients) ===");
+    println!(
+        "text ingest: {:.1}/s | text queries: {:.1}/s | query p50 {:.1} ms p99 {:.1} ms \
+         (embed + search)",
+        n_docs as f64 / ingest_s,
+        n_queries as f64 / query_s,
+        lat[lat.len() / 2],
+        lat[(lat.len() * 99 / 100).min(lat.len() - 1)]
+    );
+    println!(
+        "batcher efficiency: {} embeds in {} batches",
+        stats.get("batched_requests").as_i64().unwrap_or(0),
+        stats.get("batches").as_i64().unwrap_or(0)
+    );
+    server.stop();
+}

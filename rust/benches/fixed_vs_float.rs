@@ -1,0 +1,69 @@
+//! Bench for the **§8.2/§11 performance question**: what does fixed-point
+//! determinism cost relative to hardware floats?
+//!
+//! Paper: "Software-based fixed-point arithmetic is slower than
+//! hardware-accelerated float ops" (§11) but "no_std optimizations keep
+//! latency low" (§8.2). This bench quantifies the dot/L2 kernel overhead
+//! across dimensions, plus the XLA-offloaded integer distance path (E9).
+//!
+//! Run: `cargo bench --bench fixed_vs_float`
+
+use valori::bench::{bench, BenchConfig, Report};
+use valori::distance::{dot_q16, float, l2sq_q16};
+use valori::hash::XorShift64;
+
+fn main() {
+    let cfg = if std::env::var("VALORI_BENCH_QUICK").is_ok() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+    let mut rng = XorShift64::new(11);
+
+    for dim in [128usize, 384, 1024] {
+        let af: Vec<f32> = (0..dim).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+        let bf: Vec<f32> = (0..dim).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+        let aq: Vec<i32> = af.iter().map(|&x| (x * 65536.0) as i32).collect();
+        let bq: Vec<i32> = bf.iter().map(|&x| (x * 65536.0) as i32).collect();
+
+        let mut report = Report::new(format!("dot/L2 kernels, dim {dim}"));
+        let s_f32 = bench(&cfg, || float::dot_f32_seq(&af, &bf));
+        let s_q16 = bench(&cfg, || dot_q16(&aq, &bq));
+        let ratio = s_q16.mean_ns / s_f32.mean_ns;
+        report.add("dot f32 (scalar seq)", s_f32);
+        report.add("dot f32 (fma)", bench(&cfg, || float::dot_f32_fma(&af, &bf)));
+        report.add("dot Q16.16 (i64 acc)", s_q16);
+        report.add("l2  f32 (scalar seq)", bench(&cfg, || float::l2sq_f32_seq(&af, &bf)));
+        report.add("l2  Q16.16 (i64 acc)", bench(&cfg, || l2sq_q16(&aq, &bq)));
+        report.note(format!(
+            "fixed/float dot overhead: {ratio:.2}x (paper §11 predicts >1; integer SIMD keeps it small)"
+        ));
+        report.print();
+    }
+
+    // Batched distances through the AOT Pallas/XLA path (the offload the
+    // kernel can use for large scans) vs native Rust loops.
+    if valori::runtime::artifacts_available() {
+        let dir = valori::runtime::artifacts_dir();
+        let m = valori::runtime::Manifest::load(&dir).expect("manifest");
+        let engine = valori::runtime::Engine::cpu().expect("pjrt");
+        let de = valori::runtime::DistanceEngine::load(&engine, &dir, m.model.d_model, m.model.db_rows)
+            .expect("distance engine");
+        let dim = m.model.d_model;
+        let n = m.model.db_rows;
+        let db: Vec<i32> = (0..n * dim).map(|_| (rng.next_f64() * 131072.0 - 65536.0) as i32).collect();
+        let q: Vec<i32> = (0..dim).map(|_| (rng.next_f64() * 131072.0 - 65536.0) as i32).collect();
+
+        let mut report = Report::new(format!("batched L2 distances, {n} × dim-{dim}"));
+        report.add("rust loop (i64 acc)", bench(&cfg, || {
+            (0..n).map(|r| l2sq_q16(&q, &db[r * dim..(r + 1) * dim])).collect::<Vec<_>>()
+        }));
+        report.add("XLA/Pallas AOT (i64 acc)", bench(&BenchConfig::quick(), || {
+            de.l2sq_q16(&q, &db).unwrap()
+        }));
+        report.note("bit-identical outputs (verified in rust/tests/cross_impl.rs)");
+        report.print();
+    } else {
+        println!("\n(artifacts not built — skipping the XLA distance comparison)");
+    }
+}

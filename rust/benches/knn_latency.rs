@@ -1,0 +1,37 @@
+//! Bench/driver for **§8.2** — raw retrieval latency. Paper claim:
+//! "< 500 µs for typical k-NN queries" (10k-scale memory, MacBook M3).
+//!
+//! Run: `cargo bench --bench knn_latency`
+
+use valori::bench::BenchConfig;
+use valori::experiments::latency;
+
+fn main() {
+    let quick = std::env::var("VALORI_BENCH_QUICK").is_ok();
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let n = if quick { 2000 } else { 10_000 };
+
+    // The paper's workload.
+    let r = latency::run(n, 128, 10, &cfg);
+    latency::print_result(&r);
+
+    // Scaling sweep: where does the 500 µs budget run out?
+    println!("\nlatency scaling sweep (Q16.16 HNSW, k=10, dim 128):");
+    let sizes: &[usize] = if quick { &[1000, 5000] } else { &[1000, 5000, 10_000, 20_000, 50_000] };
+    for &size in sizes {
+        let r = latency::run(size, 128, 10, &BenchConfig::quick());
+        println!(
+            "  n={size:>6}  p50 {}  p99 {}  (<500µs: {})",
+            valori::bench::fmt_ns(r.hnsw_q16.p50_ns),
+            valori::bench::fmt_ns(r.hnsw_q16.p99_ns),
+            r.hnsw_q16.p50_ns < 500_000.0
+        );
+    }
+
+    // k sweep at the paper's scale.
+    println!("\nk sweep at n={n} (Q16.16 HNSW):");
+    for k in [1usize, 10, 50, 100] {
+        let r = latency::run(n.min(10_000), 128, k, &BenchConfig::quick());
+        println!("  k={k:>4}  p50 {}", valori::bench::fmt_ns(r.hnsw_q16.p50_ns));
+    }
+}

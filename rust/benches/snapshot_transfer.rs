@@ -1,0 +1,42 @@
+//! Bench/driver for **§8.1** — the snapshot-transfer test (insert 10 000
+//! vectors, snapshot → H_A, restore → H_B, verify H_A ≡ H_B and identical
+//! k-NN ordering), plus snapshot/restore/hash throughput.
+//!
+//! Run: `cargo bench --bench snapshot_transfer`
+
+use valori::bench::{bench, BenchConfig, Report};
+use valori::experiments::{synthetic_embeddings, transfer};
+use valori::snapshot::Snapshot;
+use valori::state::{Command, Kernel, KernelConfig};
+
+fn main() {
+    let quick = std::env::var("VALORI_BENCH_QUICK").is_ok();
+    let n = if quick { 1000 } else { 10_000 };
+
+    // The paper's protocol.
+    let r = transfer::run(n, 128);
+    transfer::print_result(&r);
+    assert!(r.hashes_equal && r.knn_identical, "determinism violation!");
+
+    // Throughput of the snapshot machinery at a few scales.
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    for scale in [1000usize, 5000] {
+        let embeddings = synthetic_embeddings(scale, 128, 32, 7);
+        let mut kernel = Kernel::new(KernelConfig::default_q16(128));
+        for (id, v) in embeddings.iter().enumerate() {
+            kernel.apply(Command::insert(id as u64, v.clone())).unwrap();
+        }
+        let snap = Snapshot::capture(&kernel);
+        let bytes = snap.to_bytes();
+        let mut report =
+            Report::new(format!("snapshot machinery, {scale} × dim-128 ({} MiB)", bytes.len() >> 20));
+        report.add("capture (encode+fnv+sha)", bench(&cfg, || Snapshot::capture(&kernel)));
+        report.add("state_hash only (fnv)", bench(&cfg, || kernel.state_hash()));
+        report.add(
+            "restore (parse+verify+rebuild)",
+            bench(&cfg, || Snapshot::from_bytes(&bytes).unwrap().restore().unwrap()),
+        );
+        report.note(format!("snapshot size: {} bytes", bytes.len()));
+        report.print();
+    }
+}

@@ -1,0 +1,72 @@
+//! Bench/driver for **Table 1** — bit-level divergence of identical
+//! embeddings (paper §4.2). Prints the paper's table (hex of the first 5
+//! dimensions under two evaluation environments) and times the embedding
+//! path.
+//!
+//! Run: `cargo bench --bench table1_divergence`
+//! Quick: `VALORI_BENCH_QUICK=1 cargo bench --bench table1_divergence`
+
+use valori::bench::{bench, BenchConfig, Report};
+use valori::corpus::CorpusGen;
+use valori::distance::float;
+use valori::experiments::divergence;
+use valori::hash::XorShift64;
+
+fn main() {
+    let cfg = if std::env::var("VALORI_BENCH_QUICK").is_ok() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+
+    // The paper's table, through the AOT stack when available.
+    let result = divergence::run(5);
+    divergence::print_table(&result);
+
+    // Divergence frequency across the paper's full sentence set (fallback
+    // mechanism): how often do legal evaluation orders change the bits?
+    let mut rng = XorShift64::new(123);
+    let dims = [64usize, 128, 384, 768];
+    println!("\nreduction-order divergence frequency (100 random vector pairs each):");
+    for dim in dims {
+        let mut diverged = 0;
+        for _ in 0..100 {
+            let a: Vec<f32> = (0..dim).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+            if float::divergent_variants(&a, &b) > 0 {
+                diverged += 1;
+            }
+        }
+        println!("  dim {dim:>4}: {diverged}/100 pairs give different bits across eval orders");
+    }
+
+    // Timing: the float dot variants (the operations whose order matters).
+    let mut report = Report::new("dot-product evaluation variants (dim 384)");
+    let a: Vec<f32> = (0..384).map(|i| ((i * 37) as f32 * 0.01).sin()).collect();
+    let b: Vec<f32> = (0..384).map(|i| ((i * 11) as f32 * 0.02).cos()).collect();
+    report.add("seq", bench(&cfg, || float::dot_f32_seq(&a, &b)));
+    report.add("rev", bench(&cfg, || float::dot_f32_rev(&a, &b)));
+    report.add("pairwise", bench(&cfg, || float::dot_f32_pairwise(&a, &b)));
+    report.add("lanes8 (simd model)", bench(&cfg, || float::dot_f32_lanes8(&a, &b)));
+    report.add("fma", bench(&cfg, || float::dot_f32_fma(&a, &b)));
+    report.note("all mathematically equal; bits differ — the paper's §2.1 root cause");
+    report.print();
+
+    // If artifacts exist, time the full embed path too.
+    if valori::runtime::artifacts_available() {
+        let engine = valori::runtime::Engine::cpu().expect("pjrt");
+        let embedder = valori::runtime::Embedder::load(
+            &engine,
+            valori::runtime::artifacts_dir(),
+            valori::runtime::embedder::Env::A,
+        )
+        .expect("embedder");
+        let sentences = CorpusGen::paper_sentences();
+        let mut report = Report::new("AOT embedder (batch of 5 paper sentences)");
+        report.add(
+            "embed_texts (PJRT)",
+            bench(&BenchConfig::quick(), || embedder.embed_texts(&sentences).unwrap()),
+        );
+        report.print();
+    }
+}

@@ -1,0 +1,60 @@
+//! Bench/driver for **Table 2** — precision layers as configurable
+//! contracts (paper §6). Prints the quantitative contract table and times
+//! quantization + arithmetic throughput per format.
+//!
+//! Run: `cargo bench --bench table2_precision`
+
+use valori::bench::{bench, BenchConfig, Report};
+use valori::experiments::precision;
+use valori::fixed::{ops, FixedFormat, Q16_16, Q32_32, Q8_24};
+use valori::hash::XorShift64;
+
+fn main() {
+    let cfg = if std::env::var("VALORI_BENCH_QUICK").is_ok() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+
+    let rows = precision::run();
+    precision::print_table(&rows);
+
+    // Quantization throughput (128-dim vector through the boundary).
+    let mut rng = XorShift64::new(5);
+    let v: Vec<f64> = (0..128).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+    let mut report = Report::new("boundary quantization, 128-dim vector");
+    report.add("Q8.24", bench(&cfg, || v.iter().map(|&x| Q8_24::quantize(x)).collect::<Vec<_>>()));
+    report
+        .add("Q16.16", bench(&cfg, || v.iter().map(|&x| Q16_16::quantize(x)).collect::<Vec<_>>()));
+    report
+        .add("Q32.32", bench(&cfg, || v.iter().map(|&x| Q32_32::quantize(x)).collect::<Vec<_>>()));
+    report.print();
+
+    // Dot-product throughput per contract (the §6 performance/precision
+    // trade-off, quantified).
+    let a16: Vec<i32> = (0..128).map(|_| (rng.next_f64() * 131072.0 - 65536.0) as i32).collect();
+    let b16: Vec<i32> = (0..128).map(|_| (rng.next_f64() * 131072.0 - 65536.0) as i32).collect();
+    let a32: Vec<i64> = a16.iter().map(|&x| (x as i64) << 16).collect();
+    let b32: Vec<i64> = b16.iter().map(|&x| (x as i64) << 16).collect();
+    let mut report = Report::new("dot product per contract, dim 128");
+    report.add("Q16.16 (i64 acc)", bench(&cfg, || Q16_16::dot_wide(&a16, &b16)));
+    report.add("Q8.24  (i64 acc)", bench(&cfg, || Q8_24::dot_wide(&a16, &b16)));
+    report.add("Q32.32 (i128 acc)", bench(&cfg, || Q32_32::dot_wide(&a32, &b32)));
+    report.note("determinism holds for every contract; cost scales with accumulator width");
+    report.print();
+
+    // Fixed-point normalization (the in-kernel op the normalize policy
+    // runs per insert).
+    let mut v16 = a16.clone();
+    let mut report = Report::new("fixed-point L2 normalize, dim 128");
+    report.add(
+        "normalize_q16",
+        bench(&cfg, || {
+            let mut c = v16.clone();
+            ops::normalize_q16(&mut c);
+            c
+        }),
+    );
+    v16[0] ^= 1;
+    report.print();
+}

@@ -1,0 +1,63 @@
+//! Bench/driver for **Table 3** — Recall@10 of the Q16.16 deterministic
+//! HNSW vs the f32 baseline (paper §8.3). Prints the paper's table plus
+//! our added exact-ground-truth columns, and times index construction.
+//!
+//! Run: `cargo bench --bench table3_recall`
+//! Quick: `VALORI_BENCH_QUICK=1 cargo bench --bench table3_recall`
+
+use valori::bench::{bench, BenchConfig, Report};
+use valori::distance::Metric;
+use valori::experiments::{recall, synthetic_embeddings};
+use valori::fixed::{FixedFormat, Q16_16};
+use valori::index::{Hnsw, HnswParams, VectorIndex};
+
+fn main() {
+    let quick = std::env::var("VALORI_BENCH_QUICK").is_ok();
+    let (docs, queries) = if quick { (400, 20) } else { (2000, 100) };
+
+    // Table 3 with real embeddings when artifacts are built, synthetic
+    // clusters otherwise.
+    let r = recall::run(docs, queries, 10);
+    recall::print_table(&r);
+
+    // Recall sensitivity: K sweep (the trade-off the paper fixes at 10).
+    println!("\nrecall@k sweep (synthetic, 1000 docs):");
+    let embeddings = synthetic_embeddings(1000, 128, 16, 31);
+    let qs = synthetic_embeddings(50, 128, 16, 77);
+    for k in [1usize, 5, 10, 20, 50] {
+        let r = recall::run_with_embeddings(&embeddings, &qs, k, "sweep");
+        println!(
+            "  k={k:>3}  q16-vs-f32 {:.3}  f32-vs-exact {:.3}  q16-vs-exact {:.3}",
+            r.recall_q16_vs_f32, r.recall_f32_vs_exact, r.recall_q16_vs_exact
+        );
+    }
+
+    // Index construction throughput (identical insertion order, both
+    // scalar types — the Table 3 setup cost).
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let small = synthetic_embeddings(500, 128, 16, 3);
+    let mut report = Report::new("HNSW construction, 500 × dim-128 (full rebuild)");
+    report.add(
+        "f32 HNSW",
+        bench(&cfg, || {
+            let mut h: Hnsw<f32> = Hnsw::new(128, Metric::L2, HnswParams::default());
+            for (id, v) in small.iter().enumerate() {
+                h.insert(id as u64, v.clone());
+            }
+            h.len()
+        }),
+    );
+    report.add(
+        "Q16.16 HNSW",
+        bench(&cfg, || {
+            let mut h: Hnsw<i32> = Hnsw::new(128, Metric::L2, HnswParams::default());
+            for (id, v) in small.iter().enumerate() {
+                let raw: Vec<i32> = v.iter().map(|&x| Q16_16::quantize(x as f64)).collect();
+                h.insert(id as u64, raw);
+            }
+            h.len()
+        }),
+    );
+    report.note("identical generic code; difference is the scalar arithmetic");
+    report.print();
+}

@@ -1,0 +1,240 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, calibrated iteration counts, and robust statistics
+//! (p50/p95/p99/mean) over per-iteration wall time. Used by every target
+//! under `rust/benches/` and by the experiment drivers that report the
+//! paper's latency numbers (§8.2).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one benchmark, all in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    /// Compute stats from raw per-iteration samples.
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        // nearest-rank percentile: ceil(p*n)-th smallest sample
+        let pct = |p: f64| -> f64 {
+            let rank = (p * n as f64).ceil() as usize;
+            samples[rank.clamp(1, n) - 1]
+        };
+        Stats {
+            iters: n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            p99_ns: pct(0.99),
+            min_ns: samples[0],
+            max_ns: samples[n - 1],
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    pub fn p50(&self) -> Duration {
+        Duration::from_nanos(self.p50_ns as u64)
+    }
+
+    /// Throughput in ops/sec at the mean.
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Human-friendly duration rendering (ns/µs/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Wall-clock budget for warmup.
+    pub warmup: Duration,
+    /// Wall-clock budget for measurement.
+    pub measure: Duration,
+    /// Hard cap on measured iterations (keeps huge-op benches bounded).
+    pub max_iters: usize,
+    /// Minimum measured iterations (ensures stats make sense).
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 100_000,
+            min_iters: 10,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster config for CI-style smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+/// Run one benchmark: warm up, then measure per-iteration latency until the
+/// time budget or iteration cap is reached. The closure's return value is
+/// passed through `std::hint::black_box` to defeat dead-code elimination.
+pub fn bench<T>(config: &BenchConfig, mut f: impl FnMut() -> T) -> Stats {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < config.warmup {
+        std::hint::black_box(f());
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < config.measure || samples.len() < config.min_iters)
+        && samples.len() < config.max_iters
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Stats::from_samples(samples)
+}
+
+/// A named group of benchmark rows, rendered as an aligned table — one
+/// group per paper table/figure.
+pub struct Report {
+    title: String,
+    rows: Vec<(String, Stats)>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self { title: title.into(), rows: Vec::new(), notes: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: impl Into<String>, stats: Stats) {
+        self.rows.push((name.into(), stats));
+    }
+
+    pub fn note(&mut self, note: impl Into<String>) {
+        self.notes.push(note.into());
+    }
+
+    pub fn rows(&self) -> &[(String, Stats)] {
+        &self.rows
+    }
+
+    /// Render the report to stdout.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let name_w = self.rows.iter().map(|(n, _)| n.len()).max().unwrap_or(4).max(4);
+        println!(
+            "{:<name_w$}  {:>12} {:>12} {:>12} {:>12} {:>12}",
+            "name", "mean", "p50", "p95", "p99", "ops/s"
+        );
+        for (name, s) in &self.rows {
+            println!(
+                "{:<name_w$}  {:>12} {:>12} {:>12} {:>12} {:>12.0}",
+                name,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p50_ns),
+                fmt_ns(s.p95_ns),
+                fmt_ns(s.p99_ns),
+                s.ops_per_sec()
+            );
+        }
+        for n in &self.notes {
+            println!("  note: {n}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.iters, 100);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+        assert_eq!(s.p50_ns, 50.0);
+        assert_eq!(s.p99_ns, 99.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            max_iters: 1000,
+            min_iters: 5,
+        };
+        let mut acc = 0u64;
+        let s = bench(&cfg, || {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            acc
+        });
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p99_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.00 s");
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut r = Report::new("test table");
+        r.add("row1", Stats::from_samples(vec![10.0, 20.0, 30.0]));
+        r.note("shape only");
+        r.print(); // smoke: must not panic
+        assert_eq!(r.rows().len(), 1);
+    }
+
+    #[test]
+    fn min_iters_honored_even_past_budget() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_nanos(1),
+            max_iters: 1000,
+            min_iters: 7,
+        };
+        let s = bench(&cfg, || std::thread::sleep(Duration::from_micros(10)));
+        assert!(s.iters >= 7);
+    }
+}

@@ -1,0 +1,128 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional...]`.
+//! Enough surface for the `valori` binary and the experiment drivers.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty option name '--'".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().is_some_and(|next| !next.starts_with("--")) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => {
+                s.parse().map_err(|_| format!("option --{name}: cannot parse '{s}'"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["serve", "--port", "8080", "--verbose", "--dim=128"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert_eq!(a.opt("dim"), Some("128"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["replay", "my.wal", "other.snap"]);
+        assert_eq!(a.subcommand.as_deref(), Some("replay"));
+        assert_eq!(a.positional, vec!["my.wal", "other.snap"]);
+    }
+
+    #[test]
+    fn opt_parse_with_default() {
+        let a = parse(&["x", "--k", "10"]);
+        assert_eq!(a.opt_parse("k", 5usize).unwrap(), 10);
+        assert_eq!(a.opt_parse("missing", 5usize).unwrap(), 5);
+        assert!(parse(&["x", "--k", "ten"]).opt_parse("k", 5usize).is_err());
+    }
+
+    #[test]
+    fn flag_at_end_is_flag() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("fast"), None);
+    }
+
+    #[test]
+    fn option_value_looking_like_subcommand() {
+        let a = parse(&["--mode", "serve"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.opt("mode"), Some("serve"));
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse(&[]);
+        assert_eq!(a, Args::default());
+    }
+
+    #[test]
+    fn double_dash_alone_is_error() {
+        assert!(Args::parse(vec!["--".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,413 @@
+//! Deterministic binary codec — Valori's "serde".
+//!
+//! Snapshots and WAL records must be *byte-stable*: the same logical state
+//! must serialize to the same bytes on every platform, forever, because the
+//! state hash is computed over those bytes (paper §5.2, §8.1). That rules
+//! out formats with nondeterministic map ordering or platform-dependent
+//! widths. This codec is explicit little-endian with length-prefixed
+//! sequences, and decoding is strict (trailing garbage and truncation are
+//! errors).
+
+use std::fmt;
+
+/// Encoding buffer.
+#[derive(Debug, Default, Clone)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f32 stored as raw IEEE-754 bits (only used outside the determinism
+    /// boundary, e.g. the float baseline index).
+    #[inline]
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// Length-prefixed byte string (u32 length).
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed i32 slice.
+    pub fn put_i32_slice(&mut self, v: &[i32]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_i32(x);
+        }
+    }
+
+    /// Length-prefixed i64 slice.
+    pub fn put_i64_slice(&mut self, v: &[i64]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_i64(x);
+        }
+    }
+
+    /// Length-prefixed u64 slice.
+    pub fn put_u64_slice(&mut self, v: &[u64]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_u64(x);
+        }
+    }
+
+    /// Length-prefixed f32 slice (bit-exact).
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Decoding errors. Strictness is a feature: a snapshot that decodes
+/// differently on two machines is a determinism violation, so we fail loudly
+/// on any irregularity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Input ended before the requested read.
+    UnexpectedEof { need: usize, have: usize },
+    /// A length prefix exceeded the remaining input (corruption guard).
+    LengthOverflow { len: usize, have: usize },
+    /// String field was not valid UTF-8.
+    InvalidUtf8,
+    /// Trailing bytes remained after a complete decode.
+    TrailingBytes { remaining: usize },
+    /// A tag/enum discriminant was out of range.
+    InvalidTag { what: &'static str, tag: u64 },
+    /// Magic number or version mismatch.
+    BadMagic { expected: u32, found: u32 },
+    /// Unsupported format version.
+    BadVersion { expected: u32, found: u32 },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::UnexpectedEof { need, have } => {
+                write!(f, "unexpected EOF: need {need} bytes, have {have}")
+            }
+            DecodeError::LengthOverflow { len, have } => {
+                write!(f, "length prefix {len} exceeds remaining {have} bytes")
+            }
+            DecodeError::InvalidUtf8 => write!(f, "invalid UTF-8 in string field"),
+            DecodeError::TrailingBytes { remaining } => {
+                write!(f, "{remaining} trailing bytes after decode")
+            }
+            DecodeError::InvalidTag { what, tag } => write!(f, "invalid {what} tag {tag}"),
+            DecodeError::BadMagic { expected, found } => {
+                write!(f, "bad magic: expected {expected:#x}, found {found:#x}")
+            }
+            DecodeError::BadVersion { expected, found } => {
+                write!(f, "unsupported version {found} (expected <= {expected})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Cursor-based strict decoder over a byte slice.
+#[derive(Debug)]
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError::UnexpectedEof { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_i32(&mut self) -> Result<i32, DecodeError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_i64(&mut self) -> Result<i64, DecodeError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    fn get_len(&mut self) -> Result<usize, DecodeError> {
+        let len = self.get_u32()? as usize;
+        if len > self.remaining() {
+            return Err(DecodeError::LengthOverflow { len, have: self.remaining() });
+        }
+        Ok(len)
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], DecodeError> {
+        let len = self.get_len()?;
+        self.take(len)
+    }
+
+    pub fn get_str(&mut self) -> Result<&'a str, DecodeError> {
+        std::str::from_utf8(self.get_bytes()?).map_err(|_| DecodeError::InvalidUtf8)
+    }
+
+    pub fn get_i32_vec(&mut self) -> Result<Vec<i32>, DecodeError> {
+        let n = self.get_u32()? as usize;
+        if n.checked_mul(4).map_or(true, |b| b > self.remaining()) {
+            return Err(DecodeError::LengthOverflow { len: n * 4, have: self.remaining() });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_i32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_i64_vec(&mut self) -> Result<Vec<i64>, DecodeError> {
+        let n = self.get_u32()? as usize;
+        if n.checked_mul(8).map_or(true, |b| b > self.remaining()) {
+            return Err(DecodeError::LengthOverflow { len: n * 8, have: self.remaining() });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_i64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_u64_vec(&mut self) -> Result<Vec<u64>, DecodeError> {
+        let n = self.get_u32()? as usize;
+        if n.checked_mul(8).map_or(true, |b| b > self.remaining()) {
+            return Err(DecodeError::LengthOverflow { len: n * 8, have: self.remaining() });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_u64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_f32_vec(&mut self) -> Result<Vec<f32>, DecodeError> {
+        let n = self.get_u32()? as usize;
+        if n.checked_mul(4).map_or(true, |b| b > self.remaining()) {
+            return Err(DecodeError::LengthOverflow { len: n * 4, have: self.remaining() });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_f32()?);
+        }
+        Ok(v)
+    }
+
+    /// Assert the input is fully consumed (strict decode).
+    pub fn finish(&self) -> Result<(), DecodeError> {
+        if self.remaining() != 0 {
+            Err(DecodeError::TrailingBytes { remaining: self.remaining() })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut e = Encoder::new();
+        e.put_u8(7);
+        e.put_u16(0xBEEF);
+        e.put_u32(0xDEADBEEF);
+        e.put_u64(u64::MAX);
+        e.put_i32(-42);
+        e.put_i64(i64::MIN);
+        e.put_f32(-0.0);
+        let bytes = e.into_vec();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.get_u8().unwrap(), 7);
+        assert_eq!(d.get_u16().unwrap(), 0xBEEF);
+        assert_eq!(d.get_u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(d.get_u64().unwrap(), u64::MAX);
+        assert_eq!(d.get_i32().unwrap(), -42);
+        assert_eq!(d.get_i64().unwrap(), i64::MIN);
+        // -0.0 must round-trip bit-exactly (sign bit preserved)
+        assert_eq!(d.get_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn slices_roundtrip() {
+        let mut e = Encoder::new();
+        e.put_i32_slice(&[1, -2, 3]);
+        e.put_str("hello Valori");
+        e.put_f32_slice(&[1.5, f32::NAN]);
+        e.put_u64_slice(&[9, 10]);
+        e.put_i64_slice(&[-1]);
+        let bytes = e.into_vec();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.get_i32_vec().unwrap(), vec![1, -2, 3]);
+        assert_eq!(d.get_str().unwrap(), "hello Valori");
+        let f = d.get_f32_vec().unwrap();
+        assert_eq!(f[0], 1.5);
+        assert!(f[1].is_nan());
+        assert_eq!(d.get_u64_vec().unwrap(), vec![9, 10]);
+        assert_eq!(d.get_i64_vec().unwrap(), vec![-1]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_error() {
+        let mut e = Encoder::new();
+        e.put_u64(123);
+        let bytes = e.into_vec();
+        let mut d = Decoder::new(&bytes[..4]);
+        assert!(matches!(d.get_u64(), Err(DecodeError::UnexpectedEof { .. })));
+    }
+
+    #[test]
+    fn length_overflow_is_error() {
+        let mut e = Encoder::new();
+        e.put_u32(1000); // claims 1000 bytes follow
+        e.put_u8(1);
+        let bytes = e.into_vec();
+        let mut d = Decoder::new(&bytes);
+        assert!(matches!(d.get_bytes(), Err(DecodeError::LengthOverflow { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_is_error() {
+        let mut e = Encoder::new();
+        e.put_u8(1);
+        e.put_u8(2);
+        let bytes = e.into_vec();
+        let mut d = Decoder::new(&bytes);
+        d.get_u8().unwrap();
+        assert!(matches!(d.finish(), Err(DecodeError::TrailingBytes { remaining: 1 })));
+    }
+
+    #[test]
+    fn invalid_utf8_is_error() {
+        let mut e = Encoder::new();
+        e.put_bytes(&[0xff, 0xfe]);
+        let bytes = e.into_vec();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.get_str(), Err(DecodeError::InvalidUtf8));
+    }
+
+    #[test]
+    fn encoding_is_byte_stable() {
+        // The exact byte layout is part of the determinism contract — pin it.
+        let mut e = Encoder::new();
+        e.put_u32(1);
+        e.put_i32(-1);
+        e.put_str("ab");
+        assert_eq!(
+            e.as_slice(),
+            &[1, 0, 0, 0, 0xff, 0xff, 0xff, 0xff, 2, 0, 0, 0, b'a', b'b']
+        );
+    }
+
+    #[test]
+    fn i32_vec_length_guard() {
+        // length prefix claims 2^30 elements with 4 bytes of payload
+        let mut e = Encoder::new();
+        e.put_u32(1 << 30);
+        e.put_u32(0);
+        let bytes = e.into_vec();
+        let mut d = Decoder::new(&bytes);
+        assert!(matches!(d.get_i32_vec(), Err(DecodeError::LengthOverflow { .. })));
+    }
+}

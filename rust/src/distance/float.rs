@@ -1,0 +1,174 @@
+//! Floating-point distance baselines + reduction-order variants.
+//!
+//! The paper's §2.1 names three sources of cross-platform float divergence:
+//! FMA contraction, non-associative reduction order, and SIMD width. This
+//! module implements the *same* mathematical dot product under several
+//! legal IEEE-754 evaluation orders. On identical inputs they generally
+//! return different bits — that is the failure mode Valori's integer kernel
+//! eliminates, and it is what the Table 1 / divergence benches demonstrate
+//! (DESIGN §2 substitution: different evaluation orders on one host stand
+//! in for different ISAs).
+
+/// Plain sequential left-to-right accumulation — what a scalar x86 build
+/// without FMA does.
+#[inline]
+pub fn dot_f32_seq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Same sum, reversed iteration order — a different (equally legal)
+/// association, standing in for a different compiler/ISA choice.
+#[inline]
+pub fn dot_f32_rev(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for i in (0..a.len()).rev() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Pairwise (tree) reduction — the association SIMD/parallel reductions
+/// produce (e.g. AVX horizontal adds, GPU warp reductions).
+pub fn dot_f32_pairwise(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    fn rec(prod: &[f32]) -> f32 {
+        match prod.len() {
+            0 => 0.0,
+            1 => prod[0],
+            n => {
+                let mid = n / 2;
+                rec(&prod[..mid]) + rec(&prod[mid..])
+            }
+        }
+    }
+    let prods: Vec<f32> = a.iter().zip(b).map(|(x, y)| x * y).collect();
+    rec(&prods)
+}
+
+/// 8-lane strided accumulation — models an AVX2-width vectorized loop
+/// (8 independent partial sums combined at the end).
+pub fn dot_f32_lanes8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0f32; 8];
+    for i in 0..a.len() {
+        lanes[i % 8] += a[i] * b[i];
+    }
+    // horizontal combine, fixed order
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+}
+
+/// FMA-contracted sequential accumulation (`mul_add`: one rounding instead
+/// of two) — what an ARM64/NEON or `-ffp-contract=fast` build does.
+#[inline]
+pub fn dot_f32_fma(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for i in 0..a.len() {
+        acc = a[i].mul_add(b[i], acc);
+    }
+    acc
+}
+
+/// Sequential squared L2 distance.
+#[inline]
+pub fn l2sq_f32_seq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Reversed-order squared L2 distance.
+#[inline]
+pub fn l2sq_f32_rev(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for i in (0..a.len()).rev() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Count how many of the evaluation-order variants disagree with the
+/// sequential baseline at the bit level (used by divergence experiments).
+pub fn divergent_variants(a: &[f32], b: &[f32]) -> usize {
+    let base = dot_f32_seq(a, b).to_bits();
+    [
+        dot_f32_rev(a, b),
+        dot_f32_pairwise(a, b),
+        dot_f32_lanes8(a, b),
+        dot_f32_fma(a, b),
+    ]
+    .iter()
+    .filter(|v| v.to_bits() != base)
+    .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::XorShift64;
+
+    fn random_pair(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift64::new(seed);
+        let a = (0..n).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+        let b = (0..n).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn variants_agree_mathematically() {
+        let (a, b) = random_pair(384, 1);
+        let s = dot_f32_seq(&a, &b);
+        for v in [dot_f32_rev(&a, &b), dot_f32_pairwise(&a, &b), dot_f32_lanes8(&a, &b), dot_f32_fma(&a, &b)] {
+            assert!((v - s).abs() < 1e-3, "v={v} s={s}");
+        }
+    }
+
+    #[test]
+    fn variants_diverge_at_bit_level() {
+        // This is the paper's §2.1 claim, reproduced in-process: at least
+        // one legal evaluation order gives different bits. Over many random
+        // vectors, divergence is essentially certain at dim 384.
+        let mut any = 0;
+        for seed in 1..=20 {
+            let (a, b) = random_pair(384, seed);
+            any += divergent_variants(&a, &b).min(1);
+        }
+        assert!(any >= 18, "only {any}/20 random pairs showed divergence");
+    }
+
+    #[test]
+    fn small_dims_can_agree() {
+        // dim-1 products have a single evaluation order: all variants equal.
+        let a = vec![0.5f32];
+        let b = vec![0.25f32];
+        assert_eq!(divergent_variants(&a, &b), 0);
+    }
+
+    #[test]
+    fn l2_variants() {
+        let (a, b) = random_pair(128, 9);
+        let s = l2sq_f32_seq(&a, &b);
+        let r = l2sq_f32_rev(&a, &b);
+        assert!((s - r).abs() < 1e-3);
+        assert!(s >= 0.0 && r >= 0.0);
+    }
+
+    #[test]
+    fn pairwise_empty_and_single() {
+        assert_eq!(dot_f32_pairwise(&[], &[]), 0.0);
+        assert_eq!(dot_f32_pairwise(&[2.0], &[3.0]), 6.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! E5 — §8.2 raw retrieval latency.
+//!
+//! Paper claim: "raw retrieval latency is < 500 µs for typical k-NN
+//! queries" on a MacBook M3 at ~10k vectors. We measure the same workload
+//! (10k × dim-128, k=10) on this host for the Q16.16 HNSW, the f32 HNSW
+//! and the flat scans, with the in-crate bench harness.
+
+use crate::bench::{bench, BenchConfig, Report, Stats};
+use crate::distance::Metric;
+use crate::experiments::synthetic_embeddings;
+use crate::fixed::{FixedFormat, Q16_16};
+use crate::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
+
+/// Latency experiment result.
+#[derive(Debug, Clone)]
+pub struct LatencyResult {
+    pub n: usize,
+    pub dim: usize,
+    pub k: usize,
+    pub hnsw_q16: Stats,
+    pub hnsw_f32: Stats,
+    pub flat_q16: Stats,
+    pub flat_f32: Stats,
+    /// The paper's headline check.
+    pub q16_p50_under_500us: bool,
+}
+
+/// Build the four indices and measure query latency.
+pub fn run(n: usize, dim: usize, k: usize, cfg: &BenchConfig) -> LatencyResult {
+    let embeddings = synthetic_embeddings(n, dim, 32, 4242);
+    let queries = synthetic_embeddings(64, dim, 32, 999);
+
+    let params = HnswParams::default();
+    let mut h_q16: Hnsw<i32> = Hnsw::new(dim, Metric::L2, params);
+    let mut h_f32: Hnsw<f32> = Hnsw::new(dim, Metric::L2, params);
+    let mut f_q16: FlatIndex<i32> = FlatIndex::new(dim, Metric::L2);
+    let mut f_f32: FlatIndex<f32> = FlatIndex::new(dim, Metric::L2);
+    for (id, v) in embeddings.iter().enumerate() {
+        let raw: Vec<i32> = v.iter().map(|&x| Q16_16::quantize(x as f64)).collect();
+        h_q16.insert(id as u64, raw.clone());
+        h_f32.insert(id as u64, v.clone());
+        f_q16.insert(id as u64, raw);
+        f_f32.insert(id as u64, v.clone());
+    }
+    let raw_queries: Vec<Vec<i32>> = queries
+        .iter()
+        .map(|q| q.iter().map(|&x| Q16_16::quantize(x as f64)).collect())
+        .collect();
+
+    let mut qi = 0usize;
+    let hnsw_q16 = bench(cfg, || {
+        qi = (qi + 1) % raw_queries.len();
+        h_q16.search(&raw_queries[qi], k)
+    });
+    let mut qi = 0usize;
+    let hnsw_f32 = bench(cfg, || {
+        qi = (qi + 1) % queries.len();
+        h_f32.search(&queries[qi], k)
+    });
+    let mut qi = 0usize;
+    let flat_q16 = bench(cfg, || {
+        qi = (qi + 1) % raw_queries.len();
+        f_q16.search(&raw_queries[qi], k)
+    });
+    let mut qi = 0usize;
+    let flat_f32 = bench(cfg, || {
+        qi = (qi + 1) % queries.len();
+        f_f32.search(&queries[qi], k)
+    });
+
+    LatencyResult {
+        n,
+        dim,
+        k,
+        q16_p50_under_500us: hnsw_q16.p50_ns < 500_000.0,
+        hnsw_q16,
+        hnsw_f32,
+        flat_q16,
+        flat_f32,
+    }
+}
+
+/// Render the §8.2 result.
+pub fn print_result(r: &LatencyResult) {
+    let mut report = Report::new(format!(
+        "§8.2 k-NN latency — {} vectors × dim {}, k={}",
+        r.n, r.dim, r.k
+    ));
+    report.add("valori Q16.16 HNSW", r.hnsw_q16);
+    report.add("baseline f32 HNSW", r.hnsw_f32);
+    report.add("valori Q16.16 flat", r.flat_q16);
+    report.add("baseline f32 flat", r.flat_f32);
+    report.note(format!(
+        "paper claim: < 500 µs typical k-NN (M3). Q16.16 HNSW p50 under 500 µs: {}",
+        r.q16_p50_under_500us
+    ));
+    report.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_experiment_runs_small() {
+        let r = run(500, 32, 10, &BenchConfig::quick());
+        assert!(r.hnsw_q16.iters >= 5);
+        // HNSW must beat flat scan even at this small scale... not
+        // guaranteed at n=500; just check everything produced numbers.
+        assert!(r.flat_f32.mean_ns > 0.0);
+        assert!(r.hnsw_f32.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn paper_headline_at_scale() {
+        // the real §8.2 shape at 10k/128 runs in benches; here a reduced
+        // 2k/64 version still demonstrates sub-500µs HNSW behaviour.
+        let r = run(2000, 64, 10, &BenchConfig::quick());
+        assert!(
+            r.hnsw_q16.p50_ns < 500_000.0,
+            "Q16.16 HNSW p50 = {} ns",
+            r.hnsw_q16.p50_ns
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Experiment drivers: one per paper table/figure (DESIGN §1 index).
+//!
+//! Each driver is a library function returning a structured result, so the
+//! same code backs (a) the `valori experiment <id>` CLI, (b) the bench
+//! targets under `rust/benches/`, and (c) assertions in integration tests.
+
+pub mod divergence;
+pub mod latency;
+pub mod precision;
+pub mod recall;
+pub mod transfer;
+
+use crate::hash::XorShift64;
+
+/// Deterministic synthetic "embeddings": unit vectors drawn from `k`
+/// Gaussian-ish clusters. Used when the AOT embedder is not built, and by
+/// benches that need volumes the real encoder would be slow to produce.
+/// Cluster structure makes recall experiments meaningful (nearest
+/// neighbours are mostly same-cluster).
+pub fn synthetic_embeddings(n: usize, dim: usize, clusters: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = XorShift64::new(seed);
+    // cluster centres
+    let centres: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| (0..dim).map(|_| rng.next_f32_range(-1.0, 1.0)).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let c = &centres[i % clusters];
+            let mut v: Vec<f32> =
+                c.iter().map(|&x| x + rng.next_f32_range(-0.3, 0.3)).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+            for x in v.iter_mut() {
+                *x /= norm;
+            }
+            v
+        })
+        .collect()
+}
+
+/// Recall@k overlap between two ranked id lists (paper §8.3 definition:
+/// fraction of overlapping results).
+pub fn recall_overlap(a: &[u64], b: &[u64]) -> f64 {
+    if a.is_empty() {
+        return 1.0;
+    }
+    let hits = a.iter().filter(|id| b.contains(id)).count();
+    hits as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_embeddings_are_unit_norm_and_deterministic() {
+        let a = synthetic_embeddings(100, 32, 5, 42);
+        let b = synthetic_embeddings(100, 32, 5, 42);
+        assert_eq!(a, b);
+        for v in &a {
+            let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn synthetic_clusters_are_tighter_than_cross_cluster() {
+        let e = synthetic_embeddings(100, 32, 5, 7);
+        // same-cluster pair (0, 5) vs cross-cluster pair (0, 1)
+        let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        let same = dot(&e[0], &e[5]);
+        let cross = dot(&e[0], &e[1]);
+        assert!(same > cross, "same {same} cross {cross}");
+    }
+
+    #[test]
+    fn recall_overlap_basics() {
+        assert_eq!(recall_overlap(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(recall_overlap(&[1, 2, 3], &[3, 2, 1]), 1.0); // order-free
+        assert_eq!(recall_overlap(&[1, 2, 3, 4], &[1, 2, 9, 9]), 0.5);
+        assert_eq!(recall_overlap(&[], &[]), 1.0);
+    }
+}

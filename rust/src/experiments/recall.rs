@@ -1,0 +1,156 @@
+//! E3 — Table 3: Recall@10 of the Q16.16 deterministic index vs the f32
+//! baseline.
+//!
+//! Paper protocol (§8.3): build two indices with *identical* insertion
+//! order and HNSW parameters — one f32, one Q16.16 — and measure the
+//! Top-10 overlap per query. Our generic HNSW makes the control exact:
+//! both indices are instantiations of the same code, so any difference is
+//! numeric representation alone. We additionally report both indices'
+//! recall against exact (flat) ground truth, which the paper omits.
+
+use crate::distance::Metric;
+use crate::experiments::{recall_overlap, synthetic_embeddings};
+use crate::fixed::{FixedFormat, Q16_16};
+use crate::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
+use crate::runtime::{artifacts_available, artifacts_dir, embedder::Env, Embedder, Engine};
+
+/// Result of the recall experiment.
+#[derive(Debug, Clone)]
+pub struct RecallResult {
+    pub n_docs: usize,
+    pub n_queries: usize,
+    pub k: usize,
+    /// Table 3 row 1: f32 HNSW vs itself (tautologically 1.0, kept for the
+    /// paper's table shape).
+    pub recall_f32: f64,
+    /// Table 3 row 2: Q16.16 HNSW overlap with the f32 HNSW baseline.
+    pub recall_q16_vs_f32: f64,
+    /// Extra: f32 HNSW vs exact flat ground truth.
+    pub recall_f32_vs_exact: f64,
+    /// Extra: Q16.16 HNSW vs exact flat ground truth.
+    pub recall_q16_vs_exact: f64,
+    pub source: &'static str,
+}
+
+/// Build the four indices and measure overlap.
+pub fn run_with_embeddings(
+    embeddings: &[Vec<f32>],
+    queries: &[Vec<f32>],
+    k: usize,
+    source: &'static str,
+) -> RecallResult {
+    let dim = embeddings[0].len();
+    let params = HnswParams::default();
+    let metric = Metric::L2;
+
+    let mut h_f32: Hnsw<f32> = Hnsw::new(dim, metric, params);
+    let mut h_q16: Hnsw<i32> = Hnsw::new(dim, metric, params);
+    let mut flat_f32: FlatIndex<f32> = FlatIndex::new(dim, metric);
+
+    // identical insertion order — the paper's stated control
+    for (id, v) in embeddings.iter().enumerate() {
+        let raw: Vec<i32> = v.iter().map(|&x| Q16_16::quantize(x as f64)).collect();
+        h_f32.insert(id as u64, v.clone());
+        h_q16.insert(id as u64, raw);
+        flat_f32.insert(id as u64, v.clone());
+    }
+
+    let (mut sum_q16_f32, mut sum_f32_exact, mut sum_q16_exact) = (0.0, 0.0, 0.0);
+    for q in queries {
+        let raw_q: Vec<i32> = q.iter().map(|&x| Q16_16::quantize(x as f64)).collect();
+        let ids_f32: Vec<u64> = h_f32.search(q, k).iter().map(|h| h.id).collect();
+        let ids_q16: Vec<u64> = h_q16.search(&raw_q, k).iter().map(|h| h.id).collect();
+        let ids_exact: Vec<u64> = flat_f32.search(q, k).iter().map(|h| h.id).collect();
+        sum_q16_f32 += recall_overlap(&ids_f32, &ids_q16);
+        sum_f32_exact += recall_overlap(&ids_exact, &ids_f32);
+        sum_q16_exact += recall_overlap(&ids_exact, &ids_q16);
+    }
+    let nq = queries.len() as f64;
+    RecallResult {
+        n_docs: embeddings.len(),
+        n_queries: queries.len(),
+        k,
+        recall_f32: 1.0,
+        recall_q16_vs_f32: sum_q16_f32 / nq,
+        recall_f32_vs_exact: sum_f32_exact / nq,
+        recall_q16_vs_exact: sum_q16_exact / nq,
+        source,
+    }
+}
+
+/// Run on real AOT-embedder embeddings over the synthetic corpus.
+pub fn run_embedder(n_docs: usize, n_queries: usize, k: usize) -> crate::Result<RecallResult> {
+    use crate::corpus::CorpusGen;
+    let engine = Engine::cpu()?;
+    let embedder = Embedder::load(&engine, artifacts_dir(), Env::A)?;
+    let mut gen = CorpusGen::new(7);
+    let docs = gen.docs(n_docs);
+    let mut embeddings = Vec::with_capacity(n_docs);
+    for chunk in docs.chunks(embedder.batch_size()) {
+        let texts: Vec<&str> = chunk.iter().map(|d| d.text.as_str()).collect();
+        embeddings.extend(embedder.embed_texts(&texts)?);
+    }
+    let mut queries = Vec::with_capacity(n_queries);
+    let qtexts: Vec<String> =
+        (0..n_queries).map(|i| gen.query_for_topic(i % CorpusGen::n_topics())).collect();
+    for chunk in qtexts.chunks(embedder.batch_size()) {
+        let texts: Vec<&str> = chunk.iter().map(|s| s.as_str()).collect();
+        queries.extend(embedder.embed_texts(&texts)?);
+    }
+    Ok(run_with_embeddings(&embeddings, &queries, k, "aot-embedder corpus"))
+}
+
+/// Run with artifacts if available, synthetic fallback otherwise.
+pub fn run(n_docs: usize, n_queries: usize, k: usize) -> RecallResult {
+    if artifacts_available() {
+        match run_embedder(n_docs, n_queries, k) {
+            Ok(r) => return r,
+            Err(e) => eprintln!("embedder recall failed ({e}); using synthetic"),
+        }
+    }
+    let embeddings = synthetic_embeddings(n_docs, 128, 16, 11);
+    let queries = synthetic_embeddings(n_queries, 128, 16, 777);
+    run_with_embeddings(&embeddings, &queries, k, "synthetic clusters")
+}
+
+/// Render in the paper's Table 3 format.
+pub fn print_table(r: &RecallResult) {
+    println!("\n=== Table 3: Recall@{} Comparison ===", r.k);
+    println!(
+        "source: {} | {} docs, {} queries",
+        r.source, r.n_docs, r.n_queries
+    );
+    println!("{:<24} {:>10}", "Index Type", "Recall@10");
+    println!("{:<24} {:>10.3}", "Float32 HNSW (baseline)", r.recall_f32);
+    println!("{:<24} {:>10.3}", "Valori Q16.16 HNSW", r.recall_q16_vs_f32);
+    println!("(paper: 1.000 / 0.998)");
+    println!(
+        "vs exact ground truth: f32 HNSW {:.3}, Q16.16 HNSW {:.3}",
+        r.recall_f32_vs_exact, r.recall_q16_vs_exact
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_recall_matches_paper_shape() {
+        let embeddings = synthetic_embeddings(800, 64, 10, 3);
+        let queries = synthetic_embeddings(40, 64, 10, 5);
+        let r = run_with_embeddings(&embeddings, &queries, 10, "test");
+        // paper: 0.998 — quantization noise costs at most a little
+        assert!(r.recall_q16_vs_f32 > 0.95, "q16 vs f32 = {}", r.recall_q16_vs_f32);
+        assert!(r.recall_f32_vs_exact > 0.9, "f32 vs exact = {}", r.recall_f32_vs_exact);
+        assert!(r.recall_q16_vs_exact > 0.9, "q16 vs exact = {}", r.recall_q16_vs_exact);
+    }
+
+    #[test]
+    fn identical_inputs_give_full_recall() {
+        // dim-8 exact-match regime: quantization can't reorder anything
+        // separated by more than the quantization noise
+        let embeddings = synthetic_embeddings(100, 8, 4, 9);
+        let r = run_with_embeddings(&embeddings, &embeddings[..10].to_vec(), 1, "self");
+        assert_eq!(r.recall_q16_vs_f32, 1.0);
+    }
+}

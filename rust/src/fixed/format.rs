@@ -1,0 +1,383 @@
+//! The precision contract: a trait over fixed-point formats plus the three
+//! concrete formats the paper names (Table 2).
+//!
+//! A `Qm.n` value is stored as a signed integer `raw`; the real value it
+//! denotes is `raw / 2^n`. Addition/subtraction are plain (saturating)
+//! integer ops; multiplication widens to the accumulator type, shifts right
+//! by `n`, and saturates back; dot products accumulate in the wide type and
+//! only narrow at the very end (paper §5.1 "Accumulators use i64 (or wider)
+//! intermediates").
+//!
+//! Determinism argument: every operation below is defined purely in terms of
+//! two's-complement integer arithmetic and shifts, which the Rust language
+//! defines exactly (no implementation-defined behaviour), so results are
+//! bit-identical on every supported target.
+
+use core::fmt;
+
+/// A fixed-point precision contract (paper §6).
+///
+/// Implementors provide the storage width, fractional bits and saturating
+/// arithmetic. All methods must be pure and integer-only.
+pub trait FixedFormat: Copy + Clone + fmt::Debug + PartialEq + Eq {
+    /// Raw storage type (`i32` for Q8.24/Q16.16, `i64` for Q32.32).
+    type Raw: Copy + Ord + fmt::Debug;
+    /// Wide accumulator type used for products and sums.
+    type Wide: Copy + Ord + fmt::Debug;
+
+    /// Number of fractional bits (`n` in `Qm.n`).
+    const FRAC_BITS: u32;
+    /// Total storage bits.
+    const STORAGE_BITS: u32;
+    /// Human-readable name, e.g. `"Q16.16"`.
+    const NAME: &'static str;
+
+    /// Raw value denoting zero.
+    fn raw_zero() -> Self::Raw;
+    /// Raw value denoting one (i.e. `1 << FRAC_BITS`).
+    fn raw_one() -> Self::Raw;
+    /// Maximum representable raw value.
+    fn raw_max() -> Self::Raw;
+    /// Minimum representable raw value.
+    fn raw_min() -> Self::Raw;
+
+    /// Quantize an `f64` real value to raw fixed-point, round-ties-even,
+    /// saturating at the format bounds. This is the *boundary* operation
+    /// (paper §5.3): the only place float math is allowed, and it uses a
+    /// single correctly-rounded multiply + round, which IEEE-754 defines
+    /// exactly — hence the boundary itself is cross-platform deterministic.
+    fn quantize(x: f64) -> Self::Raw;
+
+    /// Dequantize raw fixed-point back to `f64` (exact: the storage width
+    /// always fits in an f64 mantissa for Q8.24/Q16.16; Q32.32 documents
+    /// the rounding in its impl).
+    fn dequantize(raw: Self::Raw) -> f64;
+
+    /// Saturating addition.
+    fn sat_add(a: Self::Raw, b: Self::Raw) -> Self::Raw;
+    /// Saturating subtraction.
+    fn sat_sub(a: Self::Raw, b: Self::Raw) -> Self::Raw;
+    /// Saturating fixed-point multiplication: `(a*b) >> FRAC_BITS` with the
+    /// product computed in the wide type (arithmetic shift, rounds toward
+    /// negative infinity — documented contract).
+    fn sat_mul(a: Self::Raw, b: Self::Raw) -> Self::Raw;
+    /// Fixed-point division `(a << FRAC_BITS) / b`, saturating; division by
+    /// zero saturates to the sign of `a` (`raw_max`/`raw_min`), `0/0 == 0`.
+    fn sat_div(a: Self::Raw, b: Self::Raw) -> Self::Raw;
+
+    /// Widening product `a * b` (a Q(2m).(2n) value in the wide type).
+    fn widening_mul(a: Self::Raw, b: Self::Raw) -> Self::Wide;
+    /// Saturating add in the wide domain.
+    fn wide_add(a: Self::Wide, b: Self::Wide) -> Self::Wide;
+    /// Wide zero.
+    fn wide_zero() -> Self::Wide;
+    /// Narrow a wide Q(2m).(2n) value back to raw Qm.n (shift right by
+    /// FRAC_BITS, saturate).
+    fn narrow(w: Self::Wide) -> Self::Raw;
+    /// Convert a wide value to f64 interpreting it as Q(2m).(2n).
+    fn wide_to_f64(w: Self::Wide) -> f64;
+
+    /// Dot product over raw slices: widening products, wide saturating
+    /// accumulation. Returns the wide Q(2m).(2n) sum — callers decide
+    /// whether to narrow. Slices must have equal length.
+    fn dot_wide(a: &[Self::Raw], b: &[Self::Raw]) -> Self::Wide {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = Self::wide_zero();
+        for i in 0..a.len() {
+            acc = Self::wide_add(acc, Self::widening_mul(a[i], b[i]));
+        }
+        acc
+    }
+
+    /// Squared L2 distance over raw slices, wide accumulation.
+    fn l2sq_wide(a: &[Self::Raw], b: &[Self::Raw]) -> Self::Wide {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = Self::wide_zero();
+        for i in 0..a.len() {
+            let d = Self::sat_sub(a[i], b[i]);
+            acc = Self::wide_add(acc, Self::widening_mul(d, d));
+        }
+        acc
+    }
+
+    /// Resolution (smallest positive step) as f64.
+    fn resolution() -> f64 {
+        1.0 / (1u64 << Self::FRAC_BITS) as f64
+    }
+}
+
+/// Generates a fixed-point format backed by a primitive signed integer.
+macro_rules! fixed_format {
+    ($(#[$doc:meta])* $name:ident, $raw:ty, $wide:ty, $frac:expr, $bits:expr, $disp:expr) => {
+        $(#[$doc])*
+        #[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+        pub struct $name;
+
+        impl FixedFormat for $name {
+            type Raw = $raw;
+            type Wide = $wide;
+            const FRAC_BITS: u32 = $frac;
+            const STORAGE_BITS: u32 = $bits;
+            const NAME: &'static str = $disp;
+
+            #[inline]
+            fn raw_zero() -> $raw { 0 }
+            #[inline]
+            fn raw_one() -> $raw { 1 << $frac }
+            #[inline]
+            fn raw_max() -> $raw { <$raw>::MAX }
+            #[inline]
+            fn raw_min() -> $raw { <$raw>::MIN }
+
+            #[inline]
+            fn quantize(x: f64) -> $raw {
+                if x.is_nan() {
+                    return 0;
+                }
+                let scaled = x * (1u64 << $frac) as f64;
+                // round half to even, matching numpy/jnp.round so the
+                // Pallas quantizer bit-matches this boundary (DESIGN §6).
+                let r = round_ties_even_f64(scaled);
+                if r >= <$raw>::MAX as f64 {
+                    <$raw>::MAX
+                } else if r <= <$raw>::MIN as f64 {
+                    <$raw>::MIN
+                } else {
+                    r as $raw
+                }
+            }
+
+            #[inline]
+            fn dequantize(raw: $raw) -> f64 {
+                raw as f64 / (1u64 << $frac) as f64
+            }
+
+            #[inline]
+            fn sat_add(a: $raw, b: $raw) -> $raw { a.saturating_add(b) }
+            #[inline]
+            fn sat_sub(a: $raw, b: $raw) -> $raw { a.saturating_sub(b) }
+
+            #[inline]
+            fn sat_mul(a: $raw, b: $raw) -> $raw {
+                let p = (a as $wide) * (b as $wide);
+                let shifted = p >> $frac;
+                if shifted > <$raw>::MAX as $wide {
+                    <$raw>::MAX
+                } else if shifted < <$raw>::MIN as $wide {
+                    <$raw>::MIN
+                } else {
+                    shifted as $raw
+                }
+            }
+
+            #[inline]
+            fn sat_div(a: $raw, b: $raw) -> $raw {
+                if b == 0 {
+                    return if a > 0 {
+                        <$raw>::MAX
+                    } else if a < 0 {
+                        <$raw>::MIN
+                    } else {
+                        0
+                    };
+                }
+                let n = (a as $wide) << $frac;
+                let q = n / (b as $wide);
+                if q > <$raw>::MAX as $wide {
+                    <$raw>::MAX
+                } else if q < <$raw>::MIN as $wide {
+                    <$raw>::MIN
+                } else {
+                    q as $raw
+                }
+            }
+
+            #[inline]
+            fn widening_mul(a: $raw, b: $raw) -> $wide { (a as $wide) * (b as $wide) }
+            #[inline]
+            fn wide_add(a: $wide, b: $wide) -> $wide { a.saturating_add(b) }
+            #[inline]
+            fn wide_zero() -> $wide { 0 }
+
+            #[inline]
+            fn narrow(w: $wide) -> $raw {
+                let shifted = w >> $frac;
+                if shifted > <$raw>::MAX as $wide {
+                    <$raw>::MAX
+                } else if shifted < <$raw>::MIN as $wide {
+                    <$raw>::MIN
+                } else {
+                    shifted as $raw
+                }
+            }
+
+            #[inline]
+            fn wide_to_f64(w: $wide) -> f64 {
+                w as f64 / ((1u64 << $frac) as f64 * (1u64 << $frac) as f64)
+            }
+        }
+    };
+}
+
+/// `f64::round_ties_even` is unstable on older toolchains; implement the
+/// IEEE-754 roundTiesToEven reconstruction explicitly so behaviour is pinned.
+#[inline]
+pub fn round_ties_even_f64(x: f64) -> f64 {
+    let r = x.round(); // round half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // exact tie: pick the even neighbour
+        let down = x.trunc();
+        let up = r;
+        if (down as i64) % 2 == 0 {
+            down
+        } else {
+            up
+        }
+    } else {
+        r
+    }
+}
+
+fixed_format!(
+    /// Q16.16: 32-bit signed, 16 fractional bits. Range ±32768,
+    /// resolution ≈ 1.5e-5. The paper's reference default (§5.1): efficient
+    /// on 32-bit MCUs, sufficient for normalized embeddings in [-1, 1].
+    Q16_16, i32, i64, 16, 32, "Q16.16"
+);
+
+fixed_format!(
+    /// Q8.24: 32-bit signed, 24 fractional bits. Range ±128, resolution
+    /// ≈ 6e-8. Same storage cost as Q16.16 with more precision for strictly
+    /// normalized embeddings (an extra contract point on Table 2's axis).
+    Q8_24, i32, i64, 24, 32, "Q8.24"
+);
+
+fixed_format!(
+    /// Q32.32: 64-bit signed, 32 fractional bits. The paper's "future
+    /// enterprise" contract (Table 2): higher dynamic range + auditability.
+    Q32_32, i64, i128, 32, 64, "Q32.32"
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q16_constants() {
+        assert_eq!(Q16_16::FRAC_BITS, 16);
+        assert_eq!(Q16_16::raw_one(), 65536);
+        assert_eq!(Q16_16::NAME, "Q16.16");
+        assert!((Q16_16::resolution() - 1.0 / 65536.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_roundtrip_exact_values() {
+        // Values exactly representable in Q16.16 must round-trip exactly.
+        for &x in &[0.0, 1.0, -1.0, 0.5, -0.5, 0.25, 123.0625, -32767.0] {
+            let q = Q16_16::quantize(x);
+            assert_eq!(Q16_16::dequantize(q), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn quantize_rounds_ties_to_even() {
+        // 0.5 ulp above an even raw value must round down to the even one.
+        // raw 2 denotes 2/65536; x = 2.5/65536 ties between raw 2 and 3.
+        let x = 2.5 / 65536.0;
+        assert_eq!(Q16_16::quantize(x), 2);
+        let x = 3.5 / 65536.0; // ties between 3 and 4 -> 4
+        assert_eq!(Q16_16::quantize(x), 4);
+        let x = -2.5 / 65536.0;
+        assert_eq!(Q16_16::quantize(x), -2);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(Q16_16::quantize(1e30), i32::MAX);
+        assert_eq!(Q16_16::quantize(-1e30), i32::MIN);
+        assert_eq!(Q16_16::quantize(f64::INFINITY), i32::MAX);
+        assert_eq!(Q16_16::quantize(f64::NEG_INFINITY), i32::MIN);
+        assert_eq!(Q16_16::quantize(f64::NAN), 0);
+    }
+
+    #[test]
+    fn sat_mul_basic() {
+        let one = Q16_16::raw_one();
+        let half = one / 2;
+        assert_eq!(Q16_16::sat_mul(one, one), one);
+        assert_eq!(Q16_16::sat_mul(half, half), one / 4);
+        assert_eq!(Q16_16::sat_mul(one * 2, one * 3), one * 6);
+        // negative
+        assert_eq!(Q16_16::sat_mul(-one, one), -one);
+    }
+
+    #[test]
+    fn sat_mul_saturates() {
+        let big = Q16_16::quantize(30000.0);
+        assert_eq!(Q16_16::sat_mul(big, big), i32::MAX);
+        assert_eq!(Q16_16::sat_mul(big, -big), i32::MIN);
+    }
+
+    #[test]
+    fn sat_div_basic() {
+        let one = Q16_16::raw_one();
+        assert_eq!(Q16_16::sat_div(one * 6, one * 3), one * 2);
+        assert_eq!(Q16_16::sat_div(one, one * 2), one / 2);
+        assert_eq!(Q16_16::sat_div(one, 0), i32::MAX);
+        assert_eq!(Q16_16::sat_div(-one, 0), i32::MIN);
+        assert_eq!(Q16_16::sat_div(0, 0), 0);
+    }
+
+    #[test]
+    fn dot_wide_matches_manual() {
+        let one = Q16_16::raw_one();
+        let a = vec![one, one * 2, -one];
+        let b = vec![one, one, one];
+        // 1 + 2 - 1 = 2 in Q32.32
+        let d = Q16_16::dot_wide(&a, &b);
+        assert_eq!(Q16_16::narrow(d), one * 2);
+        assert_eq!(Q16_16::wide_to_f64(d), 2.0);
+    }
+
+    #[test]
+    fn l2sq_wide_matches_manual() {
+        let one = Q16_16::raw_one();
+        let a = vec![one, 0];
+        let b = vec![0, one];
+        let d = Q16_16::l2sq_wide(&a, &b);
+        assert_eq!(Q16_16::wide_to_f64(d), 2.0);
+    }
+
+    #[test]
+    fn q32_32_roundtrip() {
+        for &x in &[0.0, 1.0, -1.0, 0.125, 1e6] {
+            let q = Q32_32::quantize(x);
+            assert_eq!(Q32_32::dequantize(q), x);
+        }
+        assert_eq!(Q32_32::raw_one(), 1i64 << 32);
+    }
+
+    #[test]
+    fn q8_24_range() {
+        // Q8.24 max real value ~ 127.9999...
+        assert!(Q8_24::dequantize(Q8_24::raw_max()) < 128.0);
+        assert_eq!(Q8_24::quantize(200.0), i32::MAX);
+    }
+
+    #[test]
+    fn round_ties_even_helper() {
+        assert_eq!(round_ties_even_f64(0.5), 0.0);
+        assert_eq!(round_ties_even_f64(1.5), 2.0);
+        assert_eq!(round_ties_even_f64(2.5), 2.0);
+        assert_eq!(round_ties_even_f64(-0.5), 0.0);
+        assert_eq!(round_ties_even_f64(-1.5), -2.0);
+        assert_eq!(round_ties_even_f64(0.75), 1.0);
+        assert_eq!(round_ties_even_f64(-0.75), -1.0);
+    }
+
+    #[test]
+    fn narrow_saturates() {
+        assert_eq!(Q16_16::narrow(i64::MAX), i32::MAX);
+        assert_eq!(Q16_16::narrow(i64::MIN), i32::MIN);
+    }
+}

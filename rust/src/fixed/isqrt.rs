@@ -1,0 +1,109 @@
+//! Deterministic integer square root.
+//!
+//! Used by fixed-point L2 normalization: given `norm² = Σ vᵢ²` accumulated
+//! as a wide Q(2m).(2n) integer, `isqrt(norm²)` is a Qm.n integer norm. The
+//! algorithm is the classic digit-by-digit (binary restoring) method —
+//! integer-only, loop bounds fixed by the type width, so it is bit-identical
+//! on every platform (no float sqrt involved anywhere).
+
+/// Floor of the square root of a `u64`.
+#[inline]
+pub fn isqrt_u64(n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    // Initial guess from leading-zero count, then Newton iterations.
+    // Newton on integers converges monotonically from above; loop is
+    // deterministic (no float ops).
+    let mut x = 1u64 << ((64 - n.leading_zeros()).div_ceil(2));
+    loop {
+        let y = (x + n / x) >> 1;
+        if y >= x {
+            // x is floor(sqrt(n)) or one above; fix up below.
+            break;
+        }
+        x = y;
+    }
+    // Fix-up: overflow of x*x means x is certainly too large.
+    while x.checked_mul(x).map_or(true, |xx| xx > n) {
+        x -= 1;
+    }
+    // x*x <= n < (x+1)^2 now holds.
+    x
+}
+
+/// Floor of the square root of a `u128`.
+#[inline]
+pub fn isqrt_u128(n: u128) -> u128 {
+    if n == 0 {
+        return 0;
+    }
+    if n <= u64::MAX as u128 {
+        return isqrt_u64(n as u64) as u128;
+    }
+    let mut x = 1u128 << ((128 - n.leading_zeros()).div_ceil(2));
+    loop {
+        let y = (x + n / x) >> 1;
+        if y >= x {
+            break;
+        }
+        x = y;
+    }
+    while x.checked_mul(x).map_or(true, |xx| xx > n) {
+        x -= 1;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isqrt_small_values() {
+        let expect = [0, 1, 1, 1, 2, 2, 2, 2, 2, 3, 3, 3, 3, 3, 3, 3, 4];
+        for (n, &e) in expect.iter().enumerate() {
+            assert_eq!(isqrt_u64(n as u64), e, "n={n}");
+        }
+    }
+
+    #[test]
+    fn isqrt_perfect_squares() {
+        for k in 0u64..2000 {
+            assert_eq!(isqrt_u64(k * k), k);
+            if k > 0 {
+                assert_eq!(isqrt_u64(k * k - 1), k - 1);
+                assert_eq!(isqrt_u64(k * k + 1), k);
+            }
+        }
+    }
+
+    #[test]
+    fn isqrt_u64_extremes() {
+        assert_eq!(isqrt_u64(u64::MAX), (1u64 << 32) - 1);
+        assert_eq!(isqrt_u64(1u64 << 62), 1u64 << 31);
+    }
+
+    #[test]
+    fn isqrt_u128_extremes() {
+        assert_eq!(isqrt_u128(u128::MAX), (1u128 << 64) - 1);
+        assert_eq!(isqrt_u128((1u128 << 100) - 1), (1u128 << 50) - 1);
+        assert_eq!(isqrt_u128(1u128 << 100), 1u128 << 50);
+        // delegation to the u64 path
+        assert_eq!(isqrt_u128(144), 12);
+    }
+
+    #[test]
+    fn isqrt_invariant_floor() {
+        // Pseudo-random sweep with a deterministic LCG.
+        let mut s = 0x9e3779b97f4a7c15u64;
+        for _ in 0..10_000 {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let n = s;
+            let r = isqrt_u64(n);
+            assert!(r.checked_mul(r).map(|rr| rr <= n).unwrap_or(false) || r == 0);
+            let r1 = r + 1;
+            assert!(r1.checked_mul(r1).map(|rr| rr > n).unwrap_or(true));
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Fixed-point arithmetic — the numeric core of Valori (paper §5.1, §6).
+//!
+//! Valori replaces IEEE-754 floating point with signed fixed-point formats
+//! whose operations lower to ordinary integer ALU instructions, which are
+//! bit-identical across x86, ARM, RISC-V and WASM. Precision is a
+//! *configurable memory contract* (paper §6, Table 2): deployments choose a
+//! format (Q8.24, Q16.16, Q32.32) and determinism is preserved regardless of
+//! the choice, because every operation stays integer-associative.
+//!
+//! Layout of this module:
+//! - [`format`]   — the [`format::FixedFormat`] trait (the precision contract)
+//!   and the concrete formats [`Q8_24`], [`Q16_16`], [`Q32_32`].
+//! - [`ops`]      — saturating scalar helpers shared by the formats.
+//! - [`isqrt`]    — deterministic integer square root (used by fixed-point
+//!   L2 normalization).
+
+pub mod format;
+pub mod isqrt;
+pub mod ops;
+
+pub use format::{FixedFormat, Q16_16, Q32_32, Q8_24};
+pub use isqrt::{isqrt_u128, isqrt_u64};

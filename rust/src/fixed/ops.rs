@@ -1,0 +1,190 @@
+//! Vector-level fixed-point helpers shared by the kernel hot paths.
+//!
+//! These are the operations the paper's §5.1 "Operations" paragraph
+//! describes: element-wise saturating arithmetic plus wide-accumulator
+//! reductions. They are deliberately written as plain indexed loops over
+//! slices — LLVM auto-vectorizes them with *integer* SIMD, which is exact
+//! and order-independent (integer addition is associative), so the
+//! vectorized code is still bit-identical to the scalar loop. This is the
+//! crucial asymmetry with floats the paper exploits.
+
+use super::format::FixedFormat;
+use super::isqrt::{isqrt_u128, isqrt_u64};
+
+/// Element-wise saturating addition `out[i] = a[i] + b[i]`.
+pub fn add_into<F: FixedFormat>(a: &[F::Raw], b: &[F::Raw], out: &mut [F::Raw]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    for i in 0..a.len() {
+        out[i] = F::sat_add(a[i], b[i]);
+    }
+}
+
+/// Element-wise saturating subtraction.
+pub fn sub_into<F: FixedFormat>(a: &[F::Raw], b: &[F::Raw], out: &mut [F::Raw]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    for i in 0..a.len() {
+        out[i] = F::sat_sub(a[i], b[i]);
+    }
+}
+
+/// Scale every element by a fixed-point factor.
+pub fn scale_into<F: FixedFormat>(a: &[F::Raw], k: F::Raw, out: &mut [F::Raw]) {
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = F::sat_mul(a[i], k);
+    }
+}
+
+/// Squared L2 norm as a wide Q(2m).(2n) value.
+pub fn norm_sq_wide<F: FixedFormat>(v: &[F::Raw]) -> F::Wide {
+    F::dot_wide(v, v)
+}
+
+/// Fixed-point L2 norm of a Q16.16-family vector, returned in raw Qm.n.
+///
+/// `norm = isqrt(Σ vᵢ²)` — the sum is Q(2m).(2n), whose integer square root
+/// is exactly a Qm.n value. Integer-only, hence deterministic.
+pub fn norm_q16(v: &[i32]) -> i32 {
+    let mut acc: i64 = 0;
+    for &x in v {
+        acc = acc.saturating_add((x as i64) * (x as i64));
+    }
+    // acc >= 0 always (sum of squares, saturating at i64::MAX)
+    let r = isqrt_u64(acc as u64);
+    if r > i32::MAX as u64 {
+        i32::MAX
+    } else {
+        r as i32
+    }
+}
+
+/// Fixed-point L2 norm for the Q32.32 contract.
+pub fn norm_q32(v: &[i64]) -> i64 {
+    let mut acc: i128 = 0;
+    for &x in v {
+        acc = acc.saturating_add((x as i128) * (x as i128));
+    }
+    let r = isqrt_u128(acc as u128);
+    if r > i64::MAX as u128 {
+        i64::MAX
+    } else {
+        r as i64
+    }
+}
+
+/// In-place fixed-point L2 normalization for 32-bit formats
+/// (`v[i] = (v[i] << FRAC) / norm`). No-op on the zero vector.
+///
+/// After normalization `Σ vᵢ² ≈ 1.0` with error bounded by the format
+/// resolution times the dimension (each element suffers one truncating
+/// division).
+pub fn normalize_q16(v: &mut [i32]) {
+    let n = norm_q16(v);
+    if n == 0 {
+        return;
+    }
+    for x in v.iter_mut() {
+        let num = (*x as i64) << 16;
+        let q = num / (n as i64);
+        *x = if q > i32::MAX as i64 {
+            i32::MAX
+        } else if q < i32::MIN as i64 {
+            i32::MIN
+        } else {
+            q as i32
+        };
+    }
+}
+
+/// Generic saturating sum of raw values in the wide domain (useful for
+/// metadata aggregation and tests).
+pub fn sum_wide<F: FixedFormat>(v: &[F::Raw]) -> F::Wide {
+    let mut acc = F::wide_zero();
+    for &x in v {
+        acc = F::wide_add(acc, F::widening_mul(x, F::raw_one()));
+    }
+    // The product x * one is x << FRAC_BITS, i.e. the raw value promoted to
+    // the wide Q(2m).(2n) representation.
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::format::{Q16_16, Q32_32};
+
+    fn q(x: f64) -> i32 {
+        Q16_16::quantize(x)
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = vec![q(1.0), q(-2.0), q(0.5)];
+        let b = vec![q(0.5), q(2.0), q(0.25)];
+        let mut s = vec![0; 3];
+        let mut d = vec![0; 3];
+        add_into::<Q16_16>(&a, &b, &mut s);
+        sub_into::<Q16_16>(&s, &b, &mut d);
+        assert_eq!(d, a);
+    }
+
+    #[test]
+    fn scale_by_half() {
+        let a = vec![q(2.0), q(-4.0)];
+        let mut out = vec![0; 2];
+        scale_into::<Q16_16>(&a, q(0.5), &mut out);
+        assert_eq!(out, vec![q(1.0), q(-2.0)]);
+    }
+
+    #[test]
+    fn norm_of_unit_axis() {
+        let v = vec![q(1.0), 0, 0];
+        assert_eq!(norm_q16(&v), q(1.0));
+    }
+
+    #[test]
+    fn norm_345() {
+        let v = vec![q(3.0), q(4.0)];
+        assert_eq!(norm_q16(&v), q(5.0));
+    }
+
+    #[test]
+    fn normalize_makes_unit_norm() {
+        let mut v = vec![q(3.0), q(4.0), q(0.0), q(-12.0)];
+        normalize_q16(&mut v);
+        let n2 = Q16_16::wide_to_f64(norm_sq_wide::<Q16_16>(&v));
+        assert!((n2 - 1.0).abs() < 1e-3, "norm² = {n2}");
+    }
+
+    #[test]
+    fn normalize_zero_vector_is_noop() {
+        let mut v = vec![0i32; 8];
+        normalize_q16(&mut v);
+        assert!(v.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn norm_q32_345() {
+        let q32 = |x: f64| Q32_32::quantize(x);
+        let v = vec![q32(3.0), q32(4.0)];
+        assert_eq!(norm_q32(&v), q32(5.0));
+    }
+
+    #[test]
+    fn normalize_is_deterministic_replay() {
+        // Same input normalized twice from scratch gives identical bits.
+        let base: Vec<i32> = (0..128).map(|i| q(((i * 37) % 100) as f64 / 100.0 - 0.5)).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        normalize_q16(&mut a);
+        normalize_q16(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sum_wide_promotes() {
+        let v = vec![q(1.0), q(2.0), q(-0.5)];
+        let s = sum_wide::<Q16_16>(&v);
+        assert_eq!(Q16_16::wide_to_f64(s), 2.5);
+    }
+}

@@ -1,0 +1,195 @@
+//! Typed links between memories — the `link(a, b)` command surface the
+//! paper's §3.1 command vocabulary includes.
+//!
+//! Agent memories are not just points in embedding space; they reference
+//! each other ("this fact supersedes that one", "these belong to the same
+//! episode"). Valori stores links inside the deterministic state machine so
+//! they replay and snapshot with everything else. Structures are `BTreeMap`
+//! / `BTreeSet` so iteration (and therefore serialization and hashing) is
+//! canonical.
+
+use crate::codec::{DecodeError, Decoder, Encoder};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Directed link graph over external vector ids.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LinkGraph {
+    /// from -> set of to.
+    out: BTreeMap<u64, BTreeSet<u64>>,
+    /// to -> set of from (kept for O(log) reverse queries and for cleaning
+    /// up when a node is deleted).
+    incoming: BTreeMap<u64, BTreeSet<u64>>,
+    edge_count: usize,
+}
+
+impl LinkGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edge_count
+    }
+
+    /// Add a directed edge. Returns false if it already existed.
+    pub fn link(&mut self, from: u64, to: u64) -> bool {
+        let inserted = self.out.entry(from).or_default().insert(to);
+        if inserted {
+            self.incoming.entry(to).or_default().insert(from);
+            self.edge_count += 1;
+        }
+        inserted
+    }
+
+    /// Remove a directed edge. Returns false if absent.
+    pub fn unlink(&mut self, from: u64, to: u64) -> bool {
+        let removed = self.out.get_mut(&from).map(|s| s.remove(&to)).unwrap_or(false);
+        if removed {
+            if self.out.get(&from).is_some_and(|s| s.is_empty()) {
+                self.out.remove(&from);
+            }
+            if let Some(s) = self.incoming.get_mut(&to) {
+                s.remove(&from);
+                if s.is_empty() {
+                    self.incoming.remove(&to);
+                }
+            }
+            self.edge_count -= 1;
+        }
+        removed
+    }
+
+    /// Drop every edge touching `id` (called when a vector is deleted).
+    pub fn remove_node(&mut self, id: u64) {
+        if let Some(outs) = self.out.remove(&id) {
+            self.edge_count -= outs.len();
+            for to in outs {
+                if let Some(s) = self.incoming.get_mut(&to) {
+                    s.remove(&id);
+                    if s.is_empty() {
+                        self.incoming.remove(&to);
+                    }
+                }
+            }
+        }
+        if let Some(ins) = self.incoming.remove(&id) {
+            for from in ins {
+                if let Some(s) = self.out.get_mut(&from) {
+                    if s.remove(&id) {
+                        self.edge_count -= 1;
+                    }
+                    if s.is_empty() {
+                        self.out.remove(&from);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn has_link(&self, from: u64, to: u64) -> bool {
+        self.out.get(&from).is_some_and(|s| s.contains(&to))
+    }
+
+    /// Outgoing neighbours of `from`, ascending.
+    pub fn links_from(&self, from: u64) -> Vec<u64> {
+        self.out.get(&from).map(|s| s.iter().copied().collect()).unwrap_or_default()
+    }
+
+    /// Incoming neighbours of `to`, ascending.
+    pub fn links_to(&self, to: u64) -> Vec<u64> {
+        self.incoming.get(&to).map(|s| s.iter().copied().collect()).unwrap_or_default()
+    }
+
+    /// Canonical serialization: sorted by (from, to).
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u32(self.out.len() as u32);
+        for (from, tos) in &self.out {
+            e.put_u64(*from);
+            e.put_u32(tos.len() as u32);
+            for to in tos {
+                e.put_u64(*to);
+            }
+        }
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let n = d.get_u32()? as usize;
+        let mut g = Self::new();
+        for _ in 0..n {
+            let from = d.get_u64()?;
+            let cnt = d.get_u32()? as usize;
+            for _ in 0..cnt {
+                let to = d.get_u64()?;
+                g.link(from, to);
+            }
+        }
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_unlink() {
+        let mut g = LinkGraph::new();
+        assert!(g.link(1, 2));
+        assert!(!g.link(1, 2)); // idempotent
+        assert_eq!(g.edge_count(), 1);
+        assert!(g.has_link(1, 2));
+        assert!(!g.has_link(2, 1)); // directed
+        assert!(g.unlink(1, 2));
+        assert!(!g.unlink(1, 2));
+        assert_eq!(g.edge_count(), 0);
+    }
+
+    #[test]
+    fn neighbours_sorted() {
+        let mut g = LinkGraph::new();
+        g.link(1, 30);
+        g.link(1, 10);
+        g.link(1, 20);
+        g.link(99, 10);
+        assert_eq!(g.links_from(1), vec![10, 20, 30]);
+        assert_eq!(g.links_to(10), vec![1, 99]);
+        assert!(g.links_from(555).is_empty());
+    }
+
+    #[test]
+    fn remove_node_cleans_both_directions() {
+        let mut g = LinkGraph::new();
+        g.link(1, 2);
+        g.link(2, 3);
+        g.link(3, 2);
+        g.remove_node(2);
+        assert_eq!(g.edge_count(), 0);
+        assert!(g.links_from(1).is_empty());
+        assert!(g.links_from(3).is_empty());
+    }
+
+    #[test]
+    fn self_link_allowed_and_removable() {
+        let mut g = LinkGraph::new();
+        g.link(7, 7);
+        assert!(g.has_link(7, 7));
+        g.remove_node(7);
+        assert_eq!(g.edge_count(), 0);
+    }
+
+    #[test]
+    fn roundtrip_canonical() {
+        let mut g = LinkGraph::new();
+        g.link(5, 1);
+        g.link(1, 5);
+        g.link(1, 2);
+        let mut e = Encoder::new();
+        g.encode(&mut e);
+        let bytes = e.into_vec();
+        let g2 = LinkGraph::decode(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(g, g2);
+        let mut e2 = Encoder::new();
+        g2.encode(&mut e2);
+        assert_eq!(bytes, e2.into_vec());
+    }
+}

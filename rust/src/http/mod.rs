@@ -1,0 +1,502 @@
+//! Minimal HTTP/1.1 server substrate (tokio/axum unavailable offline).
+//!
+//! Blocking `std::net` sockets + a fixed thread pool. Supports the subset
+//! the Valori node needs: GET/POST, Content-Length bodies, keep-alive,
+//! bounded request sizes, graceful shutdown. This is the "Node ('std')"
+//! outer layer of the paper's §5.3 split — it wraps the kernel but never
+//! alters its logic.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Maximum accepted body size (1 MiB — vectors are ~KB scale).
+pub const MAX_BODY: usize = 1 << 20;
+/// Maximum header section size.
+pub const MAX_HEADER: usize = 16 << 10;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    /// Raw query string (after '?'), if any.
+    pub query: Option<String>,
+    /// Header names lower-cased.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> Result<&str, std::str::Utf8Error> {
+        std::str::from_utf8(&self.body)
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        Self { status, content_type: "application/json", body: body.into().into_bytes() }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self { status, content_type: "text/plain; charset=utf-8", body: body.into().into_bytes() }
+    }
+
+    pub fn not_found() -> Self {
+        Self::json(404, r#"{"error":"not found"}"#)
+    }
+
+    pub fn bad_request(msg: &str) -> Self {
+        Self::json(400, format!(r#"{{"error":{}}}"#, crate::json::Json::str(msg)))
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            413 => "Payload Too Large",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Status",
+        }
+    }
+
+    fn write_to(&self, stream: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            self.status,
+            self.status_text(),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Request parse outcome.
+#[derive(Debug)]
+pub enum ParseError {
+    Io(std::io::Error),
+    /// Clean EOF before any bytes (client closed a keep-alive socket).
+    Eof,
+    Malformed(&'static str),
+    TooLarge,
+}
+
+/// Parse one request from a buffered stream.
+pub fn parse_request(reader: &mut BufReader<impl Read>) -> Result<Request, ParseError> {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).map_err(ParseError::Io)?;
+    if n == 0 {
+        return Err(ParseError::Eof);
+    }
+    let mut parts = line.trim_end().split(' ');
+    let method = parts.next().filter(|s| !s.is_empty()).ok_or(ParseError::Malformed("method"))?;
+    let target = parts.next().ok_or(ParseError::Malformed("target"))?;
+    let version = parts.next().ok_or(ParseError::Malformed("version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(ParseError::Malformed("http version"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    let mut headers = BTreeMap::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let mut hline = String::new();
+        let n = reader.read_line(&mut hline).map_err(ParseError::Io)?;
+        if n == 0 {
+            return Err(ParseError::Malformed("eof in headers"));
+        }
+        header_bytes += n;
+        if header_bytes > MAX_HEADER {
+            return Err(ParseError::TooLarge);
+        }
+        let t = hline.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse().map_err(|_| ParseError::Malformed("content-length")))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        return Err(ParseError::TooLarge);
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).map_err(ParseError::Io)?;
+
+    Ok(Request { method: method.to_string(), path, query, headers, body })
+}
+
+/// Boxed handler type.
+pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+
+/// A running HTTP server.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port) with
+    /// `n_workers` handler threads.
+    pub fn start(addr: &str, n_workers: usize, handler: Handler) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let rx = Arc::clone(&rx);
+            let handler = Arc::clone(&handler);
+            let shutdown = Arc::clone(&shutdown);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("valori-http-{i}"))
+                    .spawn(move || worker_loop(rx, handler, shutdown))
+                    .expect("spawn worker"),
+            );
+        }
+
+        let accept_shutdown = Arc::clone(&shutdown);
+        let accept_thread = std::thread::Builder::new()
+            .name("valori-http-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let _ = s.set_read_timeout(Some(Duration::from_secs(30)));
+                            let _ = tx.send(s);
+                        }
+                        Err(_) => continue,
+                    }
+                }
+                // dropping tx ends the workers
+            })
+            .expect("spawn accept");
+
+        Ok(Server { addr: local, shutdown, accept_thread: Some(accept_thread), workers })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown and join all threads.
+    pub fn stop(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // unblock accept() with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.accept_thread.is_some() {
+            self.shutdown_impl();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>,
+    handler: Handler,
+    shutdown: Arc<AtomicBool>,
+) {
+    loop {
+        let stream = {
+            let guard = rx.lock().expect("rx poisoned");
+            guard.recv()
+        };
+        let Ok(stream) = stream else { return }; // channel closed
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = handle_connection(stream, &handler);
+    }
+}
+
+fn handle_connection(stream: TcpStream, handler: &Handler) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // keep-alive loop: serve up to 1000 requests per connection
+    for _ in 0..1000 {
+        match parse_request(&mut reader) {
+            Ok(req) => {
+                let keep_alive = req
+                    .headers
+                    .get("connection")
+                    .map(|v| !v.eq_ignore_ascii_case("close"))
+                    .unwrap_or(true);
+                let resp = handler(req);
+                resp.write_to(&mut writer, keep_alive)?;
+                if !keep_alive {
+                    return Ok(());
+                }
+            }
+            Err(ParseError::Eof) => return Ok(()),
+            Err(ParseError::TooLarge) => {
+                let _ = Response::json(413, r#"{"error":"payload too large"}"#)
+                    .write_to(&mut writer, false);
+                return Ok(());
+            }
+            Err(ParseError::Malformed(what)) => {
+                let _ = Response::bad_request(&format!("malformed request: {what}"))
+                    .write_to(&mut writer, false);
+                return Ok(());
+            }
+            Err(ParseError::Io(_)) => return Ok(()), // timeout/reset
+        }
+    }
+    Ok(())
+}
+
+/// Tiny blocking HTTP client for tests, examples and replication.
+pub mod client {
+    use super::*;
+
+    /// One-shot request; returns (status, body).
+    pub fn request(
+        addr: &SocketAddr,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            body.len()
+        )?;
+        stream.write_all(body)?;
+        stream.flush()?;
+
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| std::io::Error::other("bad status line"))?;
+        let mut len = 0usize;
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            let t = line.trim_end();
+            if t.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = t.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    len = v.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        Ok((status, body))
+    }
+
+    /// POST JSON; returns (status, parsed body if JSON).
+    pub fn post_json(
+        addr: &SocketAddr,
+        path: &str,
+        body: &crate::json::Json,
+    ) -> std::io::Result<(u16, crate::json::Json)> {
+        let (status, bytes) = request(addr, "POST", path, body.to_string().as_bytes())?;
+        let text = String::from_utf8_lossy(&bytes);
+        let json = crate::json::parse(&text).unwrap_or(crate::json::Json::Null);
+        Ok((status, json))
+    }
+
+    /// GET; returns (status, parsed body if JSON).
+    pub fn get_json(addr: &SocketAddr, path: &str) -> std::io::Result<(u16, crate::json::Json)> {
+        let (status, bytes) = request(addr, "GET", path, &[])?;
+        let text = String::from_utf8_lossy(&bytes);
+        let json = crate::json::parse(&text).unwrap_or(crate::json::Json::Null);
+        Ok((status, json))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        let handler: Handler = Arc::new(|req: Request| {
+            if req.path == "/echo" {
+                Response::text(200, String::from_utf8_lossy(&req.body).to_string())
+            } else if req.path == "/method" {
+                Response::text(200, req.method.clone())
+            } else if req.path == "/query" {
+                Response::text(200, req.query.unwrap_or_default())
+            } else {
+                Response::not_found()
+            }
+        });
+        Server::start("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn serves_and_echoes() {
+        let server = echo_server();
+        let (status, body) = client::request(&server.addr(), "POST", "/echo", b"hello").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"hello");
+        server.stop();
+    }
+
+    #[test]
+    fn not_found_and_method() {
+        let server = echo_server();
+        let (status, _) = client::request(&server.addr(), "GET", "/nope", b"").unwrap();
+        assert_eq!(status, 404);
+        let (_, body) = client::request(&server.addr(), "PUT", "/method", b"").unwrap();
+        assert_eq!(body, b"PUT");
+        server.stop();
+    }
+
+    #[test]
+    fn query_string_split() {
+        let server = echo_server();
+        let (_, body) = client::request(&server.addr(), "GET", "/query?k=10&x=1", b"").unwrap();
+        assert_eq!(body, b"k=10&x=1");
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let server = echo_server();
+        let addr = server.addr();
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let msg = format!("msg-{i}");
+                    let (s, b) = client::request(&addr, "POST", "/echo", msg.as_bytes()).unwrap();
+                    assert_eq!(s, 200);
+                    assert_eq!(b, msg.as_bytes());
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn oversized_body_rejected() {
+        let server = echo_server();
+        let addr = server.addr();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(stream, "POST /echo HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1).unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("413"), "{line}");
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_request_rejected() {
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("400"), "{line}");
+        server.stop();
+    }
+
+    #[test]
+    fn keep_alive_multiple_requests_one_connection() {
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        for i in 0..3 {
+            let msg = format!("ka-{i}");
+            write!(
+                stream,
+                "POST /echo HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+                msg.len()
+            )
+            .unwrap();
+            stream.write_all(msg.as_bytes()).unwrap();
+            stream.flush().unwrap();
+            // read one response off the same socket
+            let mut reader = BufReader::new(&stream);
+            let mut status = String::new();
+            reader.read_line(&mut status).unwrap();
+            assert!(status.contains("200"));
+            let mut len = 0;
+            loop {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let t = line.trim_end();
+                if t.is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = t.split_once(':') {
+                    if k.eq_ignore_ascii_case("content-length") {
+                        len = v.trim().parse().unwrap();
+                    }
+                }
+            }
+            let mut body = vec![0u8; len];
+            reader.read_exact(&mut body).unwrap();
+            assert_eq!(body, msg.as_bytes());
+        }
+        server.stop();
+    }
+}

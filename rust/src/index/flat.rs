@@ -1,0 +1,159 @@
+//! Exact (brute-force) index.
+//!
+//! Ground truth for the HNSW consistency tests and the recall experiments
+//! (Table 3 computes Recall@k against exact top-k), and a perfectly usable
+//! index in its own right for small collections. Determinism is trivial:
+//! one pass in slot order, sort by `(dist, id)`.
+
+use super::store::VecStore;
+use super::{Hit, VectorIndex};
+use crate::codec::{DecodeError, Decoder, Encoder};
+use crate::distance::{Metric, Scalar};
+
+/// Brute-force exact index over a [`VecStore`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatIndex<S: Scalar> {
+    metric: Metric,
+    store: VecStore<S>,
+}
+
+impl<S: Scalar> FlatIndex<S> {
+    pub fn new(dim: usize, metric: Metric) -> Self {
+        Self { metric, store: VecStore::new(dim) }
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    pub fn store(&self) -> &VecStore<S> {
+        &self.store
+    }
+
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u8(self.metric.tag());
+        self.store.encode(e);
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let tag = d.get_u8()?;
+        let metric = Metric::from_tag(tag)
+            .ok_or(DecodeError::InvalidTag { what: "metric", tag: tag as u64 })?;
+        let store = VecStore::decode(d)?;
+        Ok(Self { metric, store })
+    }
+}
+
+impl<S: Scalar> VectorIndex<S> for FlatIndex<S> {
+    fn insert(&mut self, id: u64, vector: Vec<S>) {
+        self.store.insert(id, vector);
+    }
+
+    fn delete(&mut self, id: u64) -> bool {
+        self.store.delete(id).is_some()
+    }
+
+    fn search(&self, query: &[S], k: usize) -> Vec<Hit<S::Dist>> {
+        let mut hits: Vec<Hit<S::Dist>> = self
+            .store
+            .iter_live()
+            .map(|(_, id, v)| Hit { id, dist: S::distance(self.metric, query, v) })
+            .collect();
+        // Total order on (dist, id): deterministic ranking even with ties.
+        hits.sort_by(|a, b| a.dist.cmp(&b.dist).then(a.id.cmp(&b.id)));
+        hits.truncate(k);
+        hits
+    }
+
+    fn len(&self) -> usize {
+        self.store.live_len()
+    }
+
+    fn get(&self, id: u64) -> Option<&[S]> {
+        self.store.get(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{FixedFormat, Q16_16};
+
+    fn q(x: f64) -> i32 {
+        Q16_16::quantize(x)
+    }
+
+    fn build() -> FlatIndex<i32> {
+        let mut idx = FlatIndex::new(2, Metric::L2);
+        idx.insert(1, vec![q(0.0), q(0.0)]);
+        idx.insert(2, vec![q(1.0), q(0.0)]);
+        idx.insert(3, vec![q(0.0), q(2.0)]);
+        idx
+    }
+
+    #[test]
+    fn search_orders_by_distance() {
+        let idx = build();
+        let hits = idx.search(&[q(0.1), q(0.0)], 3);
+        assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn search_k_truncates() {
+        let idx = build();
+        assert_eq!(idx.search(&[q(0.0), q(0.0)], 2).len(), 2);
+        assert_eq!(idx.search(&[q(0.0), q(0.0)], 10).len(), 3);
+        assert!(idx.search(&[q(0.0), q(0.0)], 0).is_empty());
+    }
+
+    #[test]
+    fn delete_excludes_from_results() {
+        let mut idx = build();
+        assert!(idx.delete(1));
+        assert!(!idx.delete(1));
+        let hits = idx.search(&[q(0.0), q(0.0)], 3);
+        assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(idx.len(), 2);
+    }
+
+    #[test]
+    fn ties_break_by_id() {
+        let mut idx = FlatIndex::new(1, Metric::L2);
+        idx.insert(7, vec![q(1.0)]);
+        idx.insert(3, vec![q(1.0)]); // identical vector, smaller id
+        let hits = idx.search(&[q(1.0)], 2);
+        assert_eq!(hits[0].id, 3);
+        assert_eq!(hits[1].id, 7);
+        assert_eq!(hits[0].dist, hits[1].dist);
+    }
+
+    #[test]
+    fn inner_product_prefers_aligned() {
+        let mut idx = FlatIndex::new(2, Metric::InnerProduct);
+        idx.insert(1, vec![q(1.0), q(0.0)]);
+        idx.insert(2, vec![q(-1.0), q(0.0)]);
+        let hits = idx.search(&[q(1.0), q(0.0)], 2);
+        assert_eq!(hits[0].id, 1);
+    }
+
+    #[test]
+    fn roundtrip_preserves_results() {
+        let mut idx = build();
+        idx.delete(2);
+        let mut e = Encoder::new();
+        idx.encode(&mut e);
+        let bytes = e.into_vec();
+        let idx2 = FlatIndex::<i32>::decode(&mut Decoder::new(&bytes)).unwrap();
+        let q0 = [q(0.3), q(0.3)];
+        assert_eq!(idx.search(&q0, 5), idx2.search(&q0, 5));
+    }
+
+    #[test]
+    fn f32_baseline_works() {
+        let mut idx: FlatIndex<f32> = FlatIndex::new(2, Metric::L2);
+        idx.insert(1, vec![0.0, 0.0]);
+        idx.insert(2, vec![1.0, 1.0]);
+        let hits = idx.search(&[0.9, 0.9], 2);
+        assert_eq!(hits[0].id, 2);
+    }
+}

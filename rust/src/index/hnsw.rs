@@ -1,0 +1,601 @@
+//! Deterministic HNSW (paper §7).
+//!
+//! HNSW is traditionally stochastic: level assignment samples a geometric
+//! distribution and entry points / tie-breaks depend on RNG and iteration
+//! order. Valori removes every source of nondeterminism:
+//!
+//! 1. **Fixed ordering** (§7.1): the state machine applies inserts in
+//!    command-log order, so slot numbering is a pure function of the log.
+//! 2. **Data-dependent level assignment** (§7.2): instead of sampling,
+//!    `level(id) = trailing_zeros(splitmix64(id)) / log2(M)` — a geometric
+//!    distribution with ratio 1/M derived deterministically from the id.
+//! 3. **Deterministic entry point** (§7.2): the entry is the first inserted
+//!    node, promoted only when a strictly higher-level node arrives (a
+//!    data-dependent rule, no RNG; ties keep the earlier node).
+//! 4. **Deterministic neighbor selection** (§7.3): distances are integers
+//!    (total order) and every comparison is on `(dist, slot)`, so graph
+//!    topology is identical across runs and platforms.
+//!
+//! The same generic code instantiates the `f32` baseline (via
+//! [`crate::distance::OrderedF32`] keys), which keeps Table 3's control:
+//! identical parameters, identical insertion order, different arithmetic.
+
+use super::store::VecStore;
+use super::{Hit, VectorIndex};
+use crate::codec::{DecodeError, Decoder, Encoder};
+use crate::distance::{Metric, Scalar};
+use crate::hash::splitmix64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// HNSW construction/search parameters (part of the collection config and
+/// of the snapshot, so two nodes can verify they run the same graph).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HnswParams {
+    /// Max neighbors per node on layers >= 1.
+    pub m: usize,
+    /// Max neighbors on layer 0 (typically 2*M).
+    pub m0: usize,
+    /// Beam width during construction.
+    pub ef_construction: usize,
+    /// Default beam width during search (raised to k when k is larger).
+    pub ef_search: usize,
+    /// Hard cap on levels (bounds memory; 2^(4*8) points at M=16).
+    pub max_level: usize,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        Self { m: 16, m0: 32, ef_construction: 150, ef_search: 128, max_level: 8 }
+    }
+}
+
+impl HnswParams {
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u32(self.m as u32);
+        e.put_u32(self.m0 as u32);
+        e.put_u32(self.ef_construction as u32);
+        e.put_u32(self.ef_search as u32);
+        e.put_u32(self.max_level as u32);
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        Ok(Self {
+            m: d.get_u32()? as usize,
+            m0: d.get_u32()? as usize,
+            ef_construction: d.get_u32()? as usize,
+            ef_search: d.get_u32()? as usize,
+            max_level: d.get_u32()? as usize,
+        })
+    }
+}
+
+/// Per-slot graph node: adjacency per layer `0..=level`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Node {
+    level: usize,
+    /// `neighbors[l]` = slots adjacent at layer `l`.
+    neighbors: Vec<Vec<u32>>,
+}
+
+/// Deterministic HNSW index over a [`VecStore`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hnsw<S: Scalar> {
+    params: HnswParams,
+    metric: Metric,
+    store: VecStore<S>,
+    nodes: Vec<Node>,
+    /// Entry slot (first inserted; promoted on strictly-higher level).
+    entry: Option<u32>,
+}
+
+impl<S: Scalar> Hnsw<S> {
+    pub fn new(dim: usize, metric: Metric, params: HnswParams) -> Self {
+        Self { params, metric, store: VecStore::new(dim), nodes: Vec::new(), entry: None }
+    }
+
+    pub fn params(&self) -> &HnswParams {
+        &self.params
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    pub fn store(&self) -> &VecStore<S> {
+        &self.store
+    }
+
+    pub fn entry_slot(&self) -> Option<u32> {
+        self.entry
+    }
+
+    /// Deterministic data-dependent level (paper §7.2): geometric with
+    /// ratio 1/M via trailing zeros of a splitmix64 of the external id.
+    pub fn assign_level(&self, id: u64) -> usize {
+        let log2m = (usize::BITS - 1 - self.params.m.leading_zeros() as u32).max(1);
+        let h = splitmix64(id);
+        let tz = h.trailing_zeros(); // 64 for h == 0
+        ((tz / log2m) as usize).min(self.params.max_level)
+    }
+
+    #[inline]
+    fn dist_to_slot(&self, query: &[S], slot: u32) -> S::Dist {
+        S::distance(self.metric, query, self.store.vec_at(slot))
+    }
+
+    /// Greedy closest-point walk on one layer (used on layers above the
+    /// target during descent).
+    fn greedy_closest(&self, query: &[S], start: u32, layer: usize) -> u32 {
+        let mut cur = start;
+        let mut cur_d = self.dist_to_slot(query, cur);
+        loop {
+            let mut improved = false;
+            for &nb in &self.nodes[cur as usize].neighbors[layer] {
+                let d = self.dist_to_slot(query, nb);
+                // strict improvement with (dist, slot) tiebreak keeps the
+                // walk deterministic and terminating
+                if (d, nb) < (cur_d, cur) {
+                    cur = nb;
+                    cur_d = d;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// Beam search on one layer. Returns up to `ef` (dist, slot) pairs,
+    /// sorted ascending. Includes tombstoned slots (they are valid routing
+    /// waypoints); callers filter.
+    fn search_layer(&self, query: &[S], entry: u32, ef: usize, layer: usize) -> Vec<(S::Dist, u32)> {
+        let mut visited = vec![false; self.nodes.len()];
+        visited[entry as usize] = true;
+        let d0 = self.dist_to_slot(query, entry);
+
+        // min-heap of candidates to expand
+        let mut candidates: BinaryHeap<Reverse<(S::Dist, u32)>> = BinaryHeap::new();
+        candidates.push(Reverse((d0, entry)));
+        // max-heap of current best results (worst on top)
+        let mut results: BinaryHeap<(S::Dist, u32)> = BinaryHeap::new();
+        results.push((d0, entry));
+
+        while let Some(Reverse((d, slot))) = candidates.pop() {
+            let worst = results.peek().copied().expect("results never empty");
+            if results.len() >= ef && (d, slot) > worst {
+                break;
+            }
+            for &nb in &self.nodes[slot as usize].neighbors[layer] {
+                if visited[nb as usize] {
+                    continue;
+                }
+                visited[nb as usize] = true;
+                let dn = self.dist_to_slot(query, nb);
+                let worst = results.peek().copied().expect("results never empty");
+                if results.len() < ef || (dn, nb) < worst {
+                    candidates.push(Reverse((dn, nb)));
+                    results.push((dn, nb));
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+        let mut out: Vec<(S::Dist, u32)> = results.into_vec();
+        out.sort();
+        out
+    }
+
+    /// Neighbor selection: Malkov's diversity heuristic (Alg. 4), made
+    /// deterministic — candidates are visited in ascending `(dist, slot)`
+    /// order and kept only if they are closer to the base point than to
+    /// every already-selected neighbor. All comparisons are on total
+    /// orders, so the selected set is a pure function of the inputs
+    /// (paper §7.3: "graph topology is identical across runs").
+    ///
+    /// The diversity condition is what keeps clustered data navigable
+    /// (pure M-closest selection strands clusters with no long-range
+    /// links and recall collapses — see index_consistency tests).
+    fn select_neighbors_heuristic(
+        &self,
+        cands: &[(S::Dist, u32)],
+        m: usize,
+    ) -> Vec<(S::Dist, u32)> {
+        let mut selected: Vec<(S::Dist, u32)> = Vec::with_capacity(m);
+        for &(d, c) in cands {
+            if selected.len() >= m {
+                break;
+            }
+            let cv = self.store.vec_at(c);
+            let diverse = selected.iter().all(|&(_, s)| {
+                let d_cs = S::distance(self.metric, cv, self.store.vec_at(s));
+                d_cs >= d // c is closer to base than to any selected neighbor
+            });
+            if diverse {
+                selected.push((d, c));
+            }
+        }
+        // backfill with the closest skipped candidates if the heuristic
+        // under-fills (standard keepPrunedConnections behaviour)
+        if selected.len() < m {
+            for &(d, c) in cands {
+                if selected.len() >= m {
+                    break;
+                }
+                if !selected.iter().any(|&(_, s)| s == c) {
+                    selected.push((d, c));
+                }
+            }
+        }
+        selected
+    }
+
+    fn max_neighbors(&self, layer: usize) -> usize {
+        if layer == 0 {
+            self.params.m0
+        } else {
+            self.params.m
+        }
+    }
+
+    /// Re-prune a node's adjacency at `layer` to the cap via the same
+    /// diversity heuristic (keeps pruning consistent with selection).
+    fn shrink_neighbors(&mut self, slot: u32, layer: usize) {
+        let cap = self.max_neighbors(layer);
+        let list = &self.nodes[slot as usize].neighbors[layer];
+        if list.len() <= cap {
+            return;
+        }
+        let base = self.store.vec_at(slot);
+        let mut scored: Vec<(S::Dist, u32)> = list
+            .iter()
+            .map(|&nb| (S::distance(self.metric, base, self.store.vec_at(nb)), nb))
+            .collect();
+        scored.sort();
+        let kept = self.select_neighbors_heuristic(&scored, cap);
+        self.nodes[slot as usize].neighbors[layer] = kept.into_iter().map(|(_, s)| s).collect();
+    }
+
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u8(self.metric.tag());
+        self.params.encode(e);
+        self.store.encode(e);
+        e.put_u32(self.nodes.len() as u32);
+        for n in &self.nodes {
+            e.put_u32(n.level as u32);
+            for l in 0..=n.level {
+                let nb = &n.neighbors[l];
+                e.put_u32(nb.len() as u32);
+                for &s in nb {
+                    e.put_u32(s);
+                }
+            }
+        }
+        match self.entry {
+            Some(s) => {
+                e.put_u8(1);
+                e.put_u32(s);
+            }
+            None => e.put_u8(0),
+        }
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let tag = d.get_u8()?;
+        let metric = Metric::from_tag(tag)
+            .ok_or(DecodeError::InvalidTag { what: "metric", tag: tag as u64 })?;
+        let params = HnswParams::decode(d)?;
+        let store = VecStore::decode(d)?;
+        let n = d.get_u32()? as usize;
+        if n != store.slots() {
+            return Err(DecodeError::InvalidTag { what: "node count", tag: n as u64 });
+        }
+        let mut nodes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let level = d.get_u32()? as usize;
+            if level > params.max_level {
+                return Err(DecodeError::InvalidTag { what: "level", tag: level as u64 });
+            }
+            let mut neighbors = Vec::with_capacity(level + 1);
+            for _ in 0..=level {
+                let cnt = d.get_u32()? as usize;
+                let mut list = Vec::with_capacity(cnt);
+                for _ in 0..cnt {
+                    let s = d.get_u32()?;
+                    if s as usize >= n {
+                        return Err(DecodeError::InvalidTag { what: "neighbor slot", tag: s as u64 });
+                    }
+                    list.push(s);
+                }
+                neighbors.push(list);
+            }
+            nodes.push(Node { level, neighbors });
+        }
+        let entry = match d.get_u8()? {
+            0 => None,
+            1 => Some(d.get_u32()?),
+            t => return Err(DecodeError::InvalidTag { what: "entry flag", tag: t as u64 }),
+        };
+        Ok(Self { params, metric, store, nodes, entry })
+    }
+}
+
+impl<S: Scalar> VectorIndex<S> for Hnsw<S> {
+    fn insert(&mut self, id: u64, vector: Vec<S>) {
+        let level = self.assign_level(id);
+        let slot = self.store.insert(id, vector);
+        self.nodes.push(Node { level, neighbors: vec![Vec::new(); level + 1] });
+
+        let Some(entry) = self.entry else {
+            // First node: becomes the fixed entry point (paper §7.2).
+            self.entry = Some(slot);
+            return;
+        };
+
+        let entry_level = self.nodes[entry as usize].level;
+        let query: Vec<S> = self.store.vec_at(slot).to_vec();
+
+        // Descend from the entry's top layer to just above our level.
+        let mut ep = entry;
+        let mut layer = entry_level;
+        while layer > level {
+            ep = self.greedy_closest(&query, ep, layer);
+            layer -= 1;
+        }
+
+        // Connect on each layer from min(level, entry_level) down to 0.
+        let top = level.min(entry_level);
+        for l in (0..=top).rev() {
+            let cands = self.search_layer(&query, ep, self.params.ef_construction, l);
+            ep = cands.first().map(|&(_, s)| s).unwrap_or(ep);
+            let selected = self.select_neighbors_heuristic(&cands, self.max_neighbors(l));
+            for &(_, nb) in &selected {
+                self.nodes[slot as usize].neighbors[l].push(nb);
+                self.nodes[nb as usize].neighbors[l].push(slot);
+                self.shrink_neighbors(nb, l);
+            }
+        }
+
+        // Promote entry only on strictly higher level (deterministic,
+        // data-dependent; ties keep the earlier node).
+        if level > entry_level {
+            self.entry = Some(slot);
+        }
+    }
+
+    fn delete(&mut self, id: u64) -> bool {
+        // Tombstone: the slot stays in the graph as a routing waypoint
+        // (standard mark-delete), searches filter it from results. This
+        // keeps deletion O(1) and — critically — keeps the graph topology
+        // a pure function of the full command history.
+        self.store.delete(id).is_some()
+    }
+
+    fn search(&self, query: &[S], k: usize) -> Vec<Hit<S::Dist>> {
+        let Some(entry) = self.entry else {
+            return Vec::new();
+        };
+        if k == 0 {
+            return Vec::new();
+        }
+        let entry_level = self.nodes[entry as usize].level;
+        let mut ep = entry;
+        for l in (1..=entry_level).rev() {
+            ep = self.greedy_closest(query, ep, l);
+        }
+        // Over-fetch to survive tombstones among the ef best.
+        let dead = self.store.slots() - self.store.live_len();
+        let ef = self.params.ef_search.max(k) + dead.min(256);
+        let cands = self.search_layer(query, ep, ef, 0);
+        let mut hits: Vec<Hit<S::Dist>> = cands
+            .into_iter()
+            .filter(|&(_, s)| self.store.is_alive(s))
+            .map(|(d, s)| Hit { id: self.store.external_id(s), dist: d })
+            .collect();
+        hits.sort_by(|a, b| a.dist.cmp(&b.dist).then(a.id.cmp(&b.id)));
+        hits.truncate(k);
+        hits
+    }
+
+    fn len(&self) -> usize {
+        self.store.live_len()
+    }
+
+    fn get(&self, id: u64) -> Option<&[S]> {
+        self.store.get(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{FixedFormat, Q16_16};
+    use crate::hash::XorShift64;
+    use crate::index::flat::FlatIndex;
+
+    fn q(x: f64) -> i32 {
+        Q16_16::quantize(x)
+    }
+
+    fn random_q16(rng: &mut XorShift64, dim: usize) -> Vec<i32> {
+        (0..dim).map(|_| q(rng.next_f64() * 2.0 - 1.0)).collect()
+    }
+
+    fn build_random(n: usize, dim: usize, seed: u64) -> (Hnsw<i32>, FlatIndex<i32>) {
+        let mut rng = XorShift64::new(seed);
+        let mut h = Hnsw::new(dim, Metric::L2, HnswParams::default());
+        let mut f = FlatIndex::new(dim, Metric::L2);
+        for id in 0..n as u64 {
+            let v = random_q16(&mut rng, dim);
+            h.insert(id, v.clone());
+            f.insert(id, v);
+        }
+        (h, f)
+    }
+
+    #[test]
+    fn empty_search() {
+        let h: Hnsw<i32> = Hnsw::new(4, Metric::L2, HnswParams::default());
+        assert!(h.search(&[0, 0, 0, 0], 5).is_empty());
+        assert_eq!(h.len(), 0);
+    }
+
+    #[test]
+    fn single_node() {
+        let mut h = Hnsw::new(2, Metric::L2, HnswParams::default());
+        h.insert(42, vec![q(1.0), q(1.0)]);
+        let hits = h.search(&[q(0.9), q(1.1)], 3);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].id, 42);
+        assert_eq!(h.entry_slot(), Some(0));
+    }
+
+    #[test]
+    fn levels_are_deterministic_and_geometric() {
+        let h: Hnsw<i32> = Hnsw::new(2, Metric::L2, HnswParams::default());
+        // Pure function of id.
+        for id in 0..100 {
+            assert_eq!(h.assign_level(id), h.assign_level(id));
+        }
+        // Roughly geometric: the vast majority of ids land on level 0.
+        let l0 = (0..10_000u64).filter(|&id| h.assign_level(id) == 0).count();
+        assert!(l0 > 8_500, "level-0 fraction too low: {l0}");
+        // And some do not (upper layers exist).
+        assert!(l0 < 10_000);
+    }
+
+    #[test]
+    fn exact_recall_on_small_set() {
+        // With n <= ef_construction the beam covers everything: recall 1.0.
+        let (h, f) = build_random(80, 16, 7);
+        let mut rng = XorShift64::new(99);
+        for _ in 0..20 {
+            let query = random_q16(&mut rng, 16);
+            let hh = h.search(&query, 10);
+            let fh = f.search(&query, 10);
+            assert_eq!(
+                hh.iter().map(|x| x.id).collect::<Vec<_>>(),
+                fh.iter().map(|x| x.id).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn good_recall_on_larger_set() {
+        let (h, f) = build_random(1500, 16, 3);
+        let mut rng = XorShift64::new(5);
+        let mut overlap = 0usize;
+        let mut total = 0usize;
+        for _ in 0..30 {
+            let query = random_q16(&mut rng, 16);
+            let hh: Vec<u64> = h.search(&query, 10).iter().map(|x| x.id).collect();
+            let fh: Vec<u64> = f.search(&query, 10).iter().map(|x| x.id).collect();
+            overlap += hh.iter().filter(|id| fh.contains(id)).count();
+            total += 10;
+        }
+        let recall = overlap as f64 / total as f64;
+        assert!(recall > 0.9, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn construction_is_bit_deterministic() {
+        let (h1, _) = build_random(400, 8, 11);
+        let (h2, _) = build_random(400, 8, 11);
+        let mut e1 = Encoder::new();
+        let mut e2 = Encoder::new();
+        h1.encode(&mut e1);
+        h2.encode(&mut e2);
+        assert_eq!(e1.as_slice(), e2.as_slice());
+    }
+
+    #[test]
+    fn insertion_order_changes_graph() {
+        // The graph is a function of the command sequence — a *different*
+        // order is a different sequence and may yield different topology.
+        // (Determinism != order-independence; the paper fixes the order.)
+        let mut rng = XorShift64::new(21);
+        let vecs: Vec<Vec<i32>> = (0..200).map(|_| random_q16(&mut rng, 8)).collect();
+        let mut fwd = Hnsw::new(8, Metric::L2, HnswParams::default());
+        for (id, v) in vecs.iter().enumerate() {
+            fwd.insert(id as u64, v.clone());
+        }
+        let mut bwd = Hnsw::new(8, Metric::L2, HnswParams::default());
+        for (id, v) in vecs.iter().enumerate().rev() {
+            bwd.insert(id as u64, v.clone());
+        }
+        // Both must still return the same *top-1* for an exact-match query.
+        let hits_f = fwd.search(&vecs[17], 1);
+        let hits_b = bwd.search(&vecs[17], 1);
+        assert_eq!(hits_f[0].id, 17);
+        assert_eq!(hits_b[0].id, 17);
+    }
+
+    #[test]
+    fn delete_removes_from_results_but_routes() {
+        let (mut h, _) = build_random(300, 8, 13);
+        let v = h.get(5).unwrap().to_vec();
+        assert!(h.delete(5));
+        let hits = h.search(&v, 10);
+        assert!(hits.iter().all(|x| x.id != 5));
+        assert_eq!(h.len(), 299);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_preserves_search() {
+        let (h, _) = build_random(250, 8, 17);
+        let mut e = Encoder::new();
+        h.encode(&mut e);
+        let bytes = e.into_vec();
+        let h2 = Hnsw::<i32>::decode(&mut Decoder::new(&bytes)).unwrap();
+        let mut rng = XorShift64::new(1);
+        for _ in 0..10 {
+            let query = random_q16(&mut rng, 8);
+            assert_eq!(h.search(&query, 10), h2.search(&query, 10));
+        }
+        // canonical: re-encode gives identical bytes
+        let mut e2 = Encoder::new();
+        h2.encode(&mut e2);
+        assert_eq!(bytes, e2.into_vec());
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_neighbor() {
+        let (h, _) = build_random(10, 4, 1);
+        let mut e = Encoder::new();
+        h.encode(&mut e);
+        let mut bytes = e.into_vec();
+        // flip a late byte to a huge neighbor slot — decoder must not panic
+        let n = bytes.len();
+        bytes[n - 20] = 0xff;
+        bytes[n - 19] = 0xff;
+        bytes[n - 18] = 0xff;
+        bytes[n - 17] = 0xff;
+        let _ = Hnsw::<i32>::decode(&mut Decoder::new(&bytes)); // Err or Ok, no panic
+    }
+
+    #[test]
+    fn f32_instantiation_builds_and_searches() {
+        let mut rng = XorShift64::new(31);
+        let mut h: Hnsw<f32> = Hnsw::new(8, Metric::L2, HnswParams::default());
+        for id in 0..200u64 {
+            let v: Vec<f32> = (0..8).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+            h.insert(id, v);
+        }
+        let v0 = h.get(0).unwrap().to_vec();
+        let hits = h.search(&v0, 5);
+        assert_eq!(hits[0].id, 0);
+    }
+
+    #[test]
+    fn inner_product_metric_search() {
+        let mut h = Hnsw::new(2, Metric::InnerProduct, HnswParams::default());
+        h.insert(1, vec![q(1.0), q(0.0)]);
+        h.insert(2, vec![q(0.0), q(1.0)]);
+        h.insert(3, vec![q(-1.0), q(0.0)]);
+        let hits = h.search(&[q(1.0), q(0.0)], 3);
+        assert_eq!(hits[0].id, 1);
+        assert_eq!(hits[2].id, 3);
+    }
+}

@@ -1,0 +1,48 @@
+//! Index structures: deterministic HNSW (paper §7) and an exact flat index.
+//!
+//! Both are generic over [`crate::distance::Scalar`], so the *identical*
+//! code is instantiated for Q16.16 (`i32`), Q32.32 (`i64`) and the `f32`
+//! baseline — which is the control the paper's Table 3 requires
+//! ("identical insertion order, identical HNSW configuration parameters"):
+//! recall differences can only come from the numeric representation.
+
+pub mod flat;
+pub mod hnsw;
+pub mod store;
+
+pub use flat::FlatIndex;
+pub use hnsw::{Hnsw, HnswParams};
+pub use store::VecStore;
+
+use crate::distance::Scalar;
+
+/// One search hit: external id + distance (generic) — smaller = closer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hit<D> {
+    pub id: u64,
+    pub dist: D,
+}
+
+/// Common interface over flat and HNSW indices (used by the state machine
+/// and by the consistency tests that cross-check them).
+pub trait VectorIndex<S: Scalar> {
+    /// Insert a vector under an external id. Ids must be unique; the state
+    /// machine enforces that before calling.
+    fn insert(&mut self, id: u64, vector: Vec<S>);
+
+    /// Tombstone a vector. Returns false if the id is unknown/deleted.
+    fn delete(&mut self, id: u64) -> bool;
+
+    /// k nearest neighbours of `query`, ordered by (dist, id) ascending.
+    fn search(&self, query: &[S], k: usize) -> Vec<Hit<S::Dist>>;
+
+    /// Number of live (non-deleted) vectors.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch a stored vector by external id (None if deleted/unknown).
+    fn get(&self, id: u64) -> Option<&[S]>;
+}

@@ -1,0 +1,252 @@
+//! Dense vector storage shared by the index implementations.
+//!
+//! External ids (u64, chosen by clients) are mapped to dense internal slots
+//! (u32). Slots are never reused — deletion is a tombstone — so internal
+//! ids are a pure function of insertion order, which the state machine
+//! makes deterministic (paper §7.1 "fixed ordering"). The id map is a
+//! `BTreeMap` (sorted iteration) so serialization order is canonical.
+
+use crate::codec::{DecodeError, Decoder, Encoder};
+use crate::distance::Scalar;
+use std::collections::BTreeMap;
+
+/// Append-only vector store with tombstones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VecStore<S: Scalar> {
+    dim: usize,
+    /// Slot -> vector data (flattened would save pointers; kept per-slot
+    /// for clarity; the flat index hot path reads through `vec_at`).
+    vectors: Vec<Vec<S>>,
+    /// Slot -> external id.
+    external_ids: Vec<u64>,
+    /// Slot -> live?
+    alive: Vec<bool>,
+    /// External id -> slot.
+    id_to_slot: BTreeMap<u64, u32>,
+    live_count: usize,
+}
+
+impl<S: Scalar> VecStore<S> {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            dim,
+            vectors: Vec::new(),
+            external_ids: Vec::new(),
+            alive: Vec::new(),
+            id_to_slot: BTreeMap::new(),
+            live_count: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Total slots ever allocated (including tombstones).
+    pub fn slots(&self) -> usize {
+        self.vectors.len()
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.live_count
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.slot_of(id).is_some()
+    }
+
+    /// Whether this external id was ever inserted (live OR tombstoned).
+    /// Ids are never reusable — replay invariance depends on it.
+    pub fn ever_contains(&self, id: u64) -> bool {
+        self.id_to_slot.contains_key(&id)
+    }
+
+    /// Slot of a *live* external id.
+    pub fn slot_of(&self, id: u64) -> Option<u32> {
+        self.id_to_slot.get(&id).copied().filter(|&s| self.alive[s as usize])
+    }
+
+    pub fn external_id(&self, slot: u32) -> u64 {
+        self.external_ids[slot as usize]
+    }
+
+    pub fn is_alive(&self, slot: u32) -> bool {
+        self.alive[slot as usize]
+    }
+
+    pub fn vec_at(&self, slot: u32) -> &[S] {
+        &self.vectors[slot as usize]
+    }
+
+    pub fn get(&self, id: u64) -> Option<&[S]> {
+        self.slot_of(id).map(|s| self.vec_at(s))
+    }
+
+    /// Insert under a fresh external id, returning the new slot.
+    /// Panics if the id already maps to a slot (state machine pre-checks)
+    /// or the dimension is wrong.
+    pub fn insert(&mut self, id: u64, vector: Vec<S>) -> u32 {
+        assert_eq!(vector.len(), self.dim, "dimension mismatch");
+        assert!(
+            !self.id_to_slot.contains_key(&id),
+            "duplicate external id {id} (state machine must pre-check)"
+        );
+        let slot = self.vectors.len() as u32;
+        self.vectors.push(vector);
+        self.external_ids.push(id);
+        self.alive.push(true);
+        self.id_to_slot.insert(id, slot);
+        self.live_count += 1;
+        slot
+    }
+
+    /// Tombstone. Returns the slot if the id was live.
+    pub fn delete(&mut self, id: u64) -> Option<u32> {
+        let slot = self.slot_of(id)?;
+        self.alive[slot as usize] = false;
+        self.live_count -= 1;
+        Some(slot)
+    }
+
+    /// Iterate live (slot, external id, vector) in slot (= insertion) order.
+    pub fn iter_live(&self) -> impl Iterator<Item = (u32, u64, &[S])> {
+        (0..self.vectors.len() as u32).filter_map(move |s| {
+            if self.alive[s as usize] {
+                Some((s, self.external_ids[s as usize], self.vec_at(s)))
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Canonical serialization (slot order; tombstones preserved so slot
+    /// numbering — and thus the HNSW graph — survives a round-trip).
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u32(self.dim as u32);
+        e.put_u32(self.vectors.len() as u32);
+        for s in 0..self.vectors.len() {
+            e.put_u64(self.external_ids[s]);
+            e.put_u8(self.alive[s] as u8);
+            e.put_u32(self.vectors[s].len() as u32);
+            for &x in &self.vectors[s] {
+                x.encode(e);
+            }
+        }
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let dim = d.get_u32()? as usize;
+        let n = d.get_u32()? as usize;
+        let mut store = Self::new(dim);
+        for slot in 0..n {
+            let id = d.get_u64()?;
+            let alive = match d.get_u8()? {
+                0 => false,
+                1 => true,
+                t => return Err(DecodeError::InvalidTag { what: "alive flag", tag: t as u64 }),
+            };
+            let len = d.get_u32()? as usize;
+            if len != dim {
+                return Err(DecodeError::InvalidTag { what: "vector dim", tag: len as u64 });
+            }
+            let mut v = Vec::with_capacity(len);
+            for _ in 0..len {
+                v.push(S::decode(d)?);
+            }
+            store.vectors.push(v);
+            store.external_ids.push(id);
+            store.alive.push(alive);
+            store.id_to_slot.insert(id, slot as u32);
+            if alive {
+                store.live_count += 1;
+            }
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> VecStore<i32> {
+        let mut s = VecStore::new(2);
+        s.insert(10, vec![1, 2]);
+        s.insert(20, vec![3, 4]);
+        s.insert(5, vec![5, 6]);
+        s
+    }
+
+    #[test]
+    fn insert_assigns_slots_in_order() {
+        let s = sample();
+        assert_eq!(s.slot_of(10), Some(0));
+        assert_eq!(s.slot_of(20), Some(1));
+        assert_eq!(s.slot_of(5), Some(2));
+        assert_eq!(s.live_len(), 3);
+    }
+
+    #[test]
+    fn delete_tombstones_without_slot_reuse() {
+        let mut s = sample();
+        assert_eq!(s.delete(20), Some(1));
+        assert_eq!(s.delete(20), None); // double delete
+        assert_eq!(s.live_len(), 2);
+        assert_eq!(s.slots(), 3);
+        assert!(!s.is_alive(1));
+        assert_eq!(s.get(20), None);
+        // new insert gets a fresh slot
+        s.insert(99, vec![7, 8]);
+        assert_eq!(s.slot_of(99), Some(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate external id")]
+    fn duplicate_id_panics() {
+        let mut s = sample();
+        s.insert(10, vec![0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn wrong_dim_panics() {
+        let mut s = sample();
+        s.insert(11, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn iter_live_is_slot_ordered() {
+        let mut s = sample();
+        s.delete(20);
+        let ids: Vec<u64> = s.iter_live().map(|(_, id, _)| id).collect();
+        assert_eq!(ids, vec![10, 5]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut s = sample();
+        s.delete(20);
+        let mut e = Encoder::new();
+        s.encode(&mut e);
+        let bytes = e.into_vec();
+        let mut d = Decoder::new(&bytes);
+        let s2 = VecStore::<i32>::decode(&mut d).unwrap();
+        d.finish().unwrap();
+        assert_eq!(s, s2);
+        // and the re-encoding is byte-identical (canonical form)
+        let mut e2 = Encoder::new();
+        s2.encode(&mut e2);
+        assert_eq!(bytes, e2.into_vec());
+    }
+
+    #[test]
+    fn f32_store_roundtrip_bitexact() {
+        let mut s: VecStore<f32> = VecStore::new(2);
+        s.insert(1, vec![0.1, -0.0]);
+        let mut e = Encoder::new();
+        s.encode(&mut e);
+        let bytes = e.into_vec();
+        let s2 = VecStore::<f32>::decode(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(s2.get(1).unwrap()[1].to_bits(), (-0.0f32).to_bits());
+    }
+}

@@ -1,0 +1,107 @@
+//! # Valori — a deterministic memory substrate for AI systems
+//!
+//! Reference reproduction of *"Valori: A Deterministic Memory Substrate for
+//! AI Systems"* (Gudur, 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organized around the paper's determinism boundary:
+//!
+//! - **Inside the boundary (integer-only, bit-deterministic):**
+//!   [`fixed`], [`vector`], [`distance`], [`index`], [`state`], [`wal`],
+//!   [`snapshot`], [`graph`], [`codec`], [`hash`].
+//! - **Outside the boundary (float, may diverge across platforms):**
+//!   [`runtime`] (the AOT-compiled embedding model executed via PJRT) and
+//!   the `f32` baseline instantiations used for the paper's comparisons.
+//! - **Interface layers (paper Fig. 1):** [`node`] (HTTP API + batching),
+//!   [`replication`] (multi-node state convergence), [`cli`].
+//! - **Build-every-substrate support:** [`http`], [`json`], [`bench`],
+//!   [`testing`], [`tokenizer`], [`corpus`], [`experiments`].
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use valori::state::{Command, Kernel, KernelConfig};
+//!
+//! let mut kernel = Kernel::new(KernelConfig::default_q16(4));
+//! kernel.apply(Command::insert(0, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+//! let hits = kernel.search_f32(&[0.1, 0.2, 0.3, 0.4], 1).unwrap();
+//! assert_eq!(hits[0].id, 0);
+//! println!("state hash = {:#018x}", kernel.state_hash());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod corpus;
+pub mod distance;
+pub mod experiments;
+pub mod fixed;
+pub mod graph;
+pub mod hash;
+pub mod http;
+pub mod index;
+pub mod json;
+pub mod node;
+pub mod replication;
+pub mod runtime;
+pub mod snapshot;
+pub mod state;
+pub mod testing;
+pub mod tokenizer;
+pub mod vector;
+pub mod wal;
+
+/// Crate-level result alias used by fallible public APIs.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error type for kernel-level operations.
+#[derive(Debug)]
+pub enum Error {
+    /// Rejected at the quantization boundary.
+    Boundary(vector::BoundaryError),
+    /// State-machine command error (duplicate id, missing id, ...).
+    State(state::StateError),
+    /// Snapshot/WAL decode error.
+    Decode(codec::DecodeError),
+    /// I/O error (WAL, snapshot files).
+    Io(std::io::Error),
+    /// Runtime (PJRT/XLA) error.
+    Runtime(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Boundary(e) => write!(f, "boundary: {e}"),
+            Error::State(e) => write!(f, "state: {e}"),
+            Error::Decode(e) => write!(f, "decode: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Runtime(e) => write!(f, "runtime: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<vector::BoundaryError> for Error {
+    fn from(e: vector::BoundaryError) -> Self {
+        Error::Boundary(e)
+    }
+}
+
+impl From<state::StateError> for Error {
+    fn from(e: state::StateError) -> Self {
+        Error::State(e)
+    }
+}
+
+impl From<codec::DecodeError> for Error {
+    fn from(e: codec::DecodeError) -> Self {
+        Error::Decode(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}

@@ -1,0 +1,347 @@
+//! `valori` — the leader binary: serve the deterministic memory node, run
+//! paper experiments, snapshot/restore/replay state.
+//!
+//! ```text
+//! valori serve      [--addr 127.0.0.1:7431] [--dim 128] [--wal valori.wal]
+//!                   [--env b] [--no-embedder] [--flat]
+//! valori experiment <table1|table2|table3|transfer|latency|all> [--quick]
+//! valori snapshot   --wal <file> --out <file> [--dim N]
+//! valori restore    --snapshot <file>           # verify + print hashes
+//! valori replay     --log <file> [--dim N]      # audit replay from hex log
+//! valori quickstart
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+use valori::bench::BenchConfig;
+use valori::cli::Args;
+use valori::node::{serve, EmbedBatcher, NodeConfig, NodeState};
+use valori::runtime::{artifacts_available, artifacts_dir, embedder::Env, Embedder, Engine};
+use valori::snapshot::Snapshot;
+use valori::state::{Command, Kernel, KernelConfig};
+use valori::{experiments, replication, wal};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("snapshot") => cmd_snapshot(&args),
+        Some("restore") => cmd_restore(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("dump") => cmd_dump(&args),
+        Some("quickstart") => cmd_quickstart(),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            print_usage();
+            2
+        }
+        None => {
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: valori <serve|experiment|snapshot|restore|replay|quickstart> [options]\n\
+         see `rust/src/main.rs` header or README.md for details"
+    );
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let addr = args.opt_or("addr", "127.0.0.1:7431");
+    let dim: usize = match args.opt_parse("dim", 128) {
+        Ok(d) => d,
+        Err(e) => return fail(&e),
+    };
+    let mut config = KernelConfig::default_q16(dim);
+    if args.flag("flat") {
+        config = config.with_flat_index();
+    }
+    let node_config = NodeConfig {
+        workers: args.opt_parse("workers", 4).unwrap_or(4),
+        wal_path: args.opt("wal").map(Into::into),
+    };
+
+    // Embedder is optional: without artifacts the node still serves the
+    // vector API (text endpoints return 503).
+    let batcher = if args.flag("no-embedder") || !artifacts_available() {
+        if !args.flag("no-embedder") {
+            eprintln!("note: artifacts not found; text endpoints disabled (run `make artifacts`)");
+        }
+        None
+    } else {
+        let env = if args.opt("env") == Some("b") { Env::B } else { Env::A };
+        let loader = move || {
+            let engine = Engine::cpu()?;
+            Embedder::load(&engine, artifacts_dir(), env)
+        };
+        match EmbedBatcher::start(loader, Duration::from_millis(2)) {
+            Ok(b) => Some(b),
+            Err(e) => return fail(&format!("embedder: {e}")),
+        }
+    };
+
+    let kernel = Kernel::new(config);
+    let state = match NodeState::new(kernel, &node_config, batcher.as_ref().map(|b| b.handle())) {
+        Ok(s) => Arc::new(s),
+        Err(e) => return fail(&e.to_string()),
+    };
+    let server = match serve(Arc::clone(&state), &addr, node_config.workers) {
+        Ok(s) => s,
+        Err(e) => return fail(&format!("bind {addr}: {e}")),
+    };
+    println!("valori node listening on http://{}", server.addr());
+    println!("  dim={dim} wal={:?} embedder={}", node_config.wal_path, batcher.is_some());
+    println!(
+        "  try: curl -s -X POST http://{}/v1/query -d '{{\"text\":\"revenue for april\",\"k\":5}}'",
+        server.addr()
+    );
+
+    // Serve until killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let quick = args.flag("quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let run_one = |name: &str| match name {
+        "table1" => {
+            let r = experiments::divergence::run(5);
+            experiments::divergence::print_table(&r);
+            0
+        }
+        "table2" => {
+            let rows = experiments::precision::run();
+            experiments::precision::print_table(&rows);
+            0
+        }
+        "table3" => {
+            let (docs, queries) = if quick { (400, 20) } else { (2000, 100) };
+            let r = experiments::recall::run(docs, queries, 10);
+            experiments::recall::print_table(&r);
+            0
+        }
+        "transfer" => {
+            let n = if quick { 1000 } else { 10_000 };
+            let r = experiments::transfer::run(n, 128);
+            experiments::transfer::print_result(&r);
+            if r.hashes_equal && r.knn_identical {
+                0
+            } else {
+                1
+            }
+        }
+        "latency" => {
+            let n = if quick { 2000 } else { 10_000 };
+            let r = experiments::latency::run(n, 128, 10, &cfg);
+            experiments::latency::print_result(&r);
+            0
+        }
+        other => {
+            eprintln!("unknown experiment '{other}'");
+            2
+        }
+    };
+    if which == "all" {
+        for name in ["table1", "table2", "table3", "transfer", "latency"] {
+            let code = run_one(name);
+            if code != 0 {
+                return code;
+            }
+        }
+        0
+    } else {
+        run_one(which)
+    }
+}
+
+fn cmd_snapshot(args: &Args) -> i32 {
+    let Some(wal_path) = args.opt("wal") else { return fail("need --wal <file>") };
+    let Some(out) = args.opt("out") else { return fail("need --out <file>") };
+    let dim: usize = args.opt_parse("dim", 128).unwrap_or(128);
+    let rec = match wal::recover(wal_path) {
+        Ok(r) => r,
+        Err(e) => return fail(&format!("wal: {e}")),
+    };
+    if rec.truncated_tail {
+        eprintln!("warning: torn tail truncated at byte {}", rec.valid_bytes);
+    }
+    let mut kernel = Kernel::new(KernelConfig::default_q16(dim));
+    if let Err(e) = wal::replay(&mut kernel, &rec.entries) {
+        return fail(&format!("replay: {e}"));
+    }
+    let snap = Snapshot::capture(&kernel);
+    if let Err(e) = snap.write_file(out) {
+        return fail(&format!("write: {e}"));
+    }
+    println!(
+        "replayed {} commands -> seq {} | fnv {:016x} | sha256 {}",
+        rec.entries.len(),
+        kernel.seq(),
+        snap.fnv,
+        snap.sha256_hex()
+    );
+    0
+}
+
+fn cmd_restore(args: &Args) -> i32 {
+    let Some(path) = args.opt("snapshot") else { return fail("need --snapshot <file>") };
+    let snap = match Snapshot::read_file(path) {
+        Ok(s) => s,
+        Err(e) => return fail(&format!("read: {e}")),
+    };
+    let kernel = match snap.restore() {
+        Ok(k) => k,
+        Err(e) => return fail(&format!("restore: {e}")),
+    };
+    // H_B: recompute from the restored state (paper §8.1 step 4)
+    let h_b = kernel.state_hash();
+    println!("restored {} vectors at seq {}", kernel.len(), kernel.seq());
+    println!("H_A (stored)     = {:016x}", snap.fnv);
+    println!("H_B (recomputed) = {h_b:016x}");
+    println!("sha256 = {}", snap.sha256_hex());
+    if snap.fnv == h_b {
+        println!("H_A == H_B: memory state perfectly preserved");
+        0
+    } else {
+        println!("HASH MISMATCH — determinism violation!");
+        1
+    }
+}
+
+fn cmd_replay(args: &Args) -> i32 {
+    let Some(path) = args.opt("log") else { return fail("need --log <file> (hex lines)") };
+    let dim: usize = args.opt_parse("dim", 128).unwrap_or(128);
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return fail(&format!("read: {e}")),
+    };
+    let cmds = match replication::log_from_text(&text) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let mut kernel = Kernel::new(KernelConfig::default_q16(dim));
+    for (i, c) in cmds.iter().enumerate() {
+        if let Err(e) = kernel.apply_canon(c) {
+            return fail(&format!("command {i} ({}) rejected: {e}", c.name()));
+        }
+    }
+    println!(
+        "replayed {} commands | seq {} | {} vectors | state hash {:016x}",
+        cmds.len(),
+        kernel.seq(),
+        kernel.len(),
+        kernel.state_hash()
+    );
+    0
+}
+
+/// `valori verify --a <snap> --b <snap>` — compare two snapshots (the §9
+/// "do two nodes hold the same truth?" check, offline).
+fn cmd_verify(args: &Args) -> i32 {
+    let (Some(a), Some(b)) = (args.opt("a"), args.opt("b")) else {
+        return fail("need --a <snapshot> --b <snapshot>");
+    };
+    let sa = match Snapshot::read_file(a) {
+        Ok(s) => s,
+        Err(e) => return fail(&format!("{a}: {e}")),
+    };
+    let sb = match Snapshot::read_file(b) {
+        Ok(s) => s,
+        Err(e) => return fail(&format!("{b}: {e}")),
+    };
+    println!("A: fnv {:016x} sha256 {}", sa.fnv, sa.sha256_hex());
+    println!("B: fnv {:016x} sha256 {}", sb.fnv, sb.sha256_hex());
+    if sa.fnv == sb.fnv && sa.sha256 == sb.sha256 {
+        println!("IDENTICAL: both nodes hold the same memory state");
+        0
+    } else {
+        // where do they diverge? decode both and compare coarse stats
+        if let (Ok(ka), Ok(kb)) = (sa.restore(), sb.restore()) {
+            println!(
+                "DIVERGED: A has {} vectors @ seq {}, B has {} vectors @ seq {}",
+                ka.len(),
+                ka.seq(),
+                kb.len(),
+                kb.seq()
+            );
+        } else {
+            println!("DIVERGED (and at least one snapshot fails to restore)");
+        }
+        1
+    }
+}
+
+/// `valori dump --snapshot <file>` — human-readable snapshot inspection
+/// (audit tooling: what exactly does this memory contain?).
+fn cmd_dump(args: &Args) -> i32 {
+    let Some(path) = args.opt("snapshot") else { return fail("need --snapshot <file>") };
+    let snap = match Snapshot::read_file(path) {
+        Ok(s) => s,
+        Err(e) => return fail(&format!("read: {e}")),
+    };
+    let kernel = match snap.restore() {
+        Ok(k) => k,
+        Err(e) => return fail(&format!("restore: {e}")),
+    };
+    let cfg = kernel.config();
+    println!("snapshot {path}");
+    println!("  fnv64    {:016x}", snap.fnv);
+    println!("  sha256   {}", snap.sha256_hex());
+    println!("  seq      {}", kernel.seq());
+    println!("  vectors  {} (dim {})", kernel.len(), cfg.dim);
+    println!("  metric   {} | index {:?} | normalize {}", cfg.metric.name(), cfg.index, cfg.policy.normalize);
+    println!("  links    {}", kernel.links().edge_count());
+    let limit: usize = args.opt_parse("limit", 10).unwrap_or(10);
+    let mut shown = 0;
+    // ids are not directly iterable from the kernel API; probe via links +
+    // meta + a scan of small id space as a best-effort preview
+    for id in 0..u64::MAX {
+        if shown >= limit || id > 1_000_000 {
+            break;
+        }
+        if let Some(raw) = kernel.get_raw(id) {
+            let head: Vec<String> =
+                raw.iter().take(4).map(|&r| format!("{:.4}", r as f64 / 65536.0)).collect();
+            let meta = kernel
+                .meta_of(id)
+                .map(|m| format!(" meta={m:?}"))
+                .unwrap_or_default();
+            println!("  id {id}: [{}...]{meta}", head.join(", "));
+            shown += 1;
+        }
+    }
+    0
+}
+
+fn cmd_quickstart() -> i32 {
+    println!("Valori quickstart (in-process; see examples/ for more)");
+    let mut kernel = Kernel::new(KernelConfig::default_q16(4));
+    kernel.apply(Command::insert(1, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+    kernel.apply(Command::insert(2, vec![0.9, 0.8, 0.7, 0.6])).unwrap();
+    kernel.apply(Command::Link { from: 1, to: 2 }).unwrap();
+    let hits = kernel.search_f32(&[0.1, 0.2, 0.3, 0.4], 2).unwrap();
+    println!("query -> {:?}", hits.iter().map(|h| (h.id, h.dist)).collect::<Vec<_>>());
+    println!("state hash = {:016x}", kernel.state_hash());
+    println!("replaying the same commands always gives this exact hash.");
+    0
+}
+
+fn fail(msg: &str) -> i32 {
+    eprintln!("error: {msg}");
+    1
+}

@@ -1,0 +1,291 @@
+//! Dynamic micro-batcher for the embedding path.
+//!
+//! The AOT-compiled embedder has a fixed batch shape (B = 8), and the PJRT
+//! engine is single-threaded by construction (see [`crate::runtime`]). The
+//! batcher is the serving-system answer (vLLM-style): a dedicated model
+//! thread owns the embedder; request threads submit texts through a
+//! channel; the model thread drains up to B requests or waits at most
+//! `window` after the first arrival, then executes one fused batch and
+//! fans results back out. Under load, batches fill and throughput
+//! approaches B × single-request rate; at low load, latency is bounded by
+//! the window.
+
+use crate::runtime::Embedder;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// One in-flight embed request.
+struct Job {
+    text: String,
+    respond: mpsc::Sender<crate::Result<Vec<f32>>>,
+}
+
+/// Channel message: a job, or an explicit shutdown (handles may be cloned
+/// freely, so sender-drop alone cannot signal termination).
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Live batching counters shared with the node's /v1/stats.
+#[derive(Debug, Default)]
+pub struct BatchCounters {
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+}
+
+/// Handle used by request threads.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<Msg>,
+    counters: Arc<BatchCounters>,
+}
+
+impl BatcherHandle {
+    /// Embed one text, blocking until the batch it joins completes.
+    pub fn embed(&self, text: &str) -> crate::Result<Vec<f32>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Job(Job { text: text.to_string(), respond: rtx }))
+            .map_err(|_| crate::Error::Runtime("batcher is down".into()))?;
+        rrx.recv().map_err(|_| crate::Error::Runtime("batcher dropped request".into()))?
+    }
+
+    /// Embed several texts (split across batches as needed).
+    pub fn embed_many(&self, texts: &[&str]) -> crate::Result<Vec<Vec<f32>>> {
+        let mut receivers = Vec::with_capacity(texts.len());
+        for t in texts {
+            let (rtx, rrx) = mpsc::channel();
+            self.tx
+                .send(Msg::Job(Job { text: t.to_string(), respond: rtx }))
+                .map_err(|_| crate::Error::Runtime("batcher is down".into()))?;
+            receivers.push(rrx);
+        }
+        receivers
+            .into_iter()
+            .map(|r| r.recv().map_err(|_| crate::Error::Runtime("batcher dropped".into()))?)
+            .collect()
+    }
+
+    /// Live batching counters (batches executed, requests served).
+    pub fn counters(&self) -> (u64, u64) {
+        (self.counters.batches.load(Ordering::Relaxed), self.counters.requests.load(Ordering::Relaxed))
+    }
+}
+
+/// Statistics snapshot published by the batcher thread.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BatchStats {
+    pub batches: u64,
+    pub requests: u64,
+}
+
+/// The batcher: owns the embedder on its own thread.
+///
+/// PJRT handles are not `Send` (raw pointers), so the embedder is
+/// *constructed on* the model thread via the loader closure rather than
+/// moved into it.
+pub struct EmbedBatcher {
+    handle: BatcherHandle,
+    thread: Option<std::thread::JoinHandle<BatchStats>>,
+}
+
+impl EmbedBatcher {
+    /// Spawn the model thread; `loader` runs on that thread to build the
+    /// embedder (PJRT handles never cross threads). Returns Err if loading
+    /// fails. `window` bounds added latency at low load.
+    pub fn start(
+        loader: impl FnOnce() -> crate::Result<Embedder> + Send + 'static,
+        window: Duration,
+    ) -> crate::Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Option<String>>();
+        let counters = Arc::new(BatchCounters::default());
+        let loop_counters = Arc::clone(&counters);
+        let thread = std::thread::Builder::new()
+            .name("valori-embed-batcher".into())
+            .spawn(move || {
+                let embedder = match loader() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(None);
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Some(e.to_string()));
+                        return BatchStats::default();
+                    }
+                };
+                model_loop(embedder, rx, window, &loop_counters)
+            })
+            .expect("spawn batcher");
+        match ready_rx.recv() {
+            Ok(None) => Ok(Self { handle: BatcherHandle { tx, counters }, thread: Some(thread) }),
+            Ok(Some(msg)) => {
+                let _ = thread.join();
+                Err(crate::Error::Runtime(format!("embedder load: {msg}")))
+            }
+            Err(_) => {
+                let _ = thread.join();
+                Err(crate::Error::Runtime("batcher thread died during load".into()))
+            }
+        }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the model thread (explicit shutdown message — handle clones
+    /// elsewhere cannot keep the loop alive) and return its stats.
+    pub fn stop(mut self) -> BatchStats {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        self.thread.take().map(|t| t.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+fn model_loop(
+    embedder: Embedder,
+    rx: mpsc::Receiver<Msg>,
+    window: Duration,
+    counters: &BatchCounters,
+) -> BatchStats {
+    let b = embedder.batch_size();
+    let mut stats = BatchStats::default();
+    loop {
+        // Block for the first job of the batch.
+        let first = match rx.recv() {
+            Ok(Msg::Job(j)) => j,
+            Ok(Msg::Shutdown) | Err(_) => return stats,
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + window;
+        while jobs.len() < b {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Job(j)) => jobs.push(j),
+                Ok(Msg::Shutdown) => {
+                    // serve the in-flight batch, then exit below
+                    finish_batch(&embedder, jobs, &mut stats, counters);
+                    return stats;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        finish_batch(&embedder, jobs, &mut stats, counters);
+    }
+}
+
+fn finish_batch(
+    embedder: &Embedder,
+    jobs: Vec<Job>,
+    stats: &mut BatchStats,
+    counters: &BatchCounters,
+) {
+    let texts: Vec<&str> = jobs.iter().map(|j| j.text.as_str()).collect();
+    stats.batches += 1;
+    stats.requests += jobs.len() as u64;
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    counters.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+    match embedder.embed_texts(&texts) {
+        Ok(vectors) => {
+            for (job, v) in jobs.into_iter().zip(vectors) {
+                let _ = job.respond.send(Ok(v));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for job in jobs {
+                let _ = job.respond.send(Err(crate::Error::Runtime(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir, embedder::Env, Engine};
+
+    fn start_batcher(window_ms: u64) -> Option<EmbedBatcher> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let loader = || {
+            let engine = Engine::cpu()?;
+            Embedder::load(&engine, artifacts_dir(), Env::A)
+        };
+        Some(EmbedBatcher::start(loader, Duration::from_millis(window_ms)).unwrap())
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let Some(b) = start_batcher(1) else { return };
+        let v = b.handle().embed("Revenue for April").unwrap();
+        assert_eq!(v.len(), 128);
+        let stats = b.stop();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let Some(b) = start_batcher(50) else { return };
+        let h = b.handle();
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    h.embed(&format!("document number {i} about revenue")).unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<Vec<f32>> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+        assert!(results.iter().all(|v| v.len() == 128));
+        let stats = b.stop();
+        assert_eq!(stats.requests, 8);
+        // with a 50ms window, 8 concurrent requests should use few batches
+        assert!(stats.batches < 8, "batches = {}", stats.batches);
+    }
+
+    #[test]
+    fn batched_results_match_unbatched() {
+        // batching must not change results (same fixed batch shape is
+        // always executed; padding rows are discarded)
+        let Some(b) = start_batcher(30) else { return };
+        let h = b.handle();
+        let solo = h.embed("drone sensor telemetry").unwrap();
+        let t1 = {
+            let h = h.clone();
+            std::thread::spawn(move || h.embed("drone sensor telemetry").unwrap())
+        };
+        let t2 = {
+            let h = h.clone();
+            std::thread::spawn(move || h.embed("completely unrelated sentence").unwrap())
+        };
+        let batched = t1.join().unwrap();
+        t2.join().unwrap();
+        assert_eq!(
+            solo.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            batched.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        b.stop();
+    }
+
+    #[test]
+    fn embed_many_splits_over_batches() {
+        let Some(b) = start_batcher(5) else { return };
+        let texts: Vec<String> = (0..20).map(|i| format!("text {i}")).collect();
+        let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+        let out = b.handle().embed_many(&refs).unwrap();
+        assert_eq!(out.len(), 20);
+        let stats = b.stop();
+        assert_eq!(stats.requests, 20);
+        assert!(stats.batches >= 3); // 20 / 8 -> at least 3 batches
+    }
+}

@@ -1,0 +1,133 @@
+//! Node metrics: lock-free counters + a coarse latency histogram.
+//!
+//! Observability lives strictly *outside* the kernel (metrics are not part
+//! of the deterministic state and never enter the snapshot/hash).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Exponential latency histogram: bucket i covers [2^i, 2^(i+1)) µs.
+const BUCKETS: usize = 20;
+
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (n as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// All node-level metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub inserts: AtomicU64,
+    pub deletes: AtomicU64,
+    pub links: AtomicU64,
+    pub queries: AtomicU64,
+    pub embeds: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub query_latency: Histogram,
+    pub embed_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let g = |c: &AtomicU64| Json::Int(c.load(Ordering::Relaxed) as i64);
+        Json::object(vec![
+            ("inserts", g(&self.inserts)),
+            ("deletes", g(&self.deletes)),
+            ("links", g(&self.links)),
+            ("queries", g(&self.queries)),
+            ("embeds", g(&self.embeds)),
+            ("errors", g(&self.errors)),
+            ("batches", g(&self.batches)),
+            ("batched_requests", g(&self.batched_requests)),
+            ("query_p50_us", Json::Int(self.query_latency.quantile_us(0.5) as i64)),
+            ("query_p99_us", Json::Int(self.query_latency.quantile_us(0.99) as i64)),
+            ("query_mean_us", Json::Float(self.query_latency.mean_us())),
+            ("embed_mean_us", Json::Float(self.embed_latency.mean_us())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = Histogram::default();
+        for us in [1u64, 2, 4, 8, 100, 100, 100, 1000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.mean_us() > 0.0);
+        // p50 upper bound must be <= p99 upper bound
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        // all samples <= 1000us < p100 bucket bound
+        assert!(h.quantile_us(1.0) >= 1000);
+    }
+
+    #[test]
+    fn zero_sample_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let m = Metrics::default();
+        Metrics::inc(&m.inserts);
+        Metrics::inc(&m.inserts);
+        m.query_latency.record_us(250);
+        let j = m.to_json();
+        assert_eq!(j.get("inserts").as_i64(), Some(2));
+        assert_eq!(j.get("deletes").as_i64(), Some(0));
+        assert!(j.get("query_p50_us").as_i64().unwrap() >= 250);
+    }
+}

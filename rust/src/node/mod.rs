@@ -1,0 +1,612 @@
+//! The Valori node: HTTP API + request routing + embed batching
+//! (paper Fig. 1's interface layer; §5.3 "Node ('std')").
+//!
+//! The node *wraps* the kernel but never alters its logic: every mutation
+//! goes through `Kernel::apply`, is WAL-logged in canonical form, and is
+//! observable through `/v1/hash` for replica comparison.
+//!
+//! ## API
+//!
+//! | Route | Body | Effect |
+//! |---|---|---|
+//! | `POST /v1/insert` | `{"id":1,"vector":[...]}` or `{"id":1,"text":"..."}` | insert (text is embedded via the batcher) |
+//! | `POST /v1/query` | `{"vector":[...]}` or `{"text":"...","k":10}` | k-NN search |
+//! | `POST /v1/delete` | `{"id":1}` | tombstone |
+//! | `POST /v1/link` / `unlink` | `{"from":1,"to":2}` | link graph edit |
+//! | `POST /v1/meta` | `{"id":1,"key":"k","value":"v"}` | metadata |
+//! | `POST /v1/embed` | `{"texts":["..."]}` | embeddings only |
+//! | `GET /v1/stats` | — | metrics + kernel info |
+//! | `GET /v1/hash` | — | state hash (fnv + sha256) |
+//! | `GET /v1/log?from=N` | — | canonical command feed (replication) |
+//! | `POST /v1/apply` | `{"commands":["<hex>"...]}` | apply canonical commands (follower ingest) |
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{BatcherHandle, EmbedBatcher};
+pub use metrics::Metrics;
+
+use crate::http::{Handler, Request, Response, Server};
+use crate::json::{parse, Json};
+use crate::snapshot::Snapshot;
+use crate::state::{CanonCommand, Command, Kernel};
+use crate::wal::WalWriter;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Node configuration.
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// HTTP workers.
+    pub workers: usize,
+    /// Path for the WAL (None = in-memory only).
+    pub wal_path: Option<std::path::PathBuf>,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        Self { workers: 4, wal_path: None }
+    }
+}
+
+/// Shared node state behind the HTTP handler.
+pub struct NodeState {
+    kernel: Mutex<Kernel>,
+    /// In-memory canonical log (replication feed + audit).
+    log: Mutex<Vec<CanonCommand>>,
+    wal: Option<Mutex<WalWriter>>,
+    embed: Option<BatcherHandle>,
+    pub metrics: Metrics,
+}
+
+impl NodeState {
+    /// Build node state. If the configured WAL file already exists, the
+    /// kernel is **recovered from it first** (replay; torn tail repaired),
+    /// then the WAL is opened for append — restart durability.
+    pub fn new(
+        mut kernel: Kernel,
+        config: &NodeConfig,
+        embed: Option<BatcherHandle>,
+    ) -> crate::Result<Self> {
+        let mut log = Vec::new();
+        let wal = match &config.wal_path {
+            Some(p) => {
+                if p.exists() {
+                    let rec = crate::wal::recover(p).map_err(|e| {
+                        crate::Error::Runtime(format!("wal recovery {p:?}: {e}"))
+                    })?;
+                    if rec.truncated_tail {
+                        crate::wal::truncate_to_valid(p, rec.valid_bytes)?;
+                    }
+                    for entry in &rec.entries {
+                        kernel.apply_canon(&entry.command).map_err(|e| {
+                            crate::Error::Runtime(format!(
+                                "wal replay: command at seq {} rejected: {e}",
+                                entry.seq
+                            ))
+                        })?;
+                        log.push(entry.command.clone());
+                    }
+                    Some(Mutex::new(WalWriter::append_to(p, rec.entries.len() as u64)?))
+                } else {
+                    Some(Mutex::new(WalWriter::create(p)?))
+                }
+            }
+            None => None,
+        };
+        Ok(Self {
+            kernel: Mutex::new(kernel),
+            log: Mutex::new(log),
+            wal,
+            embed,
+            metrics: Metrics::default(),
+        })
+    }
+
+    /// Apply an external command: boundary → state machine → log + WAL.
+    ///
+    /// The log/WAL append happens **while the kernel lock is held**: the
+    /// kernel's application order and the logged order must be the same
+    /// sequence, or replaying the WAL would reconstruct a different state
+    /// (the order *is* the state, paper §3.1).
+    pub fn apply(&self, cmd: Command) -> Result<CanonCommand, crate::Error> {
+        let mut kernel = self.kernel.lock().expect("kernel poisoned");
+        let seq = kernel.seq();
+        let canon = kernel.apply(cmd)?;
+        self.record(seq, &canon)?;
+        Ok(canon)
+    }
+
+    /// Apply an already-canonical command (replication ingest path).
+    pub fn apply_canon(&self, canon: &CanonCommand) -> Result<(), crate::Error> {
+        let mut kernel = self.kernel.lock().expect("kernel poisoned");
+        let seq = kernel.seq();
+        kernel.apply_canon(canon)?;
+        self.record(seq, canon)?;
+        Ok(())
+    }
+
+    /// Append to the in-memory log + WAL (caller holds the kernel lock).
+    fn record(&self, seq: u64, canon: &CanonCommand) -> Result<(), crate::Error> {
+        self.log.lock().expect("log poisoned").push(canon.clone());
+        if let Some(w) = &self.wal {
+            let mut w = w.lock().expect("wal poisoned");
+            w.append(seq, canon)?;
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    pub fn with_kernel<T>(&self, f: impl FnOnce(&Kernel) -> T) -> T {
+        f(&self.kernel.lock().expect("kernel poisoned"))
+    }
+
+    pub fn log_len(&self) -> usize {
+        self.log.lock().expect("log poisoned").len()
+    }
+
+    pub fn log_slice(&self, from: usize, max: usize) -> Vec<CanonCommand> {
+        let log = self.log.lock().expect("log poisoned");
+        log.iter().skip(from).take(max).cloned().collect()
+    }
+
+    pub fn embedder(&self) -> Option<&BatcherHandle> {
+        self.embed.as_ref()
+    }
+}
+
+/// Start the HTTP server for a node.
+pub fn serve(state: Arc<NodeState>, addr: &str, workers: usize) -> std::io::Result<Server> {
+    let handler: Handler = Arc::new(move |req| route(&state, req));
+    Server::start(addr, workers, handler)
+}
+
+fn ok_json(value: Json) -> Response {
+    Response::json(200, value.to_string())
+}
+
+fn err_json(status: u16, msg: &str) -> Response {
+    Response::json(status, Json::object(vec![("error", Json::str(msg))]).to_string())
+}
+
+/// Route one request (pure function of state + request; exposed for tests).
+pub fn route(state: &NodeState, req: Request) -> Response {
+    let m = &state.metrics;
+    let result = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/insert") => handle_insert(state, &req),
+        ("POST", "/v1/insert_batch") => handle_insert_batch(state, &req),
+        ("POST", "/v1/query") => handle_query(state, &req),
+        ("POST", "/v1/delete") => handle_delete(state, &req),
+        ("POST", "/v1/link") => handle_link(state, &req, true),
+        ("POST", "/v1/unlink") => handle_link(state, &req, false),
+        ("POST", "/v1/meta") => handle_meta(state, &req),
+        ("POST", "/v1/embed") => handle_embed(state, &req),
+        ("POST", "/v1/apply") => handle_apply(state, &req),
+        ("GET", "/v1/stats") => Ok(handle_stats(state)),
+        ("GET", "/v1/hash") => Ok(handle_hash(state)),
+        ("GET", "/v1/log") => Ok(handle_log(state, &req)),
+        ("GET", "/v1/health") => Ok(ok_json(Json::object(vec![("ok", Json::Bool(true))]))),
+        _ => Ok(Response::not_found()),
+    };
+    match result {
+        Ok(resp) => resp,
+        Err(resp) => {
+            Metrics::inc(&m.errors);
+            resp
+        }
+    }
+}
+
+type RouteResult = Result<Response, Response>;
+
+fn body_json(req: &Request) -> Result<Json, Response> {
+    let text = req.body_str().map_err(|_| Response::bad_request("body is not utf-8"))?;
+    parse(text).map_err(|e| Response::bad_request(&format!("invalid json: {e}")))
+}
+
+fn get_vector(body: &Json, state: &NodeState) -> Result<Vec<f32>, Response> {
+    if let Some(arr) = body.get("vector").as_array() {
+        arr.iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect::<Option<Vec<f32>>>()
+            .ok_or_else(|| Response::bad_request("vector must be an array of numbers"))
+    } else if let Some(text) = body.get("text").as_str() {
+        let embed = state
+            .embedder()
+            .ok_or_else(|| err_json(503, "no embedder loaded (run `make artifacts`)"))?;
+        let t0 = Instant::now();
+        let v = embed
+            .embed(text)
+            .map_err(|e| err_json(500, &format!("embed failed: {e}")))?;
+        state.metrics.embed_latency.record_us(t0.elapsed().as_micros() as u64);
+        Metrics::inc(&state.metrics.embeds);
+        Ok(v)
+    } else {
+        Err(Response::bad_request("need 'vector' or 'text'"))
+    }
+}
+
+fn state_error_response(e: &crate::Error) -> Response {
+    use crate::state::StateError;
+    match e {
+        crate::Error::State(StateError::DuplicateId(id)) => {
+            err_json(409, &format!("duplicate id {id}"))
+        }
+        crate::Error::State(StateError::UnknownId(id)) => {
+            err_json(404, &format!("unknown id {id}"))
+        }
+        crate::Error::State(se) => err_json(400, &se.to_string()),
+        other => err_json(500, &other.to_string()),
+    }
+}
+
+fn handle_insert(state: &NodeState, req: &Request) -> RouteResult {
+    let body = body_json(req)?;
+    let id = body.get("id").as_u64().ok_or_else(|| Response::bad_request("need numeric 'id'"))?;
+    let vector = get_vector(&body, state)?;
+    state.apply(Command::Insert { id, vector }).map_err(|e| state_error_response(&e))?;
+    Metrics::inc(&state.metrics.inserts);
+    Ok(ok_json(Json::object(vec![
+        ("inserted", Json::Int(id as i64)),
+        ("seq", Json::Int(state.with_kernel(|k| k.seq()) as i64)),
+    ])))
+}
+
+fn handle_insert_batch(state: &NodeState, req: &Request) -> RouteResult {
+    let body = body_json(req)?;
+    let items_json = body
+        .get("items")
+        .as_array()
+        .ok_or_else(|| Response::bad_request("need 'items' array of {id, vector}"))?;
+    let mut items = Vec::with_capacity(items_json.len());
+    for it in items_json {
+        let id =
+            it.get("id").as_u64().ok_or_else(|| Response::bad_request("item needs 'id'"))?;
+        let vector = it
+            .get("vector")
+            .as_array()
+            .ok_or_else(|| Response::bad_request("item needs 'vector'"))?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect::<Option<Vec<f32>>>()
+            .ok_or_else(|| Response::bad_request("vector must be numbers"))?;
+        items.push((id, vector));
+    }
+    let n = items.len();
+    state.apply(Command::InsertBatch { items }).map_err(|e| state_error_response(&e))?;
+    Metrics::inc(&state.metrics.inserts);
+    Ok(ok_json(Json::object(vec![
+        ("inserted", Json::Int(n as i64)),
+        ("seq", Json::Int(state.with_kernel(|k| k.seq()) as i64)),
+    ])))
+}
+
+fn handle_query(state: &NodeState, req: &Request) -> RouteResult {
+    let body = body_json(req)?;
+    let k = body.get("k").as_u64().unwrap_or(10) as usize;
+    let vector = get_vector(&body, state)?;
+    let t0 = Instant::now();
+    let hits = state
+        .with_kernel(|kern| kern.search_f32(&vector, k))
+        .map_err(|e| state_error_response(&crate::Error::State(e)))?;
+    state.metrics.query_latency.record_us(t0.elapsed().as_micros() as u64);
+    Metrics::inc(&state.metrics.queries);
+    let hits_json: Vec<Json> = hits
+        .iter()
+        .map(|h| {
+            Json::object(vec![
+                ("id", Json::Int(h.id as i64)),
+                ("dist_raw", Json::Int(h.dist_raw)),
+                ("dist", Json::Float(h.dist)),
+            ])
+        })
+        .collect();
+    Ok(ok_json(Json::object(vec![("hits", Json::Array(hits_json))])))
+}
+
+fn handle_delete(state: &NodeState, req: &Request) -> RouteResult {
+    let body = body_json(req)?;
+    let id = body.get("id").as_u64().ok_or_else(|| Response::bad_request("need numeric 'id'"))?;
+    state.apply(Command::Delete { id }).map_err(|e| state_error_response(&e))?;
+    Metrics::inc(&state.metrics.deletes);
+    Ok(ok_json(Json::object(vec![("deleted", Json::Int(id as i64))])))
+}
+
+fn handle_link(state: &NodeState, req: &Request, create: bool) -> RouteResult {
+    let body = body_json(req)?;
+    let from =
+        body.get("from").as_u64().ok_or_else(|| Response::bad_request("need numeric 'from'"))?;
+    let to = body.get("to").as_u64().ok_or_else(|| Response::bad_request("need numeric 'to'"))?;
+    let cmd = if create { Command::Link { from, to } } else { Command::Unlink { from, to } };
+    state.apply(cmd).map_err(|e| state_error_response(&e))?;
+    Metrics::inc(&state.metrics.links);
+    Ok(ok_json(Json::object(vec![("ok", Json::Bool(true))])))
+}
+
+fn handle_meta(state: &NodeState, req: &Request) -> RouteResult {
+    let body = body_json(req)?;
+    let id = body.get("id").as_u64().ok_or_else(|| Response::bad_request("need numeric 'id'"))?;
+    let key = body.get("key").as_str().ok_or_else(|| Response::bad_request("need 'key'"))?;
+    let value = body.get("value").as_str().ok_or_else(|| Response::bad_request("need 'value'"))?;
+    state
+        .apply(Command::SetMeta { id, key: key.to_string(), value: value.to_string() })
+        .map_err(|e| state_error_response(&e))?;
+    Ok(ok_json(Json::object(vec![("ok", Json::Bool(true))])))
+}
+
+fn handle_embed(state: &NodeState, req: &Request) -> RouteResult {
+    let body = body_json(req)?;
+    let texts = body
+        .get("texts")
+        .as_array()
+        .ok_or_else(|| Response::bad_request("need 'texts' array"))?
+        .iter()
+        .map(|t| t.as_str())
+        .collect::<Option<Vec<&str>>>()
+        .ok_or_else(|| Response::bad_request("'texts' must be strings"))?;
+    let embed =
+        state.embedder().ok_or_else(|| err_json(503, "no embedder loaded"))?;
+    let vectors = embed.embed_many(&texts).map_err(|e| err_json(500, &e.to_string()))?;
+    Metrics::inc(&state.metrics.embeds);
+    let arr: Vec<Json> = vectors
+        .into_iter()
+        .map(|v| Json::Array(v.into_iter().map(|x| Json::Float(x as f64)).collect()))
+        .collect();
+    Ok(ok_json(Json::object(vec![("embeddings", Json::Array(arr))])))
+}
+
+fn handle_apply(state: &NodeState, req: &Request) -> RouteResult {
+    let body = body_json(req)?;
+    let cmds = body
+        .get("commands")
+        .as_array()
+        .ok_or_else(|| Response::bad_request("need 'commands' array of hex strings"))?;
+    let mut applied = 0;
+    for c in cmds {
+        let hex = c.as_str().ok_or_else(|| Response::bad_request("command must be hex string"))?;
+        let bytes = hex_decode(hex).ok_or_else(|| Response::bad_request("invalid hex"))?;
+        let canon = CanonCommand::from_bytes(&bytes)
+            .map_err(|e| Response::bad_request(&format!("bad command: {e}")))?;
+        state.apply_canon(&canon).map_err(|e| state_error_response(&e))?;
+        applied += 1;
+    }
+    Ok(ok_json(Json::object(vec![
+        ("applied", Json::Int(applied)),
+        ("seq", Json::Int(state.with_kernel(|k| k.seq()) as i64)),
+        ("hash", Json::str(format!("{:016x}", state.with_kernel(|k| k.state_hash())))),
+    ])))
+}
+
+fn handle_stats(state: &NodeState) -> Response {
+    let (len, seq, dim) =
+        state.with_kernel(|k| (k.len(), k.seq(), k.config().dim));
+    let mut obj = match state.metrics.to_json() {
+        Json::Object(o) => o,
+        _ => unreachable!(),
+    };
+    obj.insert("vectors".into(), Json::Int(len as i64));
+    obj.insert("seq".into(), Json::Int(seq as i64));
+    obj.insert("dim".into(), Json::Int(dim as i64));
+    obj.insert("log_len".into(), Json::Int(state.log_len() as i64));
+    if let Some(b) = state.embedder() {
+        let (batches, requests) = b.counters();
+        obj.insert("batches".into(), Json::Int(batches as i64));
+        obj.insert("batched_requests".into(), Json::Int(requests as i64));
+    }
+    ok_json(Json::Object(obj))
+}
+
+fn handle_hash(state: &NodeState) -> Response {
+    let snap = state.with_kernel(Snapshot::capture);
+    ok_json(Json::object(vec![
+        ("fnv", Json::str(format!("{:016x}", snap.fnv))),
+        ("sha256", Json::str(snap.sha256_hex())),
+        ("seq", Json::Int(state.with_kernel(|k| k.seq()) as i64)),
+    ]))
+}
+
+fn handle_log(state: &NodeState, req: &Request) -> Response {
+    let from = req
+        .query
+        .as_deref()
+        .and_then(|q| {
+            q.split('&').find_map(|kv| kv.strip_prefix("from=").and_then(|v| v.parse().ok()))
+        })
+        .unwrap_or(0usize);
+    let cmds = state.log_slice(from, 1000);
+    let arr: Vec<Json> =
+        cmds.iter().map(|c| Json::str(hex_encode(&c.to_bytes()))).collect();
+    ok_json(Json::object(vec![
+        ("from", Json::Int(from as i64)),
+        ("total", Json::Int(state.log_len() as i64)),
+        ("commands", Json::Array(arr)),
+    ]))
+}
+
+/// Lower-case hex encoding (command wire format for replication).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Hex decoding; None on malformed input.
+pub fn hex_decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    (0..s.len() / 2)
+        .map(|i| u8::from_str_radix(s.get(i * 2..i * 2 + 2)?, 16).ok())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::KernelConfig;
+
+    fn test_state() -> Arc<NodeState> {
+        let kernel = Kernel::new(KernelConfig::default_q16(4));
+        Arc::new(NodeState::new(kernel, &NodeConfig::default(), None).unwrap())
+    }
+
+    fn post(state: &NodeState, path: &str, body: &str) -> (u16, Json) {
+        let req = Request {
+            method: "POST".into(),
+            path: path.into(),
+            query: None,
+            headers: Default::default(),
+            body: body.as_bytes().to_vec(),
+        };
+        let resp = route(state, req);
+        let json = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap_or(Json::Null);
+        (resp.status, json)
+    }
+
+    fn get(state: &NodeState, path: &str, query: Option<&str>) -> (u16, Json) {
+        let req = Request {
+            method: "GET".into(),
+            path: path.into(),
+            query: query.map(|s| s.to_string()),
+            headers: Default::default(),
+            body: vec![],
+        };
+        let resp = route(state, req);
+        let json = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap_or(Json::Null);
+        (resp.status, json)
+    }
+
+    #[test]
+    fn insert_then_query() {
+        let s = test_state();
+        let (st, _) = post(&s, "/v1/insert", r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#);
+        assert_eq!(st, 200);
+        let (st, _) = post(&s, "/v1/insert", r#"{"id":2,"vector":[0.9,0.9,0.9,0.9]}"#);
+        assert_eq!(st, 200);
+        let (st, body) = post(&s, "/v1/query", r#"{"vector":[0.1,0.2,0.3,0.4],"k":2}"#);
+        assert_eq!(st, 200);
+        let hits = body.get("hits").as_array().unwrap();
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].get("id").as_u64(), Some(1));
+        assert_eq!(hits[0].get("dist_raw").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn duplicate_insert_conflicts() {
+        let s = test_state();
+        post(&s, "/v1/insert", r#"{"id":1,"vector":[0,0,0,0]}"#);
+        let (st, body) = post(&s, "/v1/insert", r#"{"id":1,"vector":[0,0,0,0]}"#);
+        assert_eq!(st, 409);
+        assert!(body.get("error").as_str().unwrap().contains("duplicate"));
+    }
+
+    #[test]
+    fn delete_unknown_is_404() {
+        let s = test_state();
+        let (st, _) = post(&s, "/v1/delete", r#"{"id":99}"#);
+        assert_eq!(st, 404);
+    }
+
+    #[test]
+    fn link_and_meta_flow() {
+        let s = test_state();
+        post(&s, "/v1/insert", r#"{"id":1,"vector":[0,0,0,0]}"#);
+        post(&s, "/v1/insert", r#"{"id":2,"vector":[1,0,0,0]}"#);
+        let (st, _) = post(&s, "/v1/link", r#"{"from":1,"to":2}"#);
+        assert_eq!(st, 200);
+        let (st, _) = post(&s, "/v1/meta", r#"{"id":1,"key":"src","value":"api"}"#);
+        assert_eq!(st, 200);
+        assert!(s.with_kernel(|k| k.links().has_link(1, 2)));
+        let (st, _) = post(&s, "/v1/unlink", r#"{"from":1,"to":2}"#);
+        assert_eq!(st, 200);
+        assert!(!s.with_kernel(|k| k.links().has_link(1, 2)));
+    }
+
+    #[test]
+    fn bad_json_is_400() {
+        let s = test_state();
+        let (st, _) = post(&s, "/v1/insert", "{nope");
+        assert_eq!(st, 400);
+        let (st, _) = post(&s, "/v1/insert", r#"{"vector":[0,0,0,0]}"#); // no id
+        assert_eq!(st, 400);
+        let (st, _) = post(&s, "/v1/query", r#"{"k":3}"#); // no vector/text
+        assert_eq!(st, 400);
+    }
+
+    #[test]
+    fn text_without_embedder_is_503() {
+        let s = test_state();
+        let (st, _) = post(&s, "/v1/insert", r#"{"id":1,"text":"hello"}"#);
+        assert_eq!(st, 503);
+        let (st, _) = post(&s, "/v1/embed", r#"{"texts":["x"]}"#);
+        assert_eq!(st, 503);
+    }
+
+    #[test]
+    fn stats_and_hash() {
+        let s = test_state();
+        post(&s, "/v1/insert", r#"{"id":1,"vector":[0.5,0,0,0]}"#);
+        let (st, stats) = get(&s, "/v1/stats", None);
+        assert_eq!(st, 200);
+        assert_eq!(stats.get("vectors").as_i64(), Some(1));
+        assert_eq!(stats.get("inserts").as_i64(), Some(1));
+        let (st, hash) = get(&s, "/v1/hash", None);
+        assert_eq!(st, 200);
+        assert_eq!(hash.get("fnv").as_str().unwrap().len(), 16);
+        assert_eq!(hash.get("sha256").as_str().unwrap().len(), 64);
+    }
+
+    #[test]
+    fn log_feed_and_apply_replicate() {
+        let primary = test_state();
+        post(&primary, "/v1/insert", r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#);
+        post(&primary, "/v1/insert", r#"{"id":2,"vector":[0.5,0.6,0.7,0.8]}"#);
+        post(&primary, "/v1/link", r#"{"from":1,"to":2}"#);
+
+        let (st, feed) = get(&primary, "/v1/log", Some("from=0"));
+        assert_eq!(st, 200);
+        let cmds = feed.get("commands").as_array().unwrap();
+        assert_eq!(cmds.len(), 3);
+
+        // ship to a follower via /v1/apply
+        let follower = test_state();
+        let body = Json::object(vec![(
+            "commands",
+            Json::Array(cmds.to_vec()),
+        )]);
+        let (st, result) = post(&follower, "/v1/apply", &body.to_string());
+        assert_eq!(st, 200);
+        assert_eq!(result.get("applied").as_i64(), Some(3));
+
+        // paper §9: identical state hashes after processing the same log
+        let h_a = primary.with_kernel(|k| k.state_hash());
+        let h_b = follower.with_kernel(|k| k.state_hash());
+        assert_eq!(h_a, h_b);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let data = vec![0x00, 0xff, 0x12, 0xab];
+        assert_eq!(hex_decode(&hex_encode(&data)), Some(data));
+        assert_eq!(hex_decode("zz"), None);
+        assert_eq!(hex_decode("abc"), None);
+        assert_eq!(hex_decode(""), Some(vec![]));
+    }
+
+    #[test]
+    fn over_http_end_to_end() {
+        let s = test_state();
+        let server = serve(Arc::clone(&s), "127.0.0.1:0", 2).unwrap();
+        let addr = server.addr();
+        let body = parse(r#"{"id":5,"vector":[0.1,0.1,0.1,0.1]}"#).unwrap();
+        let (st, _) = crate::http::client::post_json(&addr, "/v1/insert", &body).unwrap();
+        assert_eq!(st, 200);
+        let q = parse(r#"{"vector":[0.1,0.1,0.1,0.1],"k":1}"#).unwrap();
+        let (st, resp) = crate::http::client::post_json(&addr, "/v1/query", &q).unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(resp.get("hits").as_array().unwrap()[0].get("id").as_u64(), Some(5));
+        server.stop();
+    }
+}

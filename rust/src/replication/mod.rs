@@ -1,0 +1,283 @@
+//! State-machine replication with hash verification (paper §9).
+//!
+//! "Nodes in a distributed network can verify they hold the same 'truth'
+//! by comparing memory state hashes" — because the kernel is a
+//! deterministic state machine, replication is just log shipping: the
+//! primary assigns a total order to canonical commands; followers apply
+//! the same prefix and *must* reach bit-identical state, which both sides
+//! prove by exchanging FNV/SHA-256 state hashes. A float-based store
+//! cannot make this guarantee (§9 "Floating-point memory systems violate
+//! this requirement").
+//!
+//! Two transports are provided:
+//! - in-process ([`Cluster`]): N kernels fed from one log — used by tests,
+//!   property tests and the consensus example;
+//! - HTTP ([`sync_follower`]): pulls `/v1/log` from a primary node and
+//!   pushes `/v1/apply` to a follower (see [`crate::node`]).
+
+use crate::node::{hex_decode, hex_encode};
+use crate::state::{CanonCommand, Command, Kernel, KernelConfig, StateError};
+
+/// Verification outcome for one follower.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyReport {
+    pub node: usize,
+    pub seq: u64,
+    pub hash: u64,
+    pub converged: bool,
+}
+
+/// An in-process replicated cluster: one primary, N-1 followers, all
+/// driven by the primary's canonical log.
+pub struct Cluster {
+    nodes: Vec<Kernel>,
+    log: Vec<CanonCommand>,
+    /// How many log entries each node has applied.
+    applied: Vec<usize>,
+}
+
+impl Cluster {
+    /// All nodes must start from the same config (it is part of the
+    /// snapshot identity).
+    pub fn new(config: KernelConfig, n: usize) -> Self {
+        assert!(n >= 1);
+        Self {
+            nodes: (0..n).map(|_| Kernel::new(config.clone())).collect(),
+            log: Vec::new(),
+            applied: vec![0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn log_len(&self) -> usize {
+        self.log.len()
+    }
+
+    pub fn node(&self, i: usize) -> &Kernel {
+        &self.nodes[i]
+    }
+
+    /// Submit an external command to the primary (node 0): it validates,
+    /// canonicalizes, applies, and appends to the shared log.
+    pub fn submit(&mut self, cmd: Command) -> Result<&CanonCommand, StateError> {
+        let canon = self.nodes[0].apply(cmd)?;
+        self.applied[0] += 1;
+        self.log.push(canon);
+        Ok(self.log.last().unwrap())
+    }
+
+    /// Ship the log to one follower (apply everything it hasn't seen).
+    pub fn sync_node(&mut self, i: usize) -> Result<usize, StateError> {
+        let mut n = 0;
+        while self.applied[i] < self.log.len() {
+            let canon = &self.log[self.applied[i]];
+            self.nodes[i].apply_canon(canon)?;
+            self.applied[i] += 1;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Ship the log to all followers.
+    pub fn sync_all(&mut self) -> Result<(), StateError> {
+        for i in 1..self.nodes.len() {
+            self.sync_node(i)?;
+        }
+        Ok(())
+    }
+
+    /// Compare state hashes across nodes (paper §9's convergence check).
+    pub fn verify(&self) -> Vec<VerifyReport> {
+        let h0 = self.nodes[0].state_hash();
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, k)| VerifyReport {
+                node: i,
+                seq: k.seq(),
+                hash: k.state_hash(),
+                converged: k.state_hash() == h0,
+            })
+            .collect()
+    }
+
+    /// True if every node's hash matches the primary's.
+    pub fn converged(&self) -> bool {
+        self.verify().iter().all(|r| r.converged)
+    }
+
+    /// Simulate a byzantine / buggy follower flipping one raw vector value
+    /// (used by tests and the consensus demo to show detection).
+    pub fn corrupt_node_for_test(&mut self, i: usize, id: u64) -> bool {
+        // Rebuild node i from a corrupted command replay: flip one command.
+        let mut tampered = self.log.clone();
+        for c in tampered.iter_mut() {
+            if let CanonCommand::Insert { id: cid, raw } = c {
+                if *cid == id && !raw.is_empty() {
+                    raw[0] ^= 1; // one bit of one component
+                    let mut k = Kernel::new(self.nodes[i].config().clone());
+                    for cmd in &tampered {
+                        if k.apply_canon(cmd).is_err() {
+                            return false;
+                        }
+                    }
+                    self.nodes[i] = k;
+                    self.applied[i] = tampered.len();
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+/// Pull a primary's log over HTTP and push it to a follower node; returns
+/// (commands shipped, follower hash hex). Both sides are `/v1` APIs from
+/// [`crate::node`].
+pub fn sync_follower(
+    primary: &std::net::SocketAddr,
+    follower: &std::net::SocketAddr,
+    from: usize,
+) -> std::io::Result<(usize, String)> {
+    use crate::http::client;
+    use crate::json::Json;
+
+    let (status, feed) = client::get_json(primary, &format!("/v1/log?from={from}"))?;
+    if status != 200 {
+        return Err(std::io::Error::other(format!("log fetch failed: {status}")));
+    }
+    let cmds = feed.get("commands").as_array().unwrap_or(&[]).to_vec();
+    let n = cmds.len();
+    if n == 0 {
+        let (_, h) = client::get_json(follower, "/v1/hash")?;
+        return Ok((0, h.get("fnv").as_str().unwrap_or("").to_string()));
+    }
+    let body = Json::object(vec![("commands", Json::Array(cmds))]);
+    let (status, resp) = client::post_json(follower, "/v1/apply", &body)?;
+    if status != 200 {
+        return Err(std::io::Error::other(format!(
+            "apply failed: {status}: {resp}"
+        )));
+    }
+    Ok((n, resp.get("hash").as_str().unwrap_or("").to_string()))
+}
+
+/// Round-trip helper: serialize a command log to a hex-lines string and
+/// back (audit-file format used by the replay example).
+pub fn log_to_text(log: &[CanonCommand]) -> String {
+    let mut out = String::new();
+    for c in log {
+        out.push_str(&hex_encode(&c.to_bytes()));
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse an audit-file back into commands (strict).
+pub fn log_from_text(text: &str) -> Result<Vec<CanonCommand>, String> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let bytes = hex_decode(l.trim()).ok_or_else(|| format!("bad hex line: {l}"))?;
+            CanonCommand::from_bytes(&bytes).map_err(|e| format!("bad command: {e}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn config() -> KernelConfig {
+        KernelConfig::default_q16(4)
+    }
+
+    #[test]
+    fn three_node_convergence() {
+        let mut c = Cluster::new(config(), 3);
+        for i in 0..50u64 {
+            let x = i as f32 / 50.0;
+            c.submit(Command::insert(i, vec![x, 1.0 - x, 0.5, -x])).unwrap();
+        }
+        c.submit(Command::Delete { id: 7 }).unwrap();
+        c.submit(Command::Link { from: 1, to: 2 }).unwrap();
+        assert!(!c.converged()); // followers haven't synced yet
+        c.sync_all().unwrap();
+        assert!(c.converged());
+        let reports = c.verify();
+        assert_eq!(reports.len(), 3);
+        assert!(reports.iter().all(|r| r.seq == 52));
+    }
+
+    #[test]
+    fn incremental_sync() {
+        let mut c = Cluster::new(config(), 2);
+        c.submit(Command::insert(1, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+        assert_eq!(c.sync_node(1).unwrap(), 1);
+        assert!(c.converged());
+        c.submit(Command::insert(2, vec![0.4, 0.3, 0.2, 0.1])).unwrap();
+        c.submit(Command::Link { from: 1, to: 2 }).unwrap();
+        assert_eq!(c.sync_node(1).unwrap(), 2);
+        assert_eq!(c.sync_node(1).unwrap(), 0); // idempotent
+        assert!(c.converged());
+    }
+
+    #[test]
+    fn rejected_command_does_not_enter_log() {
+        let mut c = Cluster::new(config(), 2);
+        c.submit(Command::insert(1, vec![0.0; 4])).unwrap();
+        assert!(c.submit(Command::insert(1, vec![0.0; 4])).is_err()); // dup
+        assert_eq!(c.log_len(), 1);
+        c.sync_all().unwrap();
+        assert!(c.converged());
+    }
+
+    #[test]
+    fn single_bit_corruption_is_detected() {
+        let mut c = Cluster::new(config(), 3);
+        for i in 0..20u64 {
+            c.submit(Command::insert(i, vec![0.25, -0.25, (i as f32) * 0.01, 0.0])).unwrap();
+        }
+        c.sync_all().unwrap();
+        assert!(c.converged());
+        assert!(c.corrupt_node_for_test(2, 13));
+        let reports = c.verify();
+        assert!(reports[0].converged);
+        assert!(reports[1].converged);
+        assert!(!reports[2].converged, "corruption must break the hash");
+    }
+
+    #[test]
+    fn search_results_identical_across_replicas() {
+        let mut c = Cluster::new(config(), 2);
+        for i in 0..100u64 {
+            let x = (i as f32 * 0.37).sin() * 0.5;
+            let y = (i as f32 * 0.11).cos() * 0.5;
+            c.submit(Command::insert(i, vec![x, y, x * y, 0.1])).unwrap();
+        }
+        c.sync_all().unwrap();
+        let q = [0.2f32, -0.1, 0.05, 0.1];
+        let h0 = c.node(0).search_f32(&q, 10).unwrap();
+        let h1 = c.node(1).search_f32(&q, 10).unwrap();
+        assert_eq!(h0, h1); // ids AND raw distances identical
+    }
+
+    #[test]
+    fn log_text_roundtrip() {
+        let mut c = Cluster::new(config(), 1);
+        c.submit(Command::insert(1, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+        c.submit(Command::Delete { id: 1 }).unwrap();
+        let text = log_to_text(&c.log);
+        let back = log_from_text(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1], CanonCommand::Delete { id: 1 });
+        assert!(log_from_text("zz\n").is_err());
+    }
+}

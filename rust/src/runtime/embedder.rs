@@ -1,0 +1,181 @@
+//! The AOT-compiled embedding model, executed from Rust.
+//!
+//! Loads `embedder_enva.hlo.txt` (or env B for the divergence experiments)
+//! plus the exported weights, and serves `embed_batch` on fixed-shape
+//! batches. Weights are uploaded once as literals and reused across calls.
+
+use super::engine::{literal_f32, literal_i32, Engine, LoadedComputation};
+use super::manifest::Manifest;
+use crate::tokenizer::Tokenizer;
+use crate::Error;
+use std::path::Path;
+
+/// Which simulated environment's lowering to load (Table 1 / DESIGN §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Env {
+    /// Pallas attention + sum pooling (the default runtime model).
+    A,
+    /// jnp attention + cumsum pooling (the "other machine").
+    B,
+}
+
+impl Env {
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            Env::A => "embedder_enva.hlo.txt",
+            Env::B => "embedder_envb.hlo.txt",
+        }
+    }
+}
+
+/// Compiled embedder + weights + tokenizer.
+pub struct Embedder {
+    comp: LoadedComputation,
+    weights: Vec<xla::Literal>,
+    tokenizer: Tokenizer,
+    pub manifest: Manifest,
+    pub env: Env,
+}
+
+impl Embedder {
+    /// Load the embedder for `env` from the artifacts directory.
+    pub fn load(engine: &Engine, artifacts_dir: impl AsRef<Path>, env: Env) -> crate::Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let comp = engine.load_hlo(dir.join(env.artifact()))?;
+        let mut weights = Vec::with_capacity(manifest.params.len());
+        for spec in &manifest.params {
+            let data = manifest.load_weight(dir, spec)?;
+            weights.push(literal_f32(&data, &spec.shape)?);
+        }
+        let tokenizer =
+            Tokenizer::new(manifest.model.vocab as u32, manifest.model.seq_len);
+        Ok(Self { comp, weights, tokenizer, manifest, env })
+    }
+
+    /// Model batch size (inputs are padded up to this).
+    pub fn batch_size(&self) -> usize {
+        self.manifest.model.batch
+    }
+
+    /// Embedding dimensionality.
+    pub fn dim(&self) -> usize {
+        self.manifest.model.d_model
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    /// Embed up to `batch_size` texts; returns one `dim`-length vector per
+    /// input text (padding rows are dropped).
+    pub fn embed_texts(&self, texts: &[&str]) -> crate::Result<Vec<Vec<f32>>> {
+        let b = self.batch_size();
+        if texts.len() > b {
+            return Err(Error::Runtime(format!(
+                "batch overflow: {} texts > model batch {b}",
+                texts.len()
+            )));
+        }
+        let ids = self.tokenizer.encode_batch(texts, b);
+        self.embed_token_ids(&ids, texts.len())
+    }
+
+    /// Embed pre-tokenized ids (row-major `[batch, seq_len]`, padded).
+    pub fn embed_token_ids(&self, ids: &[i32], n_real: usize) -> crate::Result<Vec<Vec<f32>>> {
+        let m = &self.manifest.model;
+        assert_eq!(ids.len(), m.batch * m.seq_len, "ids must be a full batch");
+        let ids_lit = literal_i32(ids, &[m.batch, m.seq_len])?;
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&ids_lit);
+        let out = self.comp.run_borrowed(&args)?;
+        let flat =
+            out.to_vec::<f32>().map_err(|e| Error::Runtime(format!("embedder output: {e}")))?;
+        debug_assert_eq!(flat.len(), m.batch * m.d_model);
+        Ok(flat.chunks(m.d_model).take(n_real).map(|c| c.to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    fn load(env: Env) -> Option<Embedder> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        let engine = Engine::cpu().unwrap();
+        Some(Embedder::load(&engine, artifacts_dir(), env).unwrap())
+    }
+
+    #[test]
+    fn embeds_texts_to_unit_vectors() {
+        let Some(e) = load(Env::A) else { return };
+        let out = e.embed_texts(&["Revenue for April", "drone sensor telemetry"]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), e.dim());
+        for v in &out {
+            let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-3, "norm = {n}");
+        }
+    }
+
+    #[test]
+    fn embedding_is_run_to_run_deterministic() {
+        let Some(e) = load(Env::A) else { return };
+        let a = e.embed_texts(&["What is the profit in April?"]).unwrap();
+        let b = e.embed_texts(&["What is the profit in April?"]).unwrap();
+        // same binary, same host, same lowering => bit-identical
+        assert_eq!(
+            a[0].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b[0].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn env_a_and_env_b_diverge_at_bit_level() {
+        // Table 1's mechanism through the full AOT+PJRT stack.
+        let Some(ea) = load(Env::A) else { return };
+        let Some(eb) = load(Env::B) else { return };
+        let texts = ["Revenue for April"];
+        let va = &ea.embed_texts(&texts).unwrap()[0];
+        let vb = &eb.embed_texts(&texts).unwrap()[0];
+        let diff = va
+            .iter()
+            .zip(vb)
+            .filter(|(a, b)| a.to_bits() != b.to_bits())
+            .count();
+        assert!(diff > va.len() / 2, "only {diff}/{} dims diverged", va.len());
+        // yet semantically near-identical (paper: cosine > 0.9999)
+        let dot: f64 = va.iter().zip(vb).map(|(a, b)| *a as f64 * *b as f64).sum();
+        assert!(dot > 0.9999, "cosine = {dot}");
+    }
+
+    #[test]
+    fn similar_texts_are_closer_than_unrelated() {
+        let Some(e) = load(Env::A) else { return };
+        let out = e
+            .embed_texts(&[
+                "Revenue for April",
+                "April financial summary revenue",
+                "drone lidar waypoint altitude telemetry",
+            ])
+            .unwrap();
+        let cos = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let sim_related = cos(&out[0], &out[1]);
+        let sim_unrelated = cos(&out[0], &out[2]);
+        assert!(
+            sim_related > sim_unrelated,
+            "related {sim_related} vs unrelated {sim_unrelated}"
+        );
+    }
+
+    #[test]
+    fn batch_overflow_is_error() {
+        let Some(e) = load(Env::A) else { return };
+        let texts: Vec<&str> = (0..e.batch_size() + 1).map(|_| "x").collect();
+        assert!(e.embed_texts(&texts).is_err());
+    }
+}

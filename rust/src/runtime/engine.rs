@@ -1,0 +1,221 @@
+//! PJRT engine: HLO-text loading, compilation and execution.
+//!
+//! Thin, typed wrapper over the `xla` crate following the pattern in
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! The engine is deliberately **not** `Sync`: PJRT client handles are raw
+//! pointers. The node layer gives the engine to a dedicated model thread
+//! and feeds it through the batcher's channel (see [`crate::node`]), which
+//! is also the right serving shape — one compiled executable, one queue.
+
+use crate::Error;
+use std::path::Path;
+
+/// A compiled computation ready to execute.
+pub struct LoadedComputation {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl LoadedComputation {
+    /// Execute with literal inputs; returns the first element of the
+    /// result tuple (aot.py lowers with return_tuple=True).
+    pub fn run(&self, args: &[xla::Literal]) -> crate::Result<xla::Literal> {
+        self.run_impl(self.exe.execute::<xla::Literal>(args))
+    }
+
+    /// Same as [`Self::run`] for borrowed literals (weights reused across
+    /// calls without cloning).
+    pub fn run_borrowed(&self, args: &[&xla::Literal]) -> crate::Result<xla::Literal> {
+        self.run_impl(self.exe.execute::<&xla::Literal>(args))
+    }
+
+    fn run_impl(
+        &self,
+        result: Result<Vec<Vec<xla::PjRtBuffer>>, xla::Error>,
+    ) -> crate::Result<xla::Literal> {
+        let result = result.map_err(|e| Error::Runtime(format!("{}: execute: {e}", self.name)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{}: to_literal: {e}", self.name)))?;
+        lit.to_tuple1().map_err(|e| Error::Runtime(format!("{}: tuple: {e}", self.name)))
+    }
+}
+
+/// PJRT CPU client + loader.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> crate::Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> crate::Result<LoadedComputation> {
+        let path = path.as_ref();
+        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("hlo").to_string();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Runtime(format!("{name}: parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("{name}: compile: {e}")))?;
+        Ok(LoadedComputation { exe, name })
+    }
+}
+
+/// Literal construction helpers (shape-checked).
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> crate::Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| Error::Runtime(format!("literal f32 reshape: {e}")))
+}
+
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> crate::Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| Error::Runtime(format!("literal i32 reshape: {e}")))
+}
+
+/// The integer distance executables (E9 / hot-path offload).
+///
+/// Wraps `distance_q16_l2.hlo.txt` / `distance_q16_dot.hlo.txt`: fixed
+/// AOT shape `(query: i32[D], db: i32[N, D]) -> i64[N]`; callers pad the
+/// database to N rows.
+pub struct DistanceEngine {
+    l2: LoadedComputation,
+    dot: LoadedComputation,
+    f32_l2: LoadedComputation,
+    pub dim: usize,
+    pub db_rows: usize,
+}
+
+impl DistanceEngine {
+    pub fn load(engine: &Engine, artifacts_dir: impl AsRef<Path>, dim: usize, db_rows: usize) -> crate::Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        Ok(Self {
+            l2: engine.load_hlo(dir.join("distance_q16_l2.hlo.txt"))?,
+            dot: engine.load_hlo(dir.join("distance_q16_dot.hlo.txt"))?,
+            f32_l2: engine.load_hlo(dir.join("distance_f32_l2.hlo.txt"))?,
+            dim,
+            db_rows,
+        })
+    }
+
+    fn pad_db_i32(&self, db: &[i32]) -> Vec<i32> {
+        let mut padded = db.to_vec();
+        padded.resize(self.db_rows * self.dim, 0);
+        padded
+    }
+
+    /// Q16.16 squared-L2 distances of `query` against up to `db_rows`
+    /// database vectors (row-major `db`, n = db.len()/dim rows). Returns
+    /// one i64 per real row.
+    pub fn l2sq_q16(&self, query: &[i32], db: &[i32]) -> crate::Result<Vec<i64>> {
+        self.run_int(&self.l2, query, db)
+    }
+
+    /// Q16.16 dot products (same layout as [`Self::l2sq_q16`]).
+    pub fn dot_q16(&self, query: &[i32], db: &[i32]) -> crate::Result<Vec<i64>> {
+        self.run_int(&self.dot, query, db)
+    }
+
+    fn run_int(
+        &self,
+        comp: &LoadedComputation,
+        query: &[i32],
+        db: &[i32],
+    ) -> crate::Result<Vec<i64>> {
+        assert_eq!(query.len(), self.dim);
+        assert!(db.len() % self.dim == 0 && db.len() <= self.db_rows * self.dim);
+        let n = db.len() / self.dim;
+        let q = literal_i32(query, &[self.dim])?;
+        let d = literal_i32(&self.pad_db_i32(db), &[self.db_rows, self.dim])?;
+        let out = comp.run(&[q, d])?;
+        let mut v = out
+            .to_vec::<i64>()
+            .map_err(|e| Error::Runtime(format!("distance output: {e}")))?;
+        v.truncate(n);
+        Ok(v)
+    }
+
+    /// Float baseline distances (the divergence-prone path).
+    pub fn l2sq_f32(&self, query: &[f32], db: &[f32]) -> crate::Result<Vec<f32>> {
+        assert_eq!(query.len(), self.dim);
+        let n = db.len() / self.dim;
+        let mut padded = db.to_vec();
+        padded.resize(self.db_rows * self.dim, 0.0);
+        let q = literal_f32(query, &[self.dim])?;
+        let d = literal_f32(&padded, &[self.db_rows, self.dim])?;
+        let out = self.f32_l2.run(&[q, d])?;
+        let mut v =
+            out.to_vec::<f32>().map_err(|e| Error::Runtime(format!("distance output: {e}")))?;
+        v.truncate(n);
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    #[test]
+    fn engine_boots_cpu() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+    }
+
+    #[test]
+    fn literal_helpers_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let l = literal_i32(&[1, -2, 3, -4, 5, -6], &[3, 2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, -2, 3, -4, 5, -6]);
+    }
+
+    #[test]
+    fn distance_engine_matches_native_rust() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let dir = artifacts_dir();
+        let m = crate::runtime::Manifest::load(&dir).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let de = DistanceEngine::load(&engine, &dir, m.model.d_model, m.model.db_rows).unwrap();
+
+        // deterministic pseudo-random Q16.16 vectors within the contract
+        let mut rng = crate::hash::XorShift64::new(42);
+        let dim = m.model.d_model;
+        let n = 100;
+        let db: Vec<i32> =
+            (0..n * dim).map(|_| (rng.next_f64() * 131072.0 - 65536.0) as i32).collect();
+        let query: Vec<i32> =
+            (0..dim).map(|_| (rng.next_f64() * 131072.0 - 65536.0) as i32).collect();
+
+        let xla_l2 = de.l2sq_q16(&query, &db).unwrap();
+        let xla_dot = de.dot_q16(&query, &db).unwrap();
+        assert_eq!(xla_l2.len(), n);
+        for row in 0..n {
+            let r = &db[row * dim..(row + 1) * dim];
+            // E9: BIT-IDENTICAL across implementations (Rust vs XLA/Pallas)
+            assert_eq!(xla_l2[row], crate::distance::l2sq_q16(&query, r), "l2 row {row}");
+            assert_eq!(xla_dot[row], crate::distance::dot_q16(&query, r), "dot row {row}");
+        }
+    }
+}

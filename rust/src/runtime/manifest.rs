@@ -1,0 +1,167 @@
+//! Weight/parameter manifest reader (`artifacts/manifest.json`).
+//!
+//! aot.py writes the HLO parameter order, shapes and dtypes plus the model
+//! constants; this module parses it with the in-crate JSON parser and loads
+//! the little-endian weight binaries.
+
+use crate::json::{parse, Json};
+use crate::Error;
+use std::fs;
+use std::path::Path;
+
+/// One HLO parameter (a weight tensor).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model constants shared with python/compile/model.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub pad_id: i32,
+    pub db_rows: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub params: Vec<ParamSpec>,
+    pub model: ModelDims,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let path = artifacts_dir.as_ref().join("manifest.json");
+        let text = fs::read_to_string(&path)?;
+        let json =
+            parse(&text).map_err(|e| Error::Runtime(format!("manifest {path:?}: {e}")))?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> crate::Result<Self> {
+        let err = |what: &str| Error::Runtime(format!("manifest missing/invalid: {what}"));
+        let params_json = json.get("params").as_array().ok_or_else(|| err("params"))?;
+        let mut params = Vec::with_capacity(params_json.len());
+        for p in params_json {
+            let name = p.get("name").as_str().ok_or_else(|| err("param name"))?.to_string();
+            let shape = p
+                .get("shape")
+                .as_array()
+                .ok_or_else(|| err("param shape"))?
+                .iter()
+                .map(|v| v.as_u64().map(|x| x as usize))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| err("param shape entry"))?;
+            let dtype = p.get("dtype").as_str().ok_or_else(|| err("param dtype"))?.to_string();
+            params.push(ParamSpec { name, shape, dtype });
+        }
+        let m = json.get("model");
+        let get = |k: &str| m.get(k).as_u64().map(|v| v as usize);
+        let model = ModelDims {
+            vocab: get("vocab").ok_or_else(|| err("vocab"))?,
+            d_model: get("d_model").ok_or_else(|| err("d_model"))?,
+            n_heads: get("n_heads").ok_or_else(|| err("n_heads"))?,
+            n_layers: get("n_layers").ok_or_else(|| err("n_layers"))?,
+            d_ff: get("d_ff").ok_or_else(|| err("d_ff"))?,
+            seq_len: get("seq_len").ok_or_else(|| err("seq_len"))?,
+            batch: get("batch").ok_or_else(|| err("batch"))?,
+            pad_id: m.get("pad_id").as_i64().ok_or_else(|| err("pad_id"))? as i32,
+            db_rows: get("db_rows").ok_or_else(|| err("db_rows"))?,
+        };
+        Ok(Self { params, model })
+    }
+
+    /// Read one weight binary (little-endian f32) and verify its size.
+    pub fn load_weight(
+        &self,
+        artifacts_dir: impl AsRef<Path>,
+        spec: &ParamSpec,
+    ) -> crate::Result<Vec<f32>> {
+        let path = artifacts_dir.as_ref().join("weights").join(format!("{}.bin", spec.name));
+        let bytes = fs::read(&path)?;
+        let expected = spec.element_count() * 4;
+        if bytes.len() != expected {
+            return Err(Error::Runtime(format!(
+                "weight {}: expected {expected} bytes, found {}",
+                spec.name,
+                bytes.len()
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "params": [
+        {"name": "tok_emb", "shape": [8, 4], "dtype": "f32"},
+        {"name": "lnf_g", "shape": [4], "dtype": "f32"}
+      ],
+      "model": {"vocab": 8, "d_model": 4, "n_heads": 2, "n_layers": 1,
+                "d_ff": 8, "seq_len": 4, "batch": 2, "pad_id": 0, "db_rows": 16}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].name, "tok_emb");
+        assert_eq!(m.params[0].shape, vec![8, 4]);
+        assert_eq!(m.params[0].element_count(), 32);
+        assert_eq!(m.model.d_model, 4);
+        assert_eq!(m.model.pad_id, 0);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let bad = r#"{"params": [], "model": {"vocab": 8}}"#;
+        assert!(Manifest::from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn weight_size_mismatch_is_error() {
+        let dir = std::env::temp_dir().join(format!("valori_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("weights")).unwrap();
+        std::fs::write(dir.join("weights/lnf_g.bin"), [0u8; 12]).unwrap(); // 3 floats, want 4
+        let m = Manifest::from_json(&parse(SAMPLE).unwrap()).unwrap();
+        let err = m.load_weight(&dir, &m.params[1]).unwrap_err();
+        assert!(matches!(err, Error::Runtime(_)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Exercises the real artifact when `make artifacts` has run.
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.params.len(), 16);
+        assert_eq!(m.model.d_model, 128);
+        let w = m.load_weight(&dir, &m.params[0]).unwrap();
+        assert_eq!(w.len(), m.params[0].element_count());
+    }
+}

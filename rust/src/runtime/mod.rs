@@ -1,0 +1,45 @@
+//! Runtime: load and execute AOT-compiled XLA computations via PJRT.
+//!
+//! This is the bridge between Layer 3 (this crate) and the build-time
+//! Layers 1/2 (python/compile): `make artifacts` lowers the JAX/Pallas
+//! programs to HLO *text*, and this module loads them with
+//! `HloModuleProto::from_text_file`, compiles them on the PJRT CPU client,
+//! and executes them with concrete inputs. Python never runs at request
+//! time.
+//!
+//! Everything here is *outside* the determinism boundary (float model
+//! compute); results cross the boundary in [`crate::state`].
+
+pub mod embedder;
+pub mod engine;
+pub mod manifest;
+
+pub use embedder::Embedder;
+pub use engine::{DistanceEngine, Engine, LoadedComputation};
+pub use manifest::{Manifest, ModelDims, ParamSpec};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$VALORI_ARTIFACTS` or ./artifacts
+/// relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("VALORI_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Try cwd, then the crate manifest dir (useful under `cargo test`).
+    for base in [
+        PathBuf::from("artifacts"),
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if base.join("manifest.json").exists() {
+            return base;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True if `make artifacts` has been run (used by tests/benches that need
+/// the AOT outputs to skip gracefully with a loud message otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

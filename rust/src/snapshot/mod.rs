@@ -1,0 +1,287 @@
+//! Snapshots: bit-exact state serialization + hashing (paper §5.2, §8.1).
+//!
+//! "Because the state is deterministic, the entire memory can be serialized
+//! to a snapshot file. Restoring this snapshot on a different machine
+//! guarantees an exact replica of the memory state, down to the last bit."
+//!
+//! File format:
+//!
+//! ```text
+//! [ magic "VSNP": u32 ][ version: u32 ]
+//! [ state_len: u32 ][ state bytes (Kernel::encode_state) ]
+//! [ fnv1a64(state): u64 ]
+//! [ sha256(state): 32 bytes ]
+//! [ crc32(everything above): u32 ]
+//! ```
+//!
+//! The FNV hash is the cheap cross-node comparison value (H_A ≡ H_B); the
+//! SHA-256 is the audit-grade digest; the CRC detects storage corruption.
+
+use crate::codec::{DecodeError, Decoder, Encoder};
+use crate::hash::fnv1a64;
+use crate::state::Kernel;
+use sha2::{Digest, Sha256};
+use std::fs;
+use std::path::Path;
+
+const SNAP_MAGIC: u32 = 0x56534E50; // "VSNP"
+const SNAP_VERSION: u32 = 1;
+
+/// A serialized snapshot plus its digests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Snapshot {
+    /// Canonical state bytes (what the hashes are computed over).
+    pub state: Vec<u8>,
+    /// FNV-1a 64 of `state` — the replica-comparison hash.
+    pub fnv: u64,
+    /// SHA-256 of `state` — the audit digest.
+    pub sha256: [u8; 32],
+}
+
+/// Snapshot errors.
+#[derive(Debug)]
+pub enum SnapshotError {
+    Io(std::io::Error),
+    Decode(DecodeError),
+    /// Stored digest does not match recomputed digest — the snapshot was
+    /// corrupted or tampered with.
+    DigestMismatch { which: &'static str },
+    /// CRC failure (storage corruption).
+    CrcMismatch,
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "io: {e}"),
+            SnapshotError::Decode(e) => write!(f, "decode: {e}"),
+            SnapshotError::DigestMismatch { which } => write!(f, "{which} digest mismatch"),
+            SnapshotError::CrcMismatch => write!(f, "crc mismatch"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> Self {
+        SnapshotError::Io(e)
+    }
+}
+
+impl From<DecodeError> for SnapshotError {
+    fn from(e: DecodeError) -> Self {
+        SnapshotError::Decode(e)
+    }
+}
+
+impl Snapshot {
+    /// Capture a kernel's state.
+    pub fn capture(kernel: &Kernel) -> Self {
+        let state = kernel.to_state_bytes();
+        let fnv = fnv1a64(&state);
+        let sha256: [u8; 32] = Sha256::digest(&state).into();
+        Self { state, fnv, sha256 }
+    }
+
+    /// Rebuild a kernel, verifying both digests first.
+    pub fn restore(&self) -> Result<Kernel, SnapshotError> {
+        if fnv1a64(&self.state) != self.fnv {
+            return Err(SnapshotError::DigestMismatch { which: "fnv" });
+        }
+        let sha: [u8; 32] = Sha256::digest(&self.state).into();
+        if sha != self.sha256 {
+            return Err(SnapshotError::DigestMismatch { which: "sha256" });
+        }
+        Ok(Kernel::from_state_bytes(&self.state)?)
+    }
+
+    /// Serialize to the on-disk format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(self.state.len() + 64);
+        e.put_u32(SNAP_MAGIC);
+        e.put_u32(SNAP_VERSION);
+        e.put_bytes(&self.state);
+        e.put_u64(self.fnv);
+        for &b in &self.sha256 {
+            e.put_u8(b);
+        }
+        let crc = crc32fast::hash(e.as_slice());
+        e.put_u32(crc);
+        e.into_vec()
+    }
+
+    /// Parse + verify the on-disk format.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SnapshotError> {
+        if bytes.len() < 4 {
+            return Err(SnapshotError::Decode(DecodeError::UnexpectedEof {
+                need: 4,
+                have: bytes.len(),
+            }));
+        }
+        // CRC covers everything except the trailing 4 bytes.
+        let body = &bytes[..bytes.len() - 4];
+        let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        if crc32fast::hash(body) != stored_crc {
+            return Err(SnapshotError::CrcMismatch);
+        }
+        let mut d = Decoder::new(body);
+        let magic = d.get_u32()?;
+        if magic != SNAP_MAGIC {
+            return Err(SnapshotError::Decode(DecodeError::BadMagic {
+                expected: SNAP_MAGIC,
+                found: magic,
+            }));
+        }
+        let version = d.get_u32()?;
+        if version != SNAP_VERSION {
+            return Err(SnapshotError::Decode(DecodeError::BadVersion {
+                expected: SNAP_VERSION,
+                found: version,
+            }));
+        }
+        let state = d.get_bytes()?.to_vec();
+        let fnv = d.get_u64()?;
+        let mut sha256 = [0u8; 32];
+        for b in sha256.iter_mut() {
+            *b = d.get_u8()?;
+        }
+        d.finish()?;
+        let snap = Self { state, fnv, sha256 };
+        // verify digests against the state payload
+        if fnv1a64(&snap.state) != snap.fnv {
+            return Err(SnapshotError::DigestMismatch { which: "fnv" });
+        }
+        let sha: [u8; 32] = Sha256::digest(&snap.state).into();
+        if sha != snap.sha256 {
+            return Err(SnapshotError::DigestMismatch { which: "sha256" });
+        }
+        Ok(snap)
+    }
+
+    /// Write to a file (atomic: tmp + rename).
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<(), SnapshotError> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, self.to_bytes())?;
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Read + verify from a file.
+    pub fn read_file(path: impl AsRef<Path>) -> Result<Self, SnapshotError> {
+        let bytes = fs::read(path)?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Hex rendering of the SHA-256 (for logs/audit records).
+    pub fn sha256_hex(&self) -> String {
+        self.sha256.iter().map(|b| format!("{b:02x}")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::{Command, KernelConfig};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("valori_snap_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn populated_kernel() -> Kernel {
+        let mut k = Kernel::new(KernelConfig::default_q16(8));
+        for i in 0..100u64 {
+            let v: Vec<f32> = (0..8).map(|j| ((i * 8 + j as u64) as f32 * 0.001).sin()).collect();
+            k.apply(Command::insert(i, v)).unwrap();
+        }
+        k.apply(Command::Delete { id: 50 }).unwrap();
+        k.apply(Command::Link { from: 1, to: 2 }).unwrap();
+        k
+    }
+
+    #[test]
+    fn capture_restore_identical() {
+        let k = populated_kernel();
+        let snap = Snapshot::capture(&k);
+        let k2 = snap.restore().unwrap();
+        assert_eq!(k, k2);
+        assert_eq!(k.state_hash(), k2.state_hash());
+        assert_eq!(snap.fnv, k.state_hash());
+    }
+
+    #[test]
+    fn file_roundtrip_bit_exact() {
+        let k = populated_kernel();
+        let snap = Snapshot::capture(&k);
+        let path = tmp("file_roundtrip");
+        snap.write_file(&path).unwrap();
+        let snap2 = Snapshot::read_file(&path).unwrap();
+        assert_eq!(snap, snap2);
+        let k2 = snap2.restore().unwrap();
+        assert_eq!(k.state_hash(), k2.state_hash());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_bytes_are_deterministic() {
+        let a = Snapshot::capture(&populated_kernel()).to_bytes();
+        let b = Snapshot::capture(&populated_kernel()).to_bytes();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn corruption_detected_by_crc() {
+        let snap = Snapshot::capture(&populated_kernel());
+        let mut bytes = snap.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        assert!(matches!(Snapshot::from_bytes(&bytes), Err(SnapshotError::CrcMismatch)));
+    }
+
+    #[test]
+    fn tampering_with_digest_detected() {
+        // Rebuild a snapshot with a wrong fnv but a fixed-up CRC; the digest
+        // check must still catch it.
+        let snap = Snapshot::capture(&populated_kernel());
+        let tampered = Snapshot { fnv: snap.fnv ^ 1, ..snap };
+        let bytes = tampered.to_bytes(); // to_bytes recomputes a valid CRC
+        assert!(matches!(
+            Snapshot::from_bytes(&bytes),
+            Err(SnapshotError::DigestMismatch { which: "fnv" })
+        ));
+    }
+
+    #[test]
+    fn truncated_file_detected() {
+        let snap = Snapshot::capture(&populated_kernel());
+        let bytes = snap.to_bytes();
+        for cut in [0usize, 3, 10, bytes.len() - 5] {
+            assert!(Snapshot::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn sha_hex_renders() {
+        let snap = Snapshot::capture(&populated_kernel());
+        let hex = snap.sha256_hex();
+        assert_eq!(hex.len(), 64);
+        assert!(hex.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn restored_kernel_continues_identically() {
+        // The §8.1 scenario end-to-end (single process): snapshot on "A",
+        // restore on "B", verify hashes AND identical k-NN ordering.
+        let k = populated_kernel();
+        let snap = Snapshot::capture(&k);
+        let k2 = snap.restore().unwrap();
+        let q: Vec<f32> = (0..8).map(|j| (j as f32 * 0.1).cos() * 0.5).collect();
+        let h1 = k.search_f32(&q, 10).unwrap();
+        let h2 = k2.search_f32(&q, 10).unwrap();
+        assert_eq!(h1, h2);
+    }
+}

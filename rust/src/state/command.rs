@@ -1,0 +1,218 @@
+//! Commands: the external (float-facing) vocabulary and its canonical
+//! (post-boundary, integer-only) form.
+//!
+//! The canonical form is what gets WAL-logged, replicated and replayed —
+//! paper §5.2: "Commands (Insert, Link, Delete) must be serialized and
+//! deterministic". Storing the *quantized* vector in the log makes replay
+//! purely integer even though quantization itself is already deterministic
+//! (single correctly-rounded multiply, DESIGN §6).
+
+use crate::codec::{DecodeError, Decoder, Encoder};
+
+/// External command — what clients (HTTP, FFI, examples) submit. `Insert`
+/// carries floats; everything else is already exact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// Insert a float vector under a fresh id (crosses the boundary).
+    Insert { id: u64, vector: Vec<f32> },
+    /// Batch insert. Per paper §7.1 ("items are processed in a verified,
+    /// sorted order, usually by ID") the batch is canonicalized by
+    /// ascending id regardless of submission order, so clients that
+    /// assemble batches concurrently still produce one canonical state.
+    InsertBatch { items: Vec<(u64, Vec<f32>)> },
+    /// Delete (tombstone) an id.
+    Delete { id: u64 },
+    /// Create a directed link between two stored ids.
+    Link { from: u64, to: u64 },
+    /// Remove a directed link.
+    Unlink { from: u64, to: u64 },
+    /// Attach/overwrite a metadata key on a stored id.
+    SetMeta { id: u64, key: String, value: String },
+}
+
+impl Command {
+    /// Convenience constructor used throughout examples and tests.
+    pub fn insert(id: u64, vector: Vec<f32>) -> Self {
+        Command::Insert { id, vector }
+    }
+}
+
+/// Canonical command — integer-only, byte-stable, replayable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CanonCommand {
+    /// Vector already quantized to the kernel's precision contract
+    /// (Q16.16 raw values; normalization, if the policy asks for it, has
+    /// already been applied).
+    Insert { id: u64, raw: Vec<i32> },
+    /// Batch insert, already sorted ascending by id (paper §7.1); the
+    /// encoder enforces sortedness so a forged/corrupt log cannot smuggle
+    /// in an order-dependent batch.
+    InsertBatch { items: Vec<(u64, Vec<i32>)> },
+    Delete { id: u64 },
+    Link { from: u64, to: u64 },
+    Unlink { from: u64, to: u64 },
+    SetMeta { id: u64, key: String, value: String },
+}
+
+const TAG_INSERT: u8 = 1;
+const TAG_DELETE: u8 = 2;
+const TAG_LINK: u8 = 3;
+const TAG_UNLINK: u8 = 4;
+const TAG_SETMETA: u8 = 5;
+const TAG_INSERT_BATCH: u8 = 6;
+
+impl CanonCommand {
+    /// Stable human-readable name (metrics, audit output).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CanonCommand::Insert { .. } => "insert",
+            CanonCommand::InsertBatch { .. } => "insert_batch",
+            CanonCommand::Delete { .. } => "delete",
+            CanonCommand::Link { .. } => "link",
+            CanonCommand::Unlink { .. } => "unlink",
+            CanonCommand::SetMeta { .. } => "set_meta",
+        }
+    }
+
+    pub fn encode(&self, e: &mut Encoder) {
+        match self {
+            CanonCommand::Insert { id, raw } => {
+                e.put_u8(TAG_INSERT);
+                e.put_u64(*id);
+                e.put_i32_slice(raw);
+            }
+            CanonCommand::InsertBatch { items } => {
+                e.put_u8(TAG_INSERT_BATCH);
+                e.put_u32(items.len() as u32);
+                for (id, raw) in items {
+                    e.put_u64(*id);
+                    e.put_i32_slice(raw);
+                }
+            }
+            CanonCommand::Delete { id } => {
+                e.put_u8(TAG_DELETE);
+                e.put_u64(*id);
+            }
+            CanonCommand::Link { from, to } => {
+                e.put_u8(TAG_LINK);
+                e.put_u64(*from);
+                e.put_u64(*to);
+            }
+            CanonCommand::Unlink { from, to } => {
+                e.put_u8(TAG_UNLINK);
+                e.put_u64(*from);
+                e.put_u64(*to);
+            }
+            CanonCommand::SetMeta { id, key, value } => {
+                e.put_u8(TAG_SETMETA);
+                e.put_u64(*id);
+                e.put_str(key);
+                e.put_str(value);
+            }
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        self.encode(&mut e);
+        e.into_vec()
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let tag = d.get_u8()?;
+        match tag {
+            TAG_INSERT => Ok(CanonCommand::Insert { id: d.get_u64()?, raw: d.get_i32_vec()? }),
+            TAG_INSERT_BATCH => {
+                let n = d.get_u32()? as usize;
+                let mut items = Vec::with_capacity(n.min(4096));
+                let mut last: Option<u64> = None;
+                for _ in 0..n {
+                    let id = d.get_u64()?;
+                    // enforce canonical (strictly ascending) order on decode
+                    if last.is_some_and(|p| p >= id) {
+                        return Err(DecodeError::InvalidTag { what: "batch order", tag: id });
+                    }
+                    last = Some(id);
+                    items.push((id, d.get_i32_vec()?));
+                }
+                Ok(CanonCommand::InsertBatch { items })
+            }
+            TAG_DELETE => Ok(CanonCommand::Delete { id: d.get_u64()? }),
+            TAG_LINK => Ok(CanonCommand::Link { from: d.get_u64()?, to: d.get_u64()? }),
+            TAG_UNLINK => Ok(CanonCommand::Unlink { from: d.get_u64()?, to: d.get_u64()? }),
+            TAG_SETMETA => Ok(CanonCommand::SetMeta {
+                id: d.get_u64()?,
+                key: d.get_str()?.to_string(),
+                value: d.get_str()?.to_string(),
+            }),
+            t => Err(DecodeError::InvalidTag { what: "command", tag: t as u64 }),
+        }
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, DecodeError> {
+        let mut d = Decoder::new(bytes);
+        let c = Self::decode(&mut d)?;
+        d.finish()?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(c: CanonCommand) {
+        let bytes = c.to_bytes();
+        let c2 = CanonCommand::from_bytes(&bytes).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(bytes, c2.to_bytes()); // canonical
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(CanonCommand::Insert { id: 7, raw: vec![1, -2, 65536] });
+        roundtrip(CanonCommand::InsertBatch {
+            items: vec![(1, vec![5, 6]), (2, vec![-7, 8]), (10, vec![0, 0])],
+        });
+        roundtrip(CanonCommand::Delete { id: u64::MAX });
+        roundtrip(CanonCommand::Link { from: 1, to: 2 });
+        roundtrip(CanonCommand::Unlink { from: 2, to: 1 });
+        roundtrip(CanonCommand::SetMeta {
+            id: 0,
+            key: "source".into(),
+            value: "unit-test ünïcode".into(),
+        });
+    }
+
+    #[test]
+    fn unsorted_batch_rejected_on_decode() {
+        let bad = CanonCommand::InsertBatch { items: vec![(5, vec![1]), (5, vec![2])] };
+        assert!(CanonCommand::from_bytes(&bad.to_bytes()).is_err(), "equal ids");
+        let bad = CanonCommand::InsertBatch { items: vec![(9, vec![1]), (2, vec![2])] };
+        assert!(CanonCommand::from_bytes(&bad.to_bytes()).is_err(), "descending ids");
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        assert!(matches!(
+            CanonCommand::from_bytes(&[99]),
+            Err(DecodeError::InvalidTag { what: "command", tag: 99 })
+        ));
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = CanonCommand::Delete { id: 3 }.to_bytes();
+        bytes.push(0);
+        assert!(matches!(
+            CanonCommand::from_bytes(&bytes),
+            Err(DecodeError::TrailingBytes { .. })
+        ));
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(CanonCommand::Delete { id: 1 }.name(), "delete");
+        assert_eq!(CanonCommand::Insert { id: 1, raw: vec![] }.name(), "insert");
+    }
+}

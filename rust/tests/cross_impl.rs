@@ -1,0 +1,135 @@
+//! Integration E9: cross-implementation bit identity.
+//!
+//! The paper's determinism claim rests on integer arithmetic being exact
+//! and platform-independent. We verify it across *implementations*, which
+//! is stronger than across runs: the Rust kernel's integer distances must
+//! equal the AOT-compiled Pallas/XLA kernel's outputs bit-for-bit, while
+//! the floating-point pipelines are allowed to (and do) diverge.
+//!
+//! Requires `make artifacts`; tests skip with a notice otherwise.
+
+use valori::distance::{dot_q16, l2sq_q16};
+use valori::fixed::{FixedFormat, Q16_16};
+use valori::hash::XorShift64;
+use valori::runtime::{artifacts_available, artifacts_dir, DistanceEngine, Engine, Manifest};
+
+fn setup() -> Option<(Engine, Manifest)> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    Some((engine, manifest))
+}
+
+fn contract_vec(rng: &mut XorShift64, dim: usize) -> Vec<i32> {
+    // within the boundary contract: |raw| <= 2^18 (DESIGN §6)
+    (0..dim).map(|_| (rng.next_f64() * 524288.0 - 262144.0) as i32).collect()
+}
+
+#[test]
+fn integer_distances_bit_identical_rust_vs_xla() {
+    let Some((engine, m)) = setup() else { return };
+    let de = DistanceEngine::load(&engine, artifacts_dir(), m.model.d_model, m.model.db_rows)
+        .unwrap();
+    let dim = m.model.d_model;
+    let mut rng = XorShift64::new(0xE9);
+    for trial in 0..5 {
+        let n = [1usize, 7, 100, 512, 1024][trial];
+        let db: Vec<i32> = (0..n).flat_map(|_| contract_vec(&mut rng, dim)).collect();
+        let q = contract_vec(&mut rng, dim);
+        let xla_l2 = de.l2sq_q16(&q, &db).unwrap();
+        let xla_dot = de.dot_q16(&q, &db).unwrap();
+        for row in 0..n {
+            let r = &db[row * dim..(row + 1) * dim];
+            assert_eq!(xla_l2[row], l2sq_q16(&q, r), "l2 trial {trial} row {row}");
+            assert_eq!(xla_dot[row], dot_q16(&q, r), "dot trial {trial} row {row}");
+        }
+    }
+}
+
+#[test]
+fn quantizer_bit_identical_rust_vs_pallas() {
+    let Some((engine, m)) = setup() else { return };
+    let quantize = engine.load_hlo(artifacts_dir().join("quantize.hlo.txt")).unwrap();
+    let (b, d) = (m.model.batch, m.model.d_model);
+    let mut rng = XorShift64::new(0x9A17);
+    // values spanning the interesting regimes incl. ties and saturation
+    let mut xs: Vec<f32> = (0..b * d).map(|_| rng.next_f32_range(-4.0, 4.0)).collect();
+    xs[0] = 0.0;
+    xs[1] = 2.5 / 65536.0; // rounding tie
+    xs[2] = -2.5 / 65536.0;
+    xs[3] = 40000.0; // saturates
+    xs[4] = -40000.0;
+    let lit = valori::runtime::engine::literal_f32(&xs, &[b, d]).unwrap();
+    let out = quantize.run(&[lit]).unwrap();
+    let pallas: Vec<i32> = out.to_vec::<i32>().unwrap();
+    for (i, &x) in xs.iter().enumerate() {
+        let rust = Q16_16::quantize(x as f64);
+        assert_eq!(pallas[i], rust, "x = {x} at {i}");
+    }
+}
+
+#[test]
+fn float_pipeline_is_allowed_to_diverge_and_does() {
+    // Control experiment: the f32 L2 distances computed by XLA generally
+    // do NOT bit-match a naive Rust loop — float results are evaluation-
+    // order-dependent (paper §2.1). This is the contrast that motivates
+    // the integer kernel.
+    let Some((engine, m)) = setup() else { return };
+    let de = DistanceEngine::load(&engine, artifacts_dir(), m.model.d_model, m.model.db_rows)
+        .unwrap();
+    let dim = m.model.d_model;
+    let mut rng = XorShift64::new(0xF107);
+    let n = 256;
+    let db: Vec<f32> = (0..n * dim).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+    let q: Vec<f32> = (0..dim).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+    let xla = de.l2sq_f32(&q, &db).unwrap();
+    let mut diverged = 0;
+    for row in 0..n {
+        let r = &db[row * dim..(row + 1) * dim];
+        let rust = valori::distance::float::l2sq_f32_seq(&q, r);
+        if rust.to_bits() != xla[row].to_bits() {
+            diverged += 1;
+        }
+        // mathematically they still agree
+        assert!((rust - xla[row]).abs() < 1e-3);
+    }
+    assert!(
+        diverged > n / 4,
+        "expected widespread f32 divergence, got {diverged}/{n} \
+         (if this fails the host may be computing sequentially — inspect!)"
+    );
+}
+
+#[test]
+fn kernel_search_unaffected_by_which_impl_computed_distances() {
+    // End-to-end: rank 100 db vectors by distance using (a) the Rust
+    // kernel and (b) the XLA integer kernel; the *orderings* must be
+    // identical, including tie handling.
+    let Some((engine, m)) = setup() else { return };
+    let de = DistanceEngine::load(&engine, artifacts_dir(), m.model.d_model, m.model.db_rows)
+        .unwrap();
+    let dim = m.model.d_model;
+    let mut rng = XorShift64::new(0x5EED);
+    let n = 100;
+    let mut db: Vec<i32> = (0..n).flat_map(|_| contract_vec(&mut rng, dim)).collect();
+    // plant exact duplicates to create distance ties
+    let dup: Vec<i32> = db[..dim].to_vec();
+    db.extend_from_slice(&dup);
+    let q = contract_vec(&mut rng, dim);
+
+    let xla = de.l2sq_q16(&q, &db).unwrap();
+    let rows = n + 1;
+    let mut order_xla: Vec<(i64, usize)> =
+        xla.iter().copied().zip(0..rows).map(|(d, i)| (d, i)).collect();
+    order_xla.sort();
+    let mut order_rust: Vec<(i64, usize)> = (0..rows)
+        .map(|i| (l2sq_q16(&q, &db[i * dim..(i + 1) * dim]), i))
+        .collect();
+    order_rust.sort();
+    assert_eq!(order_xla, order_rust);
+    // the planted duplicate ties exactly with row 0
+    assert_eq!(xla[0], xla[rows - 1]);
+}

@@ -1,0 +1,162 @@
+//! Integration: the paper's core determinism guarantees, end to end.
+//!
+//! `S_{t+1} = F(S_t, C_t)` — identical command sequences must produce
+//! bit-identical states, hashes and search results (paper §3.1), across
+//! index kinds, command mixes, and interleavings of reads.
+
+use valori::distance::Metric;
+use valori::state::{Command, Kernel, KernelConfig, StateError};
+
+fn mixed_workload(kernel: &mut Kernel, n: usize) {
+    for i in 0..n as u64 {
+        let x = (i as f32 * 0.137).sin() * 0.8;
+        let y = (i as f32 * 0.071).cos() * 0.8;
+        let v: Vec<f32> = (0..kernel.config().dim)
+            .map(|j| if j % 2 == 0 { x } else { y } * (1.0 + j as f32 * 0.01))
+            .collect();
+        kernel.apply(Command::insert(i, v)).unwrap();
+        if i % 7 == 3 && i > 10 {
+            kernel.apply(Command::Delete { id: i - 10 }).unwrap();
+        }
+        if i % 5 == 2 && i > 2 {
+            // link to an id guaranteed alive (i-1 unless it was deleted)
+            let target = i - 1;
+            if kernel.contains(target) {
+                kernel.apply(Command::Link { from: i, to: target }).unwrap();
+            }
+        }
+        if i % 11 == 0 {
+            kernel
+                .apply(Command::SetMeta {
+                    id: i,
+                    key: "batch".into(),
+                    value: format!("b{}", i / 11),
+                })
+                .unwrap();
+        }
+    }
+}
+
+#[test]
+fn identical_logs_identical_hashes_hnsw() {
+    let mut a = Kernel::new(KernelConfig::default_q16(16));
+    let mut b = Kernel::new(KernelConfig::default_q16(16));
+    mixed_workload(&mut a, 300);
+    mixed_workload(&mut b, 300);
+    assert_eq!(a.state_hash(), b.state_hash());
+    assert_eq!(a.to_state_bytes(), b.to_state_bytes());
+}
+
+#[test]
+fn identical_logs_identical_hashes_flat() {
+    let mut a = Kernel::new(KernelConfig::default_q16(16).with_flat_index());
+    let mut b = Kernel::new(KernelConfig::default_q16(16).with_flat_index());
+    mixed_workload(&mut a, 300);
+    mixed_workload(&mut b, 300);
+    assert_eq!(a.state_hash(), b.state_hash());
+}
+
+#[test]
+fn reads_do_not_mutate_state() {
+    let mut k = Kernel::new(KernelConfig::default_q16(16));
+    mixed_workload(&mut k, 100);
+    let before = k.state_hash();
+    let q: Vec<f32> = (0..16).map(|i| (i as f32 * 0.2).sin()).collect();
+    for _ in 0..50 {
+        k.search_f32(&q, 10).unwrap();
+        k.get_raw(5);
+        k.meta_of(0);
+        k.links().links_from(7);
+    }
+    assert_eq!(k.state_hash(), before, "reads must be pure");
+}
+
+#[test]
+fn failed_commands_do_not_mutate_state() {
+    let mut k = Kernel::new(KernelConfig::default_q16(4));
+    k.apply(Command::insert(1, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+    let before = k.state_hash();
+    // every class of rejection
+    assert!(k.apply(Command::insert(1, vec![0.0; 4])).is_err()); // dup
+    assert!(k.apply(Command::insert(2, vec![0.0; 3])).is_err()); // dim
+    assert!(k.apply(Command::insert(3, vec![f32::NAN, 0.0, 0.0, 0.0])).is_err()); // NaN
+    assert!(k.apply(Command::Delete { id: 99 }).is_err()); // unknown
+    assert!(k.apply(Command::Link { from: 1, to: 99 }).is_err()); // dangling
+    assert_eq!(k.state_hash(), before, "failed transitions must be no-ops");
+    assert_eq!(k.seq(), 1);
+}
+
+#[test]
+fn search_is_deterministic_under_repetition() {
+    let mut k = Kernel::new(KernelConfig::default_q16(32));
+    mixed_workload(&mut k, 500);
+    let q: Vec<f32> = (0..32).map(|i| (i as f32 * 0.05).cos() * 0.5).collect();
+    let first = k.search_f32(&q, 20).unwrap();
+    for _ in 0..10 {
+        assert_eq!(k.search_f32(&q, 20).unwrap(), first);
+    }
+    // raw distances are exact integers — compare them too
+    assert!(first.iter().all(|h| h.dist_raw >= 0));
+}
+
+#[test]
+fn cosine_config_normalizes_at_boundary() {
+    let mut k = Kernel::new(KernelConfig::embedding_cosine(8));
+    // unnormalized inserts land normalized
+    k.apply(Command::insert(1, vec![3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])).unwrap();
+    let raw = k.get_raw(1).unwrap();
+    let norm2: i64 = raw.iter().map(|&x| (x as i64) * (x as i64)).sum();
+    let real = norm2 as f64 / 4294967296.0;
+    assert!((real - 1.0).abs() < 1e-3, "norm² = {real}");
+}
+
+#[test]
+fn metric_is_part_of_state_identity() {
+    let mut cfg_l2 = KernelConfig::default_q16(4);
+    cfg_l2.metric = Metric::L2;
+    let mut cfg_ip = KernelConfig::default_q16(4);
+    cfg_ip.metric = Metric::InnerProduct;
+    let mut a = Kernel::new(cfg_l2);
+    let mut b = Kernel::new(cfg_ip);
+    a.apply(Command::insert(1, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+    b.apply(Command::insert(1, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+    assert_ne!(a.state_hash(), b.state_hash(), "config differences must be visible in the hash");
+}
+
+#[test]
+fn full_delete_then_empty_search() {
+    let mut k = Kernel::new(KernelConfig::default_q16(4));
+    for i in 0..20u64 {
+        k.apply(Command::insert(i, vec![i as f32 * 0.01; 4])).unwrap();
+    }
+    for i in 0..20u64 {
+        k.apply(Command::Delete { id: i }).unwrap();
+    }
+    assert_eq!(k.len(), 0);
+    let hits = k.search_f32(&[0.0; 4], 5).unwrap();
+    assert!(hits.is_empty(), "tombstoned graph must yield no live results");
+    // and inserts continue to work afterwards (fresh ids only)
+    assert_eq!(
+        k.apply(Command::insert(5, vec![0.0; 4])).unwrap_err(),
+        StateError::DuplicateId(5)
+    );
+    k.apply(Command::insert(100, vec![0.5; 4])).unwrap();
+    assert_eq!(k.search_f32(&[0.5; 4], 1).unwrap()[0].id, 100);
+}
+
+#[test]
+fn hnsw_and_flat_agree_exactly_at_small_scale() {
+    // With n < ef_construction the HNSW beam is exhaustive: the two index
+    // kinds must return byte-identical hit lists for every query.
+    let mut h = Kernel::new(KernelConfig::default_q16(8));
+    let mut f = Kernel::new(KernelConfig::default_q16(8).with_flat_index());
+    for i in 0..60u64 {
+        let v: Vec<f32> = (0..8).map(|j| ((i + j as u64) as f32 * 0.1).sin() * 0.7).collect();
+        h.apply(Command::insert(i, v.clone())).unwrap();
+        f.apply(Command::insert(i, v)).unwrap();
+    }
+    for t in 0..20 {
+        let q: Vec<f32> = (0..8).map(|j| ((t * 8 + j) as f32 * 0.07).cos() * 0.7).collect();
+        assert_eq!(h.search_f32(&q, 10).unwrap(), f.search_f32(&q, 10).unwrap(), "query {t}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Integration: the node's HTTP API over real sockets, concurrent clients,
+//! and the node-level determinism story (two nodes fed the same requests
+//! expose the same hash).
+
+use std::sync::Arc;
+use valori::http::client;
+use valori::json::{parse, Json};
+use valori::node::{serve, NodeConfig, NodeState};
+use valori::state::{Kernel, KernelConfig};
+
+fn spawn_node(dim: usize) -> (Arc<NodeState>, valori::http::Server) {
+    let kernel = Kernel::new(KernelConfig::default_q16(dim));
+    let state = Arc::new(NodeState::new(kernel, &NodeConfig::default(), None).unwrap());
+    let server = serve(Arc::clone(&state), "127.0.0.1:0", 4).unwrap();
+    (state, server)
+}
+
+fn vec_json(v: &[f32]) -> Json {
+    Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())
+}
+
+#[test]
+fn full_crud_cycle_over_http() {
+    let (_state, server) = spawn_node(4);
+    let addr = server.addr();
+
+    // insert
+    for (id, v) in [(1u64, [0.1f32, 0.2, 0.3, 0.4]), (2, [0.9, 0.8, 0.7, 0.6])] {
+        let body = Json::object(vec![("id", Json::Int(id as i64)), ("vector", vec_json(&v))]);
+        let (st, _) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+        assert_eq!(st, 200);
+    }
+    // link + meta
+    let (st, _) = client::post_json(
+        &addr,
+        "/v1/link",
+        &parse(r#"{"from":1,"to":2}"#).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(st, 200);
+    let (st, _) = client::post_json(
+        &addr,
+        "/v1/meta",
+        &parse(r#"{"id":1,"key":"kind","value":"fact"}"#).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(st, 200);
+
+    // query
+    let q = Json::object(vec![("vector", vec_json(&[0.1, 0.2, 0.3, 0.4])), ("k", Json::Int(2))]);
+    let (st, resp) = client::post_json(&addr, "/v1/query", &q).unwrap();
+    assert_eq!(st, 200);
+    let hits = resp.get("hits").as_array().unwrap();
+    assert_eq!(hits[0].get("id").as_u64(), Some(1));
+
+    // delete then query again
+    let (st, _) =
+        client::post_json(&addr, "/v1/delete", &parse(r#"{"id":1}"#).unwrap()).unwrap();
+    assert_eq!(st, 200);
+    let (_, resp) = client::post_json(&addr, "/v1/query", &q).unwrap();
+    assert_eq!(resp.get("hits").as_array().unwrap()[0].get("id").as_u64(), Some(2));
+
+    // stats reflect everything
+    let (st, stats) = client::get_json(&addr, "/v1/stats").unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(stats.get("vectors").as_i64(), Some(1));
+    assert_eq!(stats.get("inserts").as_i64(), Some(2));
+    assert_eq!(stats.get("deletes").as_i64(), Some(1));
+    assert_eq!(stats.get("queries").as_i64(), Some(2));
+    assert_eq!(stats.get("seq").as_i64(), Some(5));
+
+    server.stop();
+}
+
+#[test]
+fn concurrent_writers_and_readers() {
+    let (_state, server) = spawn_node(8);
+    let addr = server.addr();
+    let writers: Vec<_> = (0..4)
+        .map(|w| {
+            std::thread::spawn(move || {
+                for i in 0..25u64 {
+                    let id = w * 1000 + i;
+                    let v: Vec<f32> = (0..8).map(|j| ((id + j) as f32 * 0.01).sin()).collect();
+                    let body = Json::object(vec![
+                        ("id", Json::Int(id as i64)),
+                        ("vector", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
+                    ]);
+                    let (st, _) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+                    assert_eq!(st, 200);
+                }
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let q = Json::object(vec![
+                        ("vector", Json::Array((0..8).map(|_| Json::Float(0.1)).collect())),
+                        ("k", Json::Int(5)),
+                    ]);
+                    let (st, _) = client::post_json(&addr, "/v1/query", &q).unwrap();
+                    assert_eq!(st, 200);
+                }
+            })
+        })
+        .collect();
+    for t in writers.into_iter().chain(readers) {
+        t.join().unwrap();
+    }
+    let (_, stats) = client::get_json(&addr, "/v1/stats").unwrap();
+    assert_eq!(stats.get("vectors").as_i64(), Some(100));
+    server.stop();
+}
+
+#[test]
+fn two_nodes_same_requests_same_hash() {
+    let (_s1, n1) = spawn_node(4);
+    let (_s2, n2) = spawn_node(4);
+    for addr in [n1.addr(), n2.addr()] {
+        for i in 0..30u64 {
+            let v: Vec<f32> = (0..4).map(|j| ((i + j) as f32 * 0.1).cos() * 0.5).collect();
+            let body = Json::object(vec![
+                ("id", Json::Int(i as i64)),
+                ("vector", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
+            ]);
+            let (st, _) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+            assert_eq!(st, 200);
+        }
+    }
+    let (_, h1) = client::get_json(&n1.addr(), "/v1/hash").unwrap();
+    let (_, h2) = client::get_json(&n2.addr(), "/v1/hash").unwrap();
+    assert_eq!(h1.get("fnv").as_str(), h2.get("fnv").as_str());
+    assert_eq!(h1.get("sha256").as_str(), h2.get("sha256").as_str());
+    n1.stop();
+    n2.stop();
+}
+
+#[test]
+fn error_surface() {
+    let (_state, server) = spawn_node(4);
+    let addr = server.addr();
+    // wrong dim
+    let body = parse(r#"{"id":1,"vector":[0.1,0.2]}"#).unwrap();
+    let (st, resp) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+    assert_eq!(st, 400, "{resp}");
+    // NaN-free JSON but out-of-policy value
+    let body = parse(r#"{"id":1,"vector":[99.0,0,0,0]}"#).unwrap();
+    let (st, _) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+    assert_eq!(st, 400);
+    // unknown route
+    let (st, _) = client::request(&addr, "GET", "/v2/nope", b"").unwrap();
+    assert_eq!(st, 404);
+    // malformed body
+    let (st, _) = client::request(&addr, "POST", "/v1/insert", b"{oops").unwrap();
+    assert_eq!(st, 400);
+    // health
+    let (st, h) = client::get_json(&addr, "/v1/health").unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(h.get("ok").as_bool(), Some(true));
+    server.stop();
+}
+
+#[test]
+fn log_pagination() {
+    let (state, server) = spawn_node(4);
+    let addr = server.addr();
+    for i in 0..10u64 {
+        state
+            .apply(valori::state::Command::insert(i, vec![0.1, 0.1, 0.1, 0.1 + i as f32 * 0.001]))
+            .unwrap();
+    }
+    let (_, page1) = client::get_json(&addr, "/v1/log?from=0").unwrap();
+    assert_eq!(page1.get("commands").as_array().unwrap().len(), 10);
+    let (_, page2) = client::get_json(&addr, "/v1/log?from=7").unwrap();
+    assert_eq!(page2.get("commands").as_array().unwrap().len(), 3);
+    assert_eq!(page2.get("total").as_i64(), Some(10));
+    let (_, page3) = client::get_json(&addr, "/v1/log?from=99").unwrap();
+    assert_eq!(page3.get("commands").as_array().unwrap().len(), 0);
+    server.stop();
+}

@@ -1,0 +1,157 @@
+//! Integration: HNSW vs exact flat-scan consistency across scalar types,
+//! metrics and workload shapes (including the clustered regime that
+//! defeats naive neighbor selection).
+
+use valori::distance::Metric;
+use valori::experiments::{recall_overlap, synthetic_embeddings};
+use valori::fixed::{FixedFormat, Q16_16};
+use valori::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
+use valori::hash::XorShift64;
+
+fn to_q16(v: &[f32]) -> Vec<i32> {
+    v.iter().map(|&x| Q16_16::quantize(x as f64)).collect()
+}
+
+fn mean_recall_q16(
+    data: &[Vec<f32>],
+    queries: &[Vec<f32>],
+    metric: Metric,
+    k: usize,
+) -> f64 {
+    let dim = data[0].len();
+    let mut h: Hnsw<i32> = Hnsw::new(dim, metric, HnswParams::default());
+    let mut f: FlatIndex<i32> = FlatIndex::new(dim, metric);
+    for (id, v) in data.iter().enumerate() {
+        let raw = to_q16(v);
+        h.insert(id as u64, raw.clone());
+        f.insert(id as u64, raw);
+    }
+    let mut sum = 0.0;
+    for q in queries {
+        let raw = to_q16(q);
+        let hh: Vec<u64> = h.search(&raw, k).iter().map(|x| x.id).collect();
+        let fh: Vec<u64> = f.search(&raw, k).iter().map(|x| x.id).collect();
+        sum += recall_overlap(&fh, &hh);
+    }
+    sum / queries.len() as f64
+}
+
+#[test]
+fn uniform_data_high_recall() {
+    let mut rng = XorShift64::new(5);
+    let data: Vec<Vec<f32>> = (0..2000)
+        .map(|_| (0..32).map(|_| rng.next_f32_range(-1.0, 1.0)).collect())
+        .collect();
+    let queries: Vec<Vec<f32>> = (0..40)
+        .map(|_| (0..32).map(|_| rng.next_f32_range(-1.0, 1.0)).collect())
+        .collect();
+    let r = mean_recall_q16(&data, &queries, Metric::L2, 10);
+    assert!(r > 0.95, "uniform recall@10 = {r}");
+}
+
+#[test]
+fn clustered_data_high_recall() {
+    // the regime that collapses without the diversity heuristic
+    let data = synthetic_embeddings(2000, 64, 16, 3);
+    let queries = synthetic_embeddings(40, 64, 16, 99);
+    let r = mean_recall_q16(&data, &queries, Metric::L2, 10);
+    assert!(r > 0.9, "clustered recall@10 = {r}");
+}
+
+#[test]
+fn inner_product_recall() {
+    let data = synthetic_embeddings(1000, 32, 8, 7);
+    let queries = synthetic_embeddings(30, 32, 8, 11);
+    let r = mean_recall_q16(&data, &queries, Metric::InnerProduct, 10);
+    assert!(r > 0.9, "ip recall@10 = {r}");
+}
+
+#[test]
+fn recall_after_heavy_deletion() {
+    let data = synthetic_embeddings(1000, 32, 8, 13);
+    let dim = 32;
+    let mut h: Hnsw<i32> = Hnsw::new(dim, Metric::L2, HnswParams::default());
+    let mut f: FlatIndex<i32> = FlatIndex::new(dim, Metric::L2);
+    for (id, v) in data.iter().enumerate() {
+        let raw = to_q16(v);
+        h.insert(id as u64, raw.clone());
+        f.insert(id as u64, raw);
+    }
+    // delete 40%
+    for id in 0..1000u64 {
+        if id % 5 < 2 {
+            assert!(h.delete(id));
+            assert!(f.delete(id));
+        }
+    }
+    let queries = synthetic_embeddings(25, 32, 8, 17);
+    let mut sum = 0.0;
+    for q in &queries {
+        let raw = to_q16(q);
+        let hh: Vec<u64> = h.search(&raw, 10).iter().map(|x| x.id).collect();
+        let fh: Vec<u64> = f.search(&raw, 10).iter().map(|x| x.id).collect();
+        assert!(hh.iter().all(|id| id % 5 >= 2), "returned deleted id");
+        sum += recall_overlap(&fh, &hh);
+    }
+    let r = sum / queries.len() as f64;
+    assert!(r > 0.85, "post-deletion recall@10 = {r}");
+}
+
+#[test]
+fn f32_and_q16_instantiations_agree_on_clean_data() {
+    // On well-separated data, quantization cannot change the ranking:
+    // the two instantiations of the same generic code agree exactly.
+    let mut rng = XorShift64::new(23);
+    let dim = 16;
+    // grid-separated points (min distance far above quantization noise)
+    let data: Vec<Vec<f32>> = (0..500)
+        .map(|i| {
+            (0..dim)
+                .map(|j| ((i * dim + j) % 17) as f32 * 0.1 + rng.next_f32_range(-0.01, 0.01))
+                .collect()
+        })
+        .collect();
+    let mut hf: Hnsw<f32> = Hnsw::new(dim, Metric::L2, HnswParams::default());
+    let mut hq: Hnsw<i32> = Hnsw::new(dim, Metric::L2, HnswParams::default());
+    for (id, v) in data.iter().enumerate() {
+        hf.insert(id as u64, v.clone());
+        hq.insert(id as u64, to_q16(v));
+    }
+    for i in 0..20 {
+        let q = &data[i * 7];
+        let ids_f: Vec<u64> = hf.search(q, 5).iter().map(|x| x.id).collect();
+        let ids_q: Vec<u64> = hq.search(&to_q16(q), 5).iter().map(|x| x.id).collect();
+        assert_eq!(ids_f[0], ids_q[0], "top-1 must agree on separated data");
+    }
+}
+
+#[test]
+fn search_k_edge_cases() {
+    let data = synthetic_embeddings(50, 8, 4, 29);
+    let mut h: Hnsw<i32> = Hnsw::new(8, Metric::L2, HnswParams::default());
+    for (id, v) in data.iter().enumerate() {
+        h.insert(id as u64, to_q16(v));
+    }
+    let q = to_q16(&data[0]);
+    assert_eq!(h.search(&q, 0).len(), 0);
+    assert_eq!(h.search(&q, 1).len(), 1);
+    assert_eq!(h.search(&q, 50).len(), 50);
+    assert_eq!(h.search(&q, 1000).len(), 50); // k > n
+    // results are sorted by (dist, id)
+    let hits = h.search(&q, 50);
+    for w in hits.windows(2) {
+        assert!((w[0].dist, w[0].id) < (w[1].dist, w[1].id));
+    }
+}
+
+#[test]
+fn duplicate_vectors_rank_by_id() {
+    let mut h: Hnsw<i32> = Hnsw::new(4, Metric::L2, HnswParams::default());
+    let v = vec![1000, 2000, 3000, 4000];
+    for id in [9u64, 3, 7, 1] {
+        h.insert(id, v.clone());
+    }
+    let hits = h.search(&v, 4);
+    assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![1, 3, 7, 9]);
+    assert!(hits.iter().all(|h| h.dist == 0));
+}

@@ -1,0 +1,121 @@
+//! Integration: multi-node convergence (paper §9) over the in-process
+//! cluster AND over real HTTP nodes, with fault scenarios.
+
+use std::sync::Arc;
+use valori::node::{serve, NodeConfig, NodeState};
+use valori::replication::{sync_follower, Cluster};
+use valori::state::{Command, Kernel, KernelConfig};
+
+#[test]
+fn large_cluster_converges() {
+    let mut c = Cluster::new(KernelConfig::default_q16(16), 7);
+    for i in 0..400u64 {
+        let v: Vec<f32> = (0..16).map(|j| ((i * 16 + j) as f32 * 0.007).sin() * 0.8).collect();
+        c.submit(Command::insert(i, v)).unwrap();
+        if i % 13 == 5 {
+            c.submit(Command::Delete { id: i - 3 }).unwrap();
+        }
+    }
+    c.sync_all().unwrap();
+    assert!(c.converged());
+    // every node answers queries identically
+    let q: Vec<f32> = (0..16).map(|j| (j as f32 * 0.11).cos() * 0.4).collect();
+    let expect = c.node(0).search_f32(&q, 10).unwrap();
+    for i in 1..c.len() {
+        assert_eq!(c.node(i).search_f32(&q, 10).unwrap(), expect, "node {i}");
+    }
+}
+
+#[test]
+fn straggler_catches_up_in_stages() {
+    let mut c = Cluster::new(KernelConfig::default_q16(8), 2);
+    for phase in 0..5 {
+        for i in 0..50u64 {
+            let id = phase * 50 + i;
+            let v: Vec<f32> = (0..8).map(|j| ((id + j) as f32 * 0.01).sin()).collect();
+            c.submit(Command::insert(id, v)).unwrap();
+        }
+        // follower syncs only every other phase (staggered)
+        if phase % 2 == 1 {
+            c.sync_node(1).unwrap();
+        }
+    }
+    assert!(!c.converged());
+    c.sync_node(1).unwrap();
+    assert!(c.converged());
+}
+
+#[test]
+fn divergence_detection_pinpoints_corrupt_node() {
+    let mut c = Cluster::new(KernelConfig::default_q16(8), 5);
+    for i in 0..100u64 {
+        c.submit(Command::insert(i, vec![0.1, 0.2, 0.3, 0.4, 0.5, -0.1, -0.2, i as f32 * 0.001]))
+            .unwrap();
+    }
+    c.sync_all().unwrap();
+    assert!(c.corrupt_node_for_test(2, 42));
+    let reports = c.verify();
+    let bad: Vec<usize> = reports.iter().filter(|r| !r.converged).map(|r| r.node).collect();
+    assert_eq!(bad, vec![2]);
+}
+
+#[test]
+fn http_replication_with_concurrent_primary_writes() {
+    let make = || {
+        let kernel = Kernel::new(KernelConfig::default_q16(8));
+        let state = Arc::new(NodeState::new(kernel, &NodeConfig::default(), None).unwrap());
+        let server = serve(Arc::clone(&state), "127.0.0.1:0", 4).unwrap();
+        (state, server)
+    };
+    let (p_state, primary) = make();
+    let (_f_state, follower) = make();
+
+    // writer thread hammers the primary while we sync in rounds
+    let p_addr = primary.addr();
+    let writer = {
+        let p_state = Arc::clone(&p_state);
+        std::thread::spawn(move || {
+            for i in 0..300u64 {
+                let v: Vec<f32> =
+                    (0..8).map(|j| ((i * 3 + j) as f32 * 0.004).cos() * 0.6).collect();
+                p_state.apply(Command::insert(i, v)).unwrap();
+            }
+        })
+    };
+    let mut from = 0usize;
+    for _ in 0..20 {
+        let (n, _) = sync_follower(&p_addr, &follower.addr(), from).unwrap();
+        from += n;
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    writer.join().unwrap();
+    // final catch-up until hashes agree
+    loop {
+        let (n, h_f) = sync_follower(&p_addr, &follower.addr(), from).unwrap();
+        from += n;
+        let (_, h_p) = valori::http::client::get_json(&p_addr, "/v1/hash").unwrap();
+        if n == 0 {
+            assert_eq!(h_p.get("fnv").as_str().unwrap(), h_f);
+            break;
+        }
+    }
+    assert_eq!(from, 300);
+    primary.stop();
+    follower.stop();
+}
+
+#[test]
+fn follower_rejects_conflicting_history() {
+    // A follower that already applied a conflicting command must error
+    // (deterministically), not silently fork.
+    let mut primary = Cluster::new(KernelConfig::default_q16(4), 1);
+    primary.submit(Command::insert(1, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+
+    let mut follower = Kernel::new(KernelConfig::default_q16(4));
+    // follower got a different id-1 from somewhere else (split brain)
+    follower.apply(Command::insert(1, vec![0.9, 0.9, 0.9, 0.9])).unwrap();
+
+    let canon = primary.node(0).canonicalize(Command::insert(1, vec![0.1, 0.2, 0.3, 0.4])).unwrap();
+    let err = follower.apply_canon(&canon).unwrap_err();
+    assert_eq!(err, valori::state::StateError::DuplicateId(1));
+}

@@ -1,0 +1,126 @@
+//! Integration: §8.1 snapshot transfer — including the real cross-process
+//! leg (machine A and machine B are two OS processes; DESIGN §2).
+
+use std::process::Command as Proc;
+use valori::snapshot::Snapshot;
+use valori::state::{Command, Kernel, KernelConfig};
+
+fn build_kernel(n: usize, dim: usize) -> Kernel {
+    let mut k = Kernel::new(KernelConfig::default_q16(dim));
+    for i in 0..n as u64 {
+        let v: Vec<f32> =
+            (0..dim).map(|j| (((i * dim as u64 + j as u64) as f32) * 0.0137).sin() * 0.9).collect();
+        k.apply(Command::insert(i, v)).unwrap();
+    }
+    k
+}
+
+#[test]
+fn in_process_transfer_10k_shape() {
+    // reduced from the paper's 10_000 to keep CI fast; the full size runs
+    // in `cargo bench --bench snapshot_transfer`
+    let k = build_kernel(2000, 64);
+    let snap = Snapshot::capture(&k);
+    let restored = Snapshot::from_bytes(&snap.to_bytes()).unwrap().restore().unwrap();
+    assert_eq!(restored.state_hash(), k.state_hash());
+    // identical k-NN ordering (the §8.1 addendum)
+    for t in 0..10 {
+        let q: Vec<f32> = (0..64).map(|j| ((t * 64 + j) as f32 * 0.01).cos() * 0.5).collect();
+        assert_eq!(k.search_f32(&q, 10).unwrap(), restored.search_f32(&q, 10).unwrap());
+    }
+}
+
+#[test]
+fn snapshot_file_roundtrip() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("valori_it_snap_{}.vsnp", std::process::id()));
+    let k = build_kernel(500, 32);
+    let snap = Snapshot::capture(&k);
+    snap.write_file(&path).unwrap();
+    let loaded = Snapshot::read_file(&path).unwrap();
+    assert_eq!(loaded, snap);
+    assert_eq!(loaded.restore().unwrap().state_hash(), k.state_hash());
+    std::fs::remove_file(&path).ok();
+}
+
+/// The real §8.1: process A (this test) writes WAL + snapshot; process B
+/// (a fresh `valori` binary invocation) replays/verifies and reports the
+/// hash on stdout. The hashes must match across the process boundary.
+#[test]
+fn cross_process_transfer_via_cli() {
+    let exe = env!("CARGO_BIN_EXE_valori");
+    let dir = std::env::temp_dir();
+    let wal_path = dir.join(format!("valori_it_xproc_{}.wal", std::process::id()));
+    let snap_path = dir.join(format!("valori_it_xproc_{}.vsnp", std::process::id()));
+
+    // Machine A: produce the WAL and our own hash.
+    let mut kernel = Kernel::new(KernelConfig::default_q16(16));
+    {
+        let mut wal = valori::wal::WalWriter::create(&wal_path).unwrap();
+        for i in 0..200u64 {
+            let v: Vec<f32> = (0..16).map(|j| ((i + j as u64) as f32 * 0.03).sin()).collect();
+            let seq = kernel.seq();
+            let canon = kernel.apply(Command::insert(i, v)).unwrap();
+            wal.append(seq, &canon).unwrap();
+        }
+        wal.sync().unwrap();
+    }
+    let h_a = format!("{:016x}", kernel.state_hash());
+
+    // Machine B step 1: replay WAL -> snapshot (separate process).
+    let out = Proc::new(exe)
+        .args(["snapshot", "--wal"])
+        .arg(&wal_path)
+        .args(["--out"])
+        .arg(&snap_path)
+        .args(["--dim", "16"])
+        .output()
+        .expect("run valori snapshot");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "snapshot failed: {stdout}");
+    assert!(stdout.contains(&h_a), "process-B replay hash differs: {stdout} (want {h_a})");
+
+    // Machine B step 2: restore + verify (another separate process).
+    let out = Proc::new(exe)
+        .args(["restore", "--snapshot"])
+        .arg(&snap_path)
+        .output()
+        .expect("run valori restore");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "restore failed: {stdout}");
+    assert!(stdout.contains("H_A == H_B"), "restore did not verify: {stdout}");
+    assert!(stdout.contains(&h_a), "restored hash differs: {stdout}");
+
+    std::fs::remove_file(&wal_path).ok();
+    std::fs::remove_file(&snap_path).ok();
+}
+
+#[test]
+fn snapshot_detects_every_single_byte_flip_in_sample() {
+    let k = build_kernel(50, 8);
+    let bytes = Snapshot::capture(&k).to_bytes();
+    // flipping any byte must be detected (CRC or digest or parse error)
+    let mut rng = valori::hash::XorShift64::new(3);
+    for _ in 0..100 {
+        let pos = rng.next_below(bytes.len() as u64) as usize;
+        let mut corrupted = bytes.clone();
+        corrupted[pos] ^= 0x40;
+        assert!(
+            Snapshot::from_bytes(&corrupted).is_err(),
+            "byte flip at {pos} went undetected"
+        );
+    }
+}
+
+#[test]
+fn restored_kernel_accepts_new_commands_identically() {
+    let k = build_kernel(100, 8);
+    let mut a = Snapshot::capture(&k).restore().unwrap();
+    let mut b = Snapshot::capture(&k).restore().unwrap();
+    for i in 100..150u64 {
+        let v: Vec<f32> = (0..8).map(|j| ((i * 3 + j as u64) as f32 * 0.02).cos()).collect();
+        a.apply(Command::insert(i, v.clone())).unwrap();
+        b.apply(Command::insert(i, v)).unwrap();
+    }
+    assert_eq!(a.state_hash(), b.state_hash());
+}
