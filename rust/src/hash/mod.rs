@@ -13,8 +13,14 @@
 //! A small deterministic PRNG (xorshift) is also provided for the test and
 //! workload-generation substrates.
 
+pub mod crc32;
+pub mod sha256;
+
+pub use crc32::crc32;
+pub use sha256::{sha256, sha256_hex, Sha256};
+
 /// FNV-1a 64-bit streaming hasher. Stable, dependency-free, fast enough for
-/// snapshot-sized inputs; SHA-256 (via the `sha2` crate) is additionally
+/// snapshot-sized inputs; SHA-256 (in-tree, [`sha256`]) is additionally
 /// recorded for audit contexts — see [`crate::snapshot`].
 #[derive(Debug, Clone)]
 pub struct Fnv1a64 {

@@ -3,10 +3,11 @@
 //!
 //! ```text
 //! valori serve      [--addr 127.0.0.1:7431] [--dim 128] [--wal valori.wal]
-//!                   [--env b] [--no-embedder] [--flat]
+//!                   [--env b] [--no-embedder] [--flat] [--shards N]
 //! valori experiment <table1|table2|table3|transfer|latency|all> [--quick]
-//! valori snapshot   --wal <file> --out <file> [--dim N]
+//! valori snapshot   --wal <file> --out <file> [--dim N] [--shards N]
 //! valori restore    --snapshot <file>           # verify + print hashes
+//!                                               # (plain or sharded file)
 //! valori replay     --log <file> [--dim N]      # audit replay from hex log
 //! valori quickstart
 //! ```
@@ -17,8 +18,8 @@ use valori::bench::BenchConfig;
 use valori::cli::Args;
 use valori::node::{serve, EmbedBatcher, NodeConfig, NodeState};
 use valori::runtime::{artifacts_available, artifacts_dir, embedder::Env, Embedder, Engine};
-use valori::snapshot::Snapshot;
-use valori::state::{Command, Kernel, KernelConfig};
+use valori::snapshot::{ShardedSnapshot, Snapshot};
+use valori::state::{Command, Kernel, KernelConfig, ShardedKernel};
 use valori::{experiments, replication, wal};
 
 fn main() {
@@ -51,6 +52,15 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Shared `--shards N` parsing for serve/snapshot (default 1, must be >= 1).
+fn parse_shards(args: &Args) -> Result<u32, String> {
+    match args.opt_parse("shards", 1u32) {
+        Ok(n) if n >= 1 => Ok(n),
+        Ok(_) => Err("--shards must be >= 1".into()),
+        Err(e) => Err(e),
+    }
+}
+
 fn print_usage() {
     eprintln!(
         "usage: valori <serve|experiment|snapshot|restore|replay|quickstart> [options]\n\
@@ -68,6 +78,10 @@ fn cmd_serve(args: &Args) -> i32 {
     if args.flag("flat") {
         config = config.with_flat_index();
     }
+    let n_shards = match parse_shards(args) {
+        Ok(n) => n,
+        Err(e) => return fail(&e),
+    };
     let node_config = NodeConfig {
         workers: args.opt_parse("workers", 4).unwrap_or(4),
         wal_path: args.opt("wal").map(Into::into),
@@ -92,17 +106,22 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
 
-    let kernel = Kernel::new(config);
-    let state = match NodeState::new(kernel, &node_config, batcher.as_ref().map(|b| b.handle())) {
-        Ok(s) => Arc::new(s),
-        Err(e) => return fail(&e.to_string()),
-    };
+    let kernel = ShardedKernel::new(config, n_shards);
+    let state =
+        match NodeState::new_sharded(kernel, &node_config, batcher.as_ref().map(|b| b.handle())) {
+            Ok(s) => Arc::new(s),
+            Err(e) => return fail(&e.to_string()),
+        };
     let server = match serve(Arc::clone(&state), &addr, node_config.workers) {
         Ok(s) => s,
         Err(e) => return fail(&format!("bind {addr}: {e}")),
     };
     println!("valori node listening on http://{}", server.addr());
-    println!("  dim={dim} wal={:?} embedder={}", node_config.wal_path, batcher.is_some());
+    println!(
+        "  dim={dim} shards={n_shards} wal={:?} embedder={}",
+        node_config.wal_path,
+        batcher.is_some()
+    );
     println!(
         "  try: curl -s -X POST http://{}/v1/query -d '{{\"text\":\"revenue for april\",\"k\":5}}'",
         server.addr()
@@ -173,34 +192,110 @@ fn cmd_snapshot(args: &Args) -> i32 {
     let Some(wal_path) = args.opt("wal") else { return fail("need --wal <file>") };
     let Some(out) = args.opt("out") else { return fail("need --out <file>") };
     let dim: usize = args.opt_parse("dim", 128).unwrap_or(128);
-    let rec = match wal::recover(wal_path) {
-        Ok(r) => r,
-        Err(e) => return fail(&format!("wal: {e}")),
+    let n_shards = match parse_shards(args) {
+        Ok(n) => n,
+        Err(e) => return fail(&e),
     };
-    if rec.truncated_tail {
-        eprintln!("warning: torn tail truncated at byte {}", rec.valid_bytes);
+    if n_shards == 1 {
+        let rec = match wal::recover(wal_path) {
+            Ok(r) => r,
+            Err(e) => return fail(&format!("wal: {e}")),
+        };
+        if rec.truncated_tail {
+            eprintln!("warning: torn tail truncated at byte {}", rec.valid_bytes);
+        }
+        let mut kernel = Kernel::new(KernelConfig::default_q16(dim));
+        if let Err(e) = wal::replay(&mut kernel, &rec.entries) {
+            return fail(&format!("replay: {e}"));
+        }
+        let snap = Snapshot::capture(&kernel);
+        if let Err(e) = snap.write_file(out) {
+            return fail(&format!("write: {e}"));
+        }
+        println!(
+            "replayed {} commands -> seq {} | fnv {:016x} | sha256 {}",
+            rec.entries.len(),
+            kernel.seq(),
+            snap.fnv,
+            snap.sha256_hex()
+        );
+        return 0;
     }
-    let mut kernel = Kernel::new(KernelConfig::default_q16(dim));
-    if let Err(e) = wal::replay(&mut kernel, &rec.entries) {
-        return fail(&format!("replay: {e}"));
+    // Sharded layout: one WAL per shard at <wal>.shard<N> (the layout the
+    // node writes for --shards N); replay each into its own shard so the
+    // digests match the node's /v1/hash manifest exactly.
+    let mut kernel = ShardedKernel::new(KernelConfig::default_q16(dim), n_shards);
+    let mut total = 0usize;
+    for s in 0..n_shards {
+        let path = valori::node::shard_wal_path(std::path::Path::new(wal_path), s, n_shards);
+        let rec = match wal::recover(&path) {
+            Ok(r) => r,
+            Err(e) => return fail(&format!("wal shard {s} ({path:?}): {e}")),
+        };
+        if rec.truncated_tail {
+            eprintln!("warning: shard {s}: torn tail truncated at byte {}", rec.valid_bytes);
+        }
+        for entry in &rec.entries {
+            if let Err(e) = kernel.apply_canon_to_shard(s, &entry.command) {
+                return fail(&format!("replay shard {s} seq {}: {e}", entry.seq));
+            }
+        }
+        total += rec.entries.len();
     }
-    let snap = Snapshot::capture(&kernel);
+    let snap = ShardedSnapshot::capture(&kernel);
     if let Err(e) = snap.write_file(out) {
         return fail(&format!("write: {e}"));
     }
     println!(
-        "replayed {} commands -> seq {} | fnv {:016x} | sha256 {}",
-        rec.entries.len(),
-        kernel.seq(),
-        snap.fnv,
-        snap.sha256_hex()
+        "replayed {total} commands across {n_shards} shards -> root {:016x}",
+        snap.root_hash()
     );
+    for m in snap.manifest() {
+        println!("  shard {}: fnv {:016x}", m.shard, m.fnv);
+    }
     0
 }
 
 fn cmd_restore(args: &Args) -> i32 {
     let Some(path) = args.opt("snapshot") else { return fail("need --snapshot <file>") };
-    let snap = match Snapshot::read_file(path) {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) => return fail(&format!("read: {e}")),
+    };
+    if ShardedSnapshot::looks_sharded(&bytes) {
+        let snap = match ShardedSnapshot::from_bytes(&bytes) {
+            Ok(s) => s,
+            Err(e) => return fail(&format!("read: {e}")),
+        };
+        let kernel = match snap.restore() {
+            Ok(k) => k,
+            Err(e) => return fail(&format!("restore: {e}")),
+        };
+        // H_B: recompute per shard from the restored state (§8.1 step 4,
+        // per partition).
+        println!(
+            "restored {} vectors across {} shards at seq {}",
+            kernel.len(),
+            kernel.n_shards(),
+            kernel.seq()
+        );
+        let recomputed = kernel.shard_hashes();
+        let mut ok = true;
+        for m in snap.manifest() {
+            let h_b = recomputed[m.shard as usize];
+            let verdict = if h_b == m.fnv { "ok" } else { "MISMATCH" };
+            println!("  shard {}: H_A {:016x} H_B {h_b:016x} {verdict}", m.shard, m.fnv);
+            ok &= h_b == m.fnv;
+        }
+        println!("root = {:016x}", snap.root_hash());
+        if ok {
+            println!("H_A == H_B on every shard: memory state perfectly preserved");
+            return 0;
+        }
+        println!("HASH MISMATCH — determinism violation!");
+        return 1;
+    }
+    let snap = match Snapshot::from_bytes(&bytes) {
         Ok(s) => s,
         Err(e) => return fail(&format!("read: {e}")),
     };
@@ -256,11 +351,21 @@ fn cmd_verify(args: &Args) -> i32 {
     let (Some(a), Some(b)) = (args.opt("a"), args.opt("b")) else {
         return fail("need --a <snapshot> --b <snapshot>");
     };
-    let sa = match Snapshot::read_file(a) {
+    let (bytes_a, bytes_b) = match (std::fs::read(a), std::fs::read(b)) {
+        (Ok(x), Ok(y)) => (x, y),
+        (Err(e), _) => return fail(&format!("{a}: {e}")),
+        (_, Err(e)) => return fail(&format!("{b}: {e}")),
+    };
+    match (ShardedSnapshot::looks_sharded(&bytes_a), ShardedSnapshot::looks_sharded(&bytes_b)) {
+        (true, true) => return verify_sharded(a, &bytes_a, b, &bytes_b),
+        (false, false) => {}
+        _ => return fail("cannot compare a sharded snapshot with an unsharded one"),
+    }
+    let sa = match Snapshot::from_bytes(&bytes_a) {
         Ok(s) => s,
         Err(e) => return fail(&format!("{a}: {e}")),
     };
-    let sb = match Snapshot::read_file(b) {
+    let sb = match Snapshot::from_bytes(&bytes_b) {
         Ok(s) => s,
         Err(e) => return fail(&format!("{b}: {e}")),
     };
@@ -282,6 +387,29 @@ fn cmd_verify(args: &Args) -> i32 {
         } else {
             println!("DIVERGED (and at least one snapshot fails to restore)");
         }
+        1
+    }
+}
+
+/// Sharded leg of `valori verify`: compare root hashes, then the
+/// manifests shard-by-shard so a divergence names the forked partition.
+fn verify_sharded(a: &str, bytes_a: &[u8], b: &str, bytes_b: &[u8]) -> i32 {
+    let sa = match ShardedSnapshot::from_bytes(bytes_a) {
+        Ok(s) => s,
+        Err(e) => return fail(&format!("{a}: {e}")),
+    };
+    let sb = match ShardedSnapshot::from_bytes(bytes_b) {
+        Ok(s) => s,
+        Err(e) => return fail(&format!("{b}: {e}")),
+    };
+    println!("A: root {:016x} ({} shards)", sa.root_hash(), sa.shards.len());
+    println!("B: root {:016x} ({} shards)", sb.root_hash(), sb.shards.len());
+    let diverged = ShardedSnapshot::diverged_shards(&sa.manifest(), &sb.manifest());
+    if diverged.is_empty() {
+        println!("IDENTICAL: both nodes hold the same memory state on every shard");
+        0
+    } else {
+        println!("DIVERGED at shard(s) {diverged:?}");
         1
     }
 }

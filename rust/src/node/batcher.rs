@@ -15,6 +15,28 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+/// What the batching loop needs from a model: a fixed batch shape and a
+/// batched embed call. The production implementation is the AOT-compiled
+/// [`Embedder`]; tests plug in deterministic mocks so the batching logic
+/// (fan-in, windowing, fan-out, counters) is exercised without PJRT.
+pub trait EmbedBackend {
+    /// Fixed batch shape; the loop drains at most this many jobs per call.
+    fn batch_size(&self) -> usize;
+
+    /// Embed up to `batch_size` texts, one vector per text, in order.
+    fn embed_texts(&self, texts: &[&str]) -> crate::Result<Vec<Vec<f32>>>;
+}
+
+impl EmbedBackend for Embedder {
+    fn batch_size(&self) -> usize {
+        Embedder::batch_size(self)
+    }
+
+    fn embed_texts(&self, texts: &[&str]) -> crate::Result<Vec<Vec<f32>>> {
+        Embedder::embed_texts(self, texts)
+    }
+}
+
 /// One in-flight embed request.
 struct Job {
     text: String,
@@ -92,11 +114,20 @@ pub struct EmbedBatcher {
 }
 
 impl EmbedBatcher {
-    /// Spawn the model thread; `loader` runs on that thread to build the
-    /// embedder (PJRT handles never cross threads). Returns Err if loading
-    /// fails. `window` bounds added latency at low load.
+    /// Spawn the model thread for the production AOT embedder. See
+    /// [`Self::start_with_backend`] for the generic machinery.
     pub fn start(
         loader: impl FnOnce() -> crate::Result<Embedder> + Send + 'static,
+        window: Duration,
+    ) -> crate::Result<Self> {
+        Self::start_with_backend(loader, window)
+    }
+
+    /// Spawn the model thread; `loader` runs on that thread to build the
+    /// backend (PJRT handles never cross threads). Returns Err if loading
+    /// fails. `window` bounds added latency at low load.
+    pub fn start_with_backend<B: EmbedBackend + 'static>(
+        loader: impl FnOnce() -> crate::Result<B> + Send + 'static,
         window: Duration,
     ) -> crate::Result<Self> {
         let (tx, rx) = mpsc::channel::<Msg>();
@@ -144,8 +175,8 @@ impl EmbedBatcher {
     }
 }
 
-fn model_loop(
-    embedder: Embedder,
+fn model_loop<B: EmbedBackend>(
+    embedder: B,
     rx: mpsc::Receiver<Msg>,
     window: Duration,
     counters: &BatchCounters,
@@ -181,8 +212,8 @@ fn model_loop(
     }
 }
 
-fn finish_batch(
-    embedder: &Embedder,
+fn finish_batch<B: EmbedBackend>(
+    embedder: &B,
     jobs: Vec<Job>,
     stats: &mut BatchStats,
     counters: &BatchCounters,

@@ -23,14 +23,15 @@
 pub mod batcher;
 pub mod metrics;
 
-pub use batcher::{BatcherHandle, EmbedBatcher};
+pub use batcher::{BatcherHandle, EmbedBackend, EmbedBatcher};
 pub use metrics::Metrics;
 
 use crate::http::{Handler, Request, Response, Server};
 use crate::json::{parse, Json};
 use crate::snapshot::Snapshot;
-use crate::state::{CanonCommand, Command, Kernel};
+use crate::state::{CanonCommand, Command, Kernel, Routed, ShardedKernel};
 use crate::wal::WalWriter;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -39,7 +40,9 @@ use std::time::Instant;
 pub struct NodeConfig {
     /// HTTP workers.
     pub workers: usize,
-    /// Path for the WAL (None = in-memory only).
+    /// Base path for the WAL (None = in-memory only). Single-shard nodes
+    /// use the path verbatim; an `n_shards`-wide node writes one WAL per
+    /// shard at `<path>.shard<N>` (see [`shard_wal_path`]).
     pub wal_path: Option<std::path::PathBuf>,
 }
 
@@ -49,105 +52,247 @@ impl Default for NodeConfig {
     }
 }
 
+/// WAL file for one shard: the base path itself for unsharded nodes
+/// (seed-compatible), `<base>.shard<N>` otherwise.
+pub fn shard_wal_path(base: &Path, shard: u32, n_shards: u32) -> PathBuf {
+    if n_shards <= 1 {
+        base.to_path_buf()
+    } else {
+        PathBuf::from(format!("{}.shard{shard}", base.display()))
+    }
+}
+
 /// Shared node state behind the HTTP handler.
+///
+/// The node wraps a [`ShardedKernel`] (a 1-shard deployment for the
+/// classic single-kernel node). Mutations route through the kernel and are
+/// recorded **per shard**: each shard has its own in-memory canonical log
+/// (replication feed) and its own WAL file, so recovery, log shipping and
+/// replay all happen partition-by-partition.
 pub struct NodeState {
-    kernel: Mutex<Kernel>,
-    /// In-memory canonical log (replication feed + audit).
-    log: Mutex<Vec<CanonCommand>>,
-    wal: Option<Mutex<WalWriter>>,
+    kernel: Mutex<ShardedKernel>,
+    /// Per-shard canonical logs (replication feed + audit).
+    logs: Vec<Mutex<Vec<CanonCommand>>>,
+    /// Per-shard WALs (empty when running in-memory only).
+    wals: Vec<Mutex<WalWriter>>,
     embed: Option<BatcherHandle>,
     pub metrics: Metrics,
 }
 
 impl NodeState {
-    /// Build node state. If the configured WAL file already exists, the
-    /// kernel is **recovered from it first** (replay; torn tail repaired),
-    /// then the WAL is opened for append — restart durability.
+    /// Build a classic single-kernel node (1-shard deployment). If the
+    /// configured WAL file already exists, the kernel is **recovered from
+    /// it first** (replay; torn tail repaired), then the WAL is opened for
+    /// append — restart durability. Bit-compatible with pre-sharding
+    /// nodes: same WAL path, same record framing, same hashes.
     pub fn new(
-        mut kernel: Kernel,
+        kernel: Kernel,
         config: &NodeConfig,
         embed: Option<BatcherHandle>,
     ) -> crate::Result<Self> {
-        let mut log = Vec::new();
-        let wal = match &config.wal_path {
-            Some(p) => {
-                if p.exists() {
-                    let rec = crate::wal::recover(p).map_err(|e| {
-                        crate::Error::Runtime(format!("wal recovery {p:?}: {e}"))
+        Self::new_sharded(ShardedKernel::from_single(kernel), config, embed)
+    }
+
+    /// Build a sharded node: per-shard WAL recovery, per-shard logs.
+    pub fn new_sharded(
+        mut kernel: ShardedKernel,
+        config: &NodeConfig,
+        embed: Option<BatcherHandle>,
+    ) -> crate::Result<Self> {
+        let n = kernel.n_shards();
+        let mut logs: Vec<Vec<CanonCommand>> = (0..n).map(|_| Vec::new()).collect();
+        let mut wals = Vec::new();
+        if let Some(base) = &config.wal_path {
+            // Changing --shards changes the WAL file layout; silently
+            // starting empty next to a populated old layout would look
+            // like total data loss. Refuse loudly instead.
+            let stale: Option<String> = if n == 1 {
+                let p = shard_wal_path(base, 0, 2);
+                p.exists().then(|| format!("sharded WAL {p:?} exists"))
+            } else if base.exists() {
+                Some(format!("unsharded WAL {base:?} exists"))
+            } else {
+                let p = shard_wal_path(base, n, n + 1);
+                p.exists().then(|| format!("WAL {p:?} from a larger deployment exists"))
+            };
+            if let Some(what) = stale {
+                return Err(crate::Error::Runtime(format!(
+                    "{what}, but this node is configured with {n} shard(s); refusing to \
+                     start empty over existing data — remove the old WAL files or match \
+                     the original shard count"
+                )));
+            }
+            for s in 0..n {
+                let path = shard_wal_path(base, s, n);
+                if path.exists() {
+                    let rec = crate::wal::recover(&path).map_err(|e| {
+                        crate::Error::Runtime(format!("wal recovery {path:?}: {e}"))
                     })?;
                     if rec.truncated_tail {
-                        crate::wal::truncate_to_valid(p, rec.valid_bytes)?;
+                        crate::wal::truncate_to_valid(&path, rec.valid_bytes)?;
                     }
                     for entry in &rec.entries {
-                        kernel.apply_canon(&entry.command).map_err(|e| {
+                        kernel.apply_canon_to_shard(s, &entry.command).map_err(|e| {
+                            // A WrongShard rejection here almost always
+                            // means the WAL was written under a different
+                            // --shards count (the layout guard above can't
+                            // catch every resize by filename alone).
+                            let hint = if matches!(
+                                e,
+                                crate::state::StateError::WrongShard { .. }
+                            ) {
+                                "; the WAL was likely written with a different --shards \
+                                 count — restart with the original shard count"
+                            } else {
+                                ""
+                            };
                             crate::Error::Runtime(format!(
-                                "wal replay: command at seq {} rejected: {e}",
+                                "wal replay shard {s}: command at seq {} rejected: {e}{hint}",
                                 entry.seq
                             ))
                         })?;
-                        log.push(entry.command.clone());
+                        logs[s as usize].push(entry.command.clone());
                     }
-                    Some(Mutex::new(WalWriter::append_to(p, rec.entries.len() as u64)?))
+                    wals.push(Mutex::new(WalWriter::append_to(
+                        &path,
+                        rec.entries.len() as u64,
+                    )?));
                 } else {
-                    Some(Mutex::new(WalWriter::create(p)?))
+                    wals.push(Mutex::new(WalWriter::create(&path)?));
                 }
             }
-            None => None,
-        };
+        }
         Ok(Self {
             kernel: Mutex::new(kernel),
-            log: Mutex::new(log),
-            wal,
+            logs: logs.into_iter().map(Mutex::new).collect(),
+            wals,
             embed,
             metrics: Metrics::default(),
         })
     }
 
-    /// Apply an external command: boundary → state machine → log + WAL.
+    /// Apply an external command: boundary → routed state machine →
+    /// per-shard log + WAL.
     ///
-    /// The log/WAL append happens **while the kernel lock is held**: the
-    /// kernel's application order and the logged order must be the same
-    /// sequence, or replaying the WAL would reconstruct a different state
-    /// (the order *is* the state, paper §3.1).
+    /// The log/WAL appends happen **while the kernel lock is held**: each
+    /// shard's application order and its logged order must be the same
+    /// sequence, or replaying a shard WAL would reconstruct a different
+    /// state (the order *is* the state, paper §3.1).
     pub fn apply(&self, cmd: Command) -> Result<CanonCommand, crate::Error> {
         let mut kernel = self.kernel.lock().expect("kernel poisoned");
-        let seq = kernel.seq();
-        let canon = kernel.apply(cmd)?;
-        self.record(seq, &canon)?;
-        Ok(canon)
+        let result = kernel.apply(cmd)?;
+        self.record(&result.applied)?;
+        Ok(result.canon)
     }
 
-    /// Apply an already-canonical command (replication ingest path).
+    /// Apply an already-canonical command through the router (client-side
+    /// canonical ingest). NOT the path for shipped per-shard feeds — the
+    /// router re-checks global preconditions (e.g. a cross-shard link
+    /// target that may arrive via another shard's feed) and re-expands
+    /// deletes into cleanup unlinks that the feeds already contain. Feed
+    /// records go through [`Self::apply_canon_to_shard`].
     pub fn apply_canon(&self, canon: &CanonCommand) -> Result<(), crate::Error> {
         let mut kernel = self.kernel.lock().expect("kernel poisoned");
-        let seq = kernel.seq();
-        kernel.apply_canon(canon)?;
-        self.record(seq, canon)?;
+        let applied = kernel.apply_canon(canon)?;
+        self.record(&applied)?;
         Ok(())
     }
 
-    /// Append to the in-memory log + WAL (caller holds the kernel lock).
-    fn record(&self, seq: u64, canon: &CanonCommand) -> Result<(), crate::Error> {
-        self.log.lock().expect("log poisoned").push(canon.clone());
-        if let Some(w) = &self.wal {
-            let mut w = w.lock().expect("wal poisoned");
-            w.append(seq, canon)?;
-            w.flush()?;
+    /// Apply one record of shard `shard`'s canonical feed, exactly as a
+    /// WAL replay would: no routing, no cross-shard checks, no cleanup
+    /// expansion. This is what makes per-shard feeds independently
+    /// shippable — each shard's subsequence replays on the peer's same
+    /// shard regardless of how the feeds interleave.
+    pub fn apply_canon_to_shard(
+        &self,
+        shard: u32,
+        canon: &CanonCommand,
+    ) -> Result<(), crate::Error> {
+        let mut kernel = self.kernel.lock().expect("kernel poisoned");
+        if shard >= kernel.n_shards() {
+            return Err(crate::Error::Runtime(format!(
+                "shard {shard} out of range (n_shards = {})",
+                kernel.n_shards()
+            )));
+        }
+        let seq = kernel.shard(shard).seq();
+        kernel.apply_canon_to_shard(shard, canon)?;
+        self.record(&[Routed { shard, seq, command: canon.clone() }])?;
+        Ok(())
+    }
+
+    /// Append routed records to their shards' logs + WALs (caller holds
+    /// the kernel lock).
+    fn record(&self, applied: &[Routed]) -> Result<(), crate::Error> {
+        for r in applied {
+            self.logs[r.shard as usize]
+                .lock()
+                .expect("log poisoned")
+                .push(r.command.clone());
+            if let Some(w) = self.wals.get(r.shard as usize) {
+                let mut w = w.lock().expect("wal poisoned");
+                w.append(r.seq, &r.command)?;
+                w.flush()?;
+            }
         }
         Ok(())
     }
 
+    /// Single-shard compatibility view: runs `f` against shard 0's kernel.
+    /// Exact for 1-shard nodes (shard 0 *is* the node); for sharded nodes
+    /// prefer [`Self::with_sharded`].
     pub fn with_kernel<T>(&self, f: impl FnOnce(&Kernel) -> T) -> T {
+        f(self.kernel.lock().expect("kernel poisoned").shard(0))
+    }
+
+    /// Run `f` against the whole sharded kernel.
+    pub fn with_sharded<T>(&self, f: impl FnOnce(&ShardedKernel) -> T) -> T {
         f(&self.kernel.lock().expect("kernel poisoned"))
     }
 
-    pub fn log_len(&self) -> usize {
-        self.log.lock().expect("log poisoned").len()
+    pub fn n_shards(&self) -> u32 {
+        self.logs.len() as u32
     }
 
+    /// Total canonical log records across shards.
+    pub fn log_len(&self) -> usize {
+        self.logs.iter().map(|l| l.lock().expect("log poisoned").len()).sum()
+    }
+
+    /// One shard's log length.
+    pub fn shard_log_len(&self, shard: u32) -> usize {
+        self.logs
+            .get(shard as usize)
+            .map(|l| l.lock().expect("log poisoned").len())
+            .unwrap_or(0)
+    }
+
+    /// Shard 0's log feed (the whole feed for single-shard nodes).
     pub fn log_slice(&self, from: usize, max: usize) -> Vec<CanonCommand> {
-        let log = self.log.lock().expect("log poisoned");
-        log.iter().skip(from).take(max).cloned().collect()
+        self.log_slice_shard(0, from, max)
+    }
+
+    /// One shard's log feed.
+    pub fn log_slice_shard(&self, shard: u32, from: usize, max: usize) -> Vec<CanonCommand> {
+        match self.logs.get(shard as usize) {
+            Some(l) => {
+                let log = l.lock().expect("log poisoned");
+                log.iter().skip(from).take(max).cloned().collect()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Node-level state hash, rendered for the wire: the shard-0 FNV for
+    /// single-shard nodes (seed-compatible), the root hash otherwise.
+    pub fn hash_hex(&self) -> String {
+        self.with_sharded(|sk| {
+            if sk.n_shards() == 1 {
+                format!("{:016x}", sk.shard(0).state_hash())
+            } else {
+                format!("{:016x}", sk.root_hash())
+            }
+        })
     }
 
     pub fn embedder(&self) -> Option<&BatcherHandle> {
@@ -248,7 +393,7 @@ fn handle_insert(state: &NodeState, req: &Request) -> RouteResult {
     Metrics::inc(&state.metrics.inserts);
     Ok(ok_json(Json::object(vec![
         ("inserted", Json::Int(id as i64)),
-        ("seq", Json::Int(state.with_kernel(|k| k.seq()) as i64)),
+        ("seq", Json::Int(state.with_sharded(|k| k.seq()) as i64)),
     ])))
 }
 
@@ -277,7 +422,7 @@ fn handle_insert_batch(state: &NodeState, req: &Request) -> RouteResult {
     Metrics::inc(&state.metrics.inserts);
     Ok(ok_json(Json::object(vec![
         ("inserted", Json::Int(n as i64)),
-        ("seq", Json::Int(state.with_kernel(|k| k.seq()) as i64)),
+        ("seq", Json::Int(state.with_sharded(|k| k.seq()) as i64)),
     ])))
 }
 
@@ -287,7 +432,7 @@ fn handle_query(state: &NodeState, req: &Request) -> RouteResult {
     let vector = get_vector(&body, state)?;
     let t0 = Instant::now();
     let hits = state
-        .with_kernel(|kern| kern.search_f32(&vector, k))
+        .with_sharded(|kern| kern.search_f32(&vector, k))
         .map_err(|e| state_error_response(&crate::Error::State(e)))?;
     state.metrics.query_latency.record_us(t0.elapsed().as_micros() as u64);
     Metrics::inc(&state.metrics.queries);
@@ -361,25 +506,62 @@ fn handle_apply(state: &NodeState, req: &Request) -> RouteResult {
         .get("commands")
         .as_array()
         .ok_or_else(|| Response::bad_request("need 'commands' array of hex strings"))?;
+    // With a "shard" field the commands are a per-shard feed and apply
+    // replay-style to that shard; without it they route like fresh
+    // canonical submissions.
+    let shard = body.get("shard").as_u64().map(|s| s as u32);
+    if let Some(s) = shard {
+        if s >= state.n_shards() {
+            // Client misconfiguration (wrong shard count), same contract
+            // as GET /v1/log: a 400, not a retryable server error.
+            return Err(Response::bad_request(&format!(
+                "shard {s} out of range (n_shards = {})",
+                state.n_shards()
+            )));
+        }
+    }
     let mut applied = 0;
     for c in cmds {
         let hex = c.as_str().ok_or_else(|| Response::bad_request("command must be hex string"))?;
         let bytes = hex_decode(hex).ok_or_else(|| Response::bad_request("invalid hex"))?;
         let canon = CanonCommand::from_bytes(&bytes)
             .map_err(|e| Response::bad_request(&format!("bad command: {e}")))?;
-        state.apply_canon(&canon).map_err(|e| state_error_response(&e))?;
+        match shard {
+            Some(s) => {
+                state.apply_canon_to_shard(s, &canon).map_err(|e| state_error_response(&e))?
+            }
+            None => state.apply_canon(&canon).map_err(|e| state_error_response(&e))?,
+        }
         applied += 1;
     }
     Ok(ok_json(Json::object(vec![
         ("applied", Json::Int(applied)),
-        ("seq", Json::Int(state.with_kernel(|k| k.seq()) as i64)),
-        ("hash", Json::str(format!("{:016x}", state.with_kernel(|k| k.state_hash())))),
+        ("seq", Json::Int(state.with_sharded(|k| k.seq()) as i64)),
+        ("hash", Json::str(state.hash_hex())),
     ])))
 }
 
+// Note: the per-shard `fnv` entries re-encode each shard's full state
+// (same cost class as /v1/hash, which always worked this way); a cached
+// state hash invalidated on apply is a ROADMAP follow-on for nodes that
+// poll stats at high frequency.
 fn handle_stats(state: &NodeState) -> Response {
-    let (len, seq, dim) =
-        state.with_kernel(|k| (k.len(), k.seq(), k.config().dim));
+    let (len, seq, dim, n_shards, per_shard) = state.with_sharded(|sk| {
+        let per: Vec<Json> = sk
+            .shards()
+            .iter()
+            .enumerate()
+            .map(|(s, k)| {
+                Json::object(vec![
+                    ("shard", Json::Int(s as i64)),
+                    ("vectors", Json::Int(k.len() as i64)),
+                    ("seq", Json::Int(k.seq() as i64)),
+                    ("fnv", Json::str(format!("{:016x}", k.state_hash()))),
+                ])
+            })
+            .collect();
+        (sk.len(), sk.seq(), sk.config().dim, sk.n_shards(), per)
+    });
     let mut obj = match state.metrics.to_json() {
         Json::Object(o) => o,
         _ => unreachable!(),
@@ -388,6 +570,8 @@ fn handle_stats(state: &NodeState) -> Response {
     obj.insert("seq".into(), Json::Int(seq as i64));
     obj.insert("dim".into(), Json::Int(dim as i64));
     obj.insert("log_len".into(), Json::Int(state.log_len() as i64));
+    obj.insert("n_shards".into(), Json::Int(n_shards as i64));
+    obj.insert("shards".into(), Json::Array(per_shard));
     if let Some(b) = state.embedder() {
         let (batches, requests) = b.counters();
         obj.insert("batches".into(), Json::Int(batches as i64));
@@ -397,28 +581,69 @@ fn handle_stats(state: &NodeState) -> Response {
 }
 
 fn handle_hash(state: &NodeState) -> Response {
-    let snap = state.with_kernel(Snapshot::capture);
-    ok_json(Json::object(vec![
-        ("fnv", Json::str(format!("{:016x}", snap.fnv))),
-        ("sha256", Json::str(snap.sha256_hex())),
-        ("seq", Json::Int(state.with_kernel(|k| k.seq()) as i64)),
-    ]))
+    // Single-shard nodes keep the seed wire shape (fnv/sha256 of the one
+    // kernel); sharded nodes report the root plus the per-shard manifest
+    // so peers can verify convergence shard-by-shard.
+    state.with_sharded(|sk| {
+        if sk.n_shards() == 1 {
+            let snap = Snapshot::capture(sk.shard(0));
+            ok_json(Json::object(vec![
+                ("fnv", Json::str(format!("{:016x}", snap.fnv))),
+                ("sha256", Json::str(snap.sha256_hex())),
+                ("seq", Json::Int(sk.seq() as i64)),
+                ("root", Json::str(format!("{:016x}", sk.root_hash()))),
+            ]))
+        } else {
+            let snap = crate::snapshot::ShardedSnapshot::capture(sk);
+            let shards: Vec<Json> = snap
+                .manifest()
+                .iter()
+                .map(|m| {
+                    Json::object(vec![
+                        ("shard", Json::Int(m.shard as i64)),
+                        ("fnv", Json::str(format!("{:016x}", m.fnv))),
+                        ("sha256", Json::str(crate::hash::sha256_hex(&m.sha256))),
+                    ])
+                })
+                .collect();
+            ok_json(Json::object(vec![
+                ("fnv", Json::str(format!("{:016x}", snap.root_hash()))),
+                ("root", Json::str(format!("{:016x}", snap.root_hash()))),
+                ("seq", Json::Int(sk.seq() as i64)),
+                ("shards", Json::Array(shards)),
+            ]))
+        }
+    })
 }
 
 fn handle_log(state: &NodeState, req: &Request) -> Response {
-    let from = req
-        .query
-        .as_deref()
-        .and_then(|q| {
-            q.split('&').find_map(|kv| kv.strip_prefix("from=").and_then(|v| v.parse().ok()))
+    let query_param = |name: &str| {
+        req.query.as_deref().and_then(|q| {
+            q.split('&').find_map(|kv| {
+                kv.strip_prefix(name)
+                    .and_then(|v| v.strip_prefix('='))
+                    .and_then(|v| v.parse::<usize>().ok())
+            })
         })
-        .unwrap_or(0usize);
-    let cmds = state.log_slice(from, 1000);
+    };
+    let from = query_param("from").unwrap_or(0);
+    let shard = query_param("shard").unwrap_or(0) as u32;
+    if shard >= state.n_shards() {
+        // An empty 200 here would read as "fully caught up" to a sync
+        // driver configured with the wrong shard count.
+        return err_json(
+            400,
+            &format!("shard {shard} out of range (n_shards = {})", state.n_shards()),
+        );
+    }
+    let cmds = state.log_slice_shard(shard, from, 1000);
     let arr: Vec<Json> =
         cmds.iter().map(|c| Json::str(hex_encode(&c.to_bytes()))).collect();
     ok_json(Json::object(vec![
         ("from", Json::Int(from as i64)),
-        ("total", Json::Int(state.log_len() as i64)),
+        ("shard", Json::Int(shard as i64)),
+        ("n_shards", Json::Int(state.n_shards() as i64)),
+        ("total", Json::Int(state.shard_log_len(shard) as i64)),
         ("commands", Json::Array(arr)),
     ]))
 }

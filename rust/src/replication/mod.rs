@@ -138,18 +138,37 @@ impl Cluster {
     }
 }
 
-/// Pull a primary's log over HTTP and push it to a follower node; returns
-/// (commands shipped, follower hash hex). Both sides are `/v1` APIs from
-/// [`crate::node`].
+/// Pull a primary's shard-0 log over HTTP and push it to a follower node;
+/// returns (commands shipped, follower hash hex). Both sides are `/v1`
+/// APIs from [`crate::node`]. For single-shard nodes shard 0 is the whole
+/// log; sharded deployments ship every shard via
+/// [`sync_follower_shard`] (the shard feeds are independent, so they can
+/// be shipped in parallel by one sync driver per shard).
 pub fn sync_follower(
     primary: &std::net::SocketAddr,
     follower: &std::net::SocketAddr,
     from: usize,
 ) -> std::io::Result<(usize, String)> {
+    sync_follower_shard(primary, follower, 0, from)
+}
+
+/// Ship one shard's log feed (`/v1/log?shard=S`) from primary to follower.
+/// The feed is applied replay-style to the *same shard* on the follower
+/// (`/v1/apply` with a `shard` field): each shard's state is a pure
+/// function of its own subsequence, so the feeds are independent and
+/// convergence does not depend on how shard shipments interleave — even
+/// with cross-shard links and their delete-cleanup unlink records.
+pub fn sync_follower_shard(
+    primary: &std::net::SocketAddr,
+    follower: &std::net::SocketAddr,
+    shard: u32,
+    from: usize,
+) -> std::io::Result<(usize, String)> {
     use crate::http::client;
     use crate::json::Json;
 
-    let (status, feed) = client::get_json(primary, &format!("/v1/log?from={from}"))?;
+    let (status, feed) =
+        client::get_json(primary, &format!("/v1/log?shard={shard}&from={from}"))?;
     if status != 200 {
         return Err(std::io::Error::other(format!("log fetch failed: {status}")));
     }
@@ -159,7 +178,10 @@ pub fn sync_follower(
         let (_, h) = client::get_json(follower, "/v1/hash")?;
         return Ok((0, h.get("fnv").as_str().unwrap_or("").to_string()));
     }
-    let body = Json::object(vec![("commands", Json::Array(cmds))]);
+    let body = Json::object(vec![
+        ("shard", Json::Int(shard as i64)),
+        ("commands", Json::Array(cmds)),
+    ]);
     let (status, resp) = client::post_json(follower, "/v1/apply", &body)?;
     if status != 200 {
         return Err(std::io::Error::other(format!(
@@ -167,6 +189,24 @@ pub fn sync_follower(
         )));
     }
     Ok((n, resp.get("hash").as_str().unwrap_or("").to_string()))
+}
+
+/// Ship every shard of a sharded primary to a follower, starting from the
+/// given per-shard offsets (`from.len()` must equal the primary's shard
+/// count). Returns per-shard shipped counts and the follower's final hash.
+pub fn sync_all_shards(
+    primary: &std::net::SocketAddr,
+    follower: &std::net::SocketAddr,
+    from: &[usize],
+) -> std::io::Result<(Vec<usize>, String)> {
+    let mut shipped = vec![0usize; from.len()];
+    let mut hash = String::new();
+    for (s, &offset) in from.iter().enumerate() {
+        let (n, h) = sync_follower_shard(primary, follower, s as u32, offset)?;
+        shipped[s] = n;
+        hash = h;
+    }
+    Ok((shipped, hash))
 }
 
 /// Round-trip helper: serialize a command log to a hex-lines string and

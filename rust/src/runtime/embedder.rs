@@ -6,6 +6,7 @@
 
 use super::engine::{literal_f32, literal_i32, Engine, LoadedComputation};
 use super::manifest::Manifest;
+use super::xla_stub as xla;
 use crate::tokenizer::Tokenizer;
 use crate::Error;
 use std::path::Path;

@@ -13,6 +13,7 @@
 pub mod embedder;
 pub mod engine;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use embedder::Embedder;
 pub use engine::{DistanceEngine, Engine, LoadedComputation};

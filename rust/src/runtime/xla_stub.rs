@@ -1,0 +1,231 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The reproduction builds in hermetic environments with no network and no
+//! PJRT shared library. This module mirrors the small slice of the
+//! `xla` crate API that [`super::engine`] and [`super::embedder`] consume,
+//! so the whole crate compiles and tests run everywhere:
+//!
+//! - [`Literal`] is a *real* implementation (host-side typed buffers with
+//!   shape), so literal construction/readback helpers work and are tested.
+//! - Client/compile/execute paths return a descriptive [`Error`]: callers
+//!   already guard every execution path behind
+//!   [`super::artifacts_available`] or propagate `Engine::cpu()` failures,
+//!   so the node degrades to vector-only serving exactly as it does when
+//!   `make artifacts` has not been run.
+//!
+//! Linking the real PJRT client back in is a build-system concern: swap the
+//! `use super::xla_stub as xla;` lines in `engine.rs`/`embedder.rs` for the
+//! real crate. Nothing else in the tree touches PJRT types.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (Display only; the runtime layer
+/// stringifies immediately).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT/XLA runtime is not linked into this build (offline stub); \
+         float-model endpoints are disabled"
+    ))
+}
+
+/// Typed host buffer element. Sealed to the three dtypes the AOT artifacts
+/// use.
+pub trait NativeType: Copy + fmt::Debug {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+/// Storage for [`Literal`] (public only because [`NativeType`] mentions it).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I64(v) => v.len(),
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i64 {
+    fn wrap(data: Vec<Self>) -> Data {
+        Data::I64(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::I64(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side literal: typed data + shape. Fully functional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal { data: T::wrap(data.to_vec()), dims }
+    }
+
+    /// Reinterpret with a new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read back as a host vector of `T` (row-major).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data).ok_or_else(|| Error(format!("to_vec: dtype mismatch ({:?})", self.data)))
+    }
+
+    /// First element of a result tuple. The stub never produces tuples, so
+    /// this is the identity (mirrors `return_tuple=True` unwrapping).
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Ok(self)
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self, Error> {
+        Err(unavailable(&format!("parse HLO {:?}", path.as_ref())))
+    }
+}
+
+/// An XLA computation (opaque).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        // Unreachable in practice: `HloModuleProto::from_text_file` is the
+        // only constructor and it always errors in the stub.
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle. Never constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle. Never constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err(), "dtype mismatch must error");
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable_offline() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline stub"));
+    }
+}

@@ -11,7 +11,7 @@ use crate::codec::{DecodeError, Decoder, Encoder};
 use crate::distance::{Metric, Scalar};
 use crate::fixed::{FixedFormat, Q16_16};
 use crate::graph::LinkGraph;
-use crate::hash::Fnv1a64;
+use crate::hash::{splitmix64, Fnv1a64};
 use crate::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
 use crate::state::command::{CanonCommand, Command};
 use crate::vector::{BoundaryError, FixedVector, ValidationPolicy};
@@ -44,6 +44,52 @@ impl IndexKind {
     }
 }
 
+/// Placement of a kernel within a sharded deployment (see
+/// [`crate::state::sharded`]). The unsharded reference contract is
+/// `n_shards == 1`; the routing function is fixed forever as
+/// `splitmix64(id) % n_shards`, so shard membership is a pure function of
+/// the external id and the shard count — any two nodes agree on placement
+/// without coordination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Total shards in the deployment (>= 1).
+    pub n_shards: u32,
+    /// This kernel's shard index in `0..n_shards`.
+    pub shard_id: u32,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        Self { n_shards: 1, shard_id: 0 }
+    }
+}
+
+impl ShardSpec {
+    /// The shard an external id routes to under this deployment size.
+    pub fn shard_of(&self, id: u64) -> u32 {
+        (splitmix64(id) % self.n_shards.max(1) as u64) as u32
+    }
+
+    /// Whether this kernel is the owner of `id`.
+    pub fn owns(&self, id: u64) -> bool {
+        self.n_shards <= 1 || self.shard_of(id) == self.shard_id
+    }
+
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u32(self.n_shards);
+        e.put_u32(self.shard_id);
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let n_shards = d.get_u32()?;
+        let shard_id = d.get_u32()?;
+        if n_shards == 0 || shard_id >= n_shards {
+            return Err(DecodeError::InvalidTag { what: "shard spec", tag: shard_id as u64 });
+        }
+        Ok(Self { n_shards, shard_id })
+    }
+}
+
 /// Kernel configuration — fixed at creation, serialized into every
 /// snapshot (two nodes comparing hashes are comparing configs too).
 #[derive(Debug, Clone, PartialEq)]
@@ -58,6 +104,8 @@ pub struct KernelConfig {
     pub hnsw: HnswParams,
     /// Boundary validation policy.
     pub policy: ValidationPolicy,
+    /// Shard placement (`{1, 0}` for the unsharded reference contract).
+    pub shard: ShardSpec,
 }
 
 impl KernelConfig {
@@ -69,6 +117,7 @@ impl KernelConfig {
             index: IndexKind::Hnsw,
             hnsw: HnswParams::default(),
             policy: ValidationPolicy::default(),
+            shard: ShardSpec::default(),
         }
     }
 
@@ -80,11 +129,19 @@ impl KernelConfig {
             index: IndexKind::Hnsw,
             hnsw: HnswParams::default(),
             policy: ValidationPolicy::normalized_embeddings(),
+            shard: ShardSpec::default(),
         }
     }
 
     pub fn with_flat_index(mut self) -> Self {
         self.index = IndexKind::Flat;
+        self
+    }
+
+    /// Place this config at `shard_id` of an `n_shards`-wide deployment.
+    pub fn with_shard(mut self, n_shards: u32, shard_id: u32) -> Self {
+        assert!(n_shards >= 1 && shard_id < n_shards, "invalid shard spec");
+        self.shard = ShardSpec { n_shards, shard_id };
         self
     }
 
@@ -95,6 +152,7 @@ impl KernelConfig {
         self.hnsw.encode(e);
         e.put_f32(self.policy.max_abs);
         e.put_u8(self.policy.normalize as u8);
+        self.shard.encode(e);
     }
 
     pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
@@ -112,7 +170,15 @@ impl KernelConfig {
             1 => true,
             t => return Err(DecodeError::InvalidTag { what: "normalize flag", tag: t as u64 }),
         };
-        Ok(Self { dim, metric, index, hnsw, policy: ValidationPolicy { max_abs, normalize } })
+        let shard = ShardSpec::decode(d)?;
+        Ok(Self {
+            dim,
+            metric,
+            index,
+            hnsw,
+            policy: ValidationPolicy { max_abs, normalize },
+            shard,
+        })
     }
 }
 
@@ -134,6 +200,10 @@ pub enum StateError {
     /// Metadata key exceeds limits (keys are bounded to keep snapshots
     /// bounded; 256 bytes is generous for tag-style metadata).
     MetaKeyTooLong(usize),
+    /// A sharded kernel received a command whose primary id routes to a
+    /// different shard — a routing-layer bug or a forged per-shard log.
+    /// Never raised when `n_shards == 1`.
+    WrongShard { id: u64, expected: u32 },
 }
 
 impl fmt::Display for StateError {
@@ -146,6 +216,9 @@ impl fmt::Display for StateError {
                 write!(f, "dimension mismatch: expected {expected}, got {got}")
             }
             StateError::MetaKeyTooLong(n) => write!(f, "metadata key too long ({n} bytes)"),
+            StateError::WrongShard { id, expected } => {
+                write!(f, "id {id} routes to shard {expected}, not this shard")
+            }
         }
     }
 }
@@ -191,7 +264,8 @@ const MAX_META_KEY: usize = 256;
 
 /// Snapshot framing constants (shared with [`crate::snapshot`]).
 pub(crate) const STATE_MAGIC: u32 = 0x564C_4F52; // "VLOR"
-pub(crate) const STATE_VERSION: u32 = 1;
+/// Version 2 added the shard spec to [`KernelConfig`] (PR: sharded kernel).
+pub(crate) const STATE_VERSION: u32 = 2;
 
 impl Kernel {
     pub fn new(config: KernelConfig) -> Self {
@@ -293,6 +367,7 @@ impl Kernel {
                 // The contract check runs on the canonical path too: a
                 // replicated/forged log cannot smuggle in raws outside the
                 // accumulator contract (DESIGN §6).
+                self.check_owned(*id)?;
                 self.config.policy.validate_raw(raw, self.config.dim)?;
                 if self.id_ever_used(*id) {
                     return Err(StateError::DuplicateId(*id));
@@ -312,6 +387,7 @@ impl Kernel {
                     }
                 }
                 for (id, raw) in items {
+                    self.check_owned(*id)?;
                     self.config.policy.validate_raw(raw, self.config.dim)?;
                     if self.id_ever_used(*id) {
                         return Err(StateError::DuplicateId(*id));
@@ -325,6 +401,7 @@ impl Kernel {
                 }
             }
             CanonCommand::Delete { id } => {
+                self.check_owned(*id)?;
                 let removed = match &mut self.index {
                     IndexImpl::Hnsw(h) => h.delete(*id),
                     IndexImpl::Flat(f) => f.delete(*id),
@@ -336,15 +413,22 @@ impl Kernel {
                 self.meta.remove(id);
             }
             CanonCommand::Link { from, to } => {
+                // Links live on the shard that owns `from`. `to` can only
+                // be checked locally when this shard owns it; a remote `to`
+                // was checked by the sharded router before the command was
+                // logged (same contract as boundary validation: checked
+                // once, upstream of the log).
+                self.check_owned(*from)?;
                 if !self.contains(*from) {
                     return Err(StateError::UnknownId(*from));
                 }
-                if !self.contains(*to) {
+                if self.config.shard.owns(*to) && !self.contains(*to) {
                     return Err(StateError::UnknownId(*to));
                 }
                 self.links.link(*from, *to);
             }
             CanonCommand::Unlink { from, to } => {
+                self.check_owned(*from)?;
                 if !self.links.has_link(*from, *to) {
                     return Err(StateError::UnknownId(*from));
                 }
@@ -354,6 +438,7 @@ impl Kernel {
                 if key.len() > MAX_META_KEY {
                     return Err(StateError::MetaKeyTooLong(key.len()));
                 }
+                self.check_owned(*id)?;
                 if !self.contains(*id) {
                     return Err(StateError::UnknownId(*id));
                 }
@@ -365,10 +450,26 @@ impl Kernel {
     }
 
     /// Ids are never reused, even after deletion (replay invariance).
-    fn id_ever_used(&self, id: u64) -> bool {
+    /// Public so the sharded router can pre-validate batches atomically
+    /// across shards before mutating any of them.
+    pub fn ever_contains(&self, id: u64) -> bool {
         match &self.index {
             IndexImpl::Hnsw(h) => h.store().ever_contains(id),
             IndexImpl::Flat(f) => f.store().ever_contains(id),
+        }
+    }
+
+    fn id_ever_used(&self, id: u64) -> bool {
+        self.ever_contains(id)
+    }
+
+    /// Routing-invariant check: a sharded kernel only accepts commands for
+    /// ids it owns. A no-op for the unsharded (`n_shards == 1`) contract.
+    fn check_owned(&self, id: u64) -> Result<(), StateError> {
+        if self.config.shard.owns(id) {
+            Ok(())
+        } else {
+            Err(StateError::WrongShard { id, expected: self.config.shard.shard_of(id) })
         }
     }
 

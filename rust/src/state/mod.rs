@@ -12,6 +12,8 @@
 
 pub mod command;
 pub mod kernel;
+pub mod sharded;
 
 pub use command::{CanonCommand, Command};
-pub use kernel::{Hit, IndexKind, Kernel, KernelConfig, StateError};
+pub use kernel::{Hit, IndexKind, Kernel, KernelConfig, ShardSpec, StateError};
+pub use sharded::{Routed, ShardApply, ShardedKernel};

@@ -1,0 +1,602 @@
+//! Sharded kernel: N independent [`Kernel`] state machines behind one
+//! deterministic router (the ROADMAP's horizontal-scaling step).
+//!
+//! # Design
+//!
+//! **Routing.** Every external id belongs to exactly one shard:
+//! `shard_of(id) = splitmix64(id) % n_shards` (see
+//! [`crate::state::kernel::ShardSpec`]). The routing function is a pure
+//! function of the id and the shard count — no directory, no coordination,
+//! and any two nodes with the same `n_shards` agree on placement forever.
+//! splitmix64 gives avalanche-quality dispersion, so sequential client ids
+//! spread evenly instead of hot-spotting one shard.
+//!
+//! **Determinism.** Each shard is a full [`Kernel`]: a pure state machine
+//! whose state is a function of its own command subsequence. Because
+//! routing is deterministic, the global command sequence induces one
+//! deterministic subsequence per shard, so per-shard states — and their
+//! snapshot bytes and hashes — are replayable exactly like the single
+//! kernel (paper §3.1, applied per partition).
+//!
+//! **Search fan-out and bit-exact merge.** A query fans out to every shard
+//! (scoped threads above a corpus-size threshold, inline below it); each
+//! shard returns its top-k ordered by
+//! `(dist_raw, id)`. Results are collected *in shard order* (never in
+//! completion order) and combined by a k-way merge on the same
+//! `(dist_raw, id)` key. The merge is therefore a pure function of the
+//! per-shard result lists: thread scheduling cannot influence the output,
+//! and with an exact (flat) index the merged top-k is bit-identical to a
+//! single kernel holding all vectors (integer distances are exact and ids
+//! are unique, so the total order has no ties to resolve
+//! nondeterministically).
+//!
+//! **Cross-shard links.** A link `from → to` lives on the shard that owns
+//! `from`. The router checks `to` globally before logging the command;
+//! per-shard replay then accepts remote `to` ids without a local check
+//! (checked-once-upstream, like boundary validation). Deleting an id emits
+//! explicit `Unlink` commands to the other shards that point at it, so the
+//! no-dangling-links invariant survives sharding *and* stays in the
+//! per-shard logs (replay-pure; no hidden side effects).
+//!
+//! **Root-hash manifest.** Convergence checks compare per-shard FNV state
+//! hashes plus a combined root: `root = fnv(n_shards ‖ h_0 ‖ … ‖ h_{n-1})`.
+//! Two sharded nodes verify shard-by-shard (pinpointing a diverged shard)
+//! and summarize with one root value (paper §8.1's `H_A ≡ H_B`, lifted to
+//! the sharded deployment). [`crate::snapshot::ShardedSnapshot`] persists
+//! the same manifest with audit-grade SHA-256 digests per shard.
+
+use crate::hash::Fnv1a64;
+use crate::state::command::{CanonCommand, Command};
+use crate::state::kernel::{Hit, Kernel, KernelConfig, StateError};
+use crate::vector::FixedVector;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One per-shard log record produced by a routed application: `command`
+/// was applied on `shard` at that shard's local sequence number `seq`.
+/// This is exactly what the node appends to shard `shard`'s WAL.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Routed {
+    pub shard: u32,
+    /// The shard's logical clock *before* the command applied (i.e. the
+    /// command moved the shard from `seq` to `seq + 1`).
+    pub seq: u64,
+    pub command: CanonCommand,
+}
+
+/// Result of applying one external command through the router.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardApply {
+    /// The canonical form of the submitted command (what a single-kernel
+    /// deployment would log).
+    pub canon: CanonCommand,
+    /// The per-shard records actually applied, in deterministic order.
+    /// Usually one; an `InsertBatch` yields one per participating shard,
+    /// and a `Delete` may add cross-shard `Unlink` cleanup records.
+    pub applied: Vec<Routed>,
+}
+
+/// N independent kernels behind a deterministic router. See the module
+/// docs for the design; the unsharded reference contract is `n_shards = 1`,
+/// where every operation degenerates to the plain [`Kernel`] behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedKernel {
+    shards: Vec<Kernel>,
+}
+
+impl ShardedKernel {
+    /// Build `n_shards` empty kernels from a base config (the base's own
+    /// shard spec is overwritten per shard).
+    pub fn new(base: KernelConfig, n_shards: u32) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        let shards = (0..n_shards)
+            .map(|s| Kernel::new(base.clone().with_shard(n_shards, s)))
+            .collect();
+        Self { shards }
+    }
+
+    /// Wrap an existing unsharded kernel as a 1-shard deployment
+    /// (bit-compatible with its previous behaviour).
+    pub fn from_single(kernel: Kernel) -> Self {
+        assert_eq!(
+            kernel.config().shard.n_shards,
+            1,
+            "from_single requires an unsharded kernel config"
+        );
+        Self { shards: vec![kernel] }
+    }
+
+    /// Rebuild from already-sharded kernels (snapshot restore). Shard
+    /// specs must form a consistent deployment.
+    pub fn from_shards(shards: Vec<Kernel>) -> Self {
+        assert!(!shards.is_empty(), "need at least one shard");
+        let n = shards.len() as u32;
+        for (i, k) in shards.iter().enumerate() {
+            assert_eq!(k.config().shard.n_shards, n, "shard {i}: wrong n_shards");
+            assert_eq!(k.config().shard.shard_id, i as u32, "shard {i}: wrong shard_id");
+        }
+        Self { shards }
+    }
+
+    pub fn n_shards(&self) -> u32 {
+        self.shards.len() as u32
+    }
+
+    /// The shard an external id routes to.
+    pub fn shard_of(&self, id: u64) -> u32 {
+        self.shards[0].config().shard.shard_of(id)
+    }
+
+    /// Read access to one shard's kernel.
+    pub fn shard(&self, i: u32) -> &Kernel {
+        &self.shards[i as usize]
+    }
+
+    pub fn shards(&self) -> &[Kernel] {
+        &self.shards
+    }
+
+    /// The deployment config (shard 0's view; all shards share everything
+    /// but `shard.shard_id`).
+    pub fn config(&self) -> &KernelConfig {
+        self.shards[0].config()
+    }
+
+    /// Total live vectors across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(Kernel::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total applied commands across shards. Note: under `n_shards > 1`
+    /// this counts per-shard records (a batch splits; a delete may add
+    /// cleanup unlinks), so it is the sum of shard clocks, not the count
+    /// of client submissions.
+    pub fn seq(&self) -> u64 {
+        self.shards.iter().map(Kernel::seq).sum()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.owner(id).contains(id)
+    }
+
+    pub fn get_raw(&self, id: u64) -> Option<&[i32]> {
+        self.owner(id).get_raw(id)
+    }
+
+    pub fn get_f32(&self, id: u64) -> Option<Vec<f32>> {
+        self.owner(id).get_f32(id)
+    }
+
+    pub fn meta_of(&self, id: u64) -> Option<&std::collections::BTreeMap<String, String>> {
+        self.owner(id).meta_of(id)
+    }
+
+    /// Whether the directed link exists (links live on `from`'s shard).
+    pub fn has_link(&self, from: u64, to: u64) -> bool {
+        self.owner(from).links().has_link(from, to)
+    }
+
+    fn owner(&self, id: u64) -> &Kernel {
+        &self.shards[self.shard_of(id) as usize]
+    }
+
+    /// Boundary + routed transition: validate/canonicalize the external
+    /// command, route it, and return both the canonical command and the
+    /// per-shard records (for per-shard WAL/replication logs).
+    pub fn apply(&mut self, cmd: Command) -> Result<ShardApply, StateError> {
+        let canon = self.shards[0].canonicalize(cmd)?;
+        let applied = self.apply_canon(&canon)?;
+        Ok(ShardApply { canon, applied })
+    }
+
+    /// Route an already-canonical command (replication ingest). Atomic:
+    /// every failure mode is checked before any shard mutates, so an error
+    /// leaves all shards untouched.
+    pub fn apply_canon(&mut self, canon: &CanonCommand) -> Result<Vec<Routed>, StateError> {
+        match canon {
+            CanonCommand::Insert { id, .. } => {
+                let s = self.shard_of(*id);
+                self.route(s, canon.clone())
+            }
+            CanonCommand::InsertBatch { items } => self.apply_batch(items),
+            CanonCommand::Delete { id } => self.apply_delete(*id),
+            CanonCommand::Link { from, to } => {
+                // Global precondition (single-kernel parity, same error
+                // order): both endpoints must be live somewhere.
+                if !self.contains(*from) {
+                    return Err(StateError::UnknownId(*from));
+                }
+                if !self.contains(*to) {
+                    return Err(StateError::UnknownId(*to));
+                }
+                let s = self.shard_of(*from);
+                self.route(s, canon.clone())
+            }
+            CanonCommand::Unlink { from, .. } => {
+                let s = self.shard_of(*from);
+                self.route(s, canon.clone())
+            }
+            CanonCommand::SetMeta { id, .. } => {
+                let s = self.shard_of(*id);
+                self.route(s, canon.clone())
+            }
+        }
+    }
+
+    /// Apply a command directly to one shard, bypassing the router — the
+    /// per-shard WAL replay / log-shipping ingest path. The shard's own
+    /// `WrongShard` check still rejects misrouted records.
+    pub fn apply_canon_to_shard(
+        &mut self,
+        shard: u32,
+        canon: &CanonCommand,
+    ) -> Result<(), StateError> {
+        self.shards[shard as usize].apply_canon(canon)
+    }
+
+    fn route(&mut self, shard: u32, command: CanonCommand) -> Result<Vec<Routed>, StateError> {
+        let kernel = &mut self.shards[shard as usize];
+        let seq = kernel.seq();
+        kernel.apply_canon(&command)?;
+        Ok(vec![Routed { shard, seq, command }])
+    }
+
+    /// Split a canonical (ascending-id) batch by shard and apply the
+    /// sub-batches. Pre-validates every item on its target shard first so
+    /// the whole batch is atomic across shards.
+    fn apply_batch(&mut self, items: &[(u64, Vec<i32>)]) -> Result<Vec<Routed>, StateError> {
+        if items.is_empty() || self.shards.len() == 1 {
+            // Single-shard deployments (and the degenerate empty batch)
+            // keep exact single-kernel semantics: one atomic record.
+            return self.route(0, CanonCommand::InsertBatch { items: items.to_vec() });
+        }
+        // Pre-validate in *batch order* — the same checks, in the same
+        // order, a single kernel runs — so the selected error is identical
+        // to the unsharded reference, and no shard mutates on rejection.
+        for w in items.windows(2) {
+            if w[0].0 >= w[1].0 {
+                return Err(StateError::DuplicateId(w[1].0));
+            }
+        }
+        let config = self.shards[0].config();
+        for (id, raw) in items {
+            config.policy.validate_raw(raw, config.dim)?;
+            if self.shards[self.shard_of(*id) as usize].ever_contains(*id) {
+                return Err(StateError::DuplicateId(*id));
+            }
+        }
+        let n = self.shards.len();
+        let mut per_shard: Vec<Vec<(u64, Vec<i32>)>> = vec![Vec::new(); n];
+        for (id, raw) in items {
+            // Splitting a sorted batch preserves per-shard sortedness.
+            per_shard[self.shard_of(*id) as usize].push((*id, raw.clone()));
+        }
+        let mut applied = Vec::new();
+        for (s, sub) in per_shard.into_iter().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            // Cannot fail: exactly the checks above, re-run by the kernel.
+            applied.extend(self.route(s as u32, CanonCommand::InsertBatch { items: sub })?);
+        }
+        Ok(applied)
+    }
+
+    /// Delete an id, emitting explicit cross-shard `Unlink` cleanup for
+    /// edges on other shards that point at it (deterministic order: shard
+    /// index, then ascending `from` id).
+    fn apply_delete(&mut self, id: u64) -> Result<Vec<Routed>, StateError> {
+        let owner = self.shard_of(id);
+        if !self.shards[owner as usize].contains(id) {
+            return Err(StateError::UnknownId(id));
+        }
+        let mut applied = Vec::new();
+        for s in 0..self.shards.len() as u32 {
+            if s == owner {
+                continue; // the owner's remove_node cleans local edges
+            }
+            for from in self.shards[s as usize].links().links_to(id) {
+                applied.extend(self.route(s, CanonCommand::Unlink { from, to: id })?);
+            }
+        }
+        applied.extend(self.route(owner, CanonCommand::Delete { id })?);
+        Ok(applied)
+    }
+
+    /// Below this many live vectors the per-shard searches run on the
+    /// calling thread: spawning OS threads costs more than the scans they
+    /// would parallelize. The merge is a pure function of the per-shard
+    /// results either way, so the threshold cannot affect results — only
+    /// latency. (A persistent worker pool is a ROADMAP follow-on.)
+    const PARALLEL_SEARCH_MIN_VECTORS: usize = 4096;
+
+    /// k-NN over raw quantized values: fan out to every shard (scoped
+    /// threads for large corpora, inline for small ones) and merge.
+    /// Bit-identical to a single kernel holding all vectors when the index
+    /// is exact; always identical across runs and platforms regardless of
+    /// thread scheduling (results are collected in shard order and merged
+    /// by the total order `(dist_raw, id)`).
+    pub fn search_raw(&self, query: &[i32], k: usize) -> Result<Vec<Hit>, StateError> {
+        if self.shards.len() == 1 {
+            return self.shards[0].search_raw(query, k);
+        }
+        // Validate once up front (all shards share the contract) so the
+        // fan-out below cannot fail per-shard.
+        let config = self.shards[0].config();
+        if query.len() != config.dim {
+            return Err(StateError::DimMismatch { expected: config.dim, got: query.len() });
+        }
+        config.policy.validate_raw(query, config.dim)?;
+        let per_shard: Vec<Vec<Hit>> = if self.len() < Self::PARALLEL_SEARCH_MIN_VECTORS {
+            self.shards
+                .iter()
+                .map(|shard| shard.search_raw(query, k))
+                .collect::<Result<Vec<_>, StateError>>()?
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter()
+                    .map(|shard| scope.spawn(move || shard.search_raw(query, k)))
+                    .collect();
+                // Join in shard order: reassembly is deterministic no
+                // matter which thread finishes first.
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard search thread panicked"))
+                    .collect::<Result<Vec<_>, StateError>>()
+            })?
+        };
+        Ok(merge_hits(&per_shard, k))
+    }
+
+    /// k-NN over a float query (same boundary as inserts, then integer
+    /// search — see [`Kernel::search_f32`]).
+    pub fn search_f32(&self, query: &[f32], k: usize) -> Result<Vec<Hit>, StateError> {
+        let config = self.shards[0].config();
+        let fv = FixedVector::from_f32(query, config.dim, &config.policy)?;
+        self.search_raw(fv.raw(), k)
+    }
+
+    /// Per-shard FNV state hashes (the manifest replicas compare
+    /// shard-by-shard to pinpoint divergence).
+    pub fn shard_hashes(&self) -> Vec<u64> {
+        self.shards.iter().map(Kernel::state_hash).collect()
+    }
+
+    /// Combined root hash: `fnv(n_shards ‖ h_0 ‖ … ‖ h_{n-1})`. A pure
+    /// function of the per-shard hashes, so two nodes that agree on every
+    /// shard agree on the root, and any single-shard divergence flips it.
+    pub fn root_hash(&self) -> u64 {
+        root_hash_of(&self.shard_hashes())
+    }
+}
+
+/// Root hash over an ordered list of per-shard state hashes (exposed so
+/// snapshot manifests and remote verification can recompute it without a
+/// kernel).
+pub fn root_hash_of(shard_hashes: &[u64]) -> u64 {
+    let mut h = Fnv1a64::new();
+    h.update_u32(shard_hashes.len() as u32);
+    for &hash in shard_hashes {
+        h.update_u64(hash);
+    }
+    h.finish()
+}
+
+/// Deterministic k-way merge of per-shard hit lists (each already ordered
+/// by `(dist_raw, id)`) into the global top-k under the same total order.
+fn merge_hits(per_shard: &[Vec<Hit>], k: usize) -> Vec<Hit> {
+    let mut heap: BinaryHeap<Reverse<(i64, u64, usize)>> = BinaryHeap::new();
+    let mut cursors = vec![0usize; per_shard.len()];
+    for (s, hits) in per_shard.iter().enumerate() {
+        if let Some(h) = hits.first() {
+            heap.push(Reverse((h.dist_raw, h.id, s)));
+        }
+    }
+    let mut out = Vec::with_capacity(k.min(per_shard.iter().map(Vec::len).sum()));
+    while out.len() < k {
+        let Some(Reverse((_, _, s))) = heap.pop() else { break };
+        let i = cursors[s];
+        out.push(per_shard[s][i]);
+        cursors[s] = i + 1;
+        if let Some(h) = per_shard[s].get(i + 1) {
+            heap.push(Reverse((h.dist_raw, h.id, s)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_config(dim: usize) -> KernelConfig {
+        KernelConfig::default_q16(dim).with_flat_index()
+    }
+
+    fn vecs(n: u64, dim: usize) -> Vec<(u64, Vec<f32>)> {
+        (0..n)
+            .map(|i| {
+                let v: Vec<f32> = (0..dim)
+                    .map(|j| ((i * dim as u64 + j as u64) as f32 * 0.113).sin() * 0.8)
+                    .collect();
+                (i, v)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn routing_is_total_and_stable() {
+        let sk = ShardedKernel::new(flat_config(4), 4);
+        for id in 0..1000u64 {
+            let s = sk.shard_of(id);
+            assert!(s < 4);
+            assert_eq!(s, sk.shard_of(id), "routing must be a pure function");
+        }
+        // splitmix64 disperses: every shard owns a decent share
+        let mut counts = [0usize; 4];
+        for id in 0..1000u64 {
+            counts[sk.shard_of(id) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 150), "skewed routing: {counts:?}");
+    }
+
+    #[test]
+    fn sharded_search_matches_single_kernel_exactly() {
+        for n_shards in [1u32, 2, 4, 8] {
+            let mut single = Kernel::new(flat_config(8));
+            let mut sharded = ShardedKernel::new(flat_config(8), n_shards);
+            for (id, v) in vecs(200, 8) {
+                single.apply(Command::insert(id, v.clone())).unwrap();
+                sharded.apply(Command::insert(id, v)).unwrap();
+            }
+            for t in 0..20 {
+                let q: Vec<f32> =
+                    (0..8).map(|j| ((t * 8 + j) as f32 * 0.07).cos() * 0.7).collect();
+                assert_eq!(
+                    sharded.search_f32(&q, 10).unwrap(),
+                    single.search_f32(&q, 10).unwrap(),
+                    "n_shards={n_shards} query {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_pure_function_of_shard_results() {
+        let a = vec![
+            Hit { id: 1, dist_raw: 5, dist: 0.0 },
+            Hit { id: 9, dist_raw: 20, dist: 0.0 },
+        ];
+        let b = vec![
+            Hit { id: 2, dist_raw: 5, dist: 0.0 },
+            Hit { id: 3, dist_raw: 7, dist: 0.0 },
+        ];
+        let merged = merge_hits(&[a.clone(), b.clone()], 3);
+        // ties on dist_raw resolve by id: 1 before 2
+        assert_eq!(merged.iter().map(|h| h.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        // k larger than total yields everything, still ordered
+        let all = merge_hits(&[a, b], 10);
+        assert_eq!(all.iter().map(|h| h.id).collect::<Vec<_>>(), vec![1, 2, 3, 9]);
+        assert!(merge_hits(&[], 5).is_empty());
+    }
+
+    #[test]
+    fn batch_splits_and_stays_atomic_across_shards() {
+        let mut sk = ShardedKernel::new(flat_config(2), 4);
+        let items: Vec<(u64, Vec<f32>)> =
+            (0..40).map(|i| (i, vec![i as f32 * 0.01, 0.5])).collect();
+        let result = sk.apply(Command::InsertBatch { items }).unwrap();
+        assert!(result.applied.len() > 1, "40 ids should hit several shards");
+        assert_eq!(sk.len(), 40);
+
+        // one duplicate poisons the whole batch on every shard
+        let hashes_before = sk.shard_hashes();
+        let err = sk
+            .apply(Command::InsertBatch {
+                items: vec![(100, vec![0.0, 0.0]), (7, vec![0.0, 0.0])],
+            })
+            .unwrap_err();
+        assert_eq!(err, StateError::DuplicateId(7));
+        assert_eq!(sk.shard_hashes(), hashes_before, "failed batch must not touch any shard");
+        assert!(!sk.contains(100));
+    }
+
+    #[test]
+    fn cross_shard_links_and_delete_cleanup() {
+        let mut sk = ShardedKernel::new(flat_config(2), 4);
+        // find two ids on different shards
+        let a = 0u64;
+        let b = (1..64).find(|&i| sk.shard_of(i) != sk.shard_of(a)).unwrap();
+        sk.apply(Command::insert(a, vec![0.1, 0.2])).unwrap();
+        sk.apply(Command::insert(b, vec![0.3, 0.4])).unwrap();
+        sk.apply(Command::Link { from: a, to: b }).unwrap();
+        assert!(sk.has_link(a, b));
+
+        // linking to a dead id fails with single-kernel error semantics
+        let err = sk.apply(Command::Link { from: a, to: 9999 }).unwrap_err();
+        assert_eq!(err, StateError::UnknownId(9999));
+
+        // deleting b emits an unlink on a's shard before the delete
+        let result = sk.apply(Command::Delete { id: b }).unwrap();
+        let kinds: Vec<&str> = result.applied.iter().map(|r| r.command.name()).collect();
+        assert_eq!(kinds, vec!["unlink", "delete"]);
+        assert!(!sk.has_link(a, b), "dangling link must be cleaned up");
+        assert!(!sk.contains(b));
+    }
+
+    #[test]
+    fn replaying_per_shard_logs_reproduces_root_hash() {
+        let mut sk = ShardedKernel::new(flat_config(4), 4);
+        let mut logs: Vec<Vec<CanonCommand>> = vec![Vec::new(); 4];
+        for (id, v) in vecs(120, 4) {
+            let r = sk.apply(Command::insert(id, v)).unwrap();
+            for routed in r.applied {
+                logs[routed.shard as usize].push(routed.command);
+            }
+        }
+        for id in [3u64, 17, 40] {
+            let r = sk.apply(Command::Delete { id }).unwrap();
+            for routed in r.applied {
+                logs[routed.shard as usize].push(routed.command);
+            }
+        }
+        let mut replayed = ShardedKernel::new(flat_config(4), 4);
+        for (s, log) in logs.iter().enumerate() {
+            for cmd in log {
+                replayed.apply_canon_to_shard(s as u32, cmd).unwrap();
+            }
+        }
+        assert_eq!(replayed.shard_hashes(), sk.shard_hashes());
+        assert_eq!(replayed.root_hash(), sk.root_hash());
+        assert_eq!(replayed, sk);
+    }
+
+    #[test]
+    fn misrouted_log_entry_is_rejected() {
+        let mut sk = ShardedKernel::new(flat_config(2), 4);
+        let id = 5u64;
+        let wrong = (sk.shard_of(id) + 1) % 4;
+        let canon = CanonCommand::Insert { id, raw: vec![100, 200] };
+        let err = sk.apply_canon_to_shard(wrong, &canon).unwrap_err();
+        assert!(matches!(err, StateError::WrongShard { .. }), "got {err:?}");
+    }
+
+    #[test]
+    fn root_hash_covers_every_shard() {
+        let mut a = ShardedKernel::new(flat_config(2), 4);
+        let mut b = ShardedKernel::new(flat_config(2), 4);
+        for (id, v) in vecs(60, 2) {
+            a.apply(Command::insert(id, v.clone())).unwrap();
+            b.apply(Command::insert(id, v)).unwrap();
+        }
+        assert_eq!(a.root_hash(), b.root_hash());
+        // perturb one shard only
+        let id = (0..u64::MAX).find(|&i| !b.contains(i) && b.shard_of(i) == 2).unwrap();
+        b.apply(Command::insert(id, vec![0.9, 0.9])).unwrap();
+        assert_ne!(a.root_hash(), b.root_hash());
+        let (ha, hb) = (a.shard_hashes(), b.shard_hashes());
+        let diverged: Vec<usize> =
+            (0..4).filter(|&s| ha[s] != hb[s]).collect();
+        assert_eq!(diverged, vec![2], "manifest must pinpoint the diverged shard");
+    }
+
+    #[test]
+    fn single_shard_matches_plain_kernel_bit_for_bit() {
+        let mut plain = Kernel::new(KernelConfig::default_q16(4));
+        let mut sk = ShardedKernel::new(KernelConfig::default_q16(4), 1);
+        for (id, v) in vecs(50, 4) {
+            plain.apply(Command::insert(id, v.clone())).unwrap();
+            sk.apply(Command::insert(id, v)).unwrap();
+        }
+        plain.apply(Command::Delete { id: 7 }).unwrap();
+        sk.apply(Command::Delete { id: 7 }).unwrap();
+        assert_eq!(sk.shard(0).state_hash(), plain.state_hash());
+        assert_eq!(sk.shard(0).to_state_bytes(), plain.to_state_bytes());
+    }
+}

@@ -18,6 +18,7 @@
 //! data loss, not a crash artifact, and must be surfaced.
 
 use crate::codec::{DecodeError, Decoder, Encoder};
+use crate::hash::crc32;
 use crate::state::CanonCommand;
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Write};
@@ -77,7 +78,7 @@ impl WalWriter {
         payload.put_u64(seq);
         command.encode(&mut payload);
         let payload = payload.into_vec();
-        let crc = crc32fast::hash(&payload);
+        let crc = crc32(&payload);
         let mut frame = Encoder::with_capacity(payload.len() + 8);
         frame.put_u32(payload.len() as u32);
         frame.put_u32(crc);
@@ -163,7 +164,7 @@ pub fn recover_bytes(bytes: &[u8]) -> Result<Recovery, WalError> {
             break;
         }
         let payload = &bytes[pos + 8..pos + 8 + len];
-        if crc32fast::hash(payload) != crc {
+        if crc32(payload) != crc {
             // CRC mismatch: if this is the final record it's a torn tail;
             // otherwise it's mid-log corruption.
             if pos + 8 + len == bytes.len() {

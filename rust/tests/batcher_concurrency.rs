@@ -1,0 +1,180 @@
+//! Concurrency test for the embed micro-batcher (`node/batcher.rs`):
+//! many threads submitting at once, every response must arrive, responses
+//! must belong to their own request (no cross-wiring under batching), and
+//! the `BatchCounters` must stay consistent — `requests` equals the sum of
+//! executed batch sizes and the number of client calls.
+//!
+//! Uses a deterministic mock `EmbedBackend` (the batching machinery is
+//! model-agnostic), so this runs without PJRT artifacts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use valori::hash::fnv1a64;
+use valori::node::{EmbedBackend, EmbedBatcher};
+
+/// Deterministic mock model: v = f(text), with a tiny stall to force
+/// batches to fill under concurrency. Counts how many texts it embeds so
+/// the test can cross-check the batcher's own counters.
+struct MockBackend {
+    batch: usize,
+    dim: usize,
+    embedded: Arc<AtomicU64>,
+    calls: Arc<AtomicU64>,
+}
+
+fn mock_vector(text: &str, dim: usize) -> Vec<f32> {
+    let h = fnv1a64(text.as_bytes());
+    (0..dim)
+        .map(|j| ((h.rotate_left(j as u32 * 7) & 0xFFFF) as f32) / 65536.0)
+        .collect()
+}
+
+impl EmbedBackend for MockBackend {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn embed_texts(&self, texts: &[&str]) -> valori::Result<Vec<Vec<f32>>> {
+        assert!(texts.len() <= self.batch, "batcher overflowed the model batch");
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.embedded.fetch_add(texts.len() as u64, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(1));
+        Ok(texts.iter().map(|t| mock_vector(t, self.dim)).collect())
+    }
+}
+
+#[test]
+fn many_threads_all_responses_arrive_and_counters_balance() {
+    const THREADS: u64 = 16;
+    const PER_THREAD: u64 = 25;
+
+    let embedded = Arc::new(AtomicU64::new(0));
+    let calls = Arc::new(AtomicU64::new(0));
+    let (embedded_l, calls_l) = (Arc::clone(&embedded), Arc::clone(&calls));
+    let batcher = EmbedBatcher::start_with_backend(
+        move || Ok(MockBackend { batch: 8, dim: 16, embedded: embedded_l, calls: calls_l }),
+        Duration::from_millis(5),
+    )
+    .unwrap();
+    let handle = batcher.handle();
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|w| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    let text = format!("doc {w}/{i}");
+                    let v = h.embed(&text).unwrap();
+                    // response integrity: each caller gets *its* vector
+                    assert_eq!(v, mock_vector(&text, 16), "cross-wired response for {text}");
+                }
+            })
+        })
+        .collect();
+    for t in workers {
+        t.join().expect("worker must not die: every response must arrive");
+    }
+
+    let (batches, requests) = handle.counters();
+    let stats = batcher.stop();
+    let total = THREADS * PER_THREAD;
+    // every request was served and counted exactly once
+    assert_eq!(requests, total, "requests counter");
+    assert_eq!(stats.requests, total, "stats.requests");
+    assert_eq!(stats.batches, batches, "stats/counters must agree");
+    // requests == sum of batch sizes, as observed by the model itself
+    assert_eq!(embedded.load(Ordering::Relaxed), total, "model saw every text once");
+    assert_eq!(calls.load(Ordering::Relaxed), batches, "one model call per batch");
+    // batching actually happened under load (window 5ms, batch 8):
+    // upper bound is trivially total; require real fan-in.
+    assert!(batches < total, "no batching occurred ({batches} batches for {total} requests)");
+    assert!(batches >= total / 8, "cannot fit more than 8 per batch");
+}
+
+#[test]
+fn embed_many_interleaved_with_singles() {
+    let batcher = EmbedBatcher::start_with_backend(
+        move || {
+            Ok(MockBackend {
+                batch: 4,
+                dim: 8,
+                embedded: Arc::new(AtomicU64::new(0)),
+                calls: Arc::new(AtomicU64::new(0)),
+            })
+        },
+        Duration::from_millis(2),
+    )
+    .unwrap();
+    let handle = batcher.handle();
+
+    let bulk = {
+        let h = handle.clone();
+        std::thread::spawn(move || {
+            let texts: Vec<String> = (0..30).map(|i| format!("bulk {i}")).collect();
+            let refs: Vec<&str> = texts.iter().map(String::as_str).collect();
+            let out = h.embed_many(&refs).unwrap();
+            assert_eq!(out.len(), 30);
+            for (t, v) in refs.iter().zip(&out) {
+                assert_eq!(v, &mock_vector(t, 8));
+            }
+        })
+    };
+    let singles: Vec<_> = (0..4)
+        .map(|w| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                for i in 0..10 {
+                    let text = format!("single {w}/{i}");
+                    assert_eq!(h.embed(&text).unwrap(), mock_vector(&text, 8));
+                }
+            })
+        })
+        .collect();
+    bulk.join().unwrap();
+    for t in singles {
+        t.join().unwrap();
+    }
+    let stats = batcher.stop();
+    assert_eq!(stats.requests, 30 + 40);
+    assert!(stats.batches >= (30 + 40) / 4, "batch size 4 bounds the fan-in");
+}
+
+#[test]
+fn backend_error_propagates_to_every_waiter_without_hanging() {
+    struct FailingBackend;
+    impl EmbedBackend for FailingBackend {
+        fn batch_size(&self) -> usize {
+            8
+        }
+        fn embed_texts(&self, _texts: &[&str]) -> valori::Result<Vec<Vec<f32>>> {
+            Err(valori::Error::Runtime("model exploded".into()))
+        }
+    }
+    let batcher =
+        EmbedBatcher::start_with_backend(|| Ok(FailingBackend), Duration::from_millis(5))
+            .unwrap();
+    let handle = batcher.handle();
+    let workers: Vec<_> = (0..8)
+        .map(|_| {
+            let h = handle.clone();
+            std::thread::spawn(move || h.embed("boom").unwrap_err().to_string())
+        })
+        .collect();
+    for t in workers {
+        let msg = t.join().unwrap();
+        assert!(msg.contains("model exploded"), "got: {msg}");
+    }
+    let stats = batcher.stop();
+    assert_eq!(stats.requests, 8, "failed requests still count");
+}
+
+#[test]
+fn loader_failure_surfaces_at_start() {
+    let err = EmbedBatcher::start_with_backend(
+        || -> valori::Result<MockBackend> { Err(valori::Error::Runtime("no artifacts".into())) },
+        Duration::from_millis(1),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("no artifacts"));
+}

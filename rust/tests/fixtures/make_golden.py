@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Generate the golden snapshot fixture for tests/golden_snapshot.rs.
+
+This script mirrors, byte for byte, the Rust deterministic codec
+(`rust/src/codec/mod.rs`), the kernel state layout
+(`Kernel::encode_state`, STATE_VERSION 2) and the snapshot framing
+(`Snapshot::to_bytes`). It exists so the fixture can be regenerated (and
+independently audited) without a Rust toolchain; the Rust test *also*
+rebuilds the same state through `Kernel::apply_canon` and asserts both
+byte streams agree, so a drift in either implementation fails loudly.
+
+Run:  python3 make_golden.py   (from this directory)
+
+Fixture state (dim=2, flat index, L2, default policy, unsharded):
+    insert id=1 raw=[ 65536, -32768]
+    insert id=2 raw=[ 13107,  26214]
+    insert id=7 raw=[     0, 196608]
+    delete id=2
+    link   1 -> 7
+    set_meta id=1 "src" = "golden"
+"""
+
+import hashlib
+import struct
+import zlib
+from pathlib import Path
+
+HERE = Path(__file__).parent
+
+
+def u8(v):
+    return struct.pack("<B", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def i32(v):
+    return struct.pack("<i", v)
+
+
+def f32(v):
+    return struct.pack("<f", v)
+
+
+def put_str(s):
+    b = s.encode("utf-8")
+    return u32(len(b)) + b
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for byte in data:
+        h ^= byte
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def state_bytes() -> bytes:
+    out = b""
+    out += u32(0x564C4F52)  # STATE_MAGIC "VLOR"
+    out += u32(2)  # STATE_VERSION
+    # KernelConfig: dim, metric tag, index tag, hnsw params, policy, shard
+    out += u32(2)  # dim
+    out += u8(0)  # Metric::L2
+    out += u8(1)  # IndexKind::Flat
+    out += u32(16) + u32(32) + u32(150) + u32(128) + u32(8)  # HnswParams default
+    out += f32(4.0)  # policy.max_abs
+    out += u8(0)  # policy.normalize
+    out += u32(1) + u32(0)  # ShardSpec { n_shards: 1, shard_id: 0 }
+    out += u64(6)  # seq (6 applied commands)
+    # FlatIndex: metric tag + VecStore
+    out += u8(0)  # Metric::L2
+    out += u32(2)  # store dim
+    out += u32(3)  # slots
+    # slot 0: id 1, alive
+    out += u64(1) + u8(1) + u32(2) + i32(65536) + i32(-32768)
+    # slot 1: id 2, tombstoned
+    out += u64(2) + u8(0) + u32(2) + i32(13107) + i32(26214)
+    # slot 2: id 7, alive
+    out += u64(7) + u8(1) + u32(2) + i32(0) + i32(196608)
+    # LinkGraph: 1 from-entry: 1 -> {7}
+    out += u32(1) + u64(1) + u32(1) + u64(7)
+    # meta: { 1: { "src": "golden" } }
+    out += u32(1) + u64(1) + u32(1) + put_str("src") + put_str("golden")
+    return out
+
+
+def snapshot_bytes(state: bytes) -> bytes:
+    out = b""
+    out += u32(0x56534E50)  # SNAP_MAGIC "VSNP"
+    out += u32(1)  # SNAP_VERSION
+    out += u32(len(state)) + state  # put_bytes
+    out += u64(fnv1a64(state))
+    out += hashlib.sha256(state).digest()
+    out += u32(zlib.crc32(out) & 0xFFFFFFFF)
+    return out
+
+
+def main():
+    state = state_bytes()
+    snap = snapshot_bytes(state)
+    (HERE / "golden_snapshot_v2.bin").write_bytes(snap)
+    digests = "fnv {:016x}\nsha256 {}\n".format(
+        fnv1a64(state), hashlib.sha256(state).hexdigest()
+    )
+    (HERE / "golden_snapshot_v2.digests").write_text(digests)
+    print(f"state: {len(state)} bytes, snapshot: {len(snap)} bytes")
+    print(digests, end="")
+
+
+if __name__ == "__main__":
+    main()
