@@ -5,6 +5,8 @@
 //! under `rust/benches/` and by the experiment drivers that report the
 //! paper's latency numbers (§8.2).
 
+pub mod suite;
+
 use std::time::{Duration, Instant};
 
 /// Summary statistics for one benchmark, all in nanoseconds.

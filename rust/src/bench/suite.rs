@@ -1,0 +1,354 @@
+//! The `valori bench` performance suite — the repo's perf trajectory.
+//!
+//! Everything is deterministic up to wall-clock noise: the corpus is a
+//! pure function of a splitmix64 seed, queries are fixed, and every
+//! benched operation is the bit-exact production path. The suite also
+//! runs a faithful *pre-refactor reference* of the flat search hot path
+//! (per-slot `Vec<Vec<i32>>` storage, collect-every-hit + full sort) on
+//! the same corpus, so one run reports the arena + streaming-top-k
+//! speedup without needing an old binary.
+//!
+//! The result renders as a human table and serializes to JSON
+//! (`BENCH_search.json` at the repo root, written by the CLI) for CI
+//! trend tracking.
+
+use crate::bench::{bench, BenchConfig, Report, Stats};
+use crate::distance::{Metric, Scalar};
+use crate::hash::splitmix64;
+use crate::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
+use crate::json::Json;
+use crate::state::{CanonCommand, KernelConfig, ShardedKernel};
+
+/// Suite parameters (all CLI-overridable).
+#[derive(Debug, Clone, Copy)]
+pub struct SuiteConfig {
+    /// Flat / sharded corpus size.
+    pub n: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// Top-k for every search bench.
+    pub k: usize,
+    /// Shards for the sharded benches.
+    pub shards: u32,
+    /// Corpus seed.
+    pub seed: u64,
+    /// Items per benched `InsertBatch`.
+    pub batch: usize,
+    /// Timing harness settings.
+    pub bench: BenchConfig,
+}
+
+impl SuiteConfig {
+    /// The reference workload from the perf acceptance bar:
+    /// 50k × 256-dim Q16.16, top-10.
+    pub fn full() -> Self {
+        Self {
+            n: 50_000,
+            dim: 256,
+            k: 10,
+            shards: 4,
+            seed: 0x56414C4F,
+            batch: 512,
+            bench: BenchConfig::default(),
+        }
+    }
+
+    /// CI smoke variant: same shape, two orders of magnitude less work.
+    pub fn quick() -> Self {
+        Self { n: 5_000, bench: BenchConfig::quick(), ..Self::full() }
+    }
+}
+
+/// One benchmark row plus its workload descriptors.
+#[derive(Debug, Clone)]
+pub struct SuiteRow {
+    pub name: String,
+    pub n: usize,
+    pub stats: Stats,
+}
+
+/// The whole suite result (rendered to JSON by [`suite_json`]).
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    pub config_label: String,
+    pub n: usize,
+    pub dim: usize,
+    pub k: usize,
+    pub shards: u32,
+    pub seed: u64,
+    pub rows: Vec<SuiteRow>,
+}
+
+impl SuiteResult {
+    pub fn row(&self, name: &str) -> Option<&SuiteRow> {
+        self.rows.iter().find(|r| r.name == name)
+    }
+
+    /// p50 speedup of the arena flat search over the pre-refactor
+    /// reference path (the acceptance metric).
+    pub fn flat_speedup_p50(&self) -> Option<f64> {
+        let new = self.row("flat_search")?.stats.p50_ns;
+        let old = self.row("flat_search_prerefactor_reference")?.stats.p50_ns;
+        if new > 0.0 {
+            Some(old / new)
+        } else {
+            None
+        }
+    }
+}
+
+/// Deterministic raw Q16.16 component: |value| ≤ 2^16, well inside the
+/// boundary contract (max_abs = 4.0 ⇒ |raw| ≤ 2^18).
+fn raw_component(seed: u64, index: u64) -> i32 {
+    ((splitmix64(seed ^ index) % 131_072) as i64 - 65_536) as i32
+}
+
+/// One corpus row (row `i`, laid out as dim consecutive components).
+fn raw_row(seed: u64, i: u64, dim: usize) -> Vec<i32> {
+    (0..dim as u64).map(|j| raw_component(seed, i * dim as u64 + j)).collect()
+}
+
+/// Fixed query set (disjoint seed stream from the corpus).
+fn queries(seed: u64, count: usize, dim: usize) -> Vec<Vec<i32>> {
+    (0..count as u64).map(|i| raw_row(seed ^ 0x5155_4552_59, i, dim)).collect()
+}
+
+/// Faithful reconstruction of the pre-refactor flat search: one heap
+/// allocation per stored vector, per-row scalar distance through the
+/// boxed row, collect *every* hit, full `sort_by`, truncate. Kept as a
+/// benchmark-only reference so the suite reports the layout + streaming
+/// top-k win on every run. Results are asserted identical to the arena
+/// path (same integer math, same `(dist, id)` order).
+struct PreRefactorFlat {
+    vectors: Vec<Vec<i32>>,
+    ids: Vec<u64>,
+}
+
+impl PreRefactorFlat {
+    fn build(corpus: &[Vec<i32>]) -> Self {
+        Self {
+            vectors: corpus.to_vec(),
+            ids: (0..corpus.len() as u64).collect(),
+        }
+    }
+
+    fn search(&self, query: &[i32], k: usize) -> Vec<(i64, u64)> {
+        let mut hits: Vec<(i64, u64)> = self
+            .vectors
+            .iter()
+            .zip(&self.ids)
+            .map(|(v, &id)| (<i32 as Scalar>::distance(Metric::L2, query, v), id))
+            .collect();
+        hits.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        hits.truncate(k);
+        hits
+    }
+}
+
+/// Run the whole suite. Builds each workload, benches it, then drops it
+/// before the next one (bounds peak memory at roughly one corpus).
+pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
+    let mut rows: Vec<SuiteRow> = Vec::new();
+    let qs = queries(cfg.seed, 16, cfg.dim);
+    let mut report = Report::new(format!(
+        "valori bench [{label}] n={} dim={} k={} shards={}",
+        cfg.n, cfg.dim, cfg.k, cfg.shards
+    ));
+
+    // --- flat search: arena + blocked kernels + streaming top-k ---------
+    {
+        let corpus: Vec<Vec<i32>> =
+            (0..cfg.n as u64).map(|i| raw_row(cfg.seed, i, cfg.dim)).collect();
+        let mut flat: FlatIndex<i32> = FlatIndex::new(cfg.dim, Metric::L2);
+        for (i, v) in corpus.iter().enumerate() {
+            flat.insert(i as u64, v.clone());
+        }
+        let reference = PreRefactorFlat::build(&corpus);
+        // Bit-exactness spot check before timing anything.
+        for q in &qs {
+            let fast: Vec<(i64, u64)> =
+                flat.search(q, cfg.k).into_iter().map(|h| (h.dist, h.id)).collect();
+            assert_eq!(fast, reference.search(q, cfg.k), "arena search diverged from reference");
+        }
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % qs.len();
+            flat.search(&qs[qi], cfg.k)
+        });
+        rows.push(SuiteRow { name: "flat_search".into(), n: cfg.n, stats });
+        report.add("flat_search", stats);
+
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % qs.len();
+            reference.search(&qs[qi], cfg.k)
+        });
+        rows.push(SuiteRow {
+            name: "flat_search_prerefactor_reference".into(),
+            n: cfg.n,
+            stats,
+        });
+        report.add("flat_search_prerefactor_reference", stats);
+    }
+
+    // --- HNSW search (graph read path over the arena store) -------------
+    {
+        let n_hnsw = (cfg.n / 10).max(100);
+        let mut hnsw: Hnsw<i32> = Hnsw::new(cfg.dim, Metric::L2, HnswParams::default());
+        for i in 0..n_hnsw as u64 {
+            hnsw.insert(i, raw_row(cfg.seed, i, cfg.dim));
+        }
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % qs.len();
+            hnsw.search(&qs[qi], cfg.k)
+        });
+        rows.push(SuiteRow { name: "hnsw_search".into(), n: n_hnsw, stats });
+        report.add("hnsw_search", stats);
+    }
+
+    // --- sharded search (persistent worker-pool fan-out + merge) --------
+    {
+        let mut sk =
+            ShardedKernel::new(KernelConfig::default_q16(cfg.dim).with_flat_index(), cfg.shards);
+        let items: Vec<(u64, Vec<i32>)> =
+            (0..cfg.n as u64).map(|i| (i, raw_row(cfg.seed, i, cfg.dim))).collect();
+        for chunk in items.chunks(4096) {
+            sk.apply_canon(&CanonCommand::InsertBatch { items: chunk.to_vec() })
+                .expect("bench corpus insert");
+        }
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % qs.len();
+            sk.search_raw(&qs[qi], cfg.k).expect("bench search")
+        });
+        rows.push(SuiteRow { name: "sharded_search".into(), n: cfg.n, stats });
+        report.add("sharded_search", stats);
+    }
+
+    // --- parallel batch upsert (router + per-shard worker application) --
+    {
+        let mut sk =
+            ShardedKernel::new(KernelConfig::default_q16(cfg.dim).with_flat_index(), cfg.shards);
+        // Upserts grow the kernel every call (warmup included), so bound
+        // both phases: a token warmup and an iteration cap that ends the
+        // bench at roughly one corpus of inserted vectors.
+        let upsert_cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(10),
+            max_iters: (cfg.n / cfg.batch).max(10),
+            ..cfg.bench
+        };
+        let mut next_id = 0u64;
+        let stats = bench(&upsert_cfg, || {
+            let items: Vec<(u64, Vec<i32>)> = (0..cfg.batch as u64)
+                .map(|j| (next_id + j, raw_row(cfg.seed, next_id + j, cfg.dim)))
+                .collect();
+            next_id += cfg.batch as u64;
+            sk.apply_canon(&CanonCommand::InsertBatch { items }).expect("bench upsert")
+        });
+        rows.push(SuiteRow { name: "batch_upsert".into(), n: cfg.batch, stats });
+        report.add("batch_upsert", stats);
+    }
+
+    report.print();
+    let result = SuiteResult {
+        config_label: label.to_string(),
+        n: cfg.n,
+        dim: cfg.dim,
+        k: cfg.k,
+        shards: cfg.shards,
+        seed: cfg.seed,
+        rows,
+    };
+    if let Some(speedup) = result.flat_speedup_p50() {
+        println!("  note: flat search p50 speedup vs pre-refactor reference: {speedup:.2}x");
+    }
+    result
+}
+
+/// Serialize a suite result (the `BENCH_search.json` payload).
+pub fn suite_json(r: &SuiteResult) -> Json {
+    let rows: Vec<Json> = r
+        .rows
+        .iter()
+        .map(|row| {
+            Json::object(vec![
+                ("name", Json::str(row.name.clone())),
+                ("n", Json::Int(row.n as i64)),
+                ("iters", Json::Int(row.stats.iters as i64)),
+                ("mean_ns", Json::Float(row.stats.mean_ns)),
+                ("p50_ns", Json::Float(row.stats.p50_ns)),
+                ("p95_ns", Json::Float(row.stats.p95_ns)),
+                ("p99_ns", Json::Float(row.stats.p99_ns)),
+                ("ops_per_sec", Json::Float(row.stats.ops_per_sec())),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("schema", Json::Int(1)),
+        ("suite", Json::str("valori-search")),
+        ("config", Json::str(r.config_label.clone())),
+        ("n", Json::Int(r.n as i64)),
+        ("dim", Json::Int(r.dim as i64)),
+        ("k", Json::Int(r.k as i64)),
+        ("shards", Json::Int(r.shards as i64)),
+        ("seed", Json::Int(r.seed as i64)),
+        ("rows", Json::Array(rows)),
+    ];
+    if let Some(speedup) = r.flat_speedup_p50() {
+        fields.push(("flat_speedup_p50_vs_prerefactor", Json::Float(speedup)));
+    }
+    Json::object(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn tiny() -> SuiteConfig {
+        SuiteConfig {
+            n: 400,
+            dim: 16,
+            k: 5,
+            shards: 2,
+            seed: 7,
+            batch: 64,
+            bench: BenchConfig {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(10),
+                max_iters: 50,
+                min_iters: 3,
+            },
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_in_contract() {
+        let a = raw_row(42, 7, 32);
+        let b = raw_row(42, 7, 32);
+        assert_eq!(a, b);
+        assert_ne!(a, raw_row(42, 8, 32));
+        assert!(a.iter().all(|&x| x.abs() <= 65_536));
+    }
+
+    #[test]
+    fn suite_runs_and_serializes() {
+        let r = run(&tiny(), "test");
+        for name in [
+            "flat_search",
+            "flat_search_prerefactor_reference",
+            "hnsw_search",
+            "sharded_search",
+            "batch_upsert",
+        ] {
+            assert!(r.row(name).is_some(), "missing row {name}");
+            assert!(r.row(name).unwrap().stats.iters >= 3);
+        }
+        assert!(r.flat_speedup_p50().is_some());
+        let json = suite_json(&r).to_string();
+        let parsed = crate::json::parse(&json).expect("bench json parses");
+        assert_eq!(parsed.get("suite").as_str(), Some("valori-search"));
+        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(5));
+    }
+}

@@ -81,6 +81,28 @@ pub trait Scalar: Copy + Debug + PartialEq + 'static {
     /// Distance under `metric` (smaller = closer for every metric).
     fn distance(metric: Metric, a: &[Self], b: &[Self]) -> Self::Dist;
 
+    /// Score `query` against a contiguous block of vectors laid out
+    /// back-to-back in `block` (`block.len() == dim * out.len()`, row `r`
+    /// at `block[r*dim..(r+1)*dim]`), writing one distance per row into
+    /// `out`. Each row is scored independently with exact per-row
+    /// arithmetic, so the results are bit-identical to calling
+    /// [`Scalar::distance`] once per row — the batch form only changes the
+    /// memory access pattern (one contiguous sweep), never the values.
+    /// `dim` must be non-zero; callers with degenerate dimensions use the
+    /// per-row path.
+    fn distance_block(
+        metric: Metric,
+        query: &[Self],
+        block: &[Self],
+        dim: usize,
+        out: &mut [Self::Dist],
+    ) {
+        debug_assert_eq!(block.len(), dim * out.len(), "block/out shape mismatch");
+        for (row, d) in block.chunks_exact(dim).zip(out.iter_mut()) {
+            *d = Self::distance(metric, query, row);
+        }
+    }
+
     /// A distance value larger than any real one (sentinel for init).
     fn max_dist() -> Self::Dist;
 
@@ -104,6 +126,20 @@ impl Scalar for i32 {
         match metric {
             Metric::L2 => l2sq_q16(a, b),
             Metric::InnerProduct | Metric::Cosine => dot_q16(a, b).saturating_neg(),
+        }
+    }
+
+    #[inline]
+    fn distance_block(metric: Metric, query: &[i32], block: &[i32], dim: usize, out: &mut [i64]) {
+        match metric {
+            Metric::L2 => l2sq_q16_block(query, block, dim, out),
+            Metric::InnerProduct | Metric::Cosine => {
+                dot_q16_block(query, block, dim, out);
+                // Same negation the scalar path applies per value.
+                for d in out.iter_mut() {
+                    *d = d.saturating_neg();
+                }
+            }
         }
     }
 
@@ -218,31 +254,67 @@ impl Scalar for f32 {
 /// the loop with integer SIMD — exact, order-independent, and therefore
 /// still bit-identical to the scalar loop and to the Pallas int64 kernel
 /// (experiment E9). §Perf: ~3× faster than the saturating version.
+///
+/// Contract: `a.len() == b.len()`. A mismatch is a caller bug, caught by
+/// the `debug_assert` in debug builds; exact-length enforcement for both
+/// operands lives at the public entry points (`state::kernel` dim-checks
+/// every command and query; `FlatIndex::search`/`Hnsw::search` assert the
+/// query dim), so no public search path can reach this loop mismatched.
+/// In release this function itself panics if `b` is shorter (the
+/// `&b[..a.len()]` reslice, which also lets LLVM drop the inner bounds
+/// checks) — the pre-refactor `min()` silent truncation is gone.
 #[inline]
 pub fn dot_q16(a: &[i32], b: &[i32]) -> i64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len().min(b.len());
-    let (a, b) = (&a[..n], &b[..n]);
+    debug_assert_eq!(a.len(), b.len(), "dot_q16: equal-length contract violated");
+    let b = &b[..a.len()];
     let mut acc: i64 = 0;
-    for i in 0..n {
+    for i in 0..a.len() {
         acc += (a[i] as i64) * (b[i] as i64);
     }
     acc
 }
 
-/// Q16.16 squared L2 distance, i64 accumulator (same contract argument as
-/// [`dot_q16`]).
+/// Q16.16 squared L2 distance, i64 accumulator (same contract argument —
+/// and the same equal-length contract — as [`dot_q16`]).
 #[inline]
 pub fn l2sq_q16(a: &[i32], b: &[i32]) -> i64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len().min(b.len());
-    let (a, b) = (&a[..n], &b[..n]);
+    debug_assert_eq!(a.len(), b.len(), "l2sq_q16: equal-length contract violated");
+    let b = &b[..a.len()];
     let mut acc: i64 = 0;
-    for i in 0..n {
+    for i in 0..a.len() {
         let d = (a[i] as i64) - (b[i] as i64);
         acc += d * d;
     }
     acc
+}
+
+/// Blocked Q16.16 dot kernel: score `query` against `out.len()` vectors
+/// stored back-to-back in `block` (row `r` at `block[r*dim..(r+1)*dim]`).
+/// One call sweeps a contiguous arena run, so the loads stream linearly
+/// through cache and the inner loop auto-vectorizes; every row uses the
+/// exact integer accumulation of [`dot_q16`], so the output is
+/// bit-identical to the per-row scalar calls in any build. `dim` must be
+/// non-zero and equal to `query.len()`.
+#[inline]
+pub fn dot_q16_block(query: &[i32], block: &[i32], dim: usize, out: &mut [i64]) {
+    debug_assert!(dim > 0, "dot_q16_block: dim must be non-zero");
+    debug_assert_eq!(query.len(), dim, "dot_q16_block: query/dim mismatch");
+    debug_assert_eq!(block.len(), dim * out.len(), "dot_q16_block: block shape mismatch");
+    for (row, d) in block.chunks_exact(dim).zip(out.iter_mut()) {
+        *d = dot_q16(query, row);
+    }
+}
+
+/// Blocked Q16.16 squared-L2 kernel (same layout and exactness contract as
+/// [`dot_q16_block`]).
+#[inline]
+pub fn l2sq_q16_block(query: &[i32], block: &[i32], dim: usize, out: &mut [i64]) {
+    debug_assert!(dim > 0, "l2sq_q16_block: dim must be non-zero");
+    debug_assert_eq!(query.len(), dim, "l2sq_q16_block: query/dim mismatch");
+    debug_assert_eq!(block.len(), dim * out.len(), "l2sq_q16_block: block shape mismatch");
+    for (row, d) in block.chunks_exact(dim).zip(out.iter_mut()) {
+        *d = l2sq_q16(query, row);
+    }
 }
 
 /// f32 wrapper with IEEE-754 `total_cmp` ordering, so the float baseline
@@ -352,6 +424,43 @@ mod tests {
             assert_eq!(Metric::from_name(m.name()), Some(m));
         }
         assert_eq!(Metric::from_tag(9), None);
+    }
+
+    #[test]
+    fn block_kernels_match_per_row_scalar_calls() {
+        let dim = 7; // odd on purpose: exercises the vectorizer's tail path
+        let rows = 13;
+        let qv: Vec<i32> = (0..dim).map(|i| q(((i * 13 % 100) as f64 - 50.0) / 50.0)).collect();
+        let block: Vec<i32> = (0..dim * rows)
+            .map(|i| q(((i * 7 % 160) as f64 - 80.0) / 80.0))
+            .collect();
+        let mut dots = vec![0i64; rows];
+        let mut l2s = vec![0i64; rows];
+        dot_q16_block(&qv, &block, dim, &mut dots);
+        l2sq_q16_block(&qv, &block, dim, &mut l2s);
+        for r in 0..rows {
+            let row = &block[r * dim..(r + 1) * dim];
+            assert_eq!(dots[r], dot_q16(&qv, row), "dot row {r}");
+            assert_eq!(l2s[r], l2sq_q16(&qv, row), "l2 row {r}");
+        }
+        // The trait hook agrees with the free functions (incl. IP negation).
+        let mut via_trait = vec![0i64; rows];
+        <i32 as Scalar>::distance_block(Metric::InnerProduct, &qv, &block, dim, &mut via_trait);
+        for r in 0..rows {
+            let row = &block[r * dim..(r + 1) * dim];
+            assert_eq!(via_trait[r], <i32 as Scalar>::distance(Metric::InnerProduct, &qv, row));
+        }
+    }
+
+    #[test]
+    fn default_distance_block_covers_f32() {
+        let dim = 3;
+        let qv = vec![0.5f32, -0.25, 1.0];
+        let block = vec![0.1f32, 0.2, 0.3, -0.4, 0.5, -0.6];
+        let mut out = vec![OrderedF32(0.0); 2];
+        <f32 as Scalar>::distance_block(Metric::L2, &qv, &block, dim, &mut out);
+        assert_eq!(out[0], <f32 as Scalar>::distance(Metric::L2, &qv, &block[0..3]));
+        assert_eq!(out[1], <f32 as Scalar>::distance(Metric::L2, &qv, &block[3..6]));
     }
 
     #[test]

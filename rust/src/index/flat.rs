@@ -6,9 +6,16 @@
 //! one pass in slot order, sort by `(dist, id)`.
 
 use super::store::VecStore;
+use super::topk::TopK;
 use super::{Hit, VectorIndex};
 use crate::codec::{DecodeError, Decoder, Encoder};
 use crate::distance::{Metric, Scalar};
+
+/// Rows scored per blocked-kernel call in [`FlatIndex::search`]. Large
+/// enough to amortize the call and fill the vector units, small enough
+/// that the distance buffer stays in L1. Has no effect on results — the
+/// block kernels are exact per row and the top-k order ignores push order.
+const SCORE_BLOCK: usize = 64;
 
 /// Brute-force exact index over a [`VecStore`].
 #[derive(Debug, Clone, PartialEq)]
@@ -54,15 +61,50 @@ impl<S: Scalar> VectorIndex<S> for FlatIndex<S> {
     }
 
     fn search(&self, query: &[S], k: usize) -> Vec<Hit<S::Dist>> {
-        let mut hits: Vec<Hit<S::Dist>> = self
-            .store
-            .iter_live()
-            .map(|(_, id, v)| Hit { id, dist: S::distance(self.metric, query, v) })
-            .collect();
-        // Total order on (dist, id): deterministic ranking even with ties.
-        hits.sort_by(|a, b| a.dist.cmp(&b.dist).then(a.id.cmp(&b.id)));
-        hits.truncate(k);
-        hits
+        let dim = self.store.dim();
+        // The one boundary this path has: every stored row is dim-checked
+        // on insert, so this assert discharges the distance kernels'
+        // equal-length contract for direct index users too (the state
+        // machine validates before it ever gets here). Once per query,
+        // never in the hot loop — and it fails loudly instead of the old
+        // silent `min()` truncation.
+        assert_eq!(query.len(), dim, "query dimension mismatch: {} != {dim}", query.len());
+        let slots = self.store.slots();
+        if k == 0 || self.store.live_len() == 0 {
+            return Vec::new();
+        }
+        // Total order on (dist, id) throughout: deterministic ranking even
+        // with distance ties, and identical to the former sort + truncate.
+        let mut topk = TopK::new(k);
+        if dim == 0 {
+            // Degenerate dimension: fall back to the per-row path (the
+            // block kernels require dim > 0 to form rows).
+            for (_, id, v) in self.store.iter_live() {
+                topk.push(S::distance(self.metric, query, v), id);
+            }
+            return topk.into_sorted_hits();
+        }
+        let arena = self.store.arena();
+        let alive = self.store.alive_flags();
+        let ids = self.store.external_ids();
+        let mut dists = vec![S::max_dist(); SCORE_BLOCK.min(slots)];
+        let mut base = 0usize;
+        while base < slots {
+            let rows = SCORE_BLOCK.min(slots - base);
+            // One contiguous arena run per call: tombstoned rows are scored
+            // too (branch-free sweep) and filtered below — cheaper than
+            // fragmenting the block, and invisible in the results.
+            let block = &arena[base * dim..(base + rows) * dim];
+            S::distance_block(self.metric, query, block, dim, &mut dists[..rows]);
+            for (r, &d) in dists[..rows].iter().enumerate() {
+                let slot = base + r;
+                if alive[slot] {
+                    topk.push(d, ids[slot]);
+                }
+            }
+            base += rows;
+        }
+        topk.into_sorted_hits()
     }
 
     fn len(&self) -> usize {

@@ -21,6 +21,7 @@
 //! identical parameters, identical insertion order, different arithmetic.
 
 use super::store::VecStore;
+use super::topk::TopK;
 use super::{Hit, VectorIndex};
 use crate::codec::{DecodeError, Decoder, Encoder};
 use crate::distance::{Metric, Scalar};
@@ -374,6 +375,15 @@ impl<S: Scalar> VectorIndex<S> for Hnsw<S> {
     }
 
     fn search(&self, query: &[S], k: usize) -> Vec<Hit<S::Dist>> {
+        // Same boundary as FlatIndex::search: one loud dim check per
+        // query discharges the distance kernels' equal-length contract.
+        assert_eq!(
+            query.len(),
+            self.store.dim(),
+            "query dimension mismatch: {} != {}",
+            query.len(),
+            self.store.dim()
+        );
         let Some(entry) = self.entry else {
             return Vec::new();
         };
@@ -389,14 +399,16 @@ impl<S: Scalar> VectorIndex<S> for Hnsw<S> {
         let dead = self.store.slots() - self.store.live_len();
         let ef = self.params.ef_search.max(k) + dead.min(256);
         let cands = self.search_layer(query, ep, ef, 0);
-        let mut hits: Vec<Hit<S::Dist>> = cands
-            .into_iter()
-            .filter(|&(_, s)| self.store.is_alive(s))
-            .map(|(d, s)| Hit { id: self.store.external_id(s), dist: d })
-            .collect();
-        hits.sort_by(|a, b| a.dist.cmp(&b.dist).then(a.id.cmp(&b.id)));
-        hits.truncate(k);
-        hits
+        // Stream the beam's candidates through a bounded top-k under the
+        // same (dist, id) total order the former sort used — bit-identical
+        // ranking, no O(ef) re-sort allocation.
+        let mut topk = TopK::new(k);
+        for (d, s) in cands {
+            if self.store.is_alive(s) {
+                topk.push(d, self.store.external_id(s));
+            }
+        }
+        topk.into_sorted_hits()
     }
 
     fn len(&self) -> usize {

@@ -9,10 +9,12 @@
 pub mod flat;
 pub mod hnsw;
 pub mod store;
+pub mod topk;
 
 pub use flat::FlatIndex;
 pub use hnsw::{Hnsw, HnswParams};
 pub use store::VecStore;
+pub use topk::TopK;
 
 use crate::distance::Scalar;
 

@@ -11,12 +11,19 @@ use crate::distance::Scalar;
 use std::collections::BTreeMap;
 
 /// Append-only vector store with tombstones.
+///
+/// Storage is a single contiguous arena: slot `i` occupies
+/// `data[i*dim .. (i+1)*dim]`. One allocation instead of one per vector
+/// means the flat-search hot path streams linearly through cache and the
+/// blocked distance kernels (`distance::dot_q16_block` et al.) can score
+/// whole runs of slots per call. The on-disk encoding is unchanged from
+/// the per-slot layout (see [`VecStore::encode`]) — the arena is purely an
+/// in-memory representation, so snapshot bytes and hashes are identical.
 #[derive(Debug, Clone, PartialEq)]
 pub struct VecStore<S: Scalar> {
     dim: usize,
-    /// Slot -> vector data (flattened would save pointers; kept per-slot
-    /// for clarity; the flat index hot path reads through `vec_at`).
-    vectors: Vec<Vec<S>>,
+    /// Contiguous vector arena; slot `i` at `[i*dim, (i+1)*dim)`.
+    data: Vec<S>,
     /// Slot -> external id.
     external_ids: Vec<u64>,
     /// Slot -> live?
@@ -30,7 +37,7 @@ impl<S: Scalar> VecStore<S> {
     pub fn new(dim: usize) -> Self {
         Self {
             dim,
-            vectors: Vec::new(),
+            data: Vec::new(),
             external_ids: Vec::new(),
             alive: Vec::new(),
             id_to_slot: BTreeMap::new(),
@@ -44,7 +51,23 @@ impl<S: Scalar> VecStore<S> {
 
     /// Total slots ever allocated (including tombstones).
     pub fn slots(&self) -> usize {
-        self.vectors.len()
+        self.external_ids.len()
+    }
+
+    /// The whole contiguous arena (`slots() * dim` scalars, tombstones
+    /// included). Batch scoring reads this directly.
+    pub fn arena(&self) -> &[S] {
+        &self.data
+    }
+
+    /// Slot-indexed liveness flags (parallel to the arena rows).
+    pub fn alive_flags(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Slot-indexed external ids (parallel to the arena rows).
+    pub fn external_ids(&self) -> &[u64] {
+        &self.external_ids
     }
 
     pub fn live_len(&self) -> usize {
@@ -75,7 +98,8 @@ impl<S: Scalar> VecStore<S> {
     }
 
     pub fn vec_at(&self, slot: u32) -> &[S] {
-        &self.vectors[slot as usize]
+        let start = slot as usize * self.dim;
+        &self.data[start..start + self.dim]
     }
 
     pub fn get(&self, id: u64) -> Option<&[S]> {
@@ -91,8 +115,8 @@ impl<S: Scalar> VecStore<S> {
             !self.id_to_slot.contains_key(&id),
             "duplicate external id {id} (state machine must pre-check)"
         );
-        let slot = self.vectors.len() as u32;
-        self.vectors.push(vector);
+        let slot = self.external_ids.len() as u32;
+        self.data.extend_from_slice(&vector);
         self.external_ids.push(id);
         self.alive.push(true);
         self.id_to_slot.insert(id, slot);
@@ -110,7 +134,7 @@ impl<S: Scalar> VecStore<S> {
 
     /// Iterate live (slot, external id, vector) in slot (= insertion) order.
     pub fn iter_live(&self) -> impl Iterator<Item = (u32, u64, &[S])> {
-        (0..self.vectors.len() as u32).filter_map(move |s| {
+        (0..self.external_ids.len() as u32).filter_map(move |s| {
             if self.alive[s as usize] {
                 Some((s, self.external_ids[s as usize], self.vec_at(s)))
             } else {
@@ -121,14 +145,17 @@ impl<S: Scalar> VecStore<S> {
 
     /// Canonical serialization (slot order; tombstones preserved so slot
     /// numbering — and thus the HNSW graph — survives a round-trip).
+    /// Byte-identical to the historical per-slot layout: each slot still
+    /// writes `id ‖ alive ‖ len(=dim) ‖ scalars`, the arena is invisible
+    /// on the wire.
     pub fn encode(&self, e: &mut Encoder) {
         e.put_u32(self.dim as u32);
-        e.put_u32(self.vectors.len() as u32);
-        for s in 0..self.vectors.len() {
+        e.put_u32(self.external_ids.len() as u32);
+        for s in 0..self.external_ids.len() {
             e.put_u64(self.external_ids[s]);
             e.put_u8(self.alive[s] as u8);
-            e.put_u32(self.vectors[s].len() as u32);
-            for &x in &self.vectors[s] {
+            e.put_u32(self.dim as u32);
+            for &x in self.vec_at(s as u32) {
                 x.encode(e);
             }
         }
@@ -137,6 +164,10 @@ impl<S: Scalar> VecStore<S> {
     pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
         let dim = d.get_u32()? as usize;
         let n = d.get_u32()? as usize;
+        // No up-front reserve from the (untrusted) header counts: a
+        // corrupt stream claiming huge n*dim must fall out as a clean
+        // DecodeError when the input runs dry, not a capacity panic or a
+        // giant allocation. Amortized growth is fine off the hot path.
         let mut store = Self::new(dim);
         for slot in 0..n {
             let id = d.get_u64()?;
@@ -149,11 +180,9 @@ impl<S: Scalar> VecStore<S> {
             if len != dim {
                 return Err(DecodeError::InvalidTag { what: "vector dim", tag: len as u64 });
             }
-            let mut v = Vec::with_capacity(len);
             for _ in 0..len {
-                v.push(S::decode(d)?);
+                store.data.push(S::decode(d)?);
             }
-            store.vectors.push(v);
             store.external_ids.push(id);
             store.alive.push(alive);
             store.id_to_slot.insert(id, slot as u32);
@@ -237,6 +266,20 @@ mod tests {
         let mut e2 = Encoder::new();
         s2.encode(&mut e2);
         assert_eq!(bytes, e2.into_vec());
+    }
+
+    #[test]
+    fn arena_is_contiguous_and_row_aligned() {
+        let mut s = sample();
+        s.delete(20);
+        s.insert(99, vec![7, 8]);
+        assert_eq!(s.arena().len(), s.slots() * s.dim());
+        for slot in 0..s.slots() as u32 {
+            let start = slot as usize * s.dim();
+            assert_eq!(s.vec_at(slot), &s.arena()[start..start + s.dim()]);
+        }
+        assert_eq!(s.external_ids(), &[10, 20, 5, 99]);
+        assert_eq!(s.alive_flags(), &[true, false, true, true]);
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Streaming bounded top-k selection under the total order `(dist, id)`.
+//!
+//! Replaces the collect-all + full-sort pattern in the search read paths:
+//! a bounded binary max-heap keeps the k best candidates seen so far, so
+//! selecting the top-k of N hits costs O(N log k) time and O(k) memory
+//! instead of O(N log N) time and an O(N) allocation.
+//!
+//! Determinism: every comparison is on the total order `(dist, id)` — the
+//! same key the former `sort_by(dist).then(id)` used — and external ids
+//! are unique, so the kept set and its final ascending ordering are a pure
+//! function of the input *multiset*. Push order (and therefore thread
+//! scheduling, block size, or traversal order upstream) cannot change the
+//! result: the heap output is bit-identical to sort + truncate.
+
+use super::Hit;
+use std::collections::BinaryHeap;
+
+/// Bounded max-heap over `(dist, id)` keeping the k smallest keys pushed.
+#[derive(Debug, Clone)]
+pub struct TopK<D: Ord + Copy> {
+    k: usize,
+    /// Max-heap: the *worst* kept key is on top, so a better candidate
+    /// evicts it in O(log k).
+    heap: BinaryHeap<(D, u64)>,
+}
+
+impl<D: Ord + Copy> TopK<D> {
+    pub fn new(k: usize) -> Self {
+        // k+1 so the push-then-pop in `push` never reallocates.
+        Self { k, heap: BinaryHeap::with_capacity(k.saturating_add(1).min(4096)) }
+    }
+
+    /// Offer one candidate. Kept iff fewer than k candidates were seen or
+    /// `(dist, id)` beats the current worst kept key.
+    #[inline]
+    pub fn push(&mut self, dist: D, id: u64) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push((dist, id));
+        } else if let Some(&worst) = self.heap.peek() {
+            if (dist, id) < worst {
+                self.heap.push((dist, id));
+                self.heap.pop();
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Finish: the kept hits in ascending `(dist, id)` order — the
+    /// deterministic ranking contract every index search returns.
+    pub fn into_sorted_hits(self) -> Vec<Hit<D>> {
+        self.heap
+            .into_sorted_vec()
+            .into_iter()
+            .map(|(dist, id)| Hit { id, dist })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference_topk(keys: &[(i64, u64)], k: usize) -> Vec<Hit<i64>> {
+        let mut v: Vec<Hit<i64>> = keys.iter().map(|&(dist, id)| Hit { id, dist }).collect();
+        v.sort_by(|a, b| a.dist.cmp(&b.dist).then(a.id.cmp(&b.id)));
+        v.truncate(k);
+        v
+    }
+
+    #[test]
+    fn matches_sort_truncate_for_every_k() {
+        // Pseudo-random keys with deliberate distance ties (unique ids).
+        let keys: Vec<(i64, u64)> = (0..97u64)
+            .map(|i| (((i.wrapping_mul(2654435761)) % 23) as i64, i))
+            .collect();
+        for k in [0, 1, 2, 5, 23, 96, 97, 200] {
+            let mut topk = TopK::new(k);
+            for &(d, id) in &keys {
+                topk.push(d, id);
+            }
+            assert_eq!(topk.into_sorted_hits(), reference_topk(&keys, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn push_order_is_irrelevant() {
+        let keys: Vec<(i64, u64)> = (0..50u64).map(|i| ((i as i64 * 7) % 13, i)).collect();
+        let mut fwd = TopK::new(8);
+        let mut rev = TopK::new(8);
+        for &(d, id) in &keys {
+            fwd.push(d, id);
+        }
+        for &(d, id) in keys.iter().rev() {
+            rev.push(d, id);
+        }
+        assert_eq!(fwd.into_sorted_hits(), rev.into_sorted_hits());
+    }
+
+    #[test]
+    fn eviction_keeps_the_k_best() {
+        let mut t = TopK::new(2);
+        t.push(10, 1);
+        t.push(5, 2);
+        t.push(7, 3); // evicts (10, 1)
+        t.push(100, 4); // worse than the kept worst: ignored
+        assert_eq!(t.len(), 2);
+        let hits: Vec<u64> = t.into_sorted_hits().iter().map(|h| h.id).collect();
+        assert_eq!(hits, vec![2, 3]);
+    }
+
+    #[test]
+    fn k_zero_keeps_nothing() {
+        let mut t = TopK::new(0);
+        t.push(1i64, 1);
+        assert!(t.is_empty());
+        assert!(t.into_sorted_hits().is_empty());
+    }
+}

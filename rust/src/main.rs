@@ -4,6 +4,8 @@
 //! ```text
 //! valori serve      [--addr 127.0.0.1:7431] [--dim 128] [--wal valori.wal]
 //!                   [--env b] [--no-embedder] [--flat] [--shards N]
+//! valori bench      [--quick] [--n 50000] [--dim 256] [--k 10] [--shards 4]
+//!                   [--batch 512] [--seed S] [--out BENCH_search.json]
 //! valori experiment <table1|table2|table3|transfer|latency|all> [--quick]
 //! valori snapshot   --wal <file> --out <file> [--dim N] [--shards N]
 //! valori restore    --snapshot <file>           # verify + print hashes
@@ -32,6 +34,7 @@ fn main() {
     };
     let code = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("snapshot") => cmd_snapshot(&args),
         Some("restore") => cmd_restore(&args),
@@ -63,9 +66,55 @@ fn parse_shards(args: &Args) -> Result<u32, String> {
 
 fn print_usage() {
     eprintln!(
-        "usage: valori <serve|experiment|snapshot|restore|replay|quickstart> [options]\n\
+        "usage: valori <serve|bench|experiment|snapshot|restore|replay|quickstart> [options]\n\
          see `rust/src/main.rs` header or README.md for details"
     );
+}
+
+/// `valori bench` — the deterministic search/upsert performance suite.
+/// Prints the human table and writes the machine-readable trajectory file
+/// (default `BENCH_search.json`, the repo-root perf record CI smokes).
+fn cmd_bench(args: &Args) -> i32 {
+    use valori::bench::suite::SuiteConfig;
+    let quick = args.flag("quick");
+    let mut cfg = if quick { SuiteConfig::quick() } else { SuiteConfig::full() };
+    cfg.n = match args.opt_parse("n", cfg.n) {
+        Ok(v) if v > 0 => v,
+        Ok(_) => return fail("--n must be > 0"),
+        Err(e) => return fail(&e),
+    };
+    cfg.dim = match args.opt_parse("dim", cfg.dim) {
+        Ok(v) if v > 0 => v,
+        Ok(_) => return fail("--dim must be > 0"),
+        Err(e) => return fail(&e),
+    };
+    cfg.k = match args.opt_parse("k", cfg.k) {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    cfg.shards = match args.opt_parse("shards", cfg.shards) {
+        Ok(v) if v >= 1 => v,
+        Ok(_) => return fail("--shards must be >= 1"),
+        Err(e) => return fail(&e),
+    };
+    cfg.seed = match args.opt_parse("seed", cfg.seed) {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    cfg.batch = match args.opt_parse("batch", cfg.batch) {
+        Ok(v) if v > 0 => v,
+        Ok(_) => return fail("--batch must be > 0"),
+        Err(e) => return fail(&e),
+    };
+    let out = args.opt_or("out", "BENCH_search.json");
+    let label = if quick { "quick" } else { "full" };
+    let result = valori::bench::suite::run(&cfg, label);
+    let json = valori::bench::suite::suite_json(&result).to_string();
+    if let Err(e) = std::fs::write(&out, json + "\n") {
+        return fail(&format!("write {out}: {e}"));
+    }
+    println!("wrote {out}");
+    0
 }
 
 fn cmd_serve(args: &Args) -> i32 {

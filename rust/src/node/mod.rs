@@ -32,7 +32,7 @@ use crate::snapshot::Snapshot;
 use crate::state::{CanonCommand, Command, Kernel, Routed, ShardedKernel};
 use crate::wal::WalWriter;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 /// Node configuration.
@@ -70,7 +70,12 @@ pub fn shard_wal_path(base: &Path, shard: u32, n_shards: u32) -> PathBuf {
 /// (replication feed) and its own WAL file, so recovery, log shipping and
 /// replay all happen partition-by-partition.
 pub struct NodeState {
-    kernel: Mutex<ShardedKernel>,
+    /// `RwLock`, not `Mutex`: searches (and every other read endpoint)
+    /// take the read lock, so concurrent queries proceed in parallel and
+    /// each one can still fan out across the kernel's persistent per-shard
+    /// worker pool. Mutations take the write lock — the command order the
+    /// WAL records stays a single total order per shard.
+    kernel: RwLock<ShardedKernel>,
     /// Per-shard canonical logs (replication feed + audit).
     logs: Vec<Mutex<Vec<CanonCommand>>>,
     /// Per-shard WALs (empty when running in-memory only).
@@ -163,7 +168,7 @@ impl NodeState {
             }
         }
         Ok(Self {
-            kernel: Mutex::new(kernel),
+            kernel: RwLock::new(kernel),
             logs: logs.into_iter().map(Mutex::new).collect(),
             wals,
             embed,
@@ -179,7 +184,7 @@ impl NodeState {
     /// sequence, or replaying a shard WAL would reconstruct a different
     /// state (the order *is* the state, paper §3.1).
     pub fn apply(&self, cmd: Command) -> Result<CanonCommand, crate::Error> {
-        let mut kernel = self.kernel.lock().expect("kernel poisoned");
+        let mut kernel = self.kernel.write().expect("kernel poisoned");
         let result = kernel.apply(cmd)?;
         self.record(&result.applied)?;
         Ok(result.canon)
@@ -192,7 +197,7 @@ impl NodeState {
     /// deletes into cleanup unlinks that the feeds already contain. Feed
     /// records go through [`Self::apply_canon_to_shard`].
     pub fn apply_canon(&self, canon: &CanonCommand) -> Result<(), crate::Error> {
-        let mut kernel = self.kernel.lock().expect("kernel poisoned");
+        let mut kernel = self.kernel.write().expect("kernel poisoned");
         let applied = kernel.apply_canon(canon)?;
         self.record(&applied)?;
         Ok(())
@@ -208,7 +213,7 @@ impl NodeState {
         shard: u32,
         canon: &CanonCommand,
     ) -> Result<(), crate::Error> {
-        let mut kernel = self.kernel.lock().expect("kernel poisoned");
+        let mut kernel = self.kernel.write().expect("kernel poisoned");
         if shard >= kernel.n_shards() {
             return Err(crate::Error::Runtime(format!(
                 "shard {shard} out of range (n_shards = {})",
@@ -242,12 +247,12 @@ impl NodeState {
     /// Exact for 1-shard nodes (shard 0 *is* the node); for sharded nodes
     /// prefer [`Self::with_sharded`].
     pub fn with_kernel<T>(&self, f: impl FnOnce(&Kernel) -> T) -> T {
-        f(self.kernel.lock().expect("kernel poisoned").shard(0))
+        f(self.kernel.read().expect("kernel poisoned").shard(0))
     }
 
     /// Run `f` against the whole sharded kernel.
     pub fn with_sharded<T>(&self, f: impl FnOnce(&ShardedKernel) -> T) -> T {
-        f(&self.kernel.lock().expect("kernel poisoned"))
+        f(&self.kernel.read().expect("kernel poisoned"))
     }
 
     pub fn n_shards(&self) -> u32 {

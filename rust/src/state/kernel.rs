@@ -475,7 +475,11 @@ impl Kernel {
 
     /// k-NN over raw (already quantized) query values. The query must
     /// satisfy the same contract as stored vectors (wrapping-add exactness
-    /// in the distance hot loop depends on it).
+    /// in the distance hot loop depends on it). The dim check below is
+    /// also what discharges the distance kernels' equal-length contract
+    /// (`distance::dot_q16` et al. carry only a `debug_assert`): every
+    /// stored vector was dim-checked on insert, so query-vs-stored slices
+    /// are always the same length by the time they reach the hot loop.
     pub fn search_raw(&self, query: &[i32], k: usize) -> Result<Vec<Hit>, StateError> {
         if query.len() != self.config.dim {
             return Err(StateError::DimMismatch { expected: self.config.dim, got: query.len() });

@@ -19,16 +19,29 @@
 //! kernel (paper §3.1, applied per partition).
 //!
 //! **Search fan-out and bit-exact merge.** A query fans out to every shard
-//! (scoped threads above a corpus-size threshold, inline below it); each
-//! shard returns its top-k ordered by
+//! (via the persistent per-shard worker pool above a corpus-size
+//! threshold, inline below it); each shard returns its top-k ordered by
 //! `(dist_raw, id)`. Results are collected *in shard order* (never in
-//! completion order) and combined by a k-way merge on the same
-//! `(dist_raw, id)` key. The merge is therefore a pure function of the
+//! completion order) and combined through the same bounded
+//! [`TopK`](crate::index::TopK) heap the flat index uses, keyed on
+//! `(dist_raw, id)`. The merge is therefore a pure function of the
 //! per-shard result lists: thread scheduling cannot influence the output,
 //! and with an exact (flat) index the merged top-k is bit-identical to a
 //! single kernel holding all vectors (integer distances are exact and ids
 //! are unique, so the total order has no ties to resolve
 //! nondeterministically).
+//!
+//! **Worker pool.** Each shard owns one long-lived worker thread
+//! ([`ShardWorkerPool`]), created lazily on the first parallel operation
+//! and fed over channels; dropping the kernel disconnects the channels and
+//! joins every worker. The pool serves both the search fan-out and
+//! parallel batch upserts (large `InsertBatch` sub-batches apply on their
+//! shards concurrently). Neither use can affect results: searches are
+//! collected in shard order and merged on a total order, and the router
+//! pre-validates a batch on every target shard before dispatch, so the
+//! per-shard sub-batches — disjoint by construction — succeed
+//! unconditionally and commute across shards (paper §3.1, applied per
+//! partition).
 //!
 //! **Cross-shard links.** A link `from → to` lives on the shard that owns
 //! `from`. The router checks `to` globally before logging the command;
@@ -45,12 +58,15 @@
 //! the sharded deployment). [`crate::snapshot::ShardedSnapshot`] persists
 //! the same manifest with audit-grade SHA-256 digests per shard.
 
+use crate::distance::Scalar;
 use crate::hash::Fnv1a64;
+use crate::index::TopK;
 use crate::state::command::{CanonCommand, Command};
 use crate::state::kernel::{Hit, Kernel, KernelConfig, StateError};
 use crate::vector::FixedVector;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::fmt;
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::thread;
 
 /// One per-shard log record produced by a routed application: `command`
 /// was applied on `shard` at that shard's local sequence number `seq`.
@@ -76,12 +92,174 @@ pub struct ShardApply {
     pub applied: Vec<Routed>,
 }
 
+/// A job executed by one shard's worker thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One long-lived worker thread per shard, fed over channels. Replaces the
+/// per-query scoped-thread spawn: thread creation leaves the hot path
+/// entirely (the ROADMAP's "persistent search worker pool"). Senders are
+/// mutex-wrapped so concurrent readers of a [`ShardedKernel`] (e.g. HTTP
+/// workers behind an `RwLock`) can dispatch to the same worker; the
+/// critical section is one channel send. Dropping the pool disconnects
+/// every channel and joins every worker, so queued jobs always finish
+/// before the pool — and therefore before the shards (field order in
+/// [`ShardedKernel`]) — goes away.
+///
+/// Tradeoff: one worker per shard caps *aggregate* scan parallelism at
+/// `n_shards` threads — concurrent queries' jobs for the same shard queue
+/// FIFO (each query's latency stays bounded by one shard scan plus queue
+/// wait, and determinism is unaffected since every query collects its own
+/// responses in shard order). Multiple workers per shard is a ROADMAP
+/// follow-on for read-heavy deployments with few shards.
+struct ShardWorkerPool {
+    senders: Vec<Mutex<mpsc::Sender<Job>>>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+fn spawn_shard_worker(shard: usize) -> (mpsc::Sender<Job>, thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<Job>();
+    let handle = thread::Builder::new()
+        .name(format!("valori-shard-{shard}"))
+        .spawn(move || {
+            while let Ok(job) = rx.recv() {
+                job();
+            }
+        })
+        .expect("failed to spawn shard worker");
+    (tx, handle)
+}
+
+impl ShardWorkerPool {
+    fn new(n_shards: usize) -> Self {
+        let mut senders = Vec::with_capacity(n_shards);
+        let mut handles = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let (tx, handle) = spawn_shard_worker(s);
+            senders.push(Mutex::new(tx));
+            handles.push(handle);
+        }
+        Self { senders, handles: Mutex::new(handles) }
+    }
+
+    /// Send a job to `shard`'s worker. If the worker died (a previous job
+    /// panicked and unwound its loop), spawn a replacement and requeue:
+    /// one panicked job must not permanently degrade the shard. The panic
+    /// itself is not swallowed — the dead job's response channel resolves
+    /// `Err`, so whoever waited on it still observes the failure.
+    fn run(&self, shard: usize, job: Job) {
+        let mut sender = self.senders[shard].lock().expect("shard sender poisoned");
+        if let Err(mpsc::SendError(job)) = sender.send(job) {
+            let (tx, handle) = spawn_shard_worker(shard);
+            *sender = tx;
+            self.handles.lock().expect("pool handles poisoned").push(handle);
+            sender.send(job).expect("fresh shard worker rejected job");
+        }
+    }
+}
+
+impl Drop for ShardWorkerPool {
+    fn drop(&mut self) {
+        // Disconnect first (workers drain queued jobs, then exit) …
+        self.senders.clear();
+        // … then join so no job outlives the pool.
+        for h in self.handles.get_mut().expect("pool handles poisoned").drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Collects pooled-job responses and guarantees — on the happy path via
+/// [`DispatchBarrier::wait_all`] and on *unwind* via `Drop` — that every
+/// dispatched job has resolved before the dispatching frame's borrow can
+/// end. A receiver resolves when its job sends a result, or with `Err`
+/// when the job's sender drops: a panicking job drops it during the
+/// worker's unwind, and a job queued behind a dead worker is destroyed
+/// (never run) by that worker's channel teardown. This is what makes
+/// handing raw shard pointers to `'static` workers sound on every path,
+/// not just the non-panicking one — the scoped-thread code this replaces
+/// joined its threads even while unwinding, and the barrier preserves
+/// that property.
+struct DispatchBarrier<T> {
+    rxs: Vec<mpsc::Receiver<T>>,
+}
+
+impl<T> DispatchBarrier<T> {
+    fn new() -> Self {
+        Self { rxs: Vec::new() }
+    }
+
+    /// Track one dispatched job. Call *before* handing the job to the
+    /// pool, so a panic inside the dispatch itself still drains this job.
+    fn add(&mut self, rx: mpsc::Receiver<T>) {
+        self.rxs.push(rx);
+    }
+
+    /// Block until every dispatched job resolves, in dispatch order.
+    /// `Err` means the job's worker died (the job panicked, or was torn
+    /// down unexecuted).
+    fn wait_all(mut self) -> Vec<Result<T, mpsc::RecvError>> {
+        self.rxs.drain(..).map(|rx| rx.recv()).collect()
+    }
+}
+
+impl<T> Drop for DispatchBarrier<T> {
+    fn drop(&mut self) {
+        // Unwind path: resolve every outstanding job before the borrow
+        // that produced the job pointers ends. Results are discarded.
+        for rx in self.rxs.drain(..) {
+            let _ = rx.recv();
+        }
+    }
+}
+
+/// Send-able `*const Kernel` for pooled search jobs. Safe by protocol:
+/// every dispatch site registers each job with a [`DispatchBarrier`]
+/// before dispatch and waits on it (explicitly, or via its `Drop` during
+/// unwind) until all jobs have resolved, so the pointee (borrowed from
+/// `&self`) strictly outlives the job, and search jobs only ever read.
+struct SharedShard(*const Kernel);
+unsafe impl Send for SharedShard {}
+
+/// Send-able `*mut Kernel` for pooled upsert jobs. Safe by protocol: the
+/// dispatching call holds `&mut self` (exclusive access to every shard),
+/// hands each shard index to at most one worker (the split-at-mut
+/// pattern), and waits on a [`DispatchBarrier`] until every job has
+/// resolved — the disjoint `&mut Kernel`s never alias and never outlive
+/// the borrow, on the unwind path included.
+struct ExclusiveShard(*mut Kernel);
+unsafe impl Send for ExclusiveShard {}
+
 /// N independent kernels behind a deterministic router. See the module
 /// docs for the design; the unsharded reference contract is `n_shards = 1`,
 /// where every operation degenerates to the plain [`Kernel`] behaviour.
-#[derive(Debug, Clone, PartialEq)]
 pub struct ShardedKernel {
+    /// Declared before `shards` so it drops first: pool shutdown joins
+    /// every worker, so no queued job can outlive the kernels its raw
+    /// pointers reference. Lazily created on the first parallel operation
+    /// (pure-replay and snapshot workloads never pay for threads).
+    pool: OnceLock<ShardWorkerPool>,
     shards: Vec<Kernel>,
+}
+
+impl fmt::Debug for ShardedKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShardedKernel").field("shards", &self.shards).finish()
+    }
+}
+
+impl Clone for ShardedKernel {
+    fn clone(&self) -> Self {
+        // The clone gets its own (lazy) pool — worker threads are runtime
+        // plumbing, not state.
+        Self { pool: OnceLock::new(), shards: self.shards.clone() }
+    }
+}
+
+impl PartialEq for ShardedKernel {
+    fn eq(&self, other: &Self) -> bool {
+        // State only: the pool is not part of the replayable state.
+        self.shards == other.shards
+    }
 }
 
 impl ShardedKernel {
@@ -92,7 +270,7 @@ impl ShardedKernel {
         let shards = (0..n_shards)
             .map(|s| Kernel::new(base.clone().with_shard(n_shards, s)))
             .collect();
-        Self { shards }
+        Self { pool: OnceLock::new(), shards }
     }
 
     /// Wrap an existing unsharded kernel as a 1-shard deployment
@@ -103,7 +281,7 @@ impl ShardedKernel {
             1,
             "from_single requires an unsharded kernel config"
         );
-        Self { shards: vec![kernel] }
+        Self { pool: OnceLock::new(), shards: vec![kernel] }
     }
 
     /// Rebuild from already-sharded kernels (snapshot restore). Shard
@@ -115,7 +293,7 @@ impl ShardedKernel {
             assert_eq!(k.config().shard.n_shards, n, "shard {i}: wrong n_shards");
             assert_eq!(k.config().shard.shard_id, i as u32, "shard {i}: wrong shard_id");
         }
-        Self { shards }
+        Self { pool: OnceLock::new(), shards }
     }
 
     pub fn n_shards(&self) -> u32 {
@@ -275,13 +453,73 @@ impl ShardedKernel {
             // Splitting a sorted batch preserves per-shard sortedness.
             per_shard[self.shard_of(*id) as usize].push((*id, raw.clone()));
         }
-        let mut applied = Vec::new();
+        if items.len() < Self::PARALLEL_UPSERT_MIN_ITEMS {
+            // Small batches: channel dispatch costs more than it saves.
+            // Either path applies the identical per-shard sub-batches in
+            // the identical shard order, so the threshold — like the
+            // search one — can only affect latency, never results.
+            let mut applied = Vec::new();
+            for (s, sub) in per_shard.into_iter().enumerate() {
+                if sub.is_empty() {
+                    continue;
+                }
+                // Cannot fail: exactly the checks above, re-run by the kernel.
+                applied.extend(self.route(s as u32, CanonCommand::InsertBatch { items: sub })?);
+            }
+            return Ok(applied);
+        }
+        self.apply_batch_parallel(per_shard)
+    }
+
+    /// Apply per-shard sub-batches concurrently on the worker pool.
+    /// `&mut self` gives this call exclusive access to every shard; each
+    /// shard index is dispatched to at most one worker and the call blocks
+    /// until every worker reports back, so the disjoint `&mut Kernel`s
+    /// never alias and never escape the borrow. Every sub-batch was
+    /// pre-validated on its target shard (the batch cannot fail
+    /// mid-flight), and the applied records are collected in shard order —
+    /// bit-identical to the sequential path no matter how workers are
+    /// scheduled.
+    fn apply_batch_parallel(
+        &mut self,
+        per_shard: Vec<Vec<(u64, Vec<i32>)>>,
+    ) -> Result<Vec<Routed>, StateError> {
+        let n = self.shards.len();
+        let pool = self.pool.get_or_init(|| ShardWorkerPool::new(n));
+        let base = self.shards.as_mut_ptr();
+        let mut barrier: DispatchBarrier<Result<Routed, StateError>> = DispatchBarrier::new();
         for (s, sub) in per_shard.into_iter().enumerate() {
             if sub.is_empty() {
                 continue;
             }
-            // Cannot fail: exactly the checks above, re-run by the kernel.
-            applied.extend(self.route(s as u32, CanonCommand::InsertBatch { items: sub })?);
+            let (tx, rx) = mpsc::channel();
+            barrier.add(rx);
+            // SAFETY: `base.add(s)` stays inside the shards allocation and
+            // each index is dispatched at most once (split-at-mut across
+            // workers).
+            let shard_ptr = ExclusiveShard(unsafe { base.add(s) });
+            pool.run(
+                s,
+                Box::new(move || {
+                    // SAFETY: see `ExclusiveShard` — exclusive, disjoint,
+                    // and outlived by the dispatching call's barrier.
+                    let kernel: &mut Kernel = unsafe { &mut *shard_ptr.0 };
+                    let seq = kernel.seq();
+                    let command = CanonCommand::InsertBatch { items: sub };
+                    let result = kernel
+                        .apply_canon(&command)
+                        .map(|()| Routed { shard: s as u32, seq, command });
+                    let _ = tx.send(result);
+                }),
+            );
+        }
+        // Barrier FIRST — every job must have resolved (and released its
+        // shard pointer) before anything, panic included, can leave this
+        // frame — then propagate errors (unreachable after pre-validation).
+        let results = barrier.wait_all();
+        let mut applied = Vec::with_capacity(results.len());
+        for r in results {
+            applied.push(r.expect("shard upsert worker died")?);
         }
         Ok(applied)
     }
@@ -308,50 +546,111 @@ impl ShardedKernel {
     }
 
     /// Below this many live vectors the per-shard searches run on the
-    /// calling thread: spawning OS threads costs more than the scans they
-    /// would parallelize. The merge is a pure function of the per-shard
-    /// results either way, so the threshold cannot affect results — only
-    /// latency. (A persistent worker pool is a ROADMAP follow-on.)
+    /// calling thread: even with persistent workers, channel dispatch and
+    /// wakeup cost more than the scans they would parallelize. The merge
+    /// is a pure function of the per-shard results either way, so the
+    /// threshold cannot affect results — only latency.
     const PARALLEL_SEARCH_MIN_VECTORS: usize = 4096;
 
-    /// k-NN over raw quantized values: fan out to every shard (scoped
-    /// threads for large corpora, inline for small ones) and merge.
-    /// Bit-identical to a single kernel holding all vectors when the index
-    /// is exact; always identical across runs and platforms regardless of
-    /// thread scheduling (results are collected in shard order and merged
-    /// by the total order `(dist_raw, id)`).
+    /// Below this many items an `InsertBatch` applies its per-shard
+    /// sub-batches inline (same rationale, and the same cannot-affect-
+    /// results argument, as the search threshold).
+    const PARALLEL_UPSERT_MIN_ITEMS: usize = 256;
+
+    /// k-NN over raw quantized values: fan out to every shard (persistent
+    /// per-shard workers for large corpora, inline for small ones) and
+    /// merge. Bit-identical to a single kernel holding all vectors when
+    /// the index is exact; always identical across runs and platforms
+    /// regardless of thread scheduling (results are collected in shard
+    /// order and merged by the total order `(dist_raw, id)`).
     pub fn search_raw(&self, query: &[i32], k: usize) -> Result<Vec<Hit>, StateError> {
         if self.shards.len() == 1 {
             return self.shards[0].search_raw(query, k);
         }
-        // Validate once up front (all shards share the contract) so the
-        // fan-out below cannot fail per-shard.
+        self.validate_query(query)?;
+        let per_shard = if self.len() < Self::PARALLEL_SEARCH_MIN_VECTORS {
+            self.per_shard_inline(query, k)?
+        } else {
+            self.per_shard_pooled(query, k)?
+        };
+        Ok(merge_hits(&per_shard, k))
+    }
+
+    /// Force the inline (calling-thread) fan-out regardless of corpus
+    /// size. Public for the pool-vs-inline equivalence tests and benches;
+    /// results are identical to [`Self::search_raw`] by construction.
+    pub fn search_raw_inline(&self, query: &[i32], k: usize) -> Result<Vec<Hit>, StateError> {
+        if self.shards.len() == 1 {
+            return self.shards[0].search_raw(query, k);
+        }
+        self.validate_query(query)?;
+        Ok(merge_hits(&self.per_shard_inline(query, k)?, k))
+    }
+
+    /// Force the pooled fan-out regardless of corpus size (counterpart of
+    /// [`Self::search_raw_inline`]).
+    pub fn search_raw_pooled(&self, query: &[i32], k: usize) -> Result<Vec<Hit>, StateError> {
+        if self.shards.len() == 1 {
+            return self.shards[0].search_raw(query, k);
+        }
+        self.validate_query(query)?;
+        Ok(merge_hits(&self.per_shard_pooled(query, k)?, k))
+    }
+
+    /// Validate once up front (all shards share the contract) so the
+    /// fan-out cannot fail per-shard.
+    fn validate_query(&self, query: &[i32]) -> Result<(), StateError> {
         let config = self.shards[0].config();
         if query.len() != config.dim {
             return Err(StateError::DimMismatch { expected: config.dim, got: query.len() });
         }
         config.policy.validate_raw(query, config.dim)?;
-        let per_shard: Vec<Vec<Hit>> = if self.len() < Self::PARALLEL_SEARCH_MIN_VECTORS {
-            self.shards
-                .iter()
-                .map(|shard| shard.search_raw(query, k))
-                .collect::<Result<Vec<_>, StateError>>()?
-        } else {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .shards
-                    .iter()
-                    .map(|shard| scope.spawn(move || shard.search_raw(query, k)))
-                    .collect();
-                // Join in shard order: reassembly is deterministic no
-                // matter which thread finishes first.
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard search thread panicked"))
-                    .collect::<Result<Vec<_>, StateError>>()
-            })?
-        };
-        Ok(merge_hits(&per_shard, k))
+        Ok(())
+    }
+
+    fn per_shard_inline(&self, query: &[i32], k: usize) -> Result<Vec<Vec<Hit>>, StateError> {
+        self.shards.iter().map(|shard| shard.search_raw(query, k)).collect()
+    }
+
+    /// Fan the query out to the persistent per-shard workers and collect
+    /// the responses in shard order (never completion order): reassembly
+    /// is deterministic no matter which worker finishes first.
+    fn per_shard_pooled(&self, query: &[i32], k: usize) -> Result<Vec<Vec<Hit>>, StateError> {
+        let n = self.shards.len();
+        let pool = self.pool.get_or_init(|| ShardWorkerPool::new(n));
+        // One dim-sized copy per query, shared by every job. Negligible
+        // against the ≥ PARALLEL_SEARCH_MIN_VECTORS scan this path is
+        // gated on, and it keeps the query owned (`'static`) rather than
+        // widening the raw-pointer surface to a second borrow.
+        let query: Arc<Vec<i32>> = Arc::new(query.to_vec());
+        let mut barrier: DispatchBarrier<Result<Vec<Hit>, StateError>> = DispatchBarrier::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            barrier.add(rx);
+            let shard_ptr = SharedShard(shard as *const Kernel);
+            let query = Arc::clone(&query);
+            pool.run(
+                s,
+                Box::new(move || {
+                    // SAFETY: see `SharedShard` — the dispatching call
+                    // waits on the barrier until this job resolves, so the
+                    // shard (borrowed from `&self`) outlives the job;
+                    // searches only read.
+                    let shard: &Kernel = unsafe { &*shard_ptr.0 };
+                    let _ = tx.send(shard.search_raw(&query, k));
+                }),
+            );
+        }
+        // Barrier FIRST — every job must have resolved (and released its
+        // shard pointer) before any result, even an error or panic, can
+        // leave this frame — then sequence the per-shard results in
+        // dispatch (= shard) order.
+        let results = barrier.wait_all();
+        let mut per_shard = Vec::with_capacity(results.len());
+        for r in results {
+            per_shard.push(r.expect("shard search worker died")?);
+        }
+        Ok(per_shard)
     }
 
     /// k-NN over a float query (same boundary as inserts, then integer
@@ -388,27 +687,25 @@ pub fn root_hash_of(shard_hashes: &[u64]) -> u64 {
     h.finish()
 }
 
-/// Deterministic k-way merge of per-shard hit lists (each already ordered
-/// by `(dist_raw, id)`) into the global top-k under the same total order.
+/// Deterministic merge of per-shard hit lists (each already its shard's
+/// top-k under `(dist_raw, id)`) into the global top-k: every candidate
+/// streams through the same bounded [`TopK`] heap the index read paths
+/// use, keyed on the same total order. A pure function of the per-shard
+/// result *multiset* — list order, shard order and thread scheduling
+/// cannot change the output — and bit-identical to the former k-way
+/// cursor merge (both select the k smallest keys and emit them
+/// ascending; `dist` is a pure function of `dist_raw`).
 fn merge_hits(per_shard: &[Vec<Hit>], k: usize) -> Vec<Hit> {
-    let mut heap: BinaryHeap<Reverse<(i64, u64, usize)>> = BinaryHeap::new();
-    let mut cursors = vec![0usize; per_shard.len()];
-    for (s, hits) in per_shard.iter().enumerate() {
-        if let Some(h) = hits.first() {
-            heap.push(Reverse((h.dist_raw, h.id, s)));
+    let mut topk = TopK::new(k);
+    for hits in per_shard {
+        for h in hits {
+            topk.push(h.dist_raw, h.id);
         }
     }
-    let mut out = Vec::with_capacity(k.min(per_shard.iter().map(Vec::len).sum()));
-    while out.len() < k {
-        let Some(Reverse((_, _, s))) = heap.pop() else { break };
-        let i = cursors[s];
-        out.push(per_shard[s][i]);
-        cursors[s] = i + 1;
-        if let Some(h) = per_shard[s].get(i + 1) {
-            heap.push(Reverse((h.dist_raw, h.id, s)));
-        }
-    }
-    out
+    topk.into_sorted_hits()
+        .into_iter()
+        .map(|h| Hit { id: h.id, dist_raw: h.dist, dist: <i32 as Scalar>::dist_to_f64(h.dist) })
+        .collect()
 }
 
 #[cfg(test)]
@@ -584,6 +881,83 @@ mod tests {
         let diverged: Vec<usize> =
             (0..4).filter(|&s| ha[s] != hb[s]).collect();
         assert_eq!(diverged, vec![2], "manifest must pinpoint the diverged shard");
+    }
+
+    #[test]
+    fn pooled_and_inline_fanout_agree() {
+        for n_shards in [2u32, 4] {
+            let mut sk = ShardedKernel::new(flat_config(8), n_shards);
+            for (id, v) in vecs(300, 8) {
+                sk.apply(Command::insert(id, v)).unwrap();
+            }
+            let config = sk.config().clone();
+            for t in 0..10 {
+                let q: Vec<f32> =
+                    (0..8).map(|j| ((t * 8 + j) as f32 * 0.19).sin() * 0.6).collect();
+                let fv = FixedVector::from_f32(&q, config.dim, &config.policy).unwrap();
+                let inline = sk.search_raw_inline(fv.raw(), 10).unwrap();
+                let pooled = sk.search_raw_pooled(fv.raw(), 10).unwrap();
+                assert_eq!(inline, pooled, "n_shards={n_shards} query {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_batch_upsert_is_replay_invariant() {
+        // Above PARALLEL_UPSERT_MIN_ITEMS the sub-batches apply on the
+        // worker pool. Scheduling must be invisible: the applied records
+        // (collected in shard order) replayed per shard reproduce the
+        // exact state, and search agrees with an unsharded reference.
+        let n = ShardedKernel::PARALLEL_UPSERT_MIN_ITEMS as u64 + 50;
+        let items: Vec<(u64, Vec<f32>)> =
+            (0..n).map(|i| (i, vec![(i as f32 * 0.003).sin(), 0.25])).collect();
+        let mut big = ShardedKernel::new(flat_config(2), 4);
+        let result = big.apply(Command::InsertBatch { items: items.clone() }).unwrap();
+
+        // One record per participating shard, in shard order.
+        let mut shards_seen: Vec<u32> = result.applied.iter().map(|r| r.shard).collect();
+        let sorted = {
+            let mut v = shards_seen.clone();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(shards_seen, sorted, "records must be in shard order");
+        shards_seen.dedup();
+        assert_eq!(shards_seen.len(), 4, "every shard should participate");
+
+        // Replaying the per-shard records reproduces the state bit-for-bit.
+        let mut replayed = ShardedKernel::new(flat_config(2), 4);
+        for r in &result.applied {
+            replayed.apply_canon_to_shard(r.shard, &r.command).unwrap();
+        }
+        assert_eq!(replayed.shard_hashes(), big.shard_hashes());
+        assert_eq!(replayed, big);
+
+        // And search agrees with a single unsharded kernel fed the same batch.
+        let mut single = Kernel::new(flat_config(2));
+        single.apply(Command::InsertBatch { items }).unwrap();
+        let q = [0.1f32, 0.2];
+        assert_eq!(big.search_f32(&q, 15).unwrap(), single.search_f32(&q, 15).unwrap());
+
+        // A delete afterwards still behaves (pool stays healthy).
+        big.apply(Command::Delete { id: 3 }).unwrap();
+        assert!(!big.contains(3));
+    }
+
+    #[test]
+    fn clone_and_eq_ignore_the_worker_pool() {
+        let mut sk = ShardedKernel::new(flat_config(4), 4);
+        for (id, v) in vecs(5000, 4) {
+            sk.apply(Command::insert(id, v)).unwrap();
+        }
+        // Force pool creation on the original…
+        let fv = FixedVector::from_f32(&[0.1, 0.2, 0.3, 0.4], 4, &sk.config().policy).unwrap();
+        let expect = sk.search_raw_pooled(fv.raw(), 10).unwrap();
+        // …then clone (fresh lazy pool) and compare.
+        let cloned = sk.clone();
+        assert_eq!(sk, cloned);
+        assert_eq!(cloned.search_raw(fv.raw(), 10).unwrap(), expect);
+        assert_eq!(cloned.root_hash(), sk.root_hash());
     }
 
     #[test]
