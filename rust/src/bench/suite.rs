@@ -250,6 +250,45 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
         report.add("batch_upsert", stats);
     }
 
+    // --- HTTP round-trip (epoll reactor + keep-alive client) ------------
+    {
+        use crate::node::{serve, NodeConfig, NodeState};
+        let sk =
+            ShardedKernel::new(KernelConfig::default_q16(cfg.dim).with_flat_index(), cfg.shards);
+        let state = std::sync::Arc::new(
+            NodeState::new_sharded(sk, &NodeConfig::default(), None).expect("bench node"),
+        );
+        let items: Vec<(u64, Vec<i32>)> =
+            (0..cfg.n as u64).map(|i| (i, raw_row(cfg.seed, i, cfg.dim))).collect();
+        for chunk in items.chunks(4096) {
+            state
+                .apply_canon(&CanonCommand::InsertBatch { items: chunk.to_vec() })
+                .expect("bench corpus insert");
+        }
+        let server = serve(std::sync::Arc::clone(&state), "127.0.0.1:0", 4).expect("bench serve");
+        let bodies: Vec<String> = qs
+            .iter()
+            .map(|q| {
+                let arr: Vec<Json> = q.iter().map(|&r| Json::Float(r as f64 / 65536.0)).collect();
+                Json::object(vec![("vector", Json::Array(arr)), ("k", Json::Int(cfg.k as i64))])
+                    .to_string()
+            })
+            .collect();
+        let mut conn =
+            crate::http::client::Connection::connect(&server.addr()).expect("bench connect");
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % bodies.len();
+            let (status, body) =
+                conn.request("POST", "/v1/query", bodies[qi].as_bytes()).expect("bench http");
+            assert_eq!(status, 200, "bench query failed");
+            body
+        });
+        rows.push(SuiteRow { name: "http_roundtrip".into(), n: cfg.n, stats });
+        report.add("http_roundtrip", stats);
+        server.stop();
+    }
+
     report.print();
     let result = SuiteResult {
         config_label: label.to_string(),
@@ -341,6 +380,7 @@ mod tests {
             "hnsw_search",
             "sharded_search",
             "batch_upsert",
+            "http_roundtrip",
         ] {
             assert!(r.row(name).is_some(), "missing row {name}");
             assert!(r.row(name).unwrap().stats.iters >= 3);
@@ -349,6 +389,6 @@ mod tests {
         let json = suite_json(&r).to_string();
         let parsed = crate::json::parse(&json).expect("bench json parses");
         assert_eq!(parsed.get("suite").as_str(), Some("valori-search"));
-        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(5));
+        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(6));
     }
 }

@@ -1,22 +1,37 @@
 //! Minimal HTTP/1.1 server substrate (tokio/axum unavailable offline).
 //!
-//! Blocking `std::net` sockets + a fixed thread pool. Supports the subset
-//! the Valori node needs: GET/POST, Content-Length bodies, keep-alive,
-//! bounded request sizes, graceful shutdown. This is the "Node ('std')"
-//! outer layer of the paper's §5.3 split — it wraps the kernel but never
-//! alters its logic.
+//! Two interchangeable front ends serve the same `Handler`:
+//!
+//! - **Epoll reactor** (`reactor.rs`, the default on Linux): a hand-rolled
+//!   edge-triggered epoll event loop over nonblocking sockets with
+//!   per-connection state machines, HTTP/1.1 keep-alive, a timer wheel for
+//!   read/write timeouts, a bounded connection table and a small dispatch
+//!   pool so kernel work never blocks the event loop.
+//! - **Blocking pool** ([`Server::start_blocking`]): the original
+//!   `std::net` thread-per-connection path, kept as the equivalence
+//!   reference — `tests/http_equivalence.rs` proves both produce
+//!   byte-identical responses.
+//!
+//! Either way this is the "Node ('std')" outer layer of the paper's §5.3
+//! split — it wraps the kernel but never alters its logic, and it orders
+//! nothing that reaches the kernel: requests are dispatched to the handler
+//! exactly as parsed, one at a time per connection.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+#[cfg(target_os = "linux")]
+mod reactor;
+
 /// Maximum accepted body size (1 MiB — vectors are ~KB scale).
 pub const MAX_BODY: usize = 1 << 20;
-/// Maximum header section size.
+/// Maximum header section size (bytes after the request line, including
+/// the terminating blank line).
 pub const MAX_HEADER: usize = 16 << 10;
 
 /// A parsed HTTP request.
@@ -35,6 +50,14 @@ pub struct Request {
 impl Request {
     pub fn body_str(&self) -> Result<&str, std::str::Utf8Error> {
         std::str::from_utf8(&self.body)
+    }
+
+    /// Does the client want the connection kept open after this request?
+    pub fn wants_keep_alive(&self) -> bool {
+        self.headers
+            .get("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true)
     }
 }
 
@@ -78,17 +101,26 @@ impl Response {
         }
     }
 
-    fn write_to(&self, stream: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
-        write!(
-            stream,
+    /// Serialize the full wire form. Both front ends emit exactly these
+    /// bytes, which is what makes the blocking/reactor equivalence test a
+    /// byte-for-byte comparison.
+    pub fn to_bytes(&self, keep_alive: bool) -> Vec<u8> {
+        let head = format!(
             "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
             self.status,
             self.status_text(),
             self.content_type,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
-        )?;
-        stream.write_all(&self.body)?;
+        );
+        let mut out = Vec::with_capacity(head.len() + self.body.len());
+        out.extend_from_slice(head.as_bytes());
+        out.extend_from_slice(&self.body);
+        out
+    }
+
+    fn write_to(&self, stream: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        stream.write_all(&self.to_bytes(keep_alive))?;
         stream.flush()
     }
 }
@@ -103,24 +135,26 @@ pub enum ParseError {
     TooLarge,
 }
 
-/// Parse one request from a buffered stream.
+/// The wire response for a parse failure (shared by both front ends so
+/// error responses are byte-identical too).
+pub(crate) fn parse_error_response(err: &ParseError) -> Option<Response> {
+    match err {
+        ParseError::TooLarge => Some(Response::json(413, r#"{"error":"payload too large"}"#)),
+        ParseError::Malformed(what) => {
+            Some(Response::bad_request(&format!("malformed request: {what}")))
+        }
+        ParseError::Io(_) | ParseError::Eof => None,
+    }
+}
+
+/// Parse one request from a buffered stream (blocking front end + tests).
 pub fn parse_request(reader: &mut BufReader<impl Read>) -> Result<Request, ParseError> {
     let mut line = String::new();
     let n = reader.read_line(&mut line).map_err(ParseError::Io)?;
     if n == 0 {
         return Err(ParseError::Eof);
     }
-    let mut parts = line.trim_end().split(' ');
-    let method = parts.next().filter(|s| !s.is_empty()).ok_or(ParseError::Malformed("method"))?;
-    let target = parts.next().ok_or(ParseError::Malformed("target"))?;
-    let version = parts.next().ok_or(ParseError::Malformed("version"))?;
-    if !version.starts_with("HTTP/1.") {
-        return Err(ParseError::Malformed("http version"));
-    }
-    let (path, query) = match target.split_once('?') {
-        Some((p, q)) => (p.to_string(), Some(q.to_string())),
-        None => (target.to_string(), None),
-    };
+    let (method, path, query) = parse_request_line(&line)?;
 
     let mut headers = BTreeMap::new();
     let mut header_bytes = 0usize;
@@ -143,6 +177,31 @@ pub fn parse_request(reader: &mut BufReader<impl Read>) -> Result<Request, Parse
         }
     }
 
+    let len = content_length(&headers)?;
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).map_err(ParseError::Io)?;
+
+    Ok(Request { method, path, query, headers, body })
+}
+
+/// Parse `METHOD TARGET VERSION` (the shared request-line grammar).
+fn parse_request_line(line: &str) -> Result<(String, String, Option<String>), ParseError> {
+    let mut parts = line.trim_end().split(' ');
+    let method = parts.next().filter(|s| !s.is_empty()).ok_or(ParseError::Malformed("method"))?;
+    let target = parts.next().ok_or(ParseError::Malformed("target"))?;
+    let version = parts.next().ok_or(ParseError::Malformed("version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(ParseError::Malformed("http version"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    Ok((method.to_string(), path, query))
+}
+
+/// Validated `content-length` (0 when absent; `TooLarge` over [`MAX_BODY`]).
+fn content_length(headers: &BTreeMap<String, String>) -> Result<usize, ParseError> {
     let len: usize = headers
         .get("content-length")
         .map(|v| v.parse().map_err(|_| ParseError::Malformed("content-length")))
@@ -151,71 +210,392 @@ pub fn parse_request(reader: &mut BufReader<impl Read>) -> Result<Request, Parse
     if len > MAX_BODY {
         return Err(ParseError::TooLarge);
     }
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body).map_err(ParseError::Io)?;
+    Ok(len)
+}
 
-    Ok(Request { method: method.to_string(), path, query, headers, body })
+/// Which half of a request an in-flight parse is waiting on (drives the
+/// reactor's `ReadingHeaders`/`ReadingBody` connection states).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParsePhase {
+    Headers,
+    Body,
+}
+
+enum ParserState {
+    /// Accumulating request line + headers (terminator not yet seen).
+    Headers,
+    /// Head parsed; waiting for `need` body bytes.
+    Body { req: Request, need: usize },
+}
+
+/// Incremental, resumable HTTP/1.1 request parser for the nonblocking
+/// reactor: feed raw bytes as they arrive off the socket; a complete
+/// [`Request`] pops out once the header terminator and the declared body
+/// have been buffered. Grammar and limits match [`parse_request`] exactly
+/// (same `Malformed` labels, same `MAX_HEADER`/`MAX_BODY` boundaries, the
+/// request line validated eagerly at its newline, truncated requests
+/// classified via [`Self::eof_error`]), so both front ends reject the
+/// same inputs with the same responses. One deliberate divergence: the
+/// blocking parser reads the request line unbounded, while this parser
+/// caps a newline-less request line at `MAX_HEADER` (413) so a hostile
+/// client cannot grow the buffer without limit.
+pub struct RequestParser {
+    buf: Vec<u8>,
+    state: ParserState,
+    /// Resume point for the header-terminator scan (keeps feeding
+    /// one-byte chunks O(total) instead of O(total²)).
+    scan_pos: usize,
+    /// Start of the header line currently being scanned.
+    line_start: usize,
+    /// Index just past the request line's newline (0 = not seen yet);
+    /// lets the size-cap check run without rescanning the buffer.
+    req_line_end: usize,
+}
+
+impl Default for RequestParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestParser {
+    pub fn new() -> Self {
+        Self {
+            buf: Vec::new(),
+            state: ParserState::Headers,
+            scan_pos: 0,
+            line_start: 0,
+            req_line_end: 0,
+        }
+    }
+
+    pub fn phase(&self) -> ParsePhase {
+        match self.state {
+            ParserState::Headers => ParsePhase::Headers,
+            ParserState::Body { .. } => ParsePhase::Body,
+        }
+    }
+
+    /// Bytes buffered beyond the last completed request. Nonzero right
+    /// after [`Self::feed`] returns a request means the client pipelined.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True while a request is partially buffered (half-read connection).
+    pub fn mid_request(&self) -> bool {
+        !self.buf.is_empty() || matches!(self.state, ParserState::Body { .. })
+    }
+
+    /// Append bytes and try to complete one request. `Ok(None)` means
+    /// more input is needed; errors are terminal for the connection.
+    pub fn feed(&mut self, data: &[u8]) -> Result<Option<Request>, ParseError> {
+        self.buf.extend_from_slice(data);
+        loop {
+            match &mut self.state {
+                ParserState::Headers => {
+                    let had_req_line = self.req_line_end > 0;
+                    let Some(end) = self.find_header_end() else {
+                        if !had_req_line && self.req_line_end > 0 {
+                            // The request line just completed: validate it
+                            // eagerly, matching the moment the blocking
+                            // parser reports request-line errors.
+                            self.validate_request_line()?;
+                        }
+                        self.check_header_limits()?;
+                        return Ok(None);
+                    };
+                    let (req, need) = parse_head(&self.buf[..end])?;
+                    self.buf.drain(..end);
+                    self.scan_pos = 0;
+                    self.line_start = 0;
+                    self.req_line_end = 0;
+                    self.state = ParserState::Body { req, need };
+                }
+                ParserState::Body { need, .. } => {
+                    let need = *need;
+                    if self.buf.len() < need {
+                        return Ok(None);
+                    }
+                    let ParserState::Body { mut req, .. } =
+                        std::mem::replace(&mut self.state, ParserState::Headers)
+                    else {
+                        unreachable!()
+                    };
+                    req.body = self.buf.drain(..need).collect();
+                    return Ok(Some(req));
+                }
+            }
+        }
+    }
+
+    /// Find the end of the header section: the first line that is empty
+    /// after stripping a trailing '\r' terminates the headers (exactly the
+    /// blank-line rule the blocking parser's `read_line` loop applies).
+    fn find_header_end(&mut self) -> Option<usize> {
+        while self.scan_pos < self.buf.len() {
+            if self.buf[self.scan_pos] == b'\n' {
+                let line = &self.buf[self.line_start..self.scan_pos];
+                if line.is_empty() || line == b"\r" {
+                    let end = self.scan_pos + 1;
+                    self.scan_pos = end;
+                    return Some(end);
+                }
+                if self.line_start == 0 {
+                    self.req_line_end = self.scan_pos + 1;
+                }
+                self.line_start = self.scan_pos + 1;
+            }
+            self.scan_pos += 1;
+        }
+        None
+    }
+
+    /// Parse-check the (complete) request line without consuming it.
+    fn validate_request_line(&self) -> Result<(), ParseError> {
+        let line = std::str::from_utf8(&self.buf[..self.req_line_end]).map_err(|_| {
+            ParseError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "non-utf8 request line",
+            ))
+        })?;
+        parse_request_line(line).map(|_| ())
+    }
+
+    /// Resolve end-of-stream exactly as the blocking parser would:
+    /// `Ok(Some(req))` when the blocking path would still serve a request
+    /// (its `read_line` treats a truncated `"\r"` tail as the blank
+    /// terminator, completing a zero-body request), `Ok(None)` when it
+    /// would close without a response (clean EOF, EOF mid-body, invalid
+    /// UTF-8), `Err` when it would answer an error (EOF mid-headers,
+    /// request-line or length errors surfaced at the truncation point).
+    pub fn finish_eof(&mut self) -> Result<Option<Request>, ParseError> {
+        if matches!(self.state, ParserState::Body { .. }) || self.buf.is_empty() {
+            return Ok(None); // read_exact-Io / clean-EOF: no response
+        }
+        if self.req_line_end == 0 {
+            // EOF inside the request line: the partial line either fails
+            // to parse, or parses and then hits EOF in the header loop.
+            let line = std::str::from_utf8(&self.buf).map_err(|_| {
+                ParseError::Io(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "non-utf8 request line",
+                ))
+            })?;
+            parse_request_line(line)?;
+            return Err(ParseError::Malformed("eof in headers"));
+        }
+        let tail = &self.buf[self.line_start..];
+        if tail != b"\r" {
+            // A truncated header line (or nothing) follows the last
+            // newline: the blocking header loop reports EOF.
+            return Err(ParseError::Malformed("eof in headers"));
+        }
+        // `read_line` returns the bare "\r" tail, which trims to an empty
+        // line: the header section completes. A declared body can never
+        // arrive after EOF (read_exact Io → silent close); a zero-body
+        // request is served.
+        let (req, need) = parse_head(&self.buf[..self.line_start])?;
+        if need > 0 {
+            return Ok(None);
+        }
+        self.buf.clear();
+        self.scan_pos = 0;
+        self.line_start = 0;
+        self.req_line_end = 0;
+        Ok(Some(req))
+    }
+
+    /// Enforce `MAX_HEADER` while the terminator is still outstanding:
+    /// the section can only grow, so exceeding the cap early is final.
+    /// O(1) per feed — the request-line boundary is tracked by the scan.
+    fn check_header_limits(&self) -> Result<(), ParseError> {
+        let over = if self.req_line_end > 0 {
+            // Bytes after the request line (the header section so far).
+            self.buf.len() - self.req_line_end > MAX_HEADER
+        } else {
+            // Runaway request line with no newline at all.
+            self.buf.len() > MAX_HEADER
+        };
+        if over {
+            Err(ParseError::TooLarge)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Parse a complete header block (request line + headers + blank line)
+/// into a body-less request plus the declared body length.
+fn parse_head(head: &[u8]) -> Result<(Request, usize), ParseError> {
+    // Non-UTF-8 header bytes surface as an I/O-class error (connection
+    // dropped with no response) — the same outcome the blocking parser's
+    // `read_line` InvalidData error produces, keeping the front ends
+    // byte-equivalent on this input class too.
+    let text = std::str::from_utf8(head).map_err(|_| {
+        ParseError::Io(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "non-utf8 header bytes",
+        ))
+    })?;
+    let mut lines = text.split('\n');
+    let request_line = lines.next().unwrap_or("");
+    // The header section (everything after the request line, including the
+    // blank terminator) carries the same cap as the blocking parser.
+    let section = head.len() - (request_line.len() + 1).min(head.len());
+    if section > MAX_HEADER {
+        return Err(ParseError::TooLarge);
+    }
+    let (method, path, query) = parse_request_line(request_line)?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        let t = line.trim_end();
+        if t.is_empty() {
+            continue; // the blank terminator
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let need = content_length(&headers)?;
+    let req = Request { method, path, query, headers, body: Vec::new() };
+    Ok((req, need))
 }
 
 /// Boxed handler type.
 pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
 
-/// A running HTTP server.
+/// Front-end observability counters (gauges live outside the kernel and
+/// never enter the deterministic state, like [`crate::node::Metrics`]).
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    /// Currently open connections (gauge).
+    pub connections_open: AtomicU64,
+    /// Total accepted connections.
+    pub connections_accepted: AtomicU64,
+    /// Connections evicted by the timer wheel (slow loris, idle).
+    pub connections_timed_out: AtomicU64,
+    /// Connections turned away at the `max_connections` cap.
+    pub connections_rejected: AtomicU64,
+    /// Responses fully written.
+    pub requests_served: AtomicU64,
+    /// Pipelined requests rejected (the reactor serves strictly one
+    /// request per connection at a time).
+    pub pipelined_rejected: AtomicU64,
+}
+
+impl ServerMetrics {
+    fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+}
+
+/// Front-end tuning knobs (defaults match the historical behavior).
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// Dispatch pool size (handler threads).
+    pub workers: usize,
+    /// Bound on concurrently open connections; accepts beyond it are
+    /// answered 503 and closed.
+    pub max_connections: usize,
+    /// Budget for reading one full request, and for keep-alive idle time.
+    pub read_timeout: Duration,
+    /// Budget for dispatching + writing one response.
+    pub write_timeout: Duration,
+    /// Keep-alive requests served per connection before `connection:
+    /// close` (matches the blocking path's historical 1000-request loop).
+    pub max_requests_per_conn: u32,
+    /// Shared metrics sink (pass a clone to observe the server).
+    pub metrics: Arc<ServerMetrics>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            max_connections: 4096,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+            max_requests_per_conn: 1000,
+            metrics: Arc::new(ServerMetrics::default()),
+        }
+    }
+}
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Reactor(reactor::ReactorHandle),
+    Blocking(BlockingHandle),
+}
+
+/// A running HTTP server (epoll reactor on Linux, blocking pool
+/// elsewhere; [`Server::start_blocking`] forces the legacy path).
 pub struct Server {
     addr: SocketAddr,
-    shutdown: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<ServerMetrics>,
+    backend: Option<Backend>,
 }
 
 impl Server {
     /// Bind and serve on `addr` (use port 0 for an ephemeral port) with
     /// `n_workers` handler threads.
     pub fn start(addr: &str, n_workers: usize, handler: Handler) -> std::io::Result<Server> {
+        Self::start_with(addr, ServerConfig { workers: n_workers, ..Default::default() }, handler)
+    }
+
+    /// Bind and serve with explicit front-end configuration.
+    pub fn start_with(
+        addr: &str,
+        config: ServerConfig,
+        handler: Handler,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::channel::<TcpStream>();
-        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::clone(&config.metrics);
+        #[cfg(target_os = "linux")]
+        let backend = Backend::Reactor(reactor::start(listener, config, handler)?);
+        #[cfg(not(target_os = "linux"))]
+        let backend = Backend::Blocking(start_blocking_impl(listener, config, handler)?);
+        Ok(Server { addr: local, metrics, backend: Some(backend) })
+    }
 
-        let mut workers = Vec::with_capacity(n_workers);
-        for i in 0..n_workers {
-            let rx = Arc::clone(&rx);
-            let handler = Arc::clone(&handler);
-            let shutdown = Arc::clone(&shutdown);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("valori-http-{i}"))
-                    .spawn(move || worker_loop(rx, handler, shutdown))
-                    .expect("spawn worker"),
-            );
-        }
-
-        let accept_shutdown = Arc::clone(&shutdown);
-        let accept_thread = std::thread::Builder::new()
-            .name("valori-http-accept".into())
-            .spawn(move || {
-                for stream in listener.incoming() {
-                    if accept_shutdown.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    match stream {
-                        Ok(s) => {
-                            let _ = s.set_read_timeout(Some(Duration::from_secs(30)));
-                            let _ = tx.send(s);
-                        }
-                        Err(_) => continue,
-                    }
-                }
-                // dropping tx ends the workers
-            })
-            .expect("spawn accept");
-
-        Ok(Server { addr: local, shutdown, accept_thread: Some(accept_thread), workers })
+    /// The original blocking thread-per-connection front end, kept as the
+    /// byte-equivalence reference for the reactor (see
+    /// `tests/http_equivalence.rs`).
+    pub fn start_blocking(
+        addr: &str,
+        n_workers: usize,
+        handler: Handler,
+    ) -> std::io::Result<Server> {
+        let config = ServerConfig { workers: n_workers, ..Default::default() };
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let metrics = Arc::clone(&config.metrics);
+        let backend = Backend::Blocking(start_blocking_impl(listener, config, handler)?);
+        Ok(Server { addr: local, metrics, backend: Some(backend) })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Which front end is serving ("epoll" or "blocking").
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Some(Backend::Reactor(_)) => "epoll",
+            Some(Backend::Blocking(_)) => "blocking",
+            None => "stopped",
+        }
+    }
+
+    /// The server's metrics sink (same instance as `config.metrics`).
+    pub fn metrics(&self) -> &Arc<ServerMetrics> {
+        &self.metrics
     }
 
     /// Signal shutdown and join all threads.
@@ -224,9 +604,33 @@ impl Server {
     }
 
     fn shutdown_impl(&mut self) {
+        match self.backend.take() {
+            #[cfg(target_os = "linux")]
+            Some(Backend::Reactor(handle)) => handle.stop(),
+            Some(Backend::Blocking(handle)) => handle.stop(),
+            None => {}
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Handles for the blocking front end's threads.
+struct BlockingHandle {
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl BlockingHandle {
+    fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // unblock accept() with a throwaway connection
-        let _ = TcpStream::connect(self.addr);
+        // The accept loop polls a nonblocking listener, so it observes the
+        // flag within one poll interval — no self-connection needed.
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
@@ -236,18 +640,78 @@ impl Server {
     }
 }
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        if self.accept_thread.is_some() {
-            self.shutdown_impl();
-        }
+fn start_blocking_impl(
+    listener: TcpListener,
+    config: ServerConfig,
+    handler: Handler,
+) -> std::io::Result<BlockingHandle> {
+    listener.set_nonblocking(true)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let rx = Arc::new(Mutex::new(rx));
+
+    let mut workers = Vec::with_capacity(config.workers);
+    for i in 0..config.workers {
+        let rx = Arc::clone(&rx);
+        let handler = Arc::clone(&handler);
+        let shutdown = Arc::clone(&shutdown);
+        let config = config.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("valori-http-{i}"))
+                .spawn(move || worker_loop(rx, handler, shutdown, config))
+                .expect("spawn worker"),
+        );
     }
+
+    let accept_shutdown = Arc::clone(&shutdown);
+    let metrics = Arc::clone(&config.metrics);
+    let max_connections = config.max_connections;
+    let read_timeout = config.read_timeout;
+    let accept_thread = std::thread::Builder::new()
+        .name("valori-http-accept".into())
+        .spawn(move || {
+            loop {
+                if accept_shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((mut s, _)) => {
+                        ServerMetrics::add(&metrics.connections_accepted, 1);
+                        // Best-effort connection cap (the gauge lags
+                        // queued-but-unserved sockets slightly; the
+                        // reactor enforces the cap exactly).
+                        if ServerMetrics::get(&metrics.connections_open)
+                            >= max_connections as u64
+                        {
+                            ServerMetrics::add(&metrics.connections_rejected, 1);
+                            let resp =
+                                Response::json(503, r#"{"error":"too many connections"}"#);
+                            let _ = s.write_all(&resp.to_bytes(false));
+                            continue;
+                        }
+                        let _ = s.set_nonblocking(false);
+                        let _ = s.set_read_timeout(Some(read_timeout));
+                        let _ = tx.send(s);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => continue,
+                }
+            }
+            // dropping tx ends the workers
+        })
+        .expect("spawn accept");
+
+    Ok(BlockingHandle { shutdown, accept_thread: Some(accept_thread), workers })
 }
 
 fn worker_loop(
     rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>,
     handler: Handler,
     shutdown: Arc<AtomicBool>,
+    config: ServerConfig,
 ) {
     loop {
         let stream = {
@@ -258,40 +722,39 @@ fn worker_loop(
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
-        let _ = handle_connection(stream, &handler);
+        ServerMetrics::add(&config.metrics.connections_open, 1);
+        let _ = handle_connection(stream, &handler, &config);
+        config.metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
-fn handle_connection(stream: TcpStream, handler: &Handler) -> std::io::Result<()> {
+fn handle_connection(
+    stream: TcpStream,
+    handler: &Handler,
+    config: &ServerConfig,
+) -> std::io::Result<()> {
+    let metrics = &config.metrics;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    // keep-alive loop: serve up to 1000 requests per connection
-    for _ in 0..1000 {
+    // keep-alive loop: bounded requests per connection
+    for _ in 0..config.max_requests_per_conn {
         match parse_request(&mut reader) {
             Ok(req) => {
-                let keep_alive = req
-                    .headers
-                    .get("connection")
-                    .map(|v| !v.eq_ignore_ascii_case("close"))
-                    .unwrap_or(true);
+                let keep_alive = req.wants_keep_alive();
                 let resp = handler(req);
                 resp.write_to(&mut writer, keep_alive)?;
+                ServerMetrics::add(&metrics.requests_served, 1);
                 if !keep_alive {
                     return Ok(());
                 }
             }
             Err(ParseError::Eof) => return Ok(()),
-            Err(ParseError::TooLarge) => {
-                let _ = Response::json(413, r#"{"error":"payload too large"}"#)
-                    .write_to(&mut writer, false);
-                return Ok(());
+            Err(err) => {
+                if let Some(resp) = parse_error_response(&err) {
+                    let _ = resp.write_to(&mut writer, false);
+                }
+                return Ok(()); // timeout/reset/malformed: drop the connection
             }
-            Err(ParseError::Malformed(what)) => {
-                let _ = Response::bad_request(&format!("malformed request: {what}"))
-                    .write_to(&mut writer, false);
-                return Ok(());
-            }
-            Err(ParseError::Io(_)) => return Ok(()), // timeout/reset
         }
     }
     Ok(())
@@ -301,7 +764,49 @@ fn handle_connection(stream: TcpStream, handler: &Handler) -> std::io::Result<()
 pub mod client {
     use super::*;
 
-    /// One-shot request; returns (status, body).
+    /// Read one response off a buffered stream: returns (status, body,
+    /// server asked to close).
+    fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, Vec<u8>, bool)> {
+        let mut status_line = String::new();
+        if reader.read_line(&mut status_line)? == 0 {
+            // Clean EOF before a single response byte: the server closed
+            // the (stale keep-alive) socket without processing anything.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before response",
+            ));
+        }
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| std::io::Error::other("bad status line"))?;
+        let mut len = 0usize;
+        let mut close = false;
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            let t = line.trim_end();
+            if t.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = t.split_once(':') {
+                let k = k.trim();
+                if k.eq_ignore_ascii_case("content-length") {
+                    len = v.trim().parse().unwrap_or(0);
+                } else if k.eq_ignore_ascii_case("connection") {
+                    close = v.trim().eq_ignore_ascii_case("close");
+                }
+            }
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        Ok((status, body, close))
+    }
+
+    /// One-shot request (`connection: close`); returns (status, body).
     pub fn request(
         addr: &SocketAddr,
         method: &str,
@@ -317,34 +822,129 @@ pub mod client {
         )?;
         stream.write_all(body)?;
         stream.flush()?;
-
         let mut reader = BufReader::new(stream);
-        let mut status_line = String::new();
-        reader.read_line(&mut status_line)?;
-        let status: u16 = status_line
-            .split(' ')
-            .nth(1)
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| std::io::Error::other("bad status line"))?;
-        let mut len = 0usize;
-        loop {
-            let mut line = String::new();
-            if reader.read_line(&mut line)? == 0 {
-                break;
-            }
-            let t = line.trim_end();
-            if t.is_empty() {
-                break;
-            }
-            if let Some((k, v)) = t.split_once(':') {
-                if k.trim().eq_ignore_ascii_case("content-length") {
-                    len = v.trim().parse().unwrap_or(0);
+        let (status, body, _) = read_response(&mut reader)?;
+        Ok((status, body))
+    }
+
+    /// A persistent keep-alive connection: serial requests reuse one
+    /// socket, so callers stop paying per-request connect cost (the
+    /// replication sync drivers and `valori bench`'s HTTP row use this).
+    /// Transparently reconnects when the server retires the connection
+    /// (keep-alive request cap, idle timeout).
+    pub struct Connection {
+        addr: SocketAddr,
+        stream: TcpStream,
+        reader: BufReader<TcpStream>,
+        /// Server sent `connection: close` (or I/O failed): reconnect
+        /// before the next request.
+        dead: bool,
+        /// No request has succeeded on this socket yet, so a failure is a
+        /// real error rather than a stale keep-alive race.
+        fresh: bool,
+    }
+
+    impl Connection {
+        pub fn connect(addr: &SocketAddr) -> std::io::Result<Self> {
+            let stream = TcpStream::connect(addr)?;
+            stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+            let _ = stream.set_nodelay(true);
+            let reader = BufReader::new(stream.try_clone()?);
+            Ok(Self { addr: *addr, stream, reader, dead: false, fresh: true })
+        }
+
+        pub fn addr(&self) -> SocketAddr {
+            self.addr
+        }
+
+        fn send(&mut self, method: &str, path: &str, body: &[u8]) -> std::io::Result<()> {
+            let addr = self.addr;
+            write!(
+                self.stream,
+                "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\nconnection: keep-alive\r\n\r\n",
+                body.len()
+            )?;
+            self.stream.write_all(body)?;
+            self.stream.flush()
+        }
+
+        /// Issue one request on the persistent socket; returns (status,
+        /// body). Retries once on a fresh socket if a *reused* connection
+        /// fails before any response byte arrived (the server may have
+        /// legitimately retired the idle socket between requests). A
+        /// failure after the response started, or on a fresh socket, is
+        /// surfaced rather than re-sent. Residual at-least-once window:
+        /// if the server executes the handler but is evicted before
+        /// writing a single response byte (dispatch exceeding
+        /// `write_timeout`, or shutdown mid-dispatch), the retry re-sends
+        /// a request that already ran. For this crate's mutation
+        /// endpoints that is loud, not silent — re-applied canonical
+        /// commands are rejected deterministically (duplicate id), so a
+        /// sync fails with an error instead of forking state.
+        pub fn request(
+            &mut self,
+            method: &str,
+            path: &str,
+            body: &[u8],
+        ) -> std::io::Result<(u16, Vec<u8>)> {
+            for _attempt in 0..2 {
+                if self.dead {
+                    *self = Self::connect(&self.addr)?;
+                }
+                let exchange = self
+                    .send(method, path, body)
+                    .and_then(|()| read_response(&mut self.reader));
+                match exchange {
+                    Ok((status, body, close)) => {
+                        self.fresh = false;
+                        if close {
+                            self.dead = true;
+                        }
+                        return Ok((status, body));
+                    }
+                    Err(e) => {
+                        // Retry only the stale-reused-socket signatures:
+                        // the connection died with no response byte read
+                        // (EOF/reset) or the request could not be sent at
+                        // all. Anything else (timeout, torn response) may
+                        // mean the server acted on the request.
+                        let retryable = !self.fresh
+                            && matches!(
+                                e.kind(),
+                                std::io::ErrorKind::UnexpectedEof
+                                    | std::io::ErrorKind::ConnectionReset
+                                    | std::io::ErrorKind::ConnectionAborted
+                                    | std::io::ErrorKind::BrokenPipe
+                            );
+                        self.dead = true;
+                        if !retryable {
+                            return Err(e);
+                        }
+                    }
                 }
             }
+            Err(std::io::Error::other("keep-alive retry failed"))
         }
-        let mut body = vec![0u8; len];
-        reader.read_exact(&mut body)?;
-        Ok((status, body))
+
+        /// POST JSON; returns (status, parsed body if JSON).
+        pub fn post_json(
+            &mut self,
+            path: &str,
+            body: &crate::json::Json,
+        ) -> std::io::Result<(u16, crate::json::Json)> {
+            let (status, bytes) = self.request("POST", path, body.to_string().as_bytes())?;
+            let text = String::from_utf8_lossy(&bytes);
+            let json = crate::json::parse(&text).unwrap_or(crate::json::Json::Null);
+            Ok((status, json))
+        }
+
+        /// GET; returns (status, parsed body if JSON).
+        pub fn get_json(&mut self, path: &str) -> std::io::Result<(u16, crate::json::Json)> {
+            let (status, bytes) = self.request("GET", path, &[])?;
+            let text = String::from_utf8_lossy(&bytes);
+            let json = crate::json::parse(&text).unwrap_or(crate::json::Json::Null);
+            Ok((status, json))
+        }
     }
 
     /// POST JSON; returns (status, parsed body if JSON).
@@ -372,8 +972,8 @@ pub mod client {
 mod tests {
     use super::*;
 
-    fn echo_server() -> Server {
-        let handler: Handler = Arc::new(|req: Request| {
+    fn echo_handler() -> Handler {
+        Arc::new(|req: Request| {
             if req.path == "/echo" {
                 Response::text(200, String::from_utf8_lossy(&req.body).to_string())
             } else if req.path == "/method" {
@@ -383,8 +983,11 @@ mod tests {
             } else {
                 Response::not_found()
             }
-        });
-        Server::start("127.0.0.1:0", 2, handler).unwrap()
+        })
+    }
+
+    fn echo_server() -> Server {
+        Server::start("127.0.0.1:0", 2, echo_handler()).unwrap()
     }
 
     #[test]
@@ -466,12 +1069,7 @@ mod tests {
         let mut stream = TcpStream::connect(server.addr()).unwrap();
         for i in 0..3 {
             let msg = format!("ka-{i}");
-            write!(
-                stream,
-                "POST /echo HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
-                msg.len()
-            )
-            .unwrap();
+            write!(stream, "POST /echo HTTP/1.1\r\ncontent-length: {}\r\n\r\n", msg.len()).unwrap();
             stream.write_all(msg.as_bytes()).unwrap();
             stream.flush().unwrap();
             // read one response off the same socket
@@ -498,5 +1096,102 @@ mod tests {
             assert_eq!(body, msg.as_bytes());
         }
         server.stop();
+    }
+
+    #[test]
+    fn keep_alive_client_connection_reuses_socket() {
+        let server = echo_server();
+        let mut conn = client::Connection::connect(&server.addr()).unwrap();
+        for i in 0..5 {
+            let msg = format!("conn-{i}");
+            let (status, body) = conn.request("POST", "/echo", msg.as_bytes()).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body, msg.as_bytes());
+        }
+        let metrics = Arc::clone(server.metrics());
+        assert_eq!(ServerMetrics::get(&metrics.connections_accepted), 1);
+        assert_eq!(ServerMetrics::get(&metrics.requests_served), 5);
+        server.stop();
+    }
+
+    #[test]
+    fn incremental_parser_single_byte_feed() {
+        let raw = b"POST /echo?x=1 HTTP/1.1\r\nhost: h\r\ncontent-length: 5\r\n\r\nhello";
+        let mut parser = RequestParser::new();
+        for (i, &b) in raw.iter().enumerate() {
+            let got = parser.feed(&[b]).unwrap();
+            if i + 1 < raw.len() {
+                assert!(got.is_none(), "complete after {} bytes?", i + 1);
+            } else {
+                let req = got.expect("request completes on final byte");
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/echo");
+                assert_eq!(req.query.as_deref(), Some("x=1"));
+                assert_eq!(req.headers.get("host").map(String::as_str), Some("h"));
+                assert_eq!(req.body, b"hello");
+            }
+        }
+        assert_eq!(parser.buffered(), 0);
+        assert!(!parser.mid_request());
+    }
+
+    #[test]
+    fn incremental_parser_detects_pipelining() {
+        let two = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut parser = RequestParser::new();
+        let req = parser.feed(two).unwrap().expect("first request parses");
+        assert_eq!(req.path, "/a");
+        assert!(parser.buffered() > 0, "second request must be visible as leftover");
+        let req2 = parser.feed(&[]).unwrap().expect("second request parses");
+        assert_eq!(req2.path, "/b");
+        assert_eq!(parser.buffered(), 0);
+    }
+
+    #[test]
+    fn incremental_parser_matches_blocking_errors() {
+        // malformed request line
+        let mut p = RequestParser::new();
+        assert!(matches!(p.feed(b"NONSENSE\r\n\r\n"), Err(ParseError::Malformed("target"))));
+        // bad http version
+        let mut p = RequestParser::new();
+        assert!(matches!(
+            p.feed(b"GET / SPDY/9\r\n\r\n"),
+            Err(ParseError::Malformed("http version"))
+        ));
+        // oversized declared body
+        let mut p = RequestParser::new();
+        let raw = format!("POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(matches!(p.feed(raw.as_bytes()), Err(ParseError::TooLarge)));
+        // unparsable content-length
+        let mut p = RequestParser::new();
+        assert!(matches!(
+            p.feed(b"POST / HTTP/1.1\r\ncontent-length: nope\r\n\r\n"),
+            Err(ParseError::Malformed("content-length"))
+        ));
+    }
+
+    #[test]
+    fn incremental_parser_header_cap_is_exact() {
+        // Header section of exactly MAX_HEADER bytes parses...
+        let overhead = "x-f: \r\n".len() + "\r\n".len();
+        let pad = "p".repeat(MAX_HEADER - overhead);
+        let ok = format!("GET /q HTTP/1.1\r\nx-f: {pad}\r\n\r\n");
+        let mut p = RequestParser::new();
+        let req = p.feed(ok.as_bytes()).unwrap().expect("exact-cap header parses");
+        assert_eq!(req.path, "/q");
+        // ...one more byte is rejected, even when fed incrementally.
+        let too_big = format!("GET /q HTTP/1.1\r\nx-f: p{pad}\r\n\r\n");
+        let mut p = RequestParser::new();
+        let mut err = None;
+        for chunk in too_big.as_bytes().chunks(97) {
+            match p.feed(chunk) {
+                Ok(_) => {}
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        assert!(matches!(err, Some(ParseError::TooLarge)));
     }
 }

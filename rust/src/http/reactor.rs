@@ -1,0 +1,689 @@
+//! Hand-rolled epoll reactor: the async HTTP front end (Linux only).
+//!
+//! Zero external dependencies — the three epoll syscalls are declared
+//! directly against the libc the binary already links. One event-loop
+//! thread owns every socket; a small dispatch pool runs the [`Handler`]
+//! so kernel work (searches, WAL-logged mutations) never blocks the loop.
+//!
+//! ## Per-connection state machine
+//!
+//! ```text
+//! ReadingHeaders → ReadingBody → Dispatching → Writing ─┬→ KeepAlive ─┐
+//!        ↑                                              └→ (close)    │
+//!        └──────────────────────────────────────────────────────────-─┘
+//! ```
+//!
+//! - `ReadingHeaders`/`ReadingBody`: nonblocking reads feed the
+//!   incremental [`RequestParser`]; a parse error answers 400/413 and
+//!   closes, exactly like the blocking front end.
+//! - `Dispatching`: the parsed request is on the worker pool; bytes that
+//!   arrive now are a *pipelined* request, which this server rejects
+//!   (one request in flight per connection keeps the dispatch path
+//!   trivially order-free: nothing downstream of the socket reorders).
+//! - `Writing`: the response (serialized by the same
+//!   [`Response::to_bytes`] the blocking path uses) drains through
+//!   nonblocking writes, resumed on `EPOLLOUT` edges.
+//! - `KeepAlive`: idle between requests; the first byte of the next
+//!   request returns to `ReadingHeaders`.
+//!
+//! Timeouts ride a coarse timer wheel (100 ms ticks): one deadline per
+//! connection, reset at request start / dispatch / keep-alive idle, so a
+//! slow-loris trickle is evicted `read_timeout` after the request began
+//! no matter how many bytes it drips. Shutdown and handler completions
+//! wake the loop through a nonblocking socketpair — no self-connection
+//! hack, and `stop()` never races the accept loop.
+//!
+//! ## Why the reactor cannot affect determinism
+//!
+//! The reactor moves bytes; it never orders kernel work. Each connection
+//! has at most one request in flight, the handler runs behind the node's
+//! existing `RwLock` exactly as under the blocking front end, and the
+//! response bytes are a pure function of the handler's `Response`. The
+//! equivalence test drives both front ends with identical request
+//! streams and asserts byte-identical responses and identical state
+//! hashes.
+
+use super::{
+    parse_error_response, Handler, ParsePhase, Request, RequestParser, Response, ServerConfig,
+    ServerMetrics,
+};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::c_int;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// epoll FFI (the only unsafe in the crate's I/O layer)
+
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+    fn close(fd: c_int) -> c_int;
+}
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+const EPOLLET: u32 = 1 << 31;
+
+/// Thin RAII wrapper over an epoll instance.
+struct Epoll {
+    fd: c_int,
+}
+
+impl Epoll {
+    fn new() -> std::io::Result<Self> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Self { fd })
+    }
+
+    fn add(&self, fd: RawFd, token: u64, events: u32) -> std::io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let rc = unsafe { epoll_ctl(self.fd, EPOLL_CTL_ADD, fd, &mut ev) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn del(&self, fd: RawFd) {
+        // A dummy event keeps pre-2.6.9 kernels happy; errors are moot
+        // because the fd is about to be closed anyway.
+        let mut ev = EpollEvent { events: 0, data: 0 };
+        unsafe { epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, &mut ev) };
+    }
+
+    /// Wait for events; EINTR reports as zero events.
+    fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> usize {
+        let max = events.len() as c_int;
+        let rc = unsafe { epoll_wait(self.fd, events.as_mut_ptr(), max, timeout_ms) };
+        if rc < 0 {
+            0
+        } else {
+            rc as usize
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timer wheel
+
+const TICK_MS: u64 = 100;
+const WHEEL_SLOTS: usize = 1024; // ~102 s horizon; longer deadlines re-queue
+
+/// Coarse hashed timer wheel: one lazily-validated entry per connection.
+/// Deadline extensions just overwrite `Conn::deadline`; when the stale
+/// entry pops, the connection is rescheduled instead of evicted, so
+/// refreshing a deadline is O(1) with no wheel traffic.
+struct TimerWheel {
+    slots: Vec<Vec<(usize, u64)>>, // (connection slot, generation)
+    cursor: usize,
+    last_tick: Instant,
+}
+
+impl TimerWheel {
+    fn new(now: Instant) -> Self {
+        Self { slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(), cursor: 0, last_tick: now }
+    }
+
+    fn schedule(&mut self, now: Instant, deadline: Instant, token: usize, gen: u64) {
+        let ms = deadline.saturating_duration_since(now).as_millis() as u64;
+        let ticks = (ms / TICK_MS + 1).clamp(1, WHEEL_SLOTS as u64 - 1) as usize;
+        let slot = (self.cursor + ticks) % WHEEL_SLOTS;
+        self.slots[slot].push((token, gen));
+    }
+
+    /// Milliseconds until the next tick (the epoll wait timeout).
+    fn next_timeout_ms(&self, now: Instant) -> i32 {
+        let elapsed = now.duration_since(self.last_tick).as_millis() as u64;
+        TICK_MS.saturating_sub(elapsed).max(1) as i32
+    }
+
+    /// Advance past due ticks, draining candidate entries into `due`.
+    fn advance(&mut self, now: Instant, due: &mut Vec<(usize, u64)>) {
+        while now.duration_since(self.last_tick).as_millis() as u64 >= TICK_MS {
+            self.last_tick += Duration::from_millis(TICK_MS);
+            self.cursor = (self.cursor + 1) % WHEEL_SLOTS;
+            due.append(&mut self.slots[self.cursor]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connections
+
+/// The connection lifecycle (see the module docs for the transitions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ConnState {
+    ReadingHeaders,
+    ReadingBody,
+    Dispatching,
+    Writing,
+    KeepAlive,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Generation guard: completions and wheel entries carry (slot, gen)
+    /// and are dropped when the slot was reused for a newer connection.
+    gen: u64,
+    state: ConnState,
+    parser: RequestParser,
+    write_buf: Vec<u8>,
+    written: usize,
+    /// The keep-alive decision for the in-flight response.
+    response_keep_alive: bool,
+    /// Client sent bytes while a request was already in flight.
+    pipelined: bool,
+    /// Peer half-closed (EPOLLRDHUP / EOF) while we owe it a response.
+    half_closed: bool,
+    /// Close once the current write buffer drains (error responses).
+    close_after_write: bool,
+    /// Requests served on this connection (keep-alive cap).
+    served: u32,
+    deadline: Instant,
+}
+
+const TOKEN_LISTENER: u64 = u64::MAX;
+const TOKEN_WAKE: u64 = u64::MAX - 1;
+
+/// A parsed request headed for the dispatch pool: (slot, generation,
+/// request).
+type Job = (usize, u64, Request);
+/// A handler result headed back to the loop: (slot, generation,
+/// response).
+type Completion = (usize, u64, Response);
+/// The dispatch pool's shared receiving end.
+type JobReceiver = Arc<Mutex<mpsc::Receiver<Job>>>;
+
+// ---------------------------------------------------------------------------
+// Public handle
+
+/// Handles for the reactor's threads (owned by [`super::Server`]).
+pub(crate) struct ReactorHandle {
+    shutdown: Arc<AtomicBool>,
+    waker: UnixStream,
+    thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ReactorHandle {
+    pub(crate) fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        wake(&self.waker);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        // The reactor thread drops the job sender on exit, which ends the
+        // dispatch workers.
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Nudge the event loop (completion posted, shutdown requested). A full
+/// pipe means a wake is already pending, so errors are ignorable.
+fn wake(waker: &UnixStream) {
+    let _ = (&*waker).write_all(&[1]);
+}
+
+/// Spawn the event loop + dispatch pool for a bound listener.
+pub(crate) fn start(
+    listener: TcpListener,
+    cfg: ServerConfig,
+    handler: Handler,
+) -> std::io::Result<ReactorHandle> {
+    listener.set_nonblocking(true)?;
+    let (wake_tx, wake_rx) = UnixStream::pair()?;
+    wake_tx.set_nonblocking(true)?;
+    wake_rx.set_nonblocking(true)?;
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
+    let (jobs_tx, jobs_rx) = mpsc::channel::<Job>();
+    let jobs_rx: JobReceiver = Arc::new(Mutex::new(jobs_rx));
+
+    let mut workers = Vec::with_capacity(cfg.workers.max(1));
+    for i in 0..cfg.workers.max(1) {
+        let jobs_rx = Arc::clone(&jobs_rx);
+        let handler = Arc::clone(&handler);
+        let completions = Arc::clone(&completions);
+        let waker = wake_tx.try_clone()?;
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("valori-http-{i}"))
+                .spawn(move || dispatch_loop(jobs_rx, handler, completions, waker))
+                .expect("spawn dispatch worker"),
+        );
+    }
+
+    let reactor = Reactor {
+        epoll: Epoll::new()?,
+        listener,
+        wake_rx,
+        cfg,
+        conns: Vec::new(),
+        free: Vec::new(),
+        open: 0,
+        next_gen: 0,
+        wheel: TimerWheel::new(Instant::now()),
+        jobs: jobs_tx,
+        completions,
+        shutdown: Arc::clone(&shutdown),
+    };
+    reactor.epoll.add(reactor.listener.as_raw_fd(), TOKEN_LISTENER, EPOLLIN | EPOLLET)?;
+    reactor.epoll.add(reactor.wake_rx.as_raw_fd(), TOKEN_WAKE, EPOLLIN | EPOLLET)?;
+
+    let thread = std::thread::Builder::new()
+        .name("valori-http-reactor".into())
+        .spawn(move || reactor.run())
+        .expect("spawn reactor");
+
+    Ok(ReactorHandle { shutdown, waker: wake_tx, thread: Some(thread), workers })
+}
+
+/// Dispatch worker: pull parsed requests, run the handler, post the
+/// response back to the loop. Exits when the job channel closes.
+fn dispatch_loop(
+    jobs: JobReceiver,
+    handler: Handler,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    waker: UnixStream,
+) {
+    loop {
+        let job = {
+            let guard = jobs.lock().expect("jobs poisoned");
+            guard.recv()
+        };
+        let Ok((token, gen, req)) = job else { return };
+        let resp = handler(req);
+        completions.lock().expect("completions poisoned").push((token, gen, resp));
+        wake(&waker);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The event loop
+
+struct Reactor {
+    epoll: Epoll,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    cfg: ServerConfig,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    open: usize,
+    next_gen: u64,
+    wheel: TimerWheel,
+    jobs: mpsc::Sender<Job>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events = vec![EpollEvent { events: 0, data: 0 }; 256];
+        let mut due: Vec<(usize, u64)> = Vec::new();
+        let mut scratch = vec![0u8; 16 * 1024];
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let timeout = self.wheel.next_timeout_ms(Instant::now());
+            let n = self.epoll.wait(&mut events, timeout);
+            let now = Instant::now();
+            for ev in &events[..n] {
+                let token = ev.data; // copy out of the packed struct
+                let flags = ev.events;
+                if token == TOKEN_LISTENER {
+                    self.accept_ready(now);
+                } else if token == TOKEN_WAKE {
+                    drain_wake(&self.wake_rx);
+                } else {
+                    self.conn_event(token as usize, flags, now, &mut scratch);
+                }
+            }
+            self.drain_completions(now);
+            due.clear();
+            self.wheel.advance(now, &mut due);
+            for &(idx, gen) in &due {
+                self.check_expiry(idx, gen, now);
+            }
+        }
+        // Teardown: close every connection; dropping `self` closes the
+        // listener, the epoll fd and the job sender (ending the workers).
+        for idx in 0..self.conns.len() {
+            if let Some(conn) = self.conns[idx].take() {
+                self.drop_conn(idx, conn);
+            }
+        }
+    }
+
+    fn alloc_slot(&mut self) -> usize {
+        if let Some(i) = self.free.pop() {
+            i
+        } else {
+            self.conns.push(None);
+            self.conns.len() - 1
+        }
+    }
+
+    /// Accept until the listener would block (required under EPOLLET).
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    ServerMetrics::add(&self.cfg.metrics.connections_accepted, 1);
+                    if self.open >= self.cfg.max_connections {
+                        ServerMetrics::add(&self.cfg.metrics.connections_rejected, 1);
+                        let mut s = stream;
+                        let _ = s.set_nonblocking(true);
+                        let resp = Response::json(503, r#"{"error":"too many connections"}"#);
+                        let _ = s.write_all(&resp.to_bytes(false));
+                        continue; // dropped => closed
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let idx = self.alloc_slot();
+                    let gen = self.next_gen;
+                    self.next_gen += 1;
+                    let interest = EPOLLIN | EPOLLOUT | EPOLLET | EPOLLRDHUP;
+                    if self.epoll.add(stream.as_raw_fd(), idx as u64, interest).is_err() {
+                        self.free.push(idx);
+                        continue;
+                    }
+                    let deadline = now + self.cfg.read_timeout;
+                    self.conns[idx] = Some(Conn {
+                        stream,
+                        gen,
+                        state: ConnState::ReadingHeaders,
+                        parser: RequestParser::new(),
+                        write_buf: Vec::new(),
+                        written: 0,
+                        response_keep_alive: false,
+                        pipelined: false,
+                        half_closed: false,
+                        close_after_write: false,
+                        served: 0,
+                        deadline,
+                    });
+                    self.open += 1;
+                    ServerMetrics::add(&self.cfg.metrics.connections_open, 1);
+                    self.wheel.schedule(now, deadline, idx, gen);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// One epoll event for a connection slot.
+    fn conn_event(&mut self, idx: usize, flags: u32, now: Instant, scratch: &mut [u8]) {
+        let Some(slot) = self.conns.get_mut(idx) else { return };
+        let Some(mut conn) = slot.take() else { return };
+        let mut close = flags & (EPOLLERR | EPOLLHUP) != 0;
+        if !close && flags & EPOLLIN != 0 {
+            close = self.readable(idx, &mut conn, now, scratch);
+        }
+        if !close && flags & EPOLLOUT != 0 && conn.state == ConnState::Writing {
+            close = self.flush_write(&mut conn, now);
+        }
+        if !close && flags & EPOLLRDHUP != 0 {
+            // Peer finished sending. If no response is owed, we're done;
+            // otherwise finish the in-flight response, then close.
+            if matches!(conn.state, ConnState::Dispatching | ConnState::Writing) {
+                conn.half_closed = true;
+            } else {
+                close = true;
+            }
+        }
+        if close {
+            self.drop_conn(idx, conn);
+        } else {
+            self.conns[idx] = Some(conn);
+        }
+    }
+
+    /// Drain the socket (required under EPOLLET). Returns true when the
+    /// connection must close.
+    fn readable(&mut self, idx: usize, conn: &mut Conn, now: Instant, scratch: &mut [u8]) -> bool {
+        loop {
+            match conn.stream.read(scratch) {
+                Ok(0) => {
+                    // EOF. Deliver any in-flight response first (the peer
+                    // may only have shut down its write side).
+                    if matches!(conn.state, ConnState::Dispatching | ConnState::Writing) {
+                        conn.half_closed = true;
+                        return false;
+                    }
+                    // Truncated requests resolve to the blocking front
+                    // end's exact wire behavior (serve / 400 / silence).
+                    match conn.parser.finish_eof() {
+                        Ok(Some(req)) => {
+                            conn.half_closed = true;
+                            conn.state = ConnState::Dispatching;
+                            conn.deadline = now + self.cfg.write_timeout;
+                            conn.response_keep_alive = req.wants_keep_alive();
+                            let _ = self.jobs.send((idx, conn.gen, req));
+                            return false;
+                        }
+                        Ok(None) => return true,
+                        Err(err) => {
+                            let Some(resp) = parse_error_response(&err) else { return true };
+                            conn.write_buf = resp.to_bytes(false);
+                            conn.written = 0;
+                            conn.state = ConnState::Writing;
+                            conn.response_keep_alive = false;
+                            conn.close_after_write = true;
+                            return self.flush_write(conn, now);
+                        }
+                    }
+                }
+                Ok(n) => {
+                    match conn.state {
+                        ConnState::Dispatching | ConnState::Writing => {
+                            // A request is already in flight: these bytes
+                            // are a pipelined request. Note and discard;
+                            // the rejection is written after the current
+                            // response drains.
+                            conn.pipelined = true;
+                            continue;
+                        }
+                        ConnState::KeepAlive => {
+                            conn.state = ConnState::ReadingHeaders;
+                            conn.deadline = now + self.cfg.read_timeout;
+                        }
+                        _ => {}
+                    }
+                    match conn.parser.feed(&scratch[..n]) {
+                        Ok(Some(req)) => {
+                            if conn.parser.buffered() > 0 {
+                                conn.pipelined = true;
+                            }
+                            conn.state = ConnState::Dispatching;
+                            conn.deadline = now + self.cfg.write_timeout;
+                            conn.response_keep_alive = req.wants_keep_alive();
+                            let _ = self.jobs.send((idx, conn.gen, req));
+                            continue; // keep draining (ET)
+                        }
+                        Ok(None) => {
+                            conn.state = match conn.parser.phase() {
+                                ParsePhase::Headers => ConnState::ReadingHeaders,
+                                ParsePhase::Body => ConnState::ReadingBody,
+                            };
+                            continue;
+                        }
+                        Err(err) => {
+                            let Some(resp) = parse_error_response(&err) else { return true };
+                            conn.write_buf = resp.to_bytes(false);
+                            conn.written = 0;
+                            conn.state = ConnState::Writing;
+                            conn.response_keep_alive = false;
+                            conn.close_after_write = true;
+                            return self.flush_write(conn, now);
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// Write until done or the socket would block. Returns true when the
+    /// connection must close.
+    fn flush_write(&mut self, conn: &mut Conn, now: Instant) -> bool {
+        loop {
+            if conn.written == conn.write_buf.len() {
+                // Response fully on the wire. Parse-error and
+                // pipeline-rejection responses carry `close_after_write`
+                // and are not counted — the blocking path only counts
+                // successfully parsed, handled requests.
+                if !conn.close_after_write {
+                    ServerMetrics::add(&self.cfg.metrics.requests_served, 1);
+                }
+                conn.served += 1;
+                if conn.close_after_write || conn.half_closed {
+                    return true;
+                }
+                if conn.pipelined {
+                    // Reject the pipelined request explicitly, then close.
+                    conn.pipelined = false;
+                    ServerMetrics::add(&self.cfg.metrics.pipelined_rejected, 1);
+                    conn.parser = RequestParser::new();
+                    conn.write_buf =
+                        Response::bad_request("pipelining not supported").to_bytes(false);
+                    conn.written = 0;
+                    conn.close_after_write = true;
+                    continue;
+                }
+                if !conn.response_keep_alive {
+                    return true;
+                }
+                conn.state = ConnState::KeepAlive;
+                conn.write_buf.clear();
+                conn.written = 0;
+                conn.deadline = now + self.cfg.read_timeout;
+                return false;
+            }
+            match conn.stream.write(&conn.write_buf[conn.written..]) {
+                Ok(0) => return true,
+                Ok(n) => conn.written += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// Move finished handler responses onto their connections.
+    fn drain_completions(&mut self, now: Instant) {
+        let done: Vec<Completion> =
+            std::mem::take(&mut *self.completions.lock().expect("completions poisoned"));
+        for (idx, gen, resp) in done {
+            let Some(slot) = self.conns.get_mut(idx) else { continue };
+            let Some(mut conn) = slot.take() else { continue };
+            if conn.gen != gen || conn.state != ConnState::Dispatching {
+                // The connection this response belonged to is gone (slot
+                // reused or state reset); drop the response.
+                self.conns[idx] = Some(conn);
+                continue;
+            }
+            // `half_closed` is deliberately NOT part of the header
+            // decision: the blocking path derives the header purely from
+            // the request (then discovers EOF on its next read), and the
+            // write path below still closes half-closed connections
+            // after the response drains.
+            let keep = conn.response_keep_alive
+                && conn.served + 1 < self.cfg.max_requests_per_conn
+                && !conn.pipelined;
+            conn.write_buf = resp.to_bytes(keep);
+            conn.written = 0;
+            conn.response_keep_alive = keep;
+            conn.state = ConnState::Writing;
+            conn.deadline = now + self.cfg.write_timeout;
+            if self.flush_write(&mut conn, now) {
+                self.drop_conn(idx, conn);
+            } else {
+                self.conns[idx] = Some(conn);
+            }
+        }
+    }
+
+    /// A wheel entry popped: evict if actually past deadline, otherwise
+    /// re-queue at the (possibly extended) deadline.
+    fn check_expiry(&mut self, idx: usize, gen: u64, now: Instant) {
+        let Some(slot) = self.conns.get_mut(idx) else { return };
+        let Some(conn) = slot.as_ref() else { return };
+        if conn.gen != gen {
+            return; // slot reused by a newer connection
+        }
+        if now >= conn.deadline {
+            ServerMetrics::add(&self.cfg.metrics.connections_timed_out, 1);
+            let conn = slot.take().expect("checked above");
+            self.drop_conn(idx, conn);
+        } else {
+            let deadline = conn.deadline;
+            self.wheel.schedule(now, deadline, idx, gen);
+        }
+    }
+
+    /// Deregister + close; the slot was already vacated by the caller.
+    fn drop_conn(&mut self, idx: usize, conn: Conn) {
+        self.epoll.del(conn.stream.as_raw_fd());
+        drop(conn);
+        self.free.push(idx);
+        self.open -= 1;
+        self.cfg.metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Empty the wake pipe (edge-triggered: must drain fully).
+fn drain_wake(rx: &UnixStream) {
+    let mut buf = [0u8; 64];
+    loop {
+        match (&*rx).read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => continue,
+            Err(_) => return,
+        }
+    }
+}

@@ -4,6 +4,9 @@
 //! ```text
 //! valori serve      [--addr 127.0.0.1:7431] [--dim 128] [--wal valori.wal]
 //!                   [--env b] [--no-embedder] [--flat] [--shards N]
+//! valori soak       [--addr 127.0.0.1:7431] [--dim 32] [--shards N]
+//!                   [--n 256] [--requests 1000] [--clients 8]
+//!                   # keep-alive load + sequential-vs-concurrent hash check
 //! valori bench      [--quick] [--n 50000] [--dim 256] [--k 10] [--shards 4]
 //!                   [--batch 512] [--seed S] [--out BENCH_search.json]
 //! valori experiment <table1|table2|table3|transfer|latency|all> [--quick]
@@ -34,6 +37,7 @@ fn main() {
     };
     let code = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("soak") => cmd_soak(&args),
         Some("bench") => cmd_bench(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("snapshot") => cmd_snapshot(&args),
@@ -66,9 +70,188 @@ fn parse_shards(args: &Args) -> Result<u32, String> {
 
 fn print_usage() {
     eprintln!(
-        "usage: valori <serve|bench|experiment|snapshot|restore|replay|quickstart> [options]\n\
+        "usage: valori <serve|soak|bench|experiment|snapshot|restore|replay|quickstart> [options]\n\
          see `rust/src/main.rs` header or README.md for details"
     );
+}
+
+/// `valori soak` — the bundled determinism soak client. Against a fresh
+/// `valori serve` node it (1) streams sequential inserts over one
+/// keep-alive connection while mirroring them into a local kernel,
+/// (2) fires concurrent keep-alive query clients and asserts every
+/// response is byte-identical to a sequential reference pass, and
+/// (3) asserts the served node's state hash equals the local mirror's —
+/// i.e. concurrent HTTP load reached the exact state a sequential run
+/// reaches. The server must be started with the same --dim/--shards
+/// (and default index config) or the hashes will differ by construction.
+fn cmd_soak(args: &Args) -> i32 {
+    use valori::hash::splitmix64;
+    use valori::http::client::Connection;
+    use valori::json::Json;
+
+    let addr_s = args.opt_or("addr", "127.0.0.1:7431");
+    let addr: std::net::SocketAddr = match addr_s.parse() {
+        Ok(a) => a,
+        Err(e) => return fail(&format!("bad --addr {addr_s}: {e}")),
+    };
+    let dim: usize = match args.opt_parse("dim", 32) {
+        Ok(d) if d > 0 => d,
+        Ok(_) => return fail("--dim must be > 0"),
+        Err(e) => return fail(&e),
+    };
+    let n_shards = match parse_shards(args) {
+        Ok(n) => n,
+        Err(e) => return fail(&e),
+    };
+    let inserts: u64 = match args.opt_parse("n", 256) {
+        Ok(n) => n,
+        Err(e) => return fail(&e),
+    };
+    let requests: usize = match args.opt_parse("requests", 1000) {
+        Ok(r) => r,
+        Err(e) => return fail(&e),
+    };
+    let clients: usize = match args.opt_parse("clients", 8) {
+        Ok(c) if c > 0 => c,
+        Ok(_) => return fail("--clients must be > 0"),
+        Err(e) => return fail(&e),
+    };
+    let seed: u64 = match args.opt_parse("seed", 0x534F414Bu64) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+
+    // the server must be fresh, or the mirror hash cannot match
+    let stats = match valori::http::client::get_json(&addr, "/v1/stats") {
+        Ok((200, s)) => s,
+        Ok((st, _)) => return fail(&format!("GET /v1/stats -> {st}")),
+        Err(e) => return fail(&format!("cannot reach {addr}: {e}")),
+    };
+    if stats.get("vectors").as_i64() != Some(0) {
+        return fail("server is not empty; soak needs a fresh node");
+    }
+    if stats.get("n_shards").as_i64() != Some(n_shards as i64) {
+        return fail(&format!(
+            "server reports n_shards={:?}, soak was given --shards {n_shards}",
+            stats.get("n_shards").as_i64()
+        ));
+    }
+
+    // deterministic f32 corpus: values round-trip exactly through the
+    // node's JSON (shortest-repr float printing), so mirror and server
+    // quantize identical inputs
+    let component = |i: u64, j: u64| -> f32 {
+        ((splitmix64(seed ^ (i * dim as u64 + j)) % 2001) as i64 - 1000) as f32 / 1000.0
+    };
+
+    // phase 1: sequential keep-alive inserts, mirrored locally
+    let mut mirror = ShardedKernel::new(KernelConfig::default_q16(dim), n_shards);
+    let mut conn = match Connection::connect(&addr) {
+        Ok(c) => c,
+        Err(e) => return fail(&format!("connect: {e}")),
+    };
+    for i in 0..inserts {
+        let v: Vec<f32> = (0..dim as u64).map(|j| component(i, j)).collect();
+        let body = Json::object(vec![
+            ("id", Json::Int(i as i64)),
+            ("vector", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
+        ]);
+        match conn.post_json("/v1/insert", &body) {
+            Ok((200, _)) => {}
+            Ok((st, resp)) => return fail(&format!("insert {i} -> {st}: {resp}")),
+            Err(e) => return fail(&format!("insert {i}: {e}")),
+        }
+        if let Err(e) = mirror.apply(Command::Insert { id: i, vector: v }) {
+            return fail(&format!("mirror insert {i}: {e}"));
+        }
+    }
+    println!("soak: inserted {inserts} vectors over one keep-alive connection");
+
+    // phase 2: sequential reference responses, then concurrent clients
+    let query_bodies: Vec<String> = (0..16u64)
+        .map(|q| {
+            let v: Vec<Json> = (0..dim as u64)
+                .map(|j| Json::Float(component(q ^ 0x5155_4552_59, j) as f64))
+                .collect();
+            Json::object(vec![("vector", Json::Array(v)), ("k", Json::Int(10))]).to_string()
+        })
+        .collect();
+    let mut reference: Vec<Vec<u8>> = Vec::with_capacity(query_bodies.len());
+    for body in &query_bodies {
+        match conn.request("POST", "/v1/query", body.as_bytes()) {
+            Ok((200, bytes)) => reference.push(bytes),
+            Ok((st, _)) => return fail(&format!("reference query -> {st}")),
+            Err(e) => return fail(&format!("reference query: {e}")),
+        }
+    }
+    let per_client = requests.div_ceil(clients);
+    let mismatches = std::thread::scope(|scope| {
+        let reference = &reference;
+        let query_bodies = &query_bodies;
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                scope.spawn(move || -> Result<usize, String> {
+                    let mut conn =
+                        Connection::connect(&addr).map_err(|e| format!("connect: {e}"))?;
+                    let mut bad = 0usize;
+                    for r in 0..per_client {
+                        let qi = r % query_bodies.len();
+                        let (st, bytes) = conn
+                            .request("POST", "/v1/query", query_bodies[qi].as_bytes())
+                            .map_err(|e| format!("query: {e}"))?;
+                        if st != 200 || bytes != reference[qi] {
+                            bad += 1;
+                        }
+                    }
+                    Ok(bad)
+                })
+            })
+            .collect();
+        let mut total: Result<usize, String> = Ok(0);
+        for h in handles {
+            match h.join().expect("soak client panicked") {
+                Ok(bad) => {
+                    if let Ok(t) = &mut total {
+                        *t += bad;
+                    }
+                }
+                Err(e) => {
+                    if total.is_ok() {
+                        total = Err(e); // first error wins
+                    }
+                }
+            }
+        }
+        total
+    });
+    let mismatches = match mismatches {
+        Ok(m) => m,
+        Err(e) => return fail(&e),
+    };
+    println!(
+        "soak: {clients} keep-alive clients x {per_client} queries, {mismatches} mismatched responses"
+    );
+    if mismatches > 0 {
+        return fail("concurrent responses diverged from the sequential reference");
+    }
+
+    // phase 3: the served node must hold exactly the mirror's state
+    let server_hash = match valori::http::client::get_json(&addr, "/v1/hash") {
+        Ok((200, h)) => h.get("fnv").as_str().unwrap_or("").to_string(),
+        Ok((st, _)) => return fail(&format!("GET /v1/hash -> {st}")),
+        Err(e) => return fail(&format!("hash fetch: {e}")),
+    };
+    let local_hash = if n_shards == 1 {
+        format!("{:016x}", mirror.shard(0).state_hash())
+    } else {
+        format!("{:016x}", mirror.root_hash())
+    };
+    println!("soak: server hash {server_hash} | local mirror {local_hash}");
+    if server_hash != local_hash {
+        return fail("HASH MISMATCH: concurrent HTTP load diverged from the sequential mirror");
+    }
+    println!("soak: OK — byte-identical responses and identical root hash under concurrency");
+    0
 }
 
 /// `valori bench` — the deterministic search/upsert performance suite.

@@ -67,6 +67,10 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub query_latency: Histogram,
     pub embed_latency: Histogram,
+    /// Front-end connection gauges, shared with the HTTP server (the
+    /// node hands a clone of this `Arc` to [`crate::http::ServerConfig`]
+    /// so `/v1/stats` can report reactor state).
+    pub http: std::sync::Arc<crate::http::ServerMetrics>,
 }
 
 impl Metrics {
@@ -90,6 +94,12 @@ impl Metrics {
             ("query_p99_us", Json::Int(self.query_latency.quantile_us(0.99) as i64)),
             ("query_mean_us", Json::Float(self.query_latency.mean_us())),
             ("embed_mean_us", Json::Float(self.embed_latency.mean_us())),
+            ("http_connections_open", g(&self.http.connections_open)),
+            ("http_connections_accepted", g(&self.http.connections_accepted)),
+            ("http_connections_timed_out", g(&self.http.connections_timed_out)),
+            ("http_connections_rejected", g(&self.http.connections_rejected)),
+            ("http_requests_served", g(&self.http.requests_served)),
+            ("http_pipelined_rejected", g(&self.http.pipelined_rejected)),
         ])
     }
 }
@@ -129,5 +139,16 @@ mod tests {
         assert_eq!(j.get("inserts").as_i64(), Some(2));
         assert_eq!(j.get("deletes").as_i64(), Some(0));
         assert!(j.get("query_p50_us").as_i64().unwrap() >= 250);
+    }
+
+    #[test]
+    fn http_gauges_surface_in_json() {
+        let m = Metrics::default();
+        m.http.connections_open.store(3, Ordering::Relaxed);
+        m.http.requests_served.store(17, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("http_connections_open").as_i64(), Some(3));
+        assert_eq!(j.get("http_requests_served").as_i64(), Some(17));
+        assert_eq!(j.get("http_connections_timed_out").as_i64(), Some(0));
     }
 }

@@ -305,10 +305,17 @@ impl NodeState {
     }
 }
 
-/// Start the HTTP server for a node.
+/// Start the HTTP server for a node (epoll reactor front end). The
+/// node's HTTP connection gauges are shared into the server config so
+/// `/v1/stats` reports live reactor state.
 pub fn serve(state: Arc<NodeState>, addr: &str, workers: usize) -> std::io::Result<Server> {
+    let config = crate::http::ServerConfig {
+        workers,
+        metrics: Arc::clone(&state.metrics.http),
+        ..Default::default()
+    };
     let handler: Handler = Arc::new(move |req| route(&state, req));
-    Server::start(addr, workers, handler)
+    Server::start_with(addr, config, handler)
 }
 
 fn ok_json(value: Json) -> Response {

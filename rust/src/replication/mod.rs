@@ -15,6 +15,7 @@
 //! - HTTP ([`sync_follower`]): pulls `/v1/log` from a primary node and
 //!   pushes `/v1/apply` to a follower (see [`crate::node`]).
 
+use crate::http::client;
 use crate::node::{hex_decode, hex_encode};
 use crate::state::{CanonCommand, Command, Kernel, KernelConfig, StateError};
 
@@ -164,7 +165,6 @@ pub fn sync_follower_shard(
     shard: u32,
     from: usize,
 ) -> std::io::Result<(usize, String)> {
-    use crate::http::client;
     use crate::json::Json;
 
     let (status, feed) =
@@ -194,19 +194,82 @@ pub fn sync_follower_shard(
 /// Ship every shard of a sharded primary to a follower, starting from the
 /// given per-shard offsets (`from.len()` must equal the primary's shard
 /// count). Returns per-shard shipped counts and the follower's final hash.
+///
+/// The shard feeds are independent subsequences, so catch-up is
+/// pipelined: **one sync thread per shard**, each holding a pair of
+/// keep-alive [`client::Connection`]s (primary + follower) so paging
+/// through a long feed stops paying per-request connect cost. Threads
+/// are joined before returning; the first shard error wins. Convergence
+/// does not depend on how the shard shipments interleave (each shard's
+/// state is a pure function of its own feed), which is exactly why this
+/// parallelism cannot affect the follower's root hash.
 pub fn sync_all_shards(
     primary: &std::net::SocketAddr,
     follower: &std::net::SocketAddr,
     from: &[usize],
 ) -> std::io::Result<(Vec<usize>, String)> {
-    let mut shipped = vec![0usize; from.len()];
-    let mut hash = String::new();
-    for (s, &offset) in from.iter().enumerate() {
-        let (n, h) = sync_follower_shard(primary, follower, s as u32, offset)?;
-        shipped[s] = n;
-        hash = h;
+    let results: Vec<std::io::Result<usize>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = from
+            .iter()
+            .enumerate()
+            .map(|(shard, &offset)| {
+                scope.spawn(move || {
+                    sync_shard_to_completion(primary, follower, shard as u32, offset)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard sync thread panicked")).collect()
+    });
+    let mut shipped = Vec::with_capacity(results.len());
+    for r in results {
+        shipped.push(r?); // first-error-wins
     }
-    Ok((shipped, hash))
+    let (status, h) = client::get_json(follower, "/v1/hash")?;
+    if status != 200 {
+        return Err(std::io::Error::other(format!("follower hash fetch failed: {status}")));
+    }
+    Ok((shipped, h.get("fnv").as_str().unwrap_or("").to_string()))
+}
+
+/// Drive one shard's feed to full catch-up over persistent connections:
+/// page `/v1/log?shard=S` from the primary and replay each page onto the
+/// follower's same shard until a fetch returns no new commands.
+fn sync_shard_to_completion(
+    primary: &std::net::SocketAddr,
+    follower: &std::net::SocketAddr,
+    shard: u32,
+    mut from: usize,
+) -> std::io::Result<usize> {
+    use crate::json::Json;
+
+    let mut pc = client::Connection::connect(primary)?;
+    let mut fc = client::Connection::connect(follower)?;
+    let mut shipped = 0usize;
+    loop {
+        let (status, feed) = pc.get_json(&format!("/v1/log?shard={shard}&from={from}"))?;
+        if status != 200 {
+            return Err(std::io::Error::other(format!(
+                "shard {shard}: log fetch failed: {status}"
+            )));
+        }
+        let cmds = feed.get("commands").as_array().unwrap_or(&[]).to_vec();
+        if cmds.is_empty() {
+            return Ok(shipped);
+        }
+        let n = cmds.len();
+        let body = Json::object(vec![
+            ("shard", Json::Int(shard as i64)),
+            ("commands", Json::Array(cmds)),
+        ]);
+        let (status, resp) = fc.post_json("/v1/apply", &body)?;
+        if status != 200 {
+            return Err(std::io::Error::other(format!(
+                "shard {shard}: apply failed: {status}: {resp}"
+            )));
+        }
+        shipped += n;
+        from += n;
+    }
 }
 
 /// Round-trip helper: serialize a command log to a hex-lines string and

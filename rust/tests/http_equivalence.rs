@@ -1,0 +1,248 @@
+//! The front-end equivalence proof (ISSUE 3 acceptance criteria):
+//!
+//! 1. The blocking thread-per-connection path (`Server::start_blocking`,
+//!    kept as the reference implementation) and the epoll reactor
+//!    (`Server::start`, the default) produce **byte-identical** response
+//!    streams for identical request streams — success paths, error
+//!    paths, keep-alive headers and all.
+//! 2. 256 concurrent keep-alive clients each issuing 50 sequential
+//!    requests receive responses bit-identical to a single sequential
+//!    client, and the kernel's root hash is identical to a sequential
+//!    run's — the reactor orders nothing that reaches the kernel.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+use valori::http::{client, Handler, MAX_BODY, Server};
+use valori::json::Json;
+use valori::node::{route, serve, NodeConfig, NodeState};
+use valori::state::{Command, Kernel, KernelConfig, ShardedKernel};
+
+fn node_state(dim: usize, shards: u32) -> Arc<NodeState> {
+    let kernel = ShardedKernel::new(KernelConfig::default_q16(dim), shards);
+    Arc::new(NodeState::new_sharded(kernel, &NodeConfig::default(), None).unwrap())
+}
+
+fn node_handler(state: Arc<NodeState>) -> Handler {
+    Arc::new(move |req| route(&state, req))
+}
+
+/// Read one full raw response (status line + headers + body) and return
+/// its exact bytes.
+fn read_raw_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<Vec<u8>> {
+    let mut raw = Vec::new();
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(std::io::Error::other("eof before response end"));
+        }
+        raw.extend_from_slice(line.as_bytes());
+        let t = line.trim_end();
+        if let Some((k, v)) = t.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+        if t.is_empty() && raw.len() > 2 {
+            break; // blank line terminates the header section
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    raw.extend_from_slice(&body);
+    Ok(raw)
+}
+
+/// Send each raw request over one keep-alive socket and concatenate the
+/// exact response bytes.
+fn raw_exchange(addr: &SocketAddr, requests: &[Vec<u8>]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut captured = Vec::new();
+    for req in requests {
+        stream.write_all(req).unwrap();
+        stream.flush().unwrap();
+        captured.extend_from_slice(&read_raw_response(&mut reader).unwrap());
+    }
+    captured
+}
+
+fn raw_request(method: &str, target: &str, body: &str) -> Vec<u8> {
+    format!("{method} {target} HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}", body.len())
+        .into_bytes()
+}
+
+/// Send partial request bytes, half-close the write side, and collect
+/// whatever the server puts on the wire until it closes.
+fn truncated_exchange(addr: &SocketAddr, partial: &[u8]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(partial).unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut out = Vec::new();
+    let _ = stream.read_to_end(&mut out);
+    out
+}
+
+#[test]
+fn blocking_and_reactor_responses_are_byte_identical() {
+    // Two identical nodes, one per front end.
+    let blocking_state = node_state(4, 1);
+    let reactor_state = node_state(4, 1);
+    let blocking =
+        Server::start_blocking("127.0.0.1:0", 2, node_handler(Arc::clone(&blocking_state)))
+            .unwrap();
+    let reactor = serve(Arc::clone(&reactor_state), "127.0.0.1:0", 2).unwrap();
+    assert_eq!(blocking.backend_name(), "blocking");
+    // Pin the async path: the default front end must be the reactor on
+    // Linux (other platforms fall back to the blocking pool by design).
+    if cfg!(target_os = "linux") {
+        assert_eq!(reactor.backend_name(), "epoll");
+    }
+
+    // A battery covering success paths, every error class the router
+    // emits, and keep-alive across all of it — on one connection.
+    let battery: Vec<Vec<u8>> = vec![
+        raw_request("POST", "/v1/insert", r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#),
+        raw_request("POST", "/v1/insert", r#"{"id":2,"vector":[0.9,0.8,0.7,0.6]}"#),
+        raw_request("POST", "/v1/insert", r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#), // 409
+        raw_request("POST", "/v1/query", r#"{"vector":[0.1,0.2,0.3,0.4],"k":2}"#),
+        raw_request("POST", "/v1/insert", "{oops"),                                  // 400
+        raw_request("POST", "/v1/delete", r#"{"id":99}"#),                           // 404
+        raw_request("GET", "/v2/nope", ""),                                          // 404
+        raw_request("GET", "/v1/health", ""),
+        raw_request("POST", "/v1/link", r#"{"from":1,"to":2}"#),
+        raw_request("GET", "/v1/hash", ""),
+        raw_request("GET", "/v1/log?from=0", ""),
+    ];
+    let from_blocking = raw_exchange(&blocking.addr(), &battery);
+    let from_reactor = raw_exchange(&reactor.addr(), &battery);
+    assert!(
+        from_blocking == from_reactor,
+        "front ends diverged:\n--- blocking ---\n{}\n--- reactor ---\n{}",
+        String::from_utf8_lossy(&from_blocking),
+        String::from_utf8_lossy(&from_reactor),
+    );
+
+    // Terminal error paths (each closes its connection) — byte-identical
+    // too, on fresh sockets.
+    for raw in [
+        b"NONSENSE\r\n\r\n".to_vec(),
+        format!("POST /v1/insert HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1)
+            .into_bytes(),
+    ] {
+        let a = raw_exchange(&blocking.addr(), std::slice::from_ref(&raw));
+        let b = raw_exchange(&reactor.addr(), std::slice::from_ref(&raw));
+        assert!(a == b, "error path diverged for {raw:?}");
+    }
+
+    // Truncated requests (client half-closes mid-request): the reactor's
+    // finish_eof must reproduce the blocking parser's wire behavior —
+    // serve, 400, or silent close — byte for byte.
+    let truncations: [&[u8]; 4] = [
+        b"GET /q HTTP/1.1\r\n\r",  // "\r" tail completes the headers: served (404)
+        b"GET /q HTTP/1.1\r\nx: y", // truncated header line: 400
+        b"GET / SPDY/9\r\n",        // bad version surfaces at the newline: 400
+        b"POST /h HTTP/1.1\r\ncontent-length: 5\r\n\r\nab", // EOF mid-body: silence
+    ];
+    for raw in truncations {
+        let a = truncated_exchange(&blocking.addr(), raw);
+        let b = truncated_exchange(&reactor.addr(), raw);
+        assert!(
+            a == b,
+            "truncation diverged for {raw:?}:\n--- blocking ---\n{}\n--- reactor ---\n{}",
+            String::from_utf8_lossy(&a),
+            String::from_utf8_lossy(&b),
+        );
+    }
+
+    // Identical request streams -> identical kernel state on both nodes.
+    assert_eq!(
+        blocking_state.with_kernel(Kernel::state_hash),
+        reactor_state.with_kernel(Kernel::state_hash)
+    );
+    blocking.stop();
+    reactor.stop();
+}
+
+#[test]
+fn concurrent_256_keep_alive_clients_match_sequential_run() {
+    const CLIENTS: usize = 256;
+    const REQUESTS_PER_CLIENT: usize = 50;
+    let dim = 8usize;
+
+    // The node under concurrent load, and an identically-seeded mirror
+    // representing the sequential run.
+    let state = node_state(dim, 4);
+    let mirror = node_state(dim, 4);
+    for target in [&state, &mirror] {
+        for i in 0..300u64 {
+            let v: Vec<f32> =
+                (0..dim as u64).map(|j| ((i * 7 + j) as f32 * 0.013).sin() * 0.8).collect();
+            target.apply(Command::insert(i, v)).unwrap();
+        }
+    }
+    let root_before = state.with_sharded(ShardedKernel::root_hash);
+    assert_eq!(root_before, mirror.with_sharded(ShardedKernel::root_hash));
+
+    let server = serve(Arc::clone(&state), "127.0.0.1:0", 4).unwrap();
+    let addr = server.addr();
+
+    // 50 distinct query bodies; one sequential client records the
+    // reference responses.
+    let bodies: Vec<String> = (0..REQUESTS_PER_CLIENT as u64)
+        .map(|q| {
+            let v: Vec<Json> = (0..dim as u64)
+                .map(|j| Json::Float((((q * 31 + j) as f64) * 0.021).cos() * 0.7))
+                .collect();
+            Json::object(vec![("vector", Json::Array(v)), ("k", Json::Int(10))]).to_string()
+        })
+        .collect();
+    let mut seq_client = client::Connection::connect(&addr).unwrap();
+    let reference: Vec<Vec<u8>> = bodies
+        .iter()
+        .map(|b| {
+            let (status, body) = seq_client.request("POST", "/v1/query", b.as_bytes()).unwrap();
+            assert_eq!(status, 200);
+            body
+        })
+        .collect();
+
+    // 256 concurrent keep-alive clients re-issue the same 50 requests.
+    std::thread::scope(|scope| {
+        let bodies = &bodies;
+        let reference = &reference;
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut conn = client::Connection::connect(&addr).unwrap();
+                    for (qi, body) in bodies.iter().enumerate() {
+                        let (status, got) =
+                            conn.request("POST", "/v1/query", body.as_bytes()).unwrap();
+                        assert_eq!(status, 200, "client {c} query {qi}");
+                        assert!(
+                            got == reference[qi],
+                            "client {c} query {qi}: response diverged from sequential run"
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // The kernel is untouched by concurrency: same root as before, and
+    // the same root a purely sequential run holds.
+    let root_after = state.with_sharded(ShardedKernel::root_hash);
+    assert_eq!(root_after, root_before);
+    assert_eq!(root_after, mirror.with_sharded(ShardedKernel::root_hash));
+    server.stop();
+}

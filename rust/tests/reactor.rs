@@ -1,0 +1,236 @@
+//! Integration: the epoll reactor front end's edge cases over real
+//! sockets — split reads, size-limit boundaries, slow-loris eviction,
+//! pipelining rejection, the connection cap and keep-alive reuse.
+
+#![cfg(target_os = "linux")]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+use valori::http::{
+    client, Handler, MAX_BODY, MAX_HEADER, Request, Response, Server, ServerConfig, ServerMetrics,
+};
+
+fn echo_handler() -> Handler {
+    Arc::new(|req: Request| {
+        if req.path == "/echo" {
+            let mut resp = Response::text(200, String::new());
+            resp.body = req.body;
+            resp
+        } else {
+            Response::not_found()
+        }
+    })
+}
+
+/// Read one HTTP response (status, body) off a buffered socket.
+fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, Vec<u8>)> {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| std::io::Error::other(format!("bad status line {status_line:?}")))?;
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        let t = line.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+#[test]
+fn default_front_end_is_the_reactor() {
+    let server = Server::start("127.0.0.1:0", 2, echo_handler()).unwrap();
+    assert_eq!(server.backend_name(), "epoll");
+    server.stop();
+}
+
+#[test]
+fn request_split_across_many_tiny_writes() {
+    let server = Server::start("127.0.0.1:0", 2, echo_handler()).unwrap();
+    let raw = b"POST /echo HTTP/1.1\r\nhost: x\r\ncontent-length: 11\r\n\r\nsplit-hello";
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    // One byte per write for the head, tiny pauses so the reactor sees
+    // many distinct readiness edges mid-request.
+    for &b in raw.iter() {
+        stream.write_all(&[b]).unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    let mut reader = BufReader::new(stream);
+    let (status, body) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(body, b"split-hello");
+    server.stop();
+}
+
+#[test]
+fn header_exactly_at_max_header_accepted_one_more_rejected() {
+    let server = Server::start("127.0.0.1:0", 2, echo_handler()).unwrap();
+    // The header section (everything after the request line, including
+    // the terminating blank line) carries the cap.
+    let overhead = "x-f: \r\n".len() + "\r\n".len();
+
+    // exactly MAX_HEADER -> served
+    let pad = "p".repeat(MAX_HEADER - overhead);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(stream, "POST /echo HTTP/1.1\r\nx-f: {pad}\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, _) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 200);
+
+    // one byte over -> 413 and the connection closes
+    let pad = "p".repeat(MAX_HEADER - overhead + 1);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(stream, "POST /echo HTTP/1.1\r\nx-f: {pad}\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, _) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 413);
+    server.stop();
+}
+
+#[test]
+fn body_exactly_at_max_body_accepted_one_more_rejected() {
+    let server = Server::start("127.0.0.1:0", 2, echo_handler()).unwrap();
+
+    // exactly MAX_BODY -> echoed back whole
+    let body = vec![0x42u8; MAX_BODY];
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(stream, "POST /echo HTTP/1.1\r\ncontent-length: {}\r\n\r\n", body.len()).unwrap();
+    stream.write_all(&body).unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, echoed) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(echoed.len(), MAX_BODY);
+    assert!(echoed == body, "MAX_BODY echo must round-trip bit-exact");
+
+    // one byte over is rejected at the header, before any body bytes
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(stream, "POST /echo HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1).unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, _) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 413);
+    server.stop();
+}
+
+#[test]
+fn slow_loris_is_evicted_by_the_timer_wheel() {
+    let metrics = Arc::new(ServerMetrics::default());
+    let config = ServerConfig {
+        workers: 2,
+        read_timeout: Duration::from_millis(300),
+        metrics: Arc::clone(&metrics),
+        ..Default::default()
+    };
+    let server = Server::start_with("127.0.0.1:0", config, echo_handler()).unwrap();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // half a request line, then a trickle that never completes it
+    stream.write_all(b"GET /ech").unwrap();
+    stream.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    let _ = stream.write_all(b"o");
+    let _ = stream.flush();
+    // the deadline counts from request start, so the trickle cannot
+    // extend it: within ~2x the timeout the server must close on us
+    let mut buf = [0u8; 64];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "slow-loris connection must be closed without a response");
+    assert!(
+        ServerMetrics::get(&metrics.connections_timed_out) >= 1,
+        "timeout eviction must be counted"
+    );
+    server.stop();
+}
+
+#[test]
+fn pipelined_requests_are_rejected() {
+    let server = Server::start("127.0.0.1:0", 2, echo_handler()).unwrap();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // two complete requests in one segment: the first is served, the
+    // second is refused with 400 and the connection closes
+    let two = b"POST /echo HTTP/1.1\r\ncontent-length: 3\r\n\r\nonePOST /echo HTTP/1.1\r\ncontent-length: 3\r\n\r\ntwo";
+    stream.write_all(two).unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, body) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(body, b"one");
+    let (status, body) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 400);
+    assert!(
+        String::from_utf8_lossy(&body).contains("pipelining"),
+        "rejection must say why: {body:?}"
+    );
+    let metrics = Arc::clone(server.metrics());
+    assert!(ServerMetrics::get(&metrics.pipelined_rejected) >= 1);
+    server.stop();
+}
+
+#[test]
+fn connection_cap_rejects_with_503() {
+    let config = ServerConfig { workers: 2, max_connections: 4, ..Default::default() };
+    let server = Server::start_with("127.0.0.1:0", config, echo_handler()).unwrap();
+    let addr = server.addr();
+    // fill the table with 4 live keep-alive connections
+    let mut held: Vec<client::Connection> = Vec::new();
+    for _ in 0..4 {
+        let mut c = client::Connection::connect(&addr).unwrap();
+        let (status, _) = c.request("POST", "/echo", b"hold").unwrap();
+        assert_eq!(status, 200);
+        held.push(c);
+    }
+    // the next connection must be turned away
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, _) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 503);
+    drop(held);
+    server.stop();
+}
+
+#[test]
+fn keep_alive_request_cap_closes_then_client_reconnects() {
+    let config = ServerConfig { workers: 2, max_requests_per_conn: 5, ..Default::default() };
+    let metrics = Arc::clone(&config.metrics);
+    let server = Server::start_with("127.0.0.1:0", config, echo_handler()).unwrap();
+    let mut conn = client::Connection::connect(&server.addr()).unwrap();
+    for i in 0..12 {
+        let msg = format!("r{i}");
+        let (status, body) = conn.request("POST", "/echo", msg.as_bytes()).unwrap();
+        assert_eq!(status, 200, "request {i}");
+        assert_eq!(body, msg.as_bytes());
+    }
+    // 12 requests at 5 per connection = at least 3 connections
+    assert!(ServerMetrics::get(&metrics.connections_accepted) >= 3);
+    assert_eq!(ServerMetrics::get(&metrics.requests_served), 12);
+    server.stop();
+}
