@@ -1,0 +1,689 @@
+//! The typed `/v2` API: request envelope, result envelope, and the
+//! closed error taxonomy. **This module is the single place the error
+//! surface is defined** — every `/v2` handler serializes success through
+//! [`ok_response`] and failure through [`ApiError::response`], so there
+//! is exactly one way any payload reaches the wire.
+//!
+//! ## Envelope
+//!
+//! - success → HTTP 200, body `{"data": <payload>, "ok": true}`;
+//! - failure → the taxonomy's HTTP status, body
+//!   `{"error": {"code": N, "message": "...", "name": "..."}, "ok": false}`.
+//!
+//! (Keys appear in sorted order — [`crate::json::Json`] objects are
+//! `BTreeMap`s, so serialization is canonical and replayable.)
+//!
+//! ## Error taxonomy (closed, numbered, wire-stable)
+//!
+//! | code | name | HTTP |
+//! |---|---|---|
+//! | 1000 | `bad_request` | 400 |
+//! | 1001 | `duplicate_id` | 409 |
+//! | 1002 | `unknown_id` | 404 |
+//! | 1003 | `dim_mismatch` | 400 |
+//! | 1004 | `boundary` | 400 |
+//! | 1005 | `meta_key_too_long` | 400 |
+//! | 1006 | `wrong_shard` | 400 |
+//! | 1007 | `shard_out_of_range` | 400 |
+//! | 1100 | `unknown_collection` | 404 |
+//! | 1101 | `collection_exists` | 409 |
+//! | 1102 | `invalid_collection_name` | 400 |
+//! | 1103 | `reserved_collection` | 400 |
+//! | 1200 | `no_embedder` | 503 |
+//! | 1201 | `embed_failed` | 500 |
+//! | 1300 | `route_not_found` | 404 |
+//! | 1301 | `method_not_allowed` | 405 |
+//! | 1500 | `internal` | 500 |
+//!
+//! Codes are a compatibility contract: they may be *added*, never
+//! renumbered or reused (`tests/fixtures/api_error_codes.json` is the
+//! golden copy `tests/collections.rs` asserts against). Numbering is
+//! grouped: 10xx state-machine rejections, 11xx collection lifecycle,
+//! 12xx embedder, 13xx routing, 15xx internal.
+//!
+//! ## Typed commands
+//!
+//! [`ApiRequest`] is the parsed, validated form of a `/v2` mutation or
+//! query — handlers never poke at raw JSON. [`execute`] runs a typed
+//! request against one collection's [`NodeState`] and returns the
+//! success payload; all validation errors surface as [`ApiError`]s from
+//! [`ApiRequest::parse`], all state-machine rejections from the kernel's
+//! own [`StateError`], mapped 1:1 onto the taxonomy.
+
+use crate::http::Response;
+use crate::json::{parse, Json};
+use crate::node::{hex_decode, hex_encode, Metrics, NodeState};
+use crate::state::{CanonCommand, Command, StateError};
+use std::time::Instant;
+
+/// The closed error code taxonomy. See the module docs for the table;
+/// [`ApiCode::ALL`] enumerates every variant for the golden-fixture test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApiCode {
+    /// Malformed body, missing/mistyped field, bad hex, invalid JSON.
+    BadRequest = 1000,
+    /// Insert with an id that already exists (tombstones included).
+    DuplicateId = 1001,
+    /// Command references an id that does not exist (or was deleted).
+    UnknownId = 1002,
+    /// Vector has the wrong dimensionality for the collection.
+    DimMismatch = 1003,
+    /// Rejected at the quantization boundary (non-finite, out of range).
+    Boundary = 1004,
+    /// Metadata key exceeds the kernel's bound.
+    MetaKeyTooLong = 1005,
+    /// Per-shard ingest received a command routed to a different shard.
+    WrongShard = 1006,
+    /// `shard` query/body parameter exceeds the collection's shard count.
+    ShardOutOfRange = 1007,
+    /// Named collection does not exist.
+    UnknownCollection = 1100,
+    /// PUT of a collection name that is already taken.
+    CollectionExists = 1101,
+    /// Collection name outside `[a-z0-9_-]{1,64}` (ASCII, lower).
+    InvalidCollectionName = 1102,
+    /// Operation refused on a reserved collection (`default` backs /v1).
+    ReservedCollection = 1103,
+    /// Text input but no embedder loaded.
+    NoEmbedder = 1200,
+    /// The embedder failed on this input.
+    EmbedFailed = 1201,
+    /// No /v2 route matches the method + path.
+    RouteNotFound = 1300,
+    /// The path exists but not with this method.
+    MethodNotAllowed = 1301,
+    /// I/O or other non-deterministic failure (WAL append, runtime).
+    Internal = 1500,
+}
+
+impl ApiCode {
+    /// Every variant, in code order (the golden-fixture test iterates
+    /// this, so adding a variant without extending the fixture fails CI).
+    pub const ALL: [ApiCode; 17] = [
+        ApiCode::BadRequest,
+        ApiCode::DuplicateId,
+        ApiCode::UnknownId,
+        ApiCode::DimMismatch,
+        ApiCode::Boundary,
+        ApiCode::MetaKeyTooLong,
+        ApiCode::WrongShard,
+        ApiCode::ShardOutOfRange,
+        ApiCode::UnknownCollection,
+        ApiCode::CollectionExists,
+        ApiCode::InvalidCollectionName,
+        ApiCode::ReservedCollection,
+        ApiCode::NoEmbedder,
+        ApiCode::EmbedFailed,
+        ApiCode::RouteNotFound,
+        ApiCode::MethodNotAllowed,
+        ApiCode::Internal,
+    ];
+
+    /// The stable numeric code (the discriminant).
+    pub fn code(self) -> u32 {
+        self as u32
+    }
+
+    /// The stable wire name (lower_snake identifier).
+    pub fn name(self) -> &'static str {
+        match self {
+            ApiCode::BadRequest => "bad_request",
+            ApiCode::DuplicateId => "duplicate_id",
+            ApiCode::UnknownId => "unknown_id",
+            ApiCode::DimMismatch => "dim_mismatch",
+            ApiCode::Boundary => "boundary",
+            ApiCode::MetaKeyTooLong => "meta_key_too_long",
+            ApiCode::WrongShard => "wrong_shard",
+            ApiCode::ShardOutOfRange => "shard_out_of_range",
+            ApiCode::UnknownCollection => "unknown_collection",
+            ApiCode::CollectionExists => "collection_exists",
+            ApiCode::InvalidCollectionName => "invalid_collection_name",
+            ApiCode::ReservedCollection => "reserved_collection",
+            ApiCode::NoEmbedder => "no_embedder",
+            ApiCode::EmbedFailed => "embed_failed",
+            ApiCode::RouteNotFound => "route_not_found",
+            ApiCode::MethodNotAllowed => "method_not_allowed",
+            ApiCode::Internal => "internal",
+        }
+    }
+
+    /// The HTTP status every response carrying this code uses.
+    pub fn http_status(self) -> u16 {
+        match self {
+            ApiCode::BadRequest
+            | ApiCode::DimMismatch
+            | ApiCode::Boundary
+            | ApiCode::MetaKeyTooLong
+            | ApiCode::WrongShard
+            | ApiCode::ShardOutOfRange
+            | ApiCode::InvalidCollectionName
+            | ApiCode::ReservedCollection => 400,
+            ApiCode::UnknownId | ApiCode::UnknownCollection | ApiCode::RouteNotFound => 404,
+            ApiCode::MethodNotAllowed => 405,
+            ApiCode::DuplicateId | ApiCode::CollectionExists => 409,
+            ApiCode::EmbedFailed | ApiCode::Internal => 500,
+            ApiCode::NoEmbedder => 503,
+        }
+    }
+}
+
+/// A typed API error: taxonomy code + human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ApiError {
+    pub code: ApiCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ApiCode, message: impl Into<String>) -> Self {
+        Self { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        Self::new(ApiCode::BadRequest, message)
+    }
+
+    /// The wire form of the error object (inside the envelope).
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("code", Json::Int(self.code.code() as i64)),
+            ("message", Json::str(self.message.clone())),
+            ("name", Json::str(self.code.name())),
+        ])
+    }
+
+    /// The full enveloped HTTP response — the only error serializer any
+    /// /v2 handler is allowed to use.
+    pub fn response(&self) -> Response {
+        let body = Json::object(vec![("error", self.to_json()), ("ok", Json::Bool(false))]);
+        Response::json(self.code.http_status(), body.to_string())
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}: {}", self.code.code(), self.code.name(), self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Result alias for everything inside the /v2 boundary.
+pub type ApiResult<T> = Result<T, ApiError>;
+
+/// The success envelope (HTTP 200 always; partial failures are errors).
+pub fn ok_response(data: Json) -> Response {
+    let body = Json::object(vec![("data", data), ("ok", Json::Bool(true))]);
+    Response::json(200, body.to_string())
+}
+
+impl From<StateError> for ApiError {
+    fn from(se: StateError) -> Self {
+        let code = match &se {
+            StateError::DuplicateId(_) => ApiCode::DuplicateId,
+            StateError::UnknownId(_) => ApiCode::UnknownId,
+            StateError::Boundary(_) => ApiCode::Boundary,
+            StateError::DimMismatch { .. } => ApiCode::DimMismatch,
+            StateError::MetaKeyTooLong(_) => ApiCode::MetaKeyTooLong,
+            StateError::WrongShard { .. } => ApiCode::WrongShard,
+        };
+        // The message is the kernel's own Display text, so /v1 and /v2
+        // describe a rejection with the same words.
+        ApiError::new(code, se.to_string())
+    }
+}
+
+impl From<crate::Error> for ApiError {
+    fn from(e: crate::Error) -> Self {
+        match e {
+            crate::Error::State(se) => ApiError::from(se),
+            crate::Error::Boundary(be) => {
+                ApiError::new(ApiCode::Boundary, format!("boundary: {be}"))
+            }
+            other => ApiError::new(ApiCode::Internal, other.to_string()),
+        }
+    }
+}
+
+/// A vector-valued input: literal components, or text for the embedder.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VectorInput {
+    Vector(Vec<f32>),
+    Text(String),
+}
+
+/// The typed command envelope: one variant per collection-scoped POST
+/// operation. Parsing is total — any malformed body is an [`ApiError`],
+/// never a partially-filled request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiRequest {
+    Insert { id: u64, vector: VectorInput },
+    InsertBatch { items: Vec<(u64, Vec<f32>)> },
+    Query { vector: VectorInput, k: usize },
+    Delete { id: u64 },
+    Link { from: u64, to: u64 },
+    Unlink { from: u64, to: u64 },
+    SetMeta { id: u64, key: String, value: String },
+    /// Canonical-command ingest (replication): with `shard`, the feed
+    /// applies replay-style to that shard; without, commands route fresh.
+    Apply { shard: Option<u32>, commands: Vec<CanonCommand> },
+}
+
+fn need_u64(body: &Json, field: &str) -> ApiResult<u64> {
+    body.get(field)
+        .as_u64()
+        .ok_or_else(|| ApiError::bad_request(format!("need numeric '{field}'")))
+}
+
+fn vector_input(body: &Json) -> ApiResult<VectorInput> {
+    if let Some(arr) = body.get("vector").as_array() {
+        let v = arr
+            .iter()
+            .map(|x| x.as_f64().map(|f| f as f32))
+            .collect::<Option<Vec<f32>>>()
+            .ok_or_else(|| ApiError::bad_request("vector must be an array of numbers"))?;
+        Ok(VectorInput::Vector(v))
+    } else if let Some(t) = body.get("text").as_str() {
+        Ok(VectorInput::Text(t.to_string()))
+    } else {
+        Err(ApiError::bad_request("need 'vector' or 'text'"))
+    }
+}
+
+impl ApiRequest {
+    /// Parse one operation's body into its typed request. `op` is the
+    /// final path segment of `/v2/collections/{name}/{op}`.
+    pub fn parse(op: &str, body: &Json) -> ApiResult<ApiRequest> {
+        match op {
+            "insert" => Ok(ApiRequest::Insert {
+                id: need_u64(body, "id")?,
+                vector: vector_input(body)?,
+            }),
+            "insert_batch" => {
+                let items_json = body.get("items").as_array().ok_or_else(|| {
+                    ApiError::bad_request("need 'items' array of {id, vector}")
+                })?;
+                let mut items = Vec::with_capacity(items_json.len());
+                for it in items_json {
+                    let id = it
+                        .get("id")
+                        .as_u64()
+                        .ok_or_else(|| ApiError::bad_request("item needs 'id'"))?;
+                    let vector = it
+                        .get("vector")
+                        .as_array()
+                        .ok_or_else(|| ApiError::bad_request("item needs 'vector'"))?
+                        .iter()
+                        .map(|v| v.as_f64().map(|x| x as f32))
+                        .collect::<Option<Vec<f32>>>()
+                        .ok_or_else(|| ApiError::bad_request("vector must be numbers"))?;
+                    items.push((id, vector));
+                }
+                Ok(ApiRequest::InsertBatch { items })
+            }
+            "query" => Ok(ApiRequest::Query {
+                vector: vector_input(body)?,
+                k: body.get("k").as_u64().unwrap_or(10) as usize,
+            }),
+            "delete" => Ok(ApiRequest::Delete { id: need_u64(body, "id")? }),
+            "link" => Ok(ApiRequest::Link {
+                from: need_u64(body, "from")?,
+                to: need_u64(body, "to")?,
+            }),
+            "unlink" => Ok(ApiRequest::Unlink {
+                from: need_u64(body, "from")?,
+                to: need_u64(body, "to")?,
+            }),
+            "meta" => Ok(ApiRequest::SetMeta {
+                id: need_u64(body, "id")?,
+                key: body
+                    .get("key")
+                    .as_str()
+                    .ok_or_else(|| ApiError::bad_request("need 'key'"))?
+                    .to_string(),
+                value: body
+                    .get("value")
+                    .as_str()
+                    .ok_or_else(|| ApiError::bad_request("need 'value'"))?
+                    .to_string(),
+            }),
+            "apply" => {
+                let cmds = body.get("commands").as_array().ok_or_else(|| {
+                    ApiError::bad_request("need 'commands' array of hex strings")
+                })?;
+                let mut commands = Vec::with_capacity(cmds.len());
+                for c in cmds {
+                    let hex = c
+                        .as_str()
+                        .ok_or_else(|| ApiError::bad_request("command must be hex string"))?;
+                    let bytes =
+                        hex_decode(hex).ok_or_else(|| ApiError::bad_request("invalid hex"))?;
+                    let canon = CanonCommand::from_bytes(&bytes)
+                        .map_err(|e| ApiError::bad_request(format!("bad command: {e}")))?;
+                    commands.push(canon);
+                }
+                // Checked narrowing: a shard beyond u32 must reject, not
+                // silently alias onto `shard % 2^32` (= replay onto the
+                // wrong shard).
+                let shard = match body.get("shard").as_u64() {
+                    None => None,
+                    Some(s) => Some(u32::try_from(s).map_err(|_| {
+                        ApiError::new(
+                            ApiCode::ShardOutOfRange,
+                            format!("shard {s} out of range"),
+                        )
+                    })?),
+                };
+                Ok(ApiRequest::Apply { shard, commands })
+            }
+            other => Err(ApiError::new(
+                ApiCode::RouteNotFound,
+                format!("unknown operation '{other}'"),
+            )),
+        }
+    }
+}
+
+/// Parse request-body bytes as JSON (the shared front door for every
+/// body-carrying /v2 handler).
+pub fn body_json(body: &[u8]) -> ApiResult<Json> {
+    let text = std::str::from_utf8(body).map_err(|_| ApiError::bad_request("body is not utf-8"))?;
+    parse(text).map_err(|e| ApiError::bad_request(format!("invalid json: {e}")))
+}
+
+/// One collection's root hash, rendered for the wire. Always the
+/// sharded-kernel root (well defined for 1-shard collections too), so
+/// `/v2` hashes compose into the combined root uniformly.
+pub fn root_hex(state: &NodeState) -> String {
+    state.with_sharded(|sk| format!("{:016x}", sk.root_hash()))
+}
+
+fn resolve_vector(state: &NodeState, input: VectorInput) -> ApiResult<Vec<f32>> {
+    match input {
+        VectorInput::Vector(v) => Ok(v),
+        VectorInput::Text(text) => {
+            let embed = state.embedder().ok_or_else(|| {
+                ApiError::new(ApiCode::NoEmbedder, "no embedder loaded (run `make artifacts`)")
+            })?;
+            let t0 = Instant::now();
+            let v = embed
+                .embed(&text)
+                .map_err(|e| ApiError::new(ApiCode::EmbedFailed, format!("embed failed: {e}")))?;
+            state.metrics.embed_latency.record_us(t0.elapsed().as_micros() as u64);
+            Metrics::inc(&state.metrics.embeds);
+            Ok(v)
+        }
+    }
+}
+
+fn seq_of(state: &NodeState) -> i64 {
+    state.with_sharded(|k| k.seq()) as i64
+}
+
+/// Execute one typed request against one collection's node state and
+/// return the success payload (the `data` object). Every handler in the
+/// /v2 route tree funnels through here, which is what makes the response
+/// surface uniform: same metrics, same error mapping, same shapes.
+pub fn execute(state: &NodeState, request: ApiRequest) -> ApiResult<Json> {
+    match request {
+        ApiRequest::Insert { id, vector } => {
+            let v = resolve_vector(state, vector)?;
+            state.apply(Command::Insert { id, vector: v })?;
+            Metrics::inc(&state.metrics.inserts);
+            Ok(Json::object(vec![
+                ("inserted", Json::Int(id as i64)),
+                ("seq", Json::Int(seq_of(state))),
+            ]))
+        }
+        ApiRequest::InsertBatch { items } => {
+            let n = items.len();
+            state.apply(Command::InsertBatch { items })?;
+            Metrics::inc(&state.metrics.inserts);
+            Ok(Json::object(vec![
+                ("inserted", Json::Int(n as i64)),
+                ("seq", Json::Int(seq_of(state))),
+            ]))
+        }
+        ApiRequest::Query { vector, k } => {
+            let v = resolve_vector(state, vector)?;
+            let t0 = Instant::now();
+            let hits = state.with_sharded(|kern| kern.search_f32(&v, k))?;
+            state.metrics.query_latency.record_us(t0.elapsed().as_micros() as u64);
+            Metrics::inc(&state.metrics.queries);
+            let hits_json: Vec<Json> = hits
+                .iter()
+                .map(|h| {
+                    Json::object(vec![
+                        ("id", Json::Int(h.id as i64)),
+                        ("dist_raw", Json::Int(h.dist_raw)),
+                        ("dist", Json::Float(h.dist)),
+                    ])
+                })
+                .collect();
+            Ok(Json::object(vec![("hits", Json::Array(hits_json))]))
+        }
+        ApiRequest::Delete { id } => {
+            state.apply(Command::Delete { id })?;
+            Metrics::inc(&state.metrics.deletes);
+            Ok(Json::object(vec![("deleted", Json::Int(id as i64))]))
+        }
+        ApiRequest::Link { from, to } => {
+            state.apply(Command::Link { from, to })?;
+            Metrics::inc(&state.metrics.links);
+            Ok(Json::object(vec![
+                ("from", Json::Int(from as i64)),
+                ("linked", Json::Bool(true)),
+                ("to", Json::Int(to as i64)),
+            ]))
+        }
+        ApiRequest::Unlink { from, to } => {
+            state.apply(Command::Unlink { from, to })?;
+            Metrics::inc(&state.metrics.links);
+            Ok(Json::object(vec![
+                ("from", Json::Int(from as i64)),
+                ("linked", Json::Bool(false)),
+                ("to", Json::Int(to as i64)),
+            ]))
+        }
+        ApiRequest::SetMeta { id, key, value } => {
+            state.apply(Command::SetMeta { id, key, value })?;
+            Ok(Json::object(vec![("id", Json::Int(id as i64))]))
+        }
+        ApiRequest::Apply { shard, commands } => {
+            if let Some(s) = shard {
+                if s >= state.n_shards() {
+                    return Err(ApiError::new(
+                        ApiCode::ShardOutOfRange,
+                        format!("shard {s} out of range (n_shards = {})", state.n_shards()),
+                    ));
+                }
+            }
+            let mut applied = 0i64;
+            for canon in &commands {
+                match shard {
+                    Some(s) => state.apply_canon_to_shard(s, canon)?,
+                    None => state.apply_canon(canon)?,
+                }
+                applied += 1;
+            }
+            Ok(Json::object(vec![
+                ("applied", Json::Int(applied)),
+                ("root", Json::str(root_hex(state))),
+                ("seq", Json::Int(seq_of(state))),
+            ]))
+        }
+    }
+}
+
+/// One shard's canonical log feed (the /v2 replication surface; same
+/// paging contract as /v1 but enveloped and with a typed out-of-range
+/// error).
+pub fn log_feed(state: &NodeState, shard: u32, from: usize) -> ApiResult<Json> {
+    if shard >= state.n_shards() {
+        // An empty 200 would read as "fully caught up" to a sync driver
+        // configured with the wrong shard count — reject loudly.
+        return Err(ApiError::new(
+            ApiCode::ShardOutOfRange,
+            format!("shard {shard} out of range (n_shards = {})", state.n_shards()),
+        ));
+    }
+    let cmds = state.log_slice_shard(shard, from, 1000);
+    let arr: Vec<Json> = cmds.iter().map(|c| Json::str(hex_encode(&c.to_bytes()))).collect();
+    Ok(Json::object(vec![
+        ("commands", Json::Array(arr)),
+        ("from", Json::Int(from as i64)),
+        ("n_shards", Json::Int(state.n_shards() as i64)),
+        ("shard", Json::Int(shard as i64)),
+        ("total", Json::Int(state.shard_log_len(shard) as i64)),
+    ]))
+}
+
+/// Per-shard hash manifest of one collection (audit-grade: FNV for the
+/// cheap compare, SHA-256 per shard for the paper's §8.1 verification).
+pub fn hash_manifest(state: &NodeState) -> Json {
+    state.with_sharded(|sk| {
+        let snap = crate::snapshot::ShardedSnapshot::capture(sk);
+        let shards: Vec<Json> = snap
+            .manifest()
+            .iter()
+            .map(|m| {
+                Json::object(vec![
+                    ("fnv", Json::str(format!("{:016x}", m.fnv))),
+                    ("sha256", Json::str(crate::hash::sha256_hex(&m.sha256))),
+                    ("shard", Json::Int(m.shard as i64)),
+                ])
+            })
+            .collect();
+        Json::object(vec![
+            ("root", Json::str(format!("{:016x}", snap.root_hash()))),
+            ("seq", Json::Int(sk.seq() as i64)),
+            ("shards", Json::Array(shards)),
+        ])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeConfig;
+    use crate::state::{Kernel, KernelConfig};
+
+    fn test_state() -> NodeState {
+        let kernel = Kernel::new(KernelConfig::default_q16(4));
+        NodeState::new(kernel, &NodeConfig::default(), None).unwrap()
+    }
+
+    #[test]
+    fn codes_are_unique_stable_and_total() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in ApiCode::ALL {
+            assert!(seen.insert(c.code()), "duplicate code {}", c.code());
+            assert!(!c.name().is_empty());
+            assert!(matches!(c.http_status(), 400 | 404 | 405 | 409 | 500 | 503));
+        }
+        assert_eq!(ApiCode::ALL.len(), seen.len());
+        // Spot-pin a few numbers: renumbering is a wire break.
+        assert_eq!(ApiCode::BadRequest.code(), 1000);
+        assert_eq!(ApiCode::DuplicateId.code(), 1001);
+        assert_eq!(ApiCode::UnknownCollection.code(), 1100);
+        assert_eq!(ApiCode::Internal.code(), 1500);
+    }
+
+    #[test]
+    fn error_envelope_shape() {
+        let e = ApiError::new(ApiCode::DuplicateId, "duplicate id 7");
+        let resp = e.response();
+        assert_eq!(resp.status, 409);
+        let body = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(body.get("ok").as_bool(), Some(false));
+        assert_eq!(body.get("error").get("code").as_i64(), Some(1001));
+        assert_eq!(body.get("error").get("name").as_str(), Some("duplicate_id"));
+        assert_eq!(body.get("error").get("message").as_str(), Some("duplicate id 7"));
+    }
+
+    #[test]
+    fn state_errors_map_onto_the_taxonomy() {
+        let e = ApiError::from(StateError::DuplicateId(3));
+        assert_eq!(e.code, ApiCode::DuplicateId);
+        assert_eq!(e.message, "duplicate id 3");
+        let e = ApiError::from(StateError::UnknownId(9));
+        assert_eq!(e.code, ApiCode::UnknownId);
+        let e = ApiError::from(StateError::DimMismatch { expected: 4, got: 2 });
+        assert_eq!(e.code, ApiCode::DimMismatch);
+    }
+
+    #[test]
+    fn typed_parse_then_execute_roundtrip() {
+        let state = test_state();
+        let body = parse(r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#).unwrap();
+        let req = ApiRequest::parse("insert", &body).unwrap();
+        assert_eq!(
+            req,
+            ApiRequest::Insert {
+                id: 1,
+                vector: VectorInput::Vector(vec![0.1, 0.2, 0.3, 0.4])
+            }
+        );
+        let data = execute(&state, req).unwrap();
+        assert_eq!(data.get("inserted").as_i64(), Some(1));
+        assert_eq!(data.get("seq").as_i64(), Some(1));
+
+        // duplicate -> taxonomy error
+        let body = parse(r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#).unwrap();
+        let err = execute(&state, ApiRequest::parse("insert", &body).unwrap()).unwrap_err();
+        assert_eq!(err.code, ApiCode::DuplicateId);
+
+        // query returns the hit
+        let body = parse(r#"{"vector":[0.1,0.2,0.3,0.4],"k":1}"#).unwrap();
+        let data = execute(&state, ApiRequest::parse("query", &body).unwrap()).unwrap();
+        let hits = data.get("hits").as_array().unwrap();
+        assert_eq!(hits[0].get("id").as_u64(), Some(1));
+        assert_eq!(hits[0].get("dist_raw").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_bodies_with_bad_request() {
+        for (op, body) in [
+            ("insert", r#"{"vector":[0,0,0,0]}"#),           // no id
+            ("insert", r#"{"id":1}"#),                        // no vector/text
+            ("query", r#"{"k":3}"#),                          // no vector/text
+            ("delete", r#"{}"#),                              // no id
+            ("link", r#"{"from":1}"#),                        // no to
+            ("meta", r#"{"id":1,"key":"k"}"#),                // no value
+            ("insert_batch", r#"{"items":[{"id":1}]}"#),      // item w/o vector
+            ("apply", r#"{"commands":["zz"]}"#),              // bad hex
+        ] {
+            let err = ApiRequest::parse(op, &parse(body).unwrap()).unwrap_err();
+            assert_eq!(err.code, ApiCode::BadRequest, "op={op} body={body}");
+        }
+        let err = ApiRequest::parse("frobnicate", &Json::Null).unwrap_err();
+        assert_eq!(err.code, ApiCode::RouteNotFound);
+        // a shard beyond u32 rejects instead of truncating onto shard 0
+        let big = parse(r#"{"commands":[],"shard":4294967296}"#).unwrap();
+        let err = ApiRequest::parse("apply", &big).unwrap_err();
+        assert_eq!(err.code, ApiCode::ShardOutOfRange);
+    }
+
+    #[test]
+    fn log_feed_rejects_out_of_range_shard() {
+        let state = test_state();
+        let err = log_feed(&state, 5, 0).unwrap_err();
+        assert_eq!(err.code, ApiCode::ShardOutOfRange);
+        let feed = log_feed(&state, 0, 0).unwrap();
+        assert_eq!(feed.get("total").as_i64(), Some(0));
+        assert_eq!(feed.get("n_shards").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn hash_manifest_has_per_shard_digests() {
+        let state = test_state();
+        let body = parse(r#"{"id":1,"vector":[0.5,0,0,0]}"#).unwrap();
+        execute(&state, ApiRequest::parse("insert", &body).unwrap()).unwrap();
+        let m = hash_manifest(&state);
+        assert_eq!(m.get("root").as_str().unwrap().len(), 16);
+        assert_eq!(m.get("seq").as_i64(), Some(1));
+        let shards = m.get("shards").as_array().unwrap();
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].get("sha256").as_str().unwrap().len(), 64);
+    }
+}

@@ -289,6 +289,65 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
         server.stop();
     }
 
+    // --- multi-collection routing (/v2 envelope + per-tenant kernels) ---
+    // Keep-alive queries round-robined over 4 collections: measures the
+    // collection-manager lookup + typed-envelope overhead on top of the
+    // same kernel search path the http_roundtrip row times.
+    {
+        use crate::node::collections::{
+            serve_collections, CollectionManager, CollectionSpec, ManagerConfig,
+        };
+        let spec = CollectionSpec { dim: cfg.dim, shards: 1, flat: true };
+        let manager = std::sync::Arc::new(
+            CollectionManager::new(
+                ManagerConfig {
+                    spec: spec.clone(),
+                    workers: 4,
+                    data_dir: None,
+                    default_wal: None,
+                },
+                None,
+            )
+            .expect("bench manager"),
+        );
+        let per = (cfg.n / 4).max(1);
+        for c in 0..4u64 {
+            let state = manager.create(&format!("b{c}"), spec.clone()).expect("bench collection");
+            let items: Vec<(u64, Vec<i32>)> =
+                (0..per as u64).map(|i| (i, raw_row(cfg.seed ^ c, i, cfg.dim))).collect();
+            for chunk in items.chunks(4096) {
+                state
+                    .apply_canon(&CanonCommand::InsertBatch { items: chunk.to_vec() })
+                    .expect("bench corpus insert");
+            }
+        }
+        let server = serve_collections(std::sync::Arc::clone(&manager), "127.0.0.1:0", 4)
+            .expect("bench serve");
+        let bodies: Vec<String> = qs
+            .iter()
+            .map(|q| {
+                let arr: Vec<Json> = q.iter().map(|&r| Json::Float(r as f64 / 65536.0)).collect();
+                Json::object(vec![("vector", Json::Array(arr)), ("k", Json::Int(cfg.k as i64))])
+                    .to_string()
+            })
+            .collect();
+        let mut conn =
+            crate::http::client::Connection::connect(&server.addr()).expect("bench connect");
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi += 1;
+            let path = format!("/v2/collections/b{}/query", qi % 4);
+            let (status, body) = conn
+                .request("POST", &path, bodies[qi % bodies.len()].as_bytes())
+                .expect("bench http");
+            assert_eq!(status, 200, "bench multi-collection query failed");
+            body
+        });
+        rows.push(SuiteRow { name: "multi_collection_route".into(), n: cfg.n, stats });
+        report.add("multi_collection_route", stats);
+        server.stop();
+    }
+
     report.print();
     let result = SuiteResult {
         config_label: label.to_string(),
@@ -381,6 +440,7 @@ mod tests {
             "sharded_search",
             "batch_upsert",
             "http_roundtrip",
+            "multi_collection_route",
         ] {
             assert!(r.row(name).is_some(), "missing row {name}");
             assert!(r.row(name).unwrap().stats.iters >= 3);
@@ -389,6 +449,6 @@ mod tests {
         let json = suite_json(&r).to_string();
         let parsed = crate::json::parse(&json).expect("bench json parses");
         assert_eq!(parsed.get("suite").as_str(), Some("valori-search"));
-        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(6));
+        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(7));
     }
 }

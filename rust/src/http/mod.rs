@@ -96,6 +96,7 @@ impl Response {
             409 => "Conflict",
             413 => "Payload Too Large",
             500 => "Internal Server Error",
+            501 => "Not Implemented",
             503 => "Service Unavailable",
             _ => "Status",
         }
@@ -133,6 +134,11 @@ pub enum ParseError {
     Eof,
     Malformed(&'static str),
     TooLarge,
+    /// Syntactically valid request using a protocol feature this server
+    /// deliberately does not implement (currently: any
+    /// `transfer-encoding`, chunked included). Answered `501` + close —
+    /// never by misreading the body as if it were `content-length`-framed.
+    Unsupported(&'static str),
 }
 
 /// The wire response for a parse failure (shared by both front ends so
@@ -143,8 +149,25 @@ pub(crate) fn parse_error_response(err: &ParseError) -> Option<Response> {
         ParseError::Malformed(what) => {
             Some(Response::bad_request(&format!("malformed request: {what}")))
         }
+        ParseError::Unsupported(what) => {
+            Some(Response::json(501, format!(r#"{{"error":"not implemented: {what}"}}"#)))
+        }
         ParseError::Io(_) | ParseError::Eof => None,
     }
+}
+
+/// Reject any `transfer-encoding` (chunked included) once the header
+/// section is complete: this server frames bodies by `content-length`
+/// only, and silently misreading a chunked body as length-framed would
+/// desynchronize the connection. Both parsers call this at the same
+/// point — after the blank-line terminator, before the content-length
+/// check — so the `501` bytes on the wire are identical front end to
+/// front end.
+fn reject_transfer_encoding(headers: &BTreeMap<String, String>) -> Result<(), ParseError> {
+    if headers.contains_key("transfer-encoding") {
+        return Err(ParseError::Unsupported("transfer-encoding"));
+    }
+    Ok(())
 }
 
 /// Parse one request from a buffered stream (blocking front end + tests).
@@ -177,6 +200,7 @@ pub fn parse_request(reader: &mut BufReader<impl Read>) -> Result<Request, Parse
         }
     }
 
+    reject_transfer_encoding(&headers)?;
     let len = content_length(&headers)?;
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body).map_err(ParseError::Io)?;
@@ -457,6 +481,7 @@ fn parse_head(head: &[u8]) -> Result<(Request, usize), ParseError> {
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
+    reject_transfer_encoding(&headers)?;
     let need = content_length(&headers)?;
     let req = Request { method, path, query, headers, body: Vec::new() };
     Ok((req, need))
@@ -1168,6 +1193,36 @@ mod tests {
             p.feed(b"POST / HTTP/1.1\r\ncontent-length: nope\r\n\r\n"),
             Err(ParseError::Malformed("content-length"))
         ));
+    }
+
+    #[test]
+    fn chunked_transfer_encoding_rejected_by_both_parsers() {
+        // Any transfer-encoding is 501 territory: the server frames by
+        // content-length only and must never misread a chunked body.
+        let raw =
+            b"POST /echo HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\n\r\n";
+        let mut incremental = RequestParser::new();
+        assert!(matches!(
+            incremental.feed(raw),
+            Err(ParseError::Unsupported("transfer-encoding"))
+        ));
+        let mut blocking = BufReader::new(&raw[..]);
+        assert!(matches!(
+            parse_request(&mut blocking),
+            Err(ParseError::Unsupported("transfer-encoding"))
+        ));
+        // Identical wire response from the shared error serializer.
+        let resp = parse_error_response(&ParseError::Unsupported("transfer-encoding")).unwrap();
+        assert_eq!(resp.status, 501);
+        assert_eq!(resp.body, br#"{"error":"not implemented: transfer-encoding"}"#);
+        // A TE header alongside content-length still rejects (TE wins,
+        // checked before the length), in both parsers.
+        let mixed =
+            b"POST /echo HTTP/1.1\r\ncontent-length: 5\r\ntransfer-encoding: chunked\r\n\r\nhello";
+        let mut incremental = RequestParser::new();
+        assert!(matches!(incremental.feed(mixed), Err(ParseError::Unsupported(_))));
+        let mut blocking = BufReader::new(&mixed[..]);
+        assert!(matches!(parse_request(&mut blocking), Err(ParseError::Unsupported(_))));
     }
 
     #[test]

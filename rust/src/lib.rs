@@ -11,8 +11,10 @@
 //! - **Outside the boundary (float, may diverge across platforms):**
 //!   [`runtime`] (the AOT-compiled embedding model executed via PJRT) and
 //!   the `f32` baseline instantiations used for the paper's comparisons.
-//! - **Interface layers (paper Fig. 1):** [`node`] (HTTP API + batching),
-//!   [`replication`] (multi-node state convergence), [`cli`].
+//! - **Interface layers (paper Fig. 1):** [`api`] (the typed /v2
+//!   envelope + closed error taxonomy), [`node`] (HTTP routing, the
+//!   multi-tenant collection manager, embed batching), [`replication`]
+//!   (multi-node state convergence), [`cli`].
 //! - **Build-every-substrate support:** [`http`], [`json`], [`bench`],
 //!   [`testing`], [`tokenizer`], [`corpus`], [`experiments`].
 //!
@@ -28,6 +30,7 @@
 //! println!("state hash = {:#018x}", kernel.state_hash());
 //! ```
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod codec;

@@ -4,13 +4,18 @@
 //! ```text
 //! valori serve      [--addr 127.0.0.1:7431] [--dim 128] [--wal valori.wal]
 //!                   [--env b] [--no-embedder] [--flat] [--shards N]
+//!                   [--collections N] [--data DIR]
+//!                   # /v1 = the `default` collection; /v2 = multi-tenant
 //! valori soak       [--addr 127.0.0.1:7431] [--dim 32] [--shards N]
 //!                   [--n 256] [--requests 1000] [--clients 8]
+//!                   [--collection NAME] [--expect-backend epoll|blocking]
 //!                   # keep-alive load + sequential-vs-concurrent hash check
+//!                   # (--collection drives the /v2 surface instead of /v1)
 //! valori bench      [--quick] [--n 50000] [--dim 256] [--k 10] [--shards 4]
 //!                   [--batch 512] [--seed S] [--out BENCH_search.json]
 //! valori experiment <table1|table2|table3|transfer|latency|all> [--quick]
 //! valori snapshot   --wal <file> --out <file> [--dim N] [--shards N]
+//!                   # or --data DIR --collection NAME for managed layouts
 //! valori restore    --snapshot <file>           # verify + print hashes
 //!                                               # (plain or sharded file)
 //! valori replay     --log <file> [--dim N]      # audit replay from hex log
@@ -21,7 +26,9 @@ use std::sync::Arc;
 use std::time::Duration;
 use valori::bench::BenchConfig;
 use valori::cli::Args;
-use valori::node::{serve, EmbedBatcher, NodeConfig, NodeState};
+use valori::node::{
+    serve_collections, CollectionManager, CollectionSpec, EmbedBatcher, ManagerConfig,
+};
 use valori::runtime::{artifacts_available, artifacts_dir, embedder::Env, Embedder, Engine};
 use valori::snapshot::{ShardedSnapshot, Snapshot};
 use valori::state::{Command, Kernel, KernelConfig, ShardedKernel};
@@ -120,13 +127,53 @@ fn cmd_soak(args: &Args) -> i32 {
         Ok(s) => s,
         Err(e) => return fail(&e),
     };
+    // --collection drives the /v2 surface (typed envelope) against a
+    // named tenant; without it the soak exercises the legacy /v1 routes
+    // (the `default` collection when a manager is serving).
+    let collection: Option<String> = args.opt("collection").map(String::from);
+    let expect_backend: Option<String> = args.opt("expect-backend").map(String::from);
 
-    // the server must be fresh, or the mirror hash cannot match
-    let stats = match valori::http::client::get_json(&addr, "/v1/stats") {
-        Ok((200, s)) => s,
-        Ok((st, _)) => return fail(&format!("GET /v1/stats -> {st}")),
+    // Which front end is serving, and how many tenants it holds — lets
+    // CI pin the epoll reactor instead of silently testing the fallback.
+    let health = match valori::http::client::get_json(&addr, "/v1/health") {
+        Ok((200, h)) => h,
+        Ok((st, _)) => return fail(&format!("GET /v1/health -> {st}")),
         Err(e) => return fail(&format!("cannot reach {addr}: {e}")),
     };
+    let backend = health.get("backend").as_str().unwrap_or("unknown").to_string();
+    println!(
+        "soak: server backend={backend} collections={}",
+        health.get("collections").as_i64().unwrap_or(-1)
+    );
+    if let Some(expect) = &expect_backend {
+        if &backend != expect {
+            return fail(&format!("expected backend {expect}, server reports {backend}"));
+        }
+    }
+
+    let (stats_path, insert_path, query_path, hash_path) = match &collection {
+        Some(c) => (
+            format!("/v2/collections/{c}/stats"),
+            format!("/v2/collections/{c}/insert"),
+            format!("/v2/collections/{c}/query"),
+            format!("/v2/collections/{c}/hash"),
+        ),
+        None => (
+            "/v1/stats".to_string(),
+            "/v1/insert".to_string(),
+            "/v1/query".to_string(),
+            "/v1/hash".to_string(),
+        ),
+    };
+
+    // the server must be fresh, or the mirror hash cannot match
+    let stats = match valori::http::client::get_json(&addr, &stats_path) {
+        Ok((200, s)) => s,
+        Ok((st, _)) => return fail(&format!("GET {stats_path} -> {st}")),
+        Err(e) => return fail(&format!("cannot reach {addr}: {e}")),
+    };
+    // /v2 responses wrap the payload in the typed envelope.
+    let stats = if collection.is_some() { stats.get("data").clone() } else { stats };
     if stats.get("vectors").as_i64() != Some(0) {
         return fail("server is not empty; soak needs a fresh node");
     }
@@ -156,7 +203,7 @@ fn cmd_soak(args: &Args) -> i32 {
             ("id", Json::Int(i as i64)),
             ("vector", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
         ]);
-        match conn.post_json("/v1/insert", &body) {
+        match conn.post_json(&insert_path, &body) {
             Ok((200, _)) => {}
             Ok((st, resp)) => return fail(&format!("insert {i} -> {st}: {resp}")),
             Err(e) => return fail(&format!("insert {i}: {e}")),
@@ -178,7 +225,7 @@ fn cmd_soak(args: &Args) -> i32 {
         .collect();
     let mut reference: Vec<Vec<u8>> = Vec::with_capacity(query_bodies.len());
     for body in &query_bodies {
-        match conn.request("POST", "/v1/query", body.as_bytes()) {
+        match conn.request("POST", &query_path, body.as_bytes()) {
             Ok((200, bytes)) => reference.push(bytes),
             Ok((st, _)) => return fail(&format!("reference query -> {st}")),
             Err(e) => return fail(&format!("reference query: {e}")),
@@ -188,6 +235,7 @@ fn cmd_soak(args: &Args) -> i32 {
     let mismatches = std::thread::scope(|scope| {
         let reference = &reference;
         let query_bodies = &query_bodies;
+        let query_path = &query_path;
         let handles: Vec<_> = (0..clients)
             .map(|_| {
                 scope.spawn(move || -> Result<usize, String> {
@@ -197,7 +245,7 @@ fn cmd_soak(args: &Args) -> i32 {
                     for r in 0..per_client {
                         let qi = r % query_bodies.len();
                         let (st, bytes) = conn
-                            .request("POST", "/v1/query", query_bodies[qi].as_bytes())
+                            .request("POST", query_path, query_bodies[qi].as_bytes())
                             .map_err(|e| format!("query: {e}"))?;
                         if st != 200 || bytes != reference[qi] {
                             bad += 1;
@@ -236,12 +284,21 @@ fn cmd_soak(args: &Args) -> i32 {
     }
 
     // phase 3: the served node must hold exactly the mirror's state
-    let server_hash = match valori::http::client::get_json(&addr, "/v1/hash") {
-        Ok((200, h)) => h.get("fnv").as_str().unwrap_or("").to_string(),
-        Ok((st, _)) => return fail(&format!("GET /v1/hash -> {st}")),
+    let server_hash = match valori::http::client::get_json(&addr, &hash_path) {
+        Ok((200, h)) => {
+            if collection.is_some() {
+                // /v2 reports the sharded root uniformly (1-shard included).
+                h.get("data").get("root").as_str().unwrap_or("").to_string()
+            } else {
+                h.get("fnv").as_str().unwrap_or("").to_string()
+            }
+        }
+        Ok((st, _)) => return fail(&format!("GET {hash_path} -> {st}")),
         Err(e) => return fail(&format!("hash fetch: {e}")),
     };
-    let local_hash = if n_shards == 1 {
+    let local_hash = if collection.is_some() {
+        format!("{:016x}", mirror.root_hash())
+    } else if n_shards == 1 {
         format!("{:016x}", mirror.shard(0).state_hash())
     } else {
         format!("{:016x}", mirror.root_hash())
@@ -306,18 +363,16 @@ fn cmd_serve(args: &Args) -> i32 {
         Ok(d) => d,
         Err(e) => return fail(&e),
     };
-    let mut config = KernelConfig::default_q16(dim);
-    if args.flag("flat") {
-        config = config.with_flat_index();
-    }
     let n_shards = match parse_shards(args) {
         Ok(n) => n,
         Err(e) => return fail(&e),
     };
-    let node_config = NodeConfig {
-        workers: args.opt_parse("workers", 4).unwrap_or(4),
-        wal_path: args.opt("wal").map(Into::into),
+    let n_collections: u32 = match args.opt_parse("collections", 1u32) {
+        Ok(n) if n >= 1 => n,
+        Ok(_) => return fail("--collections must be >= 1"),
+        Err(e) => return fail(&e),
     };
+    let workers: usize = args.opt_parse("workers", 4).unwrap_or(4);
 
     // Embedder is optional: without artifacts the node still serves the
     // vector API (text endpoints return 503).
@@ -338,20 +393,39 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
 
-    let kernel = ShardedKernel::new(config, n_shards);
-    let state =
-        match NodeState::new_sharded(kernel, &node_config, batcher.as_ref().map(|b| b.handle())) {
-            Ok(s) => Arc::new(s),
+    // Every deployment is a collection manager now: the `default`
+    // collection serves the legacy /v1 surface byte-for-byte (recovering
+    // a legacy --wal file exactly as before), `--collections N`
+    // pre-creates N-1 extra tenants (`c1`..`c{N-1}`) on top, and
+    // `--data DIR` makes dynamically created collections durable under
+    // `DIR/<name>/`.
+    let collections_config = ManagerConfig {
+        spec: CollectionSpec { dim, shards: n_shards, flat: args.flag("flat") },
+        workers,
+        data_dir: args.opt("data").map(Into::into),
+        default_wal: args.opt("wal").map(Into::into),
+    };
+    let manager =
+        match CollectionManager::new(collections_config, batcher.as_ref().map(|b| b.handle())) {
+            Ok(m) => Arc::new(m),
             Err(e) => return fail(&e.to_string()),
         };
-    let server = match serve(Arc::clone(&state), &addr, node_config.workers) {
+    for i in 1..n_collections {
+        if let Err(e) = manager.ensure(&format!("c{i}")) {
+            return fail(&format!("create collection c{i}: {}", e.message));
+        }
+    }
+    let server = match serve_collections(Arc::clone(&manager), &addr, workers) {
         Ok(s) => s,
         Err(e) => return fail(&format!("bind {addr}: {e}")),
     };
     println!("valori node listening on http://{}", server.addr());
     println!(
-        "  dim={dim} shards={n_shards} wal={:?} embedder={}",
-        node_config.wal_path,
+        "  dim={dim} shards={n_shards} collections={:?} backend={} wal={:?} data={:?} embedder={}",
+        manager.names(),
+        server.backend_name(),
+        args.opt("wal"),
+        args.opt("data"),
         batcher.is_some()
     );
     println!(
@@ -421,7 +495,18 @@ fn cmd_experiment(args: &Args) -> i32 {
 }
 
 fn cmd_snapshot(args: &Args) -> i32 {
-    let Some(wal_path) = args.opt("wal") else { return fail("need --wal <file>") };
+    // Either a direct --wal base, or the managed per-collection layout
+    // (`--data DIR --collection NAME` -> DIR/NAME/wal, matching what
+    // `serve --data DIR` writes for that collection).
+    let wal_owned: Option<String> = args.opt("wal").map(String::from).or_else(|| {
+        match (args.opt("data"), args.opt("collection")) {
+            (Some(d), Some(c)) => Some(format!("{d}/{c}/wal")),
+            _ => None,
+        }
+    });
+    let Some(wal_path) = wal_owned.as_deref() else {
+        return fail("need --wal <file> (or --data <dir> --collection <name>)");
+    };
     let Some(out) = args.opt("out") else { return fail("need --out <file>") };
     let dim: usize = args.opt_parse("dim", 128).unwrap_or(128);
     let n_shards = match parse_shards(args) {

@@ -3,13 +3,49 @@
 //!
 //! The node *wraps* the kernel but never alters its logic: every mutation
 //! goes through `Kernel::apply`, is WAL-logged in canonical form, and is
-//! observable through `/v1/hash` for replica comparison.
+//! observable through the hash endpoints for replica comparison.
 //!
-//! ## API
+//! ## API surface
+//!
+//! The public boundary is **versioned**. `/v2` is the multi-tenant
+//! collections surface (see [`collections`] for the manager and
+//! [`crate::api`] for the typed envelope + the closed error-code
+//! taxonomy); `/v1` is the legacy single-tenant surface, served as a
+//! thin adapter onto the reserved `default` collection when a
+//! [`collections::CollectionManager`] is in front (byte-identical to a
+//! pre-collections node), or directly off a bare [`NodeState`].
+//!
+//! ### `/v2` — typed envelope `{"data":…,"ok":true}` / taxonomy errors
+//!
+//! | Route | Effect |
+//! |---|---|
+//! | `PUT /v2/collections/{name}` | create collection (`{"dim":N,"shards":N,"index":"flat"\|"hnsw"}`, all optional) |
+//! | `GET /v2/collections/{name}` | collection summary (dim, shards, vectors, seq, root) |
+//! | `DELETE /v2/collections/{name}` | drop collection (`default` is reserved) |
+//! | `GET /v2/collections` | list collections, lexicographic |
+//! | `POST /v2/collections/{name}/insert` | `{"id":1,"vector":[…]}` or `{"id":1,"text":"…"}` |
+//! | `POST /v2/collections/{name}/insert_batch` | `{"items":[{"id":…,"vector":[…]},…]}` |
+//! | `POST /v2/collections/{name}/query` | `{"vector":[…],"k":10}` or `{"text":"…","k":10}` |
+//! | `POST /v2/collections/{name}/delete` | `{"id":1}` |
+//! | `POST /v2/collections/{name}/link` / `unlink` | `{"from":1,"to":2}` |
+//! | `POST /v2/collections/{name}/meta` | `{"id":1,"key":"k","value":"v"}` |
+//! | `POST /v2/collections/{name}/apply` | `{"commands":["<hex>",…],"shard":S?}` (follower ingest) |
+//! | `GET /v2/collections/{name}/log?shard=S&from=N` | per-shard canonical feed |
+//! | `GET /v2/collections/{name}/hash` | per-shard FNV/SHA-256 manifest + root |
+//! | `GET /v2/collections/{name}/stats` | metrics + kernel info |
+//! | `GET /v2/hash` | combined root over all collections (lexicographic fold) |
+//! | `GET /v2/health` | `{"ok":true,"backend":"epoll"\|"blocking","collections":N}` |
+//!
+//! The error-code taxonomy (`1000 bad_request` … `1500 internal`) is
+//! enumerated **once**, in [`crate::api`]'s module docs, and pinned by
+//! `tests/fixtures/api_error_codes.json`.
+//!
+//! ### `/v1` — legacy ad-hoc JSON (kept bit-for-bit)
 //!
 //! | Route | Body | Effect |
 //! |---|---|---|
 //! | `POST /v1/insert` | `{"id":1,"vector":[...]}` or `{"id":1,"text":"..."}` | insert (text is embedded via the batcher) |
+//! | `POST /v1/insert_batch` | `{"items":[...]}` | batch insert |
 //! | `POST /v1/query` | `{"vector":[...]}` or `{"text":"...","k":10}` | k-NN search |
 //! | `POST /v1/delete` | `{"id":1}` | tombstone |
 //! | `POST /v1/link` / `unlink` | `{"from":1,"to":2}` | link graph edit |
@@ -17,13 +53,19 @@
 //! | `POST /v1/embed` | `{"texts":["..."]}` | embeddings only |
 //! | `GET /v1/stats` | — | metrics + kernel info |
 //! | `GET /v1/hash` | — | state hash (fnv + sha256) |
-//! | `GET /v1/log?from=N` | — | canonical command feed (replication) |
+//! | `GET /v1/log?shard=S&from=N` | — | per-shard canonical feed (replication) |
 //! | `POST /v1/apply` | `{"commands":["<hex>"...]}` | apply canonical commands (follower ingest) |
+//! | `GET /v1/health` | — | `{"ok":true,"backend":…,"collections":…}` |
 
 pub mod batcher;
+pub mod collections;
 pub mod metrics;
 
 pub use batcher::{BatcherHandle, EmbedBackend, EmbedBatcher};
+pub use collections::{
+    route_collections, serve_collections, CollectionManager, CollectionSpec, DEFAULT_COLLECTION,
+    ManagerConfig,
+};
 pub use metrics::Metrics;
 
 use crate::http::{Handler, Request, Response, Server};
@@ -326,6 +368,20 @@ fn err_json(status: u16, msg: &str) -> Response {
     Response::json(status, Json::object(vec![("error", Json::str(msg))]).to_string())
 }
 
+/// The health payload (shared by the /v1 and /v2 health routes). A bare
+/// [`NodeState`] does not know which front end serves it — and must not:
+/// the blocking/reactor equivalence proof requires handler output to be
+/// front-end-independent — so standalone routing reports `"unknown"`.
+/// The [`collections::CollectionManager`] adapter substitutes the real
+/// backend name and collection count.
+pub(crate) fn health_json(backend: &str, collections: usize) -> Json {
+    Json::object(vec![
+        ("backend", Json::str(backend)),
+        ("collections", Json::Int(collections as i64)),
+        ("ok", Json::Bool(true)),
+    ])
+}
+
 /// Route one request (pure function of state + request; exposed for tests).
 pub fn route(state: &NodeState, req: Request) -> Response {
     let m = &state.metrics;
@@ -342,7 +398,7 @@ pub fn route(state: &NodeState, req: Request) -> Response {
         ("GET", "/v1/stats") => Ok(handle_stats(state)),
         ("GET", "/v1/hash") => Ok(handle_hash(state)),
         ("GET", "/v1/log") => Ok(handle_log(state, &req)),
-        ("GET", "/v1/health") => Ok(ok_json(Json::object(vec![("ok", Json::Bool(true))]))),
+        ("GET", "/v1/health") => Ok(ok_json(health_json("unknown", 1))),
         _ => Ok(Response::not_found()),
     };
     match result {
@@ -520,10 +576,10 @@ fn handle_apply(state: &NodeState, req: &Request) -> RouteResult {
         .ok_or_else(|| Response::bad_request("need 'commands' array of hex strings"))?;
     // With a "shard" field the commands are a per-shard feed and apply
     // replay-style to that shard; without it they route like fresh
-    // canonical submissions.
-    let shard = body.get("shard").as_u64().map(|s| s as u32);
-    if let Some(s) = shard {
-        if s >= state.n_shards() {
+    // canonical submissions. The range check runs on the raw u64 so a
+    // value beyond u32 rejects instead of aliasing onto `shard % 2^32`.
+    let shard = match body.get("shard").as_u64() {
+        Some(s) if s >= state.n_shards() as u64 => {
             // Client misconfiguration (wrong shard count), same contract
             // as GET /v1/log: a 400, not a retryable server error.
             return Err(Response::bad_request(&format!(
@@ -531,7 +587,8 @@ fn handle_apply(state: &NodeState, req: &Request) -> RouteResult {
                 state.n_shards()
             )));
         }
-    }
+        s => s.map(|s| s as u32),
+    };
     let mut applied = 0;
     for c in cmds {
         let hex = c.as_str().ok_or_else(|| Response::bad_request("command must be hex string"))?;
@@ -558,6 +615,12 @@ fn handle_apply(state: &NodeState, req: &Request) -> RouteResult {
 // state hash invalidated on apply is a ROADMAP follow-on for nodes that
 // poll stats at high frequency.
 fn handle_stats(state: &NodeState) -> Response {
+    ok_json(stats_json(state))
+}
+
+/// The stats payload (shared by `/v1/stats` and the per-collection
+/// `/v2/collections/{name}/stats`, which adds collection fields on top).
+pub(crate) fn stats_json(state: &NodeState) -> Json {
     let (len, seq, dim, n_shards, per_shard) = state.with_sharded(|sk| {
         let per: Vec<Json> = sk
             .shards()
@@ -589,7 +652,7 @@ fn handle_stats(state: &NodeState) -> Response {
         obj.insert("batches".into(), Json::Int(batches as i64));
         obj.insert("batched_requests".into(), Json::Int(requests as i64));
     }
-    ok_json(Json::Object(obj))
+    Json::Object(obj)
 }
 
 fn handle_hash(state: &NodeState) -> Response {
@@ -639,8 +702,10 @@ fn handle_log(state: &NodeState, req: &Request) -> Response {
         })
     };
     let from = query_param("from").unwrap_or(0);
-    let shard = query_param("shard").unwrap_or(0) as u32;
-    if shard >= state.n_shards() {
+    // Range-check before narrowing so a shard beyond u32 rejects rather
+    // than aliasing onto `shard % 2^32`.
+    let shard = query_param("shard").unwrap_or(0);
+    if shard >= state.n_shards() as usize {
         // An empty 200 here would read as "fully caught up" to a sync
         // driver configured with the wrong shard count.
         return err_json(
@@ -648,6 +713,7 @@ fn handle_log(state: &NodeState, req: &Request) -> Response {
             &format!("shard {shard} out of range (n_shards = {})", state.n_shards()),
         );
     }
+    let shard = shard as u32;
     let cmds = state.log_slice_shard(shard, from, 1000);
     let arr: Vec<Json> =
         cmds.iter().map(|c| Json::str(hex_encode(&c.to_bytes()))).collect();

@@ -14,6 +14,13 @@
 //!   property tests and the consensus example;
 //! - HTTP ([`sync_follower`]): pulls `/v1/log` from a primary node and
 //!   pushes `/v1/apply` to a follower (see [`crate::node`]).
+//!
+//! Multi-tenant deployments replicate **per collection**: each
+//! collection is its own replayable state machine with its own per-shard
+//! feeds, so [`sync_collection`] ships one tenant over the `/v2` surface
+//! and [`sync_all_collections`] discovers and mirrors a whole fleet onto
+//! a fresh follower (collection-by-collection, shard-by-shard,
+//! first-error-wins).
 
 use crate::http::client;
 use crate::node::{hex_decode, hex_encode};
@@ -270,6 +277,147 @@ fn sync_shard_to_completion(
         shipped += n;
         from += n;
     }
+}
+
+/// Ship one collection's shard feed to full catch-up over the `/v2`
+/// surface (`GET /v2/collections/{name}/log` →
+/// `POST /v2/collections/{name}/apply`), paging over persistent
+/// keep-alive connections exactly like the /v1 driver. Returns commands
+/// shipped.
+fn sync_collection_shard_to_completion(
+    primary: &std::net::SocketAddr,
+    follower: &std::net::SocketAddr,
+    collection: &str,
+    shard: u32,
+    mut from: usize,
+) -> std::io::Result<usize> {
+    use crate::json::Json;
+
+    let mut pc = client::Connection::connect(primary)?;
+    let mut fc = client::Connection::connect(follower)?;
+    let mut shipped = 0usize;
+    loop {
+        let (status, feed) = pc.get_json(&format!(
+            "/v2/collections/{collection}/log?shard={shard}&from={from}"
+        ))?;
+        if status != 200 {
+            return Err(std::io::Error::other(format!(
+                "collection {collection} shard {shard}: log fetch failed: {status}: {feed}"
+            )));
+        }
+        let cmds = feed.get("data").get("commands").as_array().unwrap_or(&[]).to_vec();
+        if cmds.is_empty() {
+            return Ok(shipped);
+        }
+        let n = cmds.len();
+        let body = Json::object(vec![
+            ("commands", Json::Array(cmds)),
+            ("shard", Json::Int(shard as i64)),
+        ]);
+        let (status, resp) =
+            fc.post_json(&format!("/v2/collections/{collection}/apply"), &body)?;
+        if status != 200 {
+            return Err(std::io::Error::other(format!(
+                "collection {collection} shard {shard}: apply failed: {status}: {resp}"
+            )));
+        }
+        shipped += n;
+        from += n;
+    }
+}
+
+/// Ship every shard of one collection from primary to follower over the
+/// `/v2` surface, starting at the given per-shard offsets (`from.len()`
+/// must equal the collection's shard count; the collection must already
+/// exist on the follower with the same spec). One sync thread per shard,
+/// joined, first-error-wins — the shard feeds are independent
+/// subsequences, so interleaving cannot affect the follower's root.
+/// Returns per-shard shipped counts and the follower's final root hex.
+pub fn sync_collection(
+    primary: &std::net::SocketAddr,
+    follower: &std::net::SocketAddr,
+    collection: &str,
+    from: &[usize],
+) -> std::io::Result<(Vec<usize>, String)> {
+    let results: Vec<std::io::Result<usize>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = from
+            .iter()
+            .enumerate()
+            .map(|(shard, &offset)| {
+                scope.spawn(move || {
+                    sync_collection_shard_to_completion(
+                        primary,
+                        follower,
+                        collection,
+                        shard as u32,
+                        offset,
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard sync thread panicked")).collect()
+    });
+    let mut shipped = Vec::with_capacity(results.len());
+    for r in results {
+        shipped.push(r?); // first-error-wins
+    }
+    let (status, h) = client::get_json(follower, &format!("/v2/collections/{collection}/hash"))?;
+    if status != 200 {
+        return Err(std::io::Error::other(format!(
+            "collection {collection}: follower hash fetch failed: {status}"
+        )));
+    }
+    Ok((shipped, h.get("data").get("root").as_str().unwrap_or("").to_string()))
+}
+
+/// Full-fleet catch-up for a **fresh** follower: discover the primary's
+/// collections (`GET /v2/collections`), mirror each one's spec onto the
+/// follower (`PUT`; an already-existing collection is accepted as-is),
+/// and ship every shard of every collection from offset 0. Returns
+/// `(collection, per-shard shipped counts)` per collection, in
+/// lexicographic order. A follower that already holds conflicting
+/// history fails loudly (duplicate-id rejections from `apply`) rather
+/// than forking state — rerun against an empty follower or use
+/// [`sync_collection`] with real offsets for incremental catch-up.
+pub fn sync_all_collections(
+    primary: &std::net::SocketAddr,
+    follower: &std::net::SocketAddr,
+) -> std::io::Result<Vec<(String, Vec<usize>)>> {
+    use crate::json::Json;
+
+    let (status, listing) = client::get_json(primary, "/v2/collections")?;
+    if status != 200 {
+        return Err(std::io::Error::other(format!("collection listing failed: {status}")));
+    }
+    let mut out = Vec::new();
+    for entry in listing.get("data").get("collections").as_array().unwrap_or(&[]) {
+        let name = entry
+            .get("name")
+            .as_str()
+            .ok_or_else(|| std::io::Error::other("collection entry missing name"))?;
+        let shards = entry.get("shards").as_u64().unwrap_or(1) as usize;
+        let spec = Json::object(vec![
+            ("dim", Json::Int(entry.get("dim").as_i64().unwrap_or(0))),
+            ("index", Json::str(entry.get("index").as_str().unwrap_or("hnsw"))),
+            ("shards", Json::Int(shards as i64)),
+        ]);
+        let (st, _) = client::request(
+            follower,
+            "PUT",
+            &format!("/v2/collections/{name}"),
+            spec.to_string().as_bytes(),
+        )?;
+        // 200 = created; 409 = already there (the apply path will verify
+        // compatibility the hard way). Anything else is a real failure.
+        if st != 200 && st != 409 {
+            return Err(std::io::Error::other(format!(
+                "collection {name}: follower create failed: {st}"
+            )));
+        }
+        let (shipped, _root) = sync_collection(primary, follower, name, &vec![0; shards])?;
+        out.push((name.to_string(), shipped));
+    }
+    Ok(out)
 }
 
 /// Round-trip helper: serialize a command log to a hex-lines string and

@@ -1,0 +1,440 @@
+//! Integration: the /v2 multi-tenant collections surface (ISSUE 4
+//! acceptance criteria).
+//!
+//! 1. Per-collection root hashes are **bit-identical** between the v2
+//!    server path (real sockets, typed envelope) and a sequential local
+//!    mirror — and interleaving two tenants' writes cannot perturb
+//!    either tenant's root.
+//! 2. `/v2/hash` (the combined root) is invariant under
+//!    creation-order permutation of the collections.
+//! 3. Every `ApiError` variant has a stable `(code, name, status)`
+//!    pinned by the golden fixture `tests/fixtures/api_error_codes.json`.
+//! 4. The legacy `/v1` adapter is byte-identical to a standalone
+//!    pre-collections node.
+//! 5. `Transfer-Encoding: chunked` is rejected `501 + close` with the
+//!    same bytes on the wire from both front ends.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+use valori::api::ApiCode;
+use valori::http::{client, Server};
+use valori::json::{parse, Json};
+use valori::node::{
+    serve, serve_collections, CollectionManager, CollectionSpec, ManagerConfig, NodeConfig,
+    NodeState,
+};
+use valori::replication::sync_all_collections;
+use valori::state::{Command, Kernel, KernelConfig, ShardedKernel};
+
+fn manager_with(spec: CollectionSpec) -> Arc<CollectionManager> {
+    Arc::new(
+        CollectionManager::new(
+            ManagerConfig { spec, workers: 4, data_dir: None, default_wal: None },
+            None,
+        )
+        .unwrap(),
+    )
+}
+
+fn spawn_manager(spec: CollectionSpec) -> (Arc<CollectionManager>, Server) {
+    let manager = manager_with(spec);
+    let server = serve_collections(Arc::clone(&manager), "127.0.0.1:0", 4).unwrap();
+    (manager, server)
+}
+
+fn vec_for(collection_salt: u64, i: u64, dim: usize) -> Vec<f32> {
+    (0..dim as u64)
+        .map(|j| (((collection_salt * 7919 + i * dim as u64 + j) as f32) * 0.0137).sin() * 0.8)
+        .collect()
+}
+
+fn insert_body(id: u64, v: &[f32]) -> Json {
+    Json::object(vec![
+        ("id", Json::Int(id as i64)),
+        ("vector", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
+    ])
+}
+
+/// Server-side root of one collection, via the typed /v2 envelope.
+fn server_root(addr: &SocketAddr, collection: &str) -> String {
+    let (st, h) =
+        client::get_json(addr, &format!("/v2/collections/{collection}/hash")).unwrap();
+    assert_eq!(st, 200, "{h}");
+    h.get("data").get("root").as_str().unwrap().to_string()
+}
+
+#[test]
+fn api_error_codes_match_golden_fixture() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/api_error_codes.json");
+    let fixture = parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let table = fixture.as_object().expect("fixture is an object");
+    assert_eq!(
+        table.len(),
+        ApiCode::ALL.len(),
+        "fixture and taxonomy must cover exactly the same codes"
+    );
+    for code in ApiCode::ALL {
+        let entry = fixture.get(&code.code().to_string());
+        assert!(
+            !matches!(entry, Json::Null),
+            "code {} ({}) missing from golden fixture — codes are append-only",
+            code.code(),
+            code.name()
+        );
+        assert_eq!(
+            entry.get("name").as_str(),
+            Some(code.name()),
+            "code {} renamed — names are a wire contract",
+            code.code()
+        );
+        assert_eq!(
+            entry.get("status").as_i64(),
+            Some(code.http_status() as i64),
+            "code {} changed HTTP status",
+            code.code()
+        );
+    }
+}
+
+#[test]
+fn interleaved_tenants_match_sequential_mirrors_bit_for_bit() {
+    // Two tenants with different shapes on one server.
+    let (manager, server) = spawn_manager(CollectionSpec { dim: 4, shards: 1, flat: false });
+    let addr = server.addr();
+    let spec_a = CollectionSpec { dim: 8, shards: 2, flat: true };
+    let spec_b = CollectionSpec { dim: 8, shards: 4, flat: true };
+    manager.create("tenant_a", spec_a).unwrap();
+    manager.create("tenant_b", spec_b).unwrap();
+
+    // Sequential local mirrors: each fed ONLY its own workload, as if the
+    // other tenant did not exist.
+    let mut mirror_a = ShardedKernel::new(KernelConfig::default_q16(8).with_flat_index(), 2);
+    let mut mirror_b = ShardedKernel::new(KernelConfig::default_q16(8).with_flat_index(), 4);
+
+    let mut conn = client::Connection::connect(&addr).unwrap();
+    for i in 0..60u64 {
+        // interleave: a, then b, every iteration — over one keep-alive
+        // socket so the server sees a strictly alternating stream
+        let va = vec_for(1, i, 8);
+        let (st, resp) =
+            conn.post_json("/v2/collections/tenant_a/insert", &insert_body(i, &va)).unwrap();
+        assert_eq!(st, 200, "{resp}");
+        mirror_a.apply(Command::Insert { id: i, vector: va }).unwrap();
+
+        let vb = vec_for(2, i, 8);
+        let (st, resp) =
+            conn.post_json("/v2/collections/tenant_b/insert", &insert_body(i, &vb)).unwrap();
+        assert_eq!(st, 200, "{resp}");
+        mirror_b.apply(Command::Insert { id: i, vector: vb }).unwrap();
+
+        if i % 10 == 7 {
+            // deletes (with their cross-shard cleanup) on tenant_a only
+            let body = Json::object(vec![("id", Json::Int((i - 3) as i64))]);
+            let (st, _) = conn.post_json("/v2/collections/tenant_a/delete", &body).unwrap();
+            assert_eq!(st, 200);
+            mirror_a.apply(Command::Delete { id: i - 3 }).unwrap();
+        }
+        if i % 15 == 4 && i > 0 {
+            let body =
+                Json::object(vec![("from", Json::Int(i as i64)), ("to", Json::Int(0))]);
+            let (st, _) = conn.post_json("/v2/collections/tenant_b/link", &body).unwrap();
+            assert_eq!(st, 200);
+            mirror_b.apply(Command::Link { from: i, to: 0 }).unwrap();
+        }
+    }
+
+    // Per-collection roots: server (concurrent-capable path, typed
+    // envelope, interleaved tenants) == sequential isolated mirror.
+    assert_eq!(
+        server_root(&addr, "tenant_a"),
+        format!("{:016x}", mirror_a.root_hash()),
+        "tenant_a diverged from its isolated sequential mirror"
+    );
+    assert_eq!(
+        server_root(&addr, "tenant_b"),
+        format!("{:016x}", mirror_b.root_hash()),
+        "tenant_b diverged from its isolated sequential mirror"
+    );
+
+    // And search through the envelope agrees with the mirror's kernel.
+    let q = vec_for(3, 0, 8);
+    let body = Json::object(vec![
+        ("vector", Json::Array(q.iter().map(|&x| Json::Float(x as f64)).collect())),
+        ("k", Json::Int(5)),
+    ]);
+    let (st, resp) = conn.post_json("/v2/collections/tenant_a/query", &body).unwrap();
+    assert_eq!(st, 200);
+    let hits = resp.get("data").get("hits").as_array().unwrap();
+    let expect = mirror_a.search_f32(&q, 5).unwrap();
+    assert_eq!(hits.len(), expect.len());
+    for (h, e) in hits.iter().zip(&expect) {
+        assert_eq!(h.get("id").as_u64(), Some(e.id));
+        assert_eq!(h.get("dist_raw").as_i64(), Some(e.dist_raw));
+    }
+    server.stop();
+}
+
+#[test]
+fn combined_hash_invariant_under_creation_order_permutation() {
+    let spec = CollectionSpec { dim: 4, shards: 2, flat: true };
+    let (m1, s1) = spawn_manager(spec.clone());
+    let (m2, s2) = spawn_manager(spec.clone());
+    // m1 creates zeta then alpha; m2 creates alpha then zeta.
+    m1.create("zeta", spec.clone()).unwrap();
+    m1.create("alpha", spec.clone()).unwrap();
+    m2.create("alpha", spec.clone()).unwrap();
+    m2.create("zeta", spec).unwrap();
+
+    for addr in [s1.addr(), s2.addr()] {
+        // identical per-collection contents on both nodes; only the
+        // collection *creation* order differs between them
+        for name in ["alpha", "zeta", "default"] {
+            let salt = name.len() as u64;
+            for i in 0..20u64 {
+                let v = vec_for(salt, i, 4);
+                let (st, resp) = client::post_json(
+                    &addr,
+                    &format!("/v2/collections/{name}/insert"),
+                    &insert_body(i, &v),
+                )
+                .unwrap();
+                assert_eq!(st, 200, "{resp}");
+            }
+        }
+    }
+
+    let (st1, h1) = client::get_json(&s1.addr(), "/v2/hash").unwrap();
+    let (st2, h2) = client::get_json(&s2.addr(), "/v2/hash").unwrap();
+    assert_eq!((st1, st2), (200, 200));
+    assert_eq!(
+        h1, h2,
+        "combined /v2/hash must be invariant under collection creation order"
+    );
+    assert_eq!(h1.get("data").get("count").as_i64(), Some(3));
+    assert_eq!(m1.combined_root(), m2.combined_root());
+
+    // Perturb one collection on one node: the combined root must flip.
+    let (st, _) = client::post_json(
+        &s2.addr(),
+        "/v2/collections/alpha/insert",
+        &insert_body(999, &vec_for(9, 999, 4)),
+    )
+    .unwrap();
+    assert_eq!(st, 200);
+    let (_, h2b) = client::get_json(&s2.addr(), "/v2/hash").unwrap();
+    assert_ne!(
+        h1.get("data").get("root").as_str(),
+        h2b.get("data").get("root").as_str()
+    );
+    s1.stop();
+    s2.stop();
+}
+
+/// Read one full raw response (status line + headers + body) off a
+/// buffered keep-alive stream; returns its exact bytes.
+fn read_raw_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<Vec<u8>> {
+    let mut raw = Vec::new();
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(std::io::Error::other("eof before response end"));
+        }
+        raw.extend_from_slice(line.as_bytes());
+        let t = line.trim_end();
+        if let Some((k, v)) = t.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+        if t.is_empty() && raw.len() > 2 {
+            break;
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    raw.extend_from_slice(&body);
+    Ok(raw)
+}
+
+/// Send each raw request over one keep-alive socket and concatenate the
+/// exact response bytes.
+fn raw_exchange(addr: &SocketAddr, requests: &[Vec<u8>]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut captured = Vec::new();
+    for req in requests {
+        stream.write_all(req).unwrap();
+        stream.flush().unwrap();
+        captured.extend_from_slice(&read_raw_response(&mut reader).unwrap());
+    }
+    captured
+}
+
+fn raw_request(method: &str, target: &str, body: &str) -> Vec<u8> {
+    format!("{method} {target} HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}", body.len())
+        .into_bytes()
+}
+
+#[test]
+fn v1_adapter_is_byte_identical_to_standalone_node() {
+    // Standalone pre-collections node…
+    let kernel = Kernel::new(KernelConfig::default_q16(4));
+    let standalone_state =
+        Arc::new(NodeState::new(kernel, &NodeConfig::default(), None).unwrap());
+    let standalone = serve(Arc::clone(&standalone_state), "127.0.0.1:0", 2).unwrap();
+    // …and a collection manager whose `default` has the same spec.
+    let (_manager, managed) =
+        spawn_manager(CollectionSpec { dim: 4, shards: 1, flat: false });
+
+    // Deterministic /v1 battery (health and stats excluded: health
+    // truthfully reports the manager's backend/collection count, stats
+    // carries wall-clock latency figures).
+    let battery: Vec<Vec<u8>> = vec![
+        raw_request("POST", "/v1/insert", r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#),
+        raw_request("POST", "/v1/insert", r#"{"id":2,"vector":[0.9,0.8,0.7,0.6]}"#),
+        raw_request("POST", "/v1/insert", r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#), // 409
+        raw_request("POST", "/v1/query", r#"{"vector":[0.1,0.2,0.3,0.4],"k":2}"#),
+        raw_request(
+            "POST",
+            "/v1/insert_batch",
+            r#"{"items":[{"id":10,"vector":[0,0,0,0.1]},{"id":11,"vector":[0,0,0.1,0]}]}"#,
+        ),
+        raw_request("POST", "/v1/insert", "{oops"),        // 400
+        raw_request("POST", "/v1/delete", r#"{"id":99}"#), // 404
+        raw_request("POST", "/v1/link", r#"{"from":1,"to":2}"#),
+        raw_request("POST", "/v1/meta", r#"{"id":1,"key":"k","value":"v"}"#),
+        raw_request("POST", "/v1/unlink", r#"{"from":1,"to":2}"#),
+        raw_request("POST", "/v1/embed", r#"{"texts":["x"]}"#), // 503, no embedder
+        raw_request("GET", "/v1/hash", ""),
+        raw_request("GET", "/v1/log?from=0", ""),
+        raw_request("GET", "/v3/nowhere", ""), // unversioned 404
+    ];
+    let from_standalone = raw_exchange(&standalone.addr(), &battery);
+    let from_adapter = raw_exchange(&managed.addr(), &battery);
+    assert!(
+        from_standalone == from_adapter,
+        "/v1 adapter diverged from the standalone node:\n--- standalone ---\n{}\n--- adapter ---\n{}",
+        String::from_utf8_lossy(&from_standalone),
+        String::from_utf8_lossy(&from_adapter),
+    );
+    standalone.stop();
+    managed.stop();
+}
+
+/// Send partial/odd request bytes, half-close, and collect everything the
+/// server puts on the wire until it closes.
+fn one_shot_exchange(addr: &SocketAddr, raw: &[u8]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(raw).unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut out = Vec::new();
+    let _ = stream.read_to_end(&mut out);
+    out
+}
+
+#[test]
+fn chunked_transfer_encoding_rejected_501_identically_on_both_front_ends() {
+    let make_state = || {
+        let kernel = Kernel::new(KernelConfig::default_q16(4));
+        Arc::new(NodeState::new(kernel, &NodeConfig::default(), None).unwrap())
+    };
+    let blocking_state = make_state();
+    let reactor_state = make_state();
+    let blocking = Server::start_blocking("127.0.0.1:0", 2, {
+        let s = Arc::clone(&blocking_state);
+        Arc::new(move |req| valori::node::route(&s, req))
+    })
+    .unwrap();
+    let reactor = serve(Arc::clone(&reactor_state), "127.0.0.1:0", 2).unwrap();
+    assert_eq!(blocking.backend_name(), "blocking");
+
+    let cases: [&[u8]; 3] = [
+        // classic chunked upload
+        b"POST /v1/insert HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\n\r\n",
+        // TE alongside content-length: TE still wins (checked first)
+        b"POST /v1/insert HTTP/1.1\r\ncontent-length: 5\r\ntransfer-encoding: chunked\r\n\r\nhello",
+        // any TE value is unsupported, not just chunked
+        b"GET /v1/hash HTTP/1.1\r\ntransfer-encoding: gzip\r\n\r\n",
+    ];
+    for raw in cases {
+        let a = one_shot_exchange(&blocking.addr(), raw);
+        let b = one_shot_exchange(&reactor.addr(), raw);
+        assert!(
+            a == b,
+            "chunked rejection diverged for {raw:?}:\n--- blocking ---\n{}\n--- reactor ---\n{}",
+            String::from_utf8_lossy(&a),
+            String::from_utf8_lossy(&b),
+        );
+        let text = String::from_utf8_lossy(&a);
+        assert!(text.starts_with("HTTP/1.1 501 Not Implemented\r\n"), "{text}");
+        assert!(text.contains("connection: close"), "{text}");
+        assert!(text.contains(r#"{"error":"not implemented: transfer-encoding"}"#), "{text}");
+        // the body was never interpreted as a request
+        assert!(!text.contains("duplicate"), "{text}");
+    }
+    // the kernel was never touched
+    assert_eq!(blocking_state.log_len(), 0);
+    assert_eq!(reactor_state.log_len(), 0);
+    blocking.stop();
+    reactor.stop();
+}
+
+#[test]
+fn sync_all_collections_converges_a_fresh_follower() {
+    let spec = CollectionSpec { dim: 4, shards: 2, flat: true };
+    let (p_manager, primary) = spawn_manager(spec.clone());
+    let (f_manager, follower) = spawn_manager(spec.clone());
+    p_manager.create("t1", CollectionSpec { dim: 4, shards: 2, flat: true }).unwrap();
+    p_manager.create("t2", CollectionSpec { dim: 4, shards: 4, flat: true }).unwrap();
+
+    // data in default + both tenants, via the live server
+    let p_addr = primary.addr();
+    for (name, salt, n) in [("default", 11u64, 30u64), ("t1", 22, 50), ("t2", 33, 40)] {
+        let mut conn = client::Connection::connect(&p_addr).unwrap();
+        for i in 0..n {
+            let v = vec_for(salt, i, 4);
+            let (st, resp) = conn
+                .post_json(&format!("/v2/collections/{name}/insert"), &insert_body(i, &v))
+                .unwrap();
+            assert_eq!(st, 200, "{resp}");
+        }
+        // a delete with cross-shard cleanup rides along
+        let (st, _) = conn
+            .post_json(
+                &format!("/v2/collections/{name}/delete"),
+                &Json::object(vec![("id", Json::Int(3))]),
+            )
+            .unwrap();
+        assert_eq!(st, 200);
+    }
+
+    let shipped = sync_all_collections(&p_addr, &follower.addr()).unwrap();
+    let names: Vec<&str> = shipped.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names, vec!["default", "t1", "t2"]);
+    for (name, per_shard) in &shipped {
+        assert!(
+            per_shard.iter().sum::<usize>() > 0,
+            "collection {name} shipped nothing"
+        );
+    }
+
+    // per-collection roots AND the combined root converge
+    for name in ["default", "t1", "t2"] {
+        assert_eq!(
+            server_root(&p_addr, name),
+            server_root(&follower.addr(), name),
+            "collection {name} did not converge"
+        );
+    }
+    assert_eq!(p_manager.combined_root(), f_manager.combined_root());
+    primary.stop();
+    follower.stop();
+}

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Exercise the whole /v2 surface (plus the /v1 adapter and the chunked
+501 path) against a running node and diff every response against the
+golden fixture `api_surface_golden.json`.
+
+The golden cases are ordered and stateful, so the target must be a
+FRESH `valori serve --dim 4 --shards 2 --collections 3 --no-embedder`
+node (see the `server` stanza in the fixture). Placeholders in golden
+bodies (`<any>`, `<int>`, `<float>`, `<str>`, `<hex16>`, `<hex64>`)
+match by shape; everything else must be an exact JSON match — that is
+what makes the error-code taxonomy and the deterministic payloads
+(seqs, exact Q16.16 distances) a pinned wire contract.
+
+Usage: api_surface.py [--addr 127.0.0.1:7442]
+"""
+
+import argparse
+import http.client
+import json
+import pathlib
+import socket
+import sys
+
+GOLDEN = pathlib.Path(__file__).with_name("api_surface_golden.json")
+
+PLACEHOLDERS = {"<any>", "<int>", "<float>", "<str>", "<hex16>", "<hex64>"}
+
+
+def matches(golden, actual, path="$"):
+    """Structural match with placeholders; returns a list of mismatches."""
+    if isinstance(golden, str) and golden in PLACEHOLDERS:
+        if golden == "<any>":
+            return []
+        if golden == "<int>":
+            ok = isinstance(actual, int) and not isinstance(actual, bool)
+        elif golden == "<float>":
+            ok = isinstance(actual, (int, float)) and not isinstance(actual, bool)
+        elif golden == "<str>":
+            ok = isinstance(actual, str)
+        elif golden == "<hex16>":
+            ok = isinstance(actual, str) and len(actual) == 16 and all(
+                c in "0123456789abcdef" for c in actual)
+        else:  # <hex64>
+            ok = isinstance(actual, str) and len(actual) == 64 and all(
+                c in "0123456789abcdef" for c in actual)
+        return [] if ok else [f"{path}: expected {golden}, got {actual!r}"]
+    if isinstance(golden, dict):
+        if not isinstance(actual, dict):
+            return [f"{path}: expected object, got {actual!r}"]
+        errs = []
+        if set(golden) != set(actual):
+            return [f"{path}: keys differ: expected {sorted(golden)}, got {sorted(actual)}"]
+        for k in golden:
+            errs += matches(golden[k], actual[k], f"{path}.{k}")
+        return errs
+    if isinstance(golden, list):
+        if not isinstance(actual, list):
+            return [f"{path}: expected array, got {actual!r}"]
+        if len(golden) != len(actual):
+            return [f"{path}: expected {len(golden)} items, got {len(actual)}"]
+        errs = []
+        for i, (g, a) in enumerate(zip(golden, actual)):
+            errs += matches(g, a, f"{path}[{i}]")
+        return errs
+    # exact (python == treats 0 == 0.0, matching JSON number semantics)
+    if golden != actual or isinstance(golden, bool) != isinstance(actual, bool):
+        return [f"{path}: expected {golden!r}, got {actual!r}"]
+    return []
+
+
+def run_http_case(host, port, case):
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    body = case.get("body")
+    conn.request(case["method"], case["path"],
+                 body=body.encode() if body is not None else None)
+    resp = conn.getresponse()
+    status = resp.status
+    raw = resp.read()
+    conn.close()
+    try:
+        parsed = json.loads(raw)
+    except ValueError:
+        parsed = raw.decode("utf-8", "replace")
+    return status, parsed
+
+
+def run_raw_case(host, port, case):
+    """Send raw bytes (protocol-error cases) and parse whatever comes
+    back until the server closes — also asserts it *does* close."""
+    s = socket.create_connection((host, port), timeout=30)
+    s.sendall(case["raw"].encode())
+    data = b""
+    while True:
+        chunk = s.recv(65536)
+        if not chunk:
+            break  # server closed, as required for 501/close
+        data += chunk
+    s.close()
+    head, _, body = data.partition(b"\r\n\r\n")
+    status = int(head.split(b" ")[1].decode())
+    try:
+        parsed = json.loads(body)
+    except ValueError:
+        parsed = body.decode("utf-8", "replace")
+    return status, parsed
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--addr", default="127.0.0.1:7442")
+    args = ap.parse_args()
+    host, port = args.addr.rsplit(":", 1)
+    port = int(port)
+
+    golden = json.loads(GOLDEN.read_text())
+    failures = []
+    for case in golden["cases"]:
+        name = case["name"]
+        if "raw" in case:
+            status, parsed = run_raw_case(host, port, case)
+        else:
+            status, parsed = run_http_case(host, port, case)
+        errs = []
+        if status != case["status"]:
+            errs.append(f"status: expected {case['status']}, got {status}")
+        errs += matches(case["response"], parsed)
+        if errs:
+            failures.append((name, errs, parsed))
+            print(f"FAIL {name}")
+            for e in errs:
+                print(f"  {e}")
+            print(f"  actual: {json.dumps(parsed, sort_keys=True)}")
+        else:
+            print(f"ok   {name}")
+    if failures:
+        print(f"\n{len(failures)}/{len(golden['cases'])} api-surface cases failed")
+        sys.exit(1)
+    print(f"\nall {len(golden['cases'])} api-surface cases match the golden fixture")
+
+
+if __name__ == "__main__":
+    main()
