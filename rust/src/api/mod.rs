@@ -33,13 +33,17 @@
 //! | 1201 | `embed_failed` | 500 |
 //! | 1300 | `route_not_found` | 404 |
 //! | 1301 | `method_not_allowed` | 405 |
+//! | 1400 | `stream_corrupt` | 400 |
+//! | 1401 | `stream_offset_mismatch` | 409 |
+//! | 1402 | `stream_digest_mismatch` | 400 |
+//! | 1403 | `restore_busy` | 503 |
 //! | 1500 | `internal` | 500 |
 //!
 //! Codes are a compatibility contract: they may be *added*, never
 //! renumbered or reused (`tests/fixtures/api_error_codes.json` is the
 //! golden copy `tests/collections.rs` asserts against). Numbering is
 //! grouped: 10xx state-machine rejections, 11xx collection lifecycle,
-//! 12xx embedder, 13xx routing, 15xx internal.
+//! 12xx embedder, 13xx routing, 14xx snapshot streaming, 15xx internal.
 //!
 //! ## Typed commands
 //!
@@ -92,6 +96,19 @@ pub enum ApiCode {
     RouteNotFound = 1300,
     /// The path exists but not with this method.
     MethodNotAllowed = 1301,
+    /// Snapshot-stream bytes failed structural/CRC verification in
+    /// transit (retry the transfer).
+    StreamCorrupt = 1400,
+    /// Restore ingest arrived at an offset the session does not expect
+    /// (resume from the session's reported offset, or restart at 0).
+    StreamOffsetMismatch = 1401,
+    /// Stream survived transport intact but a reassembled shard's
+    /// digest disagrees with its manifest — a determinism violation on
+    /// the sender, not line noise.
+    StreamDigestMismatch = 1402,
+    /// Too many concurrent restore sessions on this node — retry later
+    /// (sessions also expire after an idle TTL).
+    RestoreBusy = 1403,
     /// I/O or other non-deterministic failure (WAL append, runtime).
     Internal = 1500,
 }
@@ -99,7 +116,7 @@ pub enum ApiCode {
 impl ApiCode {
     /// Every variant, in code order (the golden-fixture test iterates
     /// this, so adding a variant without extending the fixture fails CI).
-    pub const ALL: [ApiCode; 17] = [
+    pub const ALL: [ApiCode; 21] = [
         ApiCode::BadRequest,
         ApiCode::DuplicateId,
         ApiCode::UnknownId,
@@ -116,6 +133,10 @@ impl ApiCode {
         ApiCode::EmbedFailed,
         ApiCode::RouteNotFound,
         ApiCode::MethodNotAllowed,
+        ApiCode::StreamCorrupt,
+        ApiCode::StreamOffsetMismatch,
+        ApiCode::StreamDigestMismatch,
+        ApiCode::RestoreBusy,
         ApiCode::Internal,
     ];
 
@@ -143,6 +164,10 @@ impl ApiCode {
             ApiCode::EmbedFailed => "embed_failed",
             ApiCode::RouteNotFound => "route_not_found",
             ApiCode::MethodNotAllowed => "method_not_allowed",
+            ApiCode::StreamCorrupt => "stream_corrupt",
+            ApiCode::StreamOffsetMismatch => "stream_offset_mismatch",
+            ApiCode::StreamDigestMismatch => "stream_digest_mismatch",
+            ApiCode::RestoreBusy => "restore_busy",
             ApiCode::Internal => "internal",
         }
     }
@@ -157,12 +182,16 @@ impl ApiCode {
             | ApiCode::WrongShard
             | ApiCode::ShardOutOfRange
             | ApiCode::InvalidCollectionName
-            | ApiCode::ReservedCollection => 400,
+            | ApiCode::ReservedCollection
+            | ApiCode::StreamCorrupt
+            | ApiCode::StreamDigestMismatch => 400,
             ApiCode::UnknownId | ApiCode::UnknownCollection | ApiCode::RouteNotFound => 404,
             ApiCode::MethodNotAllowed => 405,
-            ApiCode::DuplicateId | ApiCode::CollectionExists => 409,
+            ApiCode::DuplicateId | ApiCode::CollectionExists | ApiCode::StreamOffsetMismatch => {
+                409
+            }
             ApiCode::EmbedFailed | ApiCode::Internal => 500,
-            ApiCode::NoEmbedder => 503,
+            ApiCode::NoEmbedder | ApiCode::RestoreBusy => 503,
         }
     }
 }
@@ -242,6 +271,17 @@ impl From<crate::Error> for ApiError {
             }
             other => ApiError::new(ApiCode::Internal, other.to_string()),
         }
+    }
+}
+
+impl From<crate::snapshot::StreamError> for ApiError {
+    fn from(e: crate::snapshot::StreamError) -> Self {
+        let code = if e.is_digest_violation() {
+            ApiCode::StreamDigestMismatch
+        } else {
+            ApiCode::StreamCorrupt
+        };
+        ApiError::new(code, e.to_string())
     }
 }
 

@@ -348,6 +348,44 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
         server.stop();
     }
 
+    // --- snapshot stream (chunked encode → verify-on-arrival decode) ----
+    // One iteration = full VSTREAM1 writer→reader round trip at the
+    // default 64 KiB chunk, ending in a root-hash equality assertion:
+    // the row times the bit-exact transfer path online migration uses,
+    // with writer-side memory bounded at one shard frame + one chunk
+    // instead of the whole deployment.
+    {
+        use crate::snapshot::{SnapshotReader, SnapshotWriter};
+        let mut sk =
+            ShardedKernel::new(KernelConfig::default_q16(cfg.dim).with_flat_index(), cfg.shards);
+        let items: Vec<(u64, Vec<i32>)> =
+            (0..cfg.n as u64).map(|i| (i, raw_row(cfg.seed, i, cfg.dim))).collect();
+        for chunk in items.chunks(4096) {
+            sk.apply_canon(&CanonCommand::InsertBatch { items: chunk.to_vec() })
+                .expect("bench corpus insert");
+        }
+        let expected_root = sk.root_hash();
+        // A full stream per iteration is heavyweight; cap iterations
+        // like the upsert row so `--quick` stays quick.
+        let stream_cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(10),
+            max_iters: 20,
+            ..cfg.bench
+        };
+        let stats = bench(&stream_cfg, || {
+            let mut writer = SnapshotWriter::for_kernel(&sk, 64 * 1024);
+            let mut reader = SnapshotReader::new();
+            while let Some(block) = writer.next_block() {
+                reader.feed(&block.expect("bench stream block")).expect("bench stream feed");
+            }
+            let snap = reader.finalize().expect("bench stream finalize");
+            assert_eq!(snap.root_hash(), expected_root, "streaming changed bits");
+            snap
+        });
+        rows.push(SuiteRow { name: "snapshot_stream".into(), n: cfg.n, stats });
+        report.add("snapshot_stream", stats);
+    }
+
     report.print();
     let result = SuiteResult {
         config_label: label.to_string(),
@@ -441,6 +479,7 @@ mod tests {
             "batch_upsert",
             "http_roundtrip",
             "multi_collection_route",
+            "snapshot_stream",
         ] {
             assert!(r.row(name).is_some(), "missing row {name}");
             assert!(r.row(name).unwrap().stats.iters >= 3);
@@ -449,6 +488,6 @@ mod tests {
         let json = suite_json(&r).to_string();
         let parsed = crate::json::parse(&json).expect("bench json parses");
         assert_eq!(parsed.get("suite").as_str(), Some("valori-search"));
-        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(7));
+        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(8));
     }
 }

@@ -61,21 +61,78 @@ impl Request {
     }
 }
 
+/// A pull-based response body for payloads too large to materialize
+/// (snapshot streams). The front end writes the head with the exact
+/// `content_length`, then pulls blocks as the socket drains — the event
+/// loop never holds more than one block, and backpressure propagates to
+/// the producer naturally (nothing is pulled while the socket is full).
+/// Producers must yield exactly `content_length` bytes; yielding fewer
+/// makes the front end drop the connection, so a mid-stream abort is a
+/// torn response the client detects by byte count, never a silently
+/// short "success".
+/// The boxed pull source behind a [`StreamingBody`].
+type BodySource = Box<dyn FnMut() -> Option<Vec<u8>> + Send>;
+
+#[derive(Clone)]
+pub struct StreamingBody {
+    pub content_length: u64,
+    source: Arc<Mutex<BodySource>>,
+}
+
+impl StreamingBody {
+    pub fn new(
+        content_length: u64,
+        source: impl FnMut() -> Option<Vec<u8>> + Send + 'static,
+    ) -> Self {
+        Self { content_length, source: Arc::new(Mutex::new(Box::new(source))) }
+    }
+
+    /// Pull the next block (`None` = exhausted). Blocks are written to
+    /// the socket verbatim, in pull order.
+    pub fn next_block(&self) -> Option<Vec<u8>> {
+        (self.source.lock().expect("stream source poisoned"))()
+    }
+}
+
+impl std::fmt::Debug for StreamingBody {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamingBody").field("content_length", &self.content_length).finish()
+    }
+}
+
 /// An HTTP response under construction.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// When set, `body` is ignored and the payload is pulled block by
+    /// block from the source (see [`StreamingBody`]).
+    pub stream: Option<StreamingBody>,
 }
 
 impl Response {
     pub fn json(status: u16, body: impl Into<String>) -> Self {
-        Self { status, content_type: "application/json", body: body.into().into_bytes() }
+        Self {
+            status,
+            content_type: "application/json",
+            body: body.into().into_bytes(),
+            stream: None,
+        }
     }
 
     pub fn text(status: u16, body: impl Into<String>) -> Self {
-        Self { status, content_type: "text/plain; charset=utf-8", body: body.into().into_bytes() }
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+            stream: None,
+        }
+    }
+
+    /// A streaming response (exact-length, pull-based body).
+    pub fn streaming(status: u16, content_type: &'static str, stream: StreamingBody) -> Self {
+        Self { status, content_type, body: Vec::new(), stream: Some(stream) }
     }
 
     pub fn not_found() -> Self {
@@ -102,26 +159,70 @@ impl Response {
         }
     }
 
-    /// Serialize the full wire form. Both front ends emit exactly these
-    /// bytes, which is what makes the blocking/reactor equivalence test a
-    /// byte-for-byte comparison.
-    pub fn to_bytes(&self, keep_alive: bool) -> Vec<u8> {
-        let head = format!(
+    /// Declared body length: the streaming source's exact total when
+    /// present, otherwise the materialized body's.
+    pub fn content_length(&self) -> u64 {
+        match &self.stream {
+            Some(s) => s.content_length,
+            None => self.body.len() as u64,
+        }
+    }
+
+    /// The status line + headers (shared by both serializers so the head
+    /// bytes are identical whether the body is materialized or pulled).
+    pub fn head_bytes(&self, keep_alive: bool) -> Vec<u8> {
+        format!(
             "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
             self.status,
             self.status_text(),
             self.content_type,
-            self.body.len(),
+            self.content_length(),
             if keep_alive { "keep-alive" } else { "close" },
-        );
-        let mut out = Vec::with_capacity(head.len() + self.body.len());
-        out.extend_from_slice(head.as_bytes());
+        )
+        .into_bytes()
+    }
+
+    /// Serialize the full wire form (materialized bodies only — a
+    /// streaming response is written block by block by the front ends).
+    /// Both front ends emit exactly these bytes, which is what makes the
+    /// blocking/reactor equivalence test a byte-for-byte comparison.
+    pub fn to_bytes(&self, keep_alive: bool) -> Vec<u8> {
+        debug_assert!(self.stream.is_none(), "streaming responses have no full wire form");
+        let mut out = self.head_bytes(keep_alive);
         out.extend_from_slice(&self.body);
         out
     }
 
     fn write_to(&self, stream: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
-        stream.write_all(&self.to_bytes(keep_alive))?;
+        match &self.stream {
+            None => stream.write_all(&self.to_bytes(keep_alive))?,
+            Some(sb) => {
+                // Head first, then pull blocks until the source dries up.
+                // A source that stops short of its declared length is a
+                // torn response: surface an error so the caller closes
+                // the connection instead of serving the next request on
+                // a desynchronized socket.
+                stream.write_all(&self.head_bytes(keep_alive))?;
+                let mut written = 0u64;
+                while let Some(block) = sb.next_block() {
+                    if block.is_empty() {
+                        // Contract violation; erroring beats looping on it.
+                        return Err(std::io::Error::other("empty stream block"));
+                    }
+                    written = written.saturating_add(block.len() as u64);
+                    if written > sb.content_length {
+                        return Err(std::io::Error::other("stream overran content-length"));
+                    }
+                    stream.write_all(&block)?;
+                }
+                if written != sb.content_length {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "stream source aborted before content-length",
+                    ));
+                }
+            }
+        }
         stream.flush()
     }
 }
@@ -507,6 +608,13 @@ pub struct ServerMetrics {
     /// Pipelined requests rejected (the reactor serves strictly one
     /// request per connection at a time).
     pub pipelined_rejected: AtomicU64,
+    /// Snapshot-stream payload bytes handed to the wire (writer side).
+    pub stream_bytes_streamed: AtomicU64,
+    /// Snapshot-stream chunks whose CRC verified on ingest (reader side).
+    pub stream_chunks_verified: AtomicU64,
+    /// Snapshot streams currently in flight (gauge: outbound streams +
+    /// open restore sessions).
+    pub streams_in_flight: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -789,9 +897,10 @@ fn handle_connection(
 pub mod client {
     use super::*;
 
-    /// Read one response off a buffered stream: returns (status, body,
-    /// server asked to close).
-    fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, Vec<u8>, bool)> {
+    /// Read a response's status line + headers: returns (status,
+    /// content-length, server asked to close). The body is left on the
+    /// stream for the caller to drain.
+    fn read_head(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, usize, bool)> {
         let mut status_line = String::new();
         if reader.read_line(&mut status_line)? == 0 {
             // Clean EOF before a single response byte: the server closed
@@ -826,6 +935,13 @@ pub mod client {
                 }
             }
         }
+        Ok((status, len, close))
+    }
+
+    /// Read one response off a buffered stream: returns (status, body,
+    /// server asked to close).
+    fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, Vec<u8>, bool)> {
+        let (status, len, close) = read_head(reader)?;
         let mut body = vec![0u8; len];
         reader.read_exact(&mut body)?;
         Ok((status, body, close))
@@ -949,6 +1065,66 @@ pub mod client {
                 }
             }
             Err(std::io::Error::other("keep-alive retry failed"))
+        }
+
+        /// Issue one request and stream a 200 response's body into
+        /// `sink` in ≤ 64 KiB slices instead of materializing it —
+        /// bounded memory for snapshot-sized payloads. A non-200
+        /// response's (small, JSON) body is returned instead, with the
+        /// sink untouched. No transparent retry: once bytes reach the
+        /// sink the transfer is stateful, so failures surface to the
+        /// caller, which resumes from its own offset.
+        pub fn request_streaming(
+            &mut self,
+            method: &str,
+            path: &str,
+            body: &[u8],
+            sink: &mut dyn FnMut(&[u8]) -> std::io::Result<()>,
+        ) -> std::io::Result<(u16, u64, Vec<u8>)> {
+            if self.dead {
+                *self = Self::connect(&self.addr)?;
+            }
+            match self.stream_exchange(method, path, body, sink) {
+                Ok((status, len, err_body, close)) => {
+                    if close {
+                        self.dead = true;
+                    }
+                    Ok((status, len, err_body))
+                }
+                Err(e) => {
+                    // The socket may hold a half-read body: never reuse it.
+                    self.dead = true;
+                    Err(e)
+                }
+            }
+        }
+
+        /// The fallible half of [`Self::request_streaming`]: returns
+        /// (status, content-length, non-200 body, server-close flag).
+        fn stream_exchange(
+            &mut self,
+            method: &str,
+            path: &str,
+            body: &[u8],
+            sink: &mut dyn FnMut(&[u8]) -> std::io::Result<()>,
+        ) -> std::io::Result<(u16, u64, Vec<u8>, bool)> {
+            self.send(method, path, body)?;
+            let (status, len, close) = read_head(&mut self.reader)?;
+            self.fresh = false;
+            if status != 200 {
+                let mut err_body = vec![0u8; len];
+                self.reader.read_exact(&mut err_body)?;
+                return Ok((status, len as u64, err_body, close));
+            }
+            let mut remaining = len;
+            let mut buf = vec![0u8; (64usize << 10).min(len.max(1))];
+            while remaining > 0 {
+                let n = buf.len().min(remaining);
+                self.reader.read_exact(&mut buf[..n])?;
+                sink(&buf[..n])?;
+                remaining -= n;
+            }
+            Ok((status, len as u64, Vec::new(), close))
         }
 
         /// POST JSON; returns (status, parsed body if JSON).
@@ -1137,6 +1313,75 @@ mod tests {
         assert_eq!(ServerMetrics::get(&metrics.connections_accepted), 1);
         assert_eq!(ServerMetrics::get(&metrics.requests_served), 5);
         server.stop();
+    }
+
+    #[test]
+    fn streaming_response_bytes_match_on_both_front_ends() {
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let p = payload.clone();
+        let handler: Handler = Arc::new(move |req: Request| {
+            if req.path == "/stream" {
+                let data = p.clone();
+                let mut offset = 0usize;
+                Response::streaming(
+                    200,
+                    "application/octet-stream",
+                    StreamingBody::new(data.len() as u64, move || {
+                        if offset >= data.len() {
+                            return None;
+                        }
+                        let end = (offset + 8192).min(data.len());
+                        let block = data[offset..end].to_vec();
+                        offset = end;
+                        Some(block)
+                    }),
+                )
+            } else {
+                Response::not_found()
+            }
+        });
+        // Reactor (default) front end: one-shot, then keep-alive reuse
+        // across two streamed responses on one socket.
+        let server = Server::start("127.0.0.1:0", 2, Arc::clone(&handler)).unwrap();
+        let (status, body) = client::request(&server.addr(), "GET", "/stream", b"").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, payload);
+        let mut conn = client::Connection::connect(&server.addr()).unwrap();
+        let (s1, b1) = conn.request("GET", "/stream", b"").unwrap();
+        let (s2, b2) = conn.request("GET", "/stream", b"").unwrap();
+        assert_eq!((s1, s2), (200, 200));
+        assert_eq!(b1, payload);
+        assert_eq!(b2, payload);
+        // Streaming client read (bounded memory path).
+        let mut got = Vec::new();
+        let (st, len, err_body) = conn
+            .request_streaming("GET", "/stream", b"", &mut |b| {
+                got.extend_from_slice(b);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(len, payload.len() as u64);
+        assert!(err_body.is_empty());
+        assert_eq!(got, payload);
+        // Non-200 path leaves the sink untouched and returns the body.
+        let mut untouched = true;
+        let (st, _, err_body) = conn
+            .request_streaming("GET", "/nope", b"", &mut |_| {
+                untouched = false;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(st, 404);
+        assert!(untouched);
+        assert!(!err_body.is_empty());
+        server.stop();
+        // Blocking front end serves the identical bytes.
+        let blocking = Server::start_blocking("127.0.0.1:0", 2, handler).unwrap();
+        let (bs, bb) = client::request(&blocking.addr(), "GET", "/stream", b"").unwrap();
+        assert_eq!(bs, 200);
+        assert_eq!(bb, payload);
+        blocking.stop();
     }
 
     #[test]

@@ -45,7 +45,7 @@
 
 use super::{
     parse_error_response, Handler, ParsePhase, Request, RequestParser, Response, ServerConfig,
-    ServerMetrics,
+    ServerMetrics, StreamingBody,
 };
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -204,6 +204,14 @@ struct Conn {
     parser: RequestParser,
     write_buf: Vec<u8>,
     written: usize,
+    /// Streaming response source: refilled into `write_buf` block by
+    /// block as the socket drains (backpressure: nothing is pulled while
+    /// the socket is full).
+    body_stream: Option<StreamingBody>,
+    /// Bytes the streaming source still owes against its declared
+    /// `content-length`; a source that dries up early tears the
+    /// connection (never a silently short 200).
+    stream_remaining: u64,
     /// The keep-alive decision for the in-flight response.
     response_keep_alive: bool,
     /// Client sent bytes while a request was already in flight.
@@ -436,6 +444,8 @@ impl Reactor {
                         parser: RequestParser::new(),
                         write_buf: Vec::new(),
                         written: 0,
+                        body_stream: None,
+                        stream_remaining: 0,
                         response_keep_alive: false,
                         pipelined: false,
                         half_closed: false,
@@ -573,6 +583,43 @@ impl Reactor {
     fn flush_write(&mut self, conn: &mut Conn, now: Instant) -> bool {
         loop {
             if conn.written == conn.write_buf.len() {
+                // Streaming body: refill from the source before treating
+                // the response as complete. One block in memory at a
+                // time; the pull happens only when the previous block is
+                // fully on the wire, so a slow client throttles the
+                // producer instead of ballooning the buffer.
+                if let Some(sb) = conn.body_stream.clone() {
+                    match sb.next_block() {
+                        Some(block) if !block.is_empty() => {
+                            if block.len() as u64 > conn.stream_remaining {
+                                return true; // source overran its declared length
+                            }
+                            conn.stream_remaining -= block.len() as u64;
+                            conn.write_buf = block;
+                            conn.written = 0;
+                            // The write budget is per block for streams:
+                            // each drained block proves progress, while a
+                            // stalled client still times out one
+                            // `write_timeout` after its last block.
+                            conn.deadline = now + self.cfg.write_timeout;
+                            continue;
+                        }
+                        // An empty block violates the source contract;
+                        // tearing beats spinning the event loop on it.
+                        Some(_) => return true,
+                        None => {
+                            let torn = conn.stream_remaining > 0;
+                            conn.body_stream = None;
+                            if torn {
+                                // Aborted mid-stream: the client already
+                                // saw the full content-length header, so
+                                // the only honest signal is a short body
+                                // + close.
+                                return true;
+                            }
+                        }
+                    }
+                }
                 // Response fully on the wire. Parse-error and
                 // pipeline-rejection responses carry `close_after_write`
                 // and are not counted — the blocking path only counts
@@ -635,7 +682,13 @@ impl Reactor {
             let keep = conn.response_keep_alive
                 && conn.served + 1 < self.cfg.max_requests_per_conn
                 && !conn.pipelined;
-            conn.write_buf = resp.to_bytes(keep);
+            if let Some(sb) = resp.stream.clone() {
+                conn.write_buf = resp.head_bytes(keep);
+                conn.stream_remaining = sb.content_length;
+                conn.body_stream = Some(sb);
+            } else {
+                conn.write_buf = resp.to_bytes(keep);
+            }
             conn.written = 0;
             conn.response_keep_alive = keep;
             conn.state = ConnState::Writing;

@@ -14,8 +14,15 @@
 //! valori bench      [--quick] [--n 50000] [--dim 256] [--k 10] [--shards 4]
 //!                   [--batch 512] [--seed S] [--out BENCH_search.json]
 //! valori experiment <table1|table2|table3|transfer|latency|all> [--quick]
-//! valori snapshot   --wal <file> --out <file> [--dim N] [--shards N]
-//!                   # or --data DIR --collection NAME for managed layouts
+//! valori snapshot   --wal <file> --out <file> [--dim N] [--shards N] [--flat]
+//!                   # or --data DIR --collection NAME: shape read from the
+//!                   # collection's spec.json, no path surgery
+//! valori snapshot stream   (same layout opts) --out <file> [--chunk N]
+//!                   # write the chunked VSTREAM1 format (per-chunk CRCs)
+//! valori snapshot restore  --in <stream> [--out <snapshot>]
+//!                   # verify a VSTREAM1 file chunk by chunk
+//! valori snapshot migrate  --src A:P --dst B:P --collection NAME
+//!                   # online tenant migration over /v2 + root-hash check
 //! valori restore    --snapshot <file>           # verify + print hashes
 //!                                               # (plain or sharded file)
 //! valori replay     --log <file> [--dim N]      # audit replay from hex log
@@ -494,34 +501,135 @@ fn cmd_experiment(args: &Args) -> i32 {
     }
 }
 
-fn cmd_snapshot(args: &Args) -> i32 {
-    // Either a direct --wal base, or the managed per-collection layout
-    // (`--data DIR --collection NAME` -> DIR/NAME/wal, matching what
-    // `serve --data DIR` writes for that collection).
-    let wal_owned: Option<String> = args.opt("wal").map(String::from).or_else(|| {
-        match (args.opt("data"), args.opt("collection")) {
-            (Some(d), Some(c)) => Some(format!("{d}/{c}/wal")),
-            _ => None,
+/// Resolved offline WAL layout for `valori snapshot`: where the
+/// per-shard WAL files live and the kernel shape to replay them into.
+struct OfflineLayout {
+    wal_base: String,
+    dim: usize,
+    shards: u32,
+    flat: bool,
+}
+
+impl OfflineLayout {
+    fn kernel_config(&self) -> KernelConfig {
+        let config = KernelConfig::default_q16(self.dim);
+        if self.flat {
+            config.with_flat_index()
+        } else {
+            config
         }
-    });
-    let Some(wal_path) = wal_owned.as_deref() else {
-        return fail("need --wal <file> (or --data <dir> --collection <name>)");
+    }
+}
+
+/// Resolve the WAL layout from either `--wal <base>` or the managed
+/// `--data DIR --collection NAME` form. The managed form reads the
+/// collection's persisted `<data>/<name>/spec.json` so dim/shards/index
+/// come from the collection itself — no `--wal` path surgery and no
+/// hand-copied shape flags (which, when wrong, silently produce a
+/// different state hash). Explicit `--dim`/`--shards`/`--flat` still
+/// override.
+fn resolve_offline_layout(args: &Args) -> Result<OfflineLayout, String> {
+    let (wal_base, spec_defaults) = if let Some(w) = args.opt("wal") {
+        (w.to_string(), None)
+    } else {
+        match (args.opt("data"), args.opt("collection")) {
+            (Some(d), Some(c)) => {
+                let spec_path = format!("{d}/{c}/spec.json");
+                let spec = match std::fs::read_to_string(&spec_path) {
+                    Ok(text) => match valori::json::parse(&text) {
+                        Ok(json) => Some(json),
+                        Err(e) => return Err(format!("bad {spec_path}: {e}")),
+                    },
+                    Err(_) => None, // legacy layout without a spec manifest
+                };
+                (format!("{d}/{c}/wal"), spec)
+            }
+            _ => {
+                return Err(
+                    "need --wal <file> (or --data <dir> --collection <name>)".to_string()
+                )
+            }
+        }
     };
-    let Some(out) = args.opt("out") else { return fail("need --out <file>") };
-    let dim: usize = args.opt_parse("dim", 128).unwrap_or(128);
-    let n_shards = match parse_shards(args) {
-        Ok(n) => n,
+    let spec_dim = spec_defaults.as_ref().and_then(|s| s.get("dim").as_u64());
+    let spec_shards = spec_defaults.as_ref().and_then(|s| s.get("shards").as_u64());
+    let spec_flat =
+        spec_defaults.as_ref().map(|s| s.get("index").as_str() == Some("flat"));
+    let dim = match args.opt("dim") {
+        Some(_) => args.opt_parse("dim", 128)?,
+        None => spec_dim.unwrap_or(128) as usize,
+    };
+    if dim == 0 {
+        return Err("--dim must be > 0".into());
+    }
+    let shards = match args.opt("shards") {
+        Some(_) => parse_shards(args)?,
+        None => {
+            let s = spec_shards.unwrap_or(1);
+            if s == 0 {
+                return Err("spec.json shards must be >= 1".into());
+            }
+            s as u32
+        }
+    };
+    let flat = args.flag("flat") || spec_flat.unwrap_or(false);
+    Ok(OfflineLayout { wal_base, dim, shards, flat })
+}
+
+/// Replay the layout's per-shard WALs into a fresh sharded kernel.
+/// Returns the kernel and the replayed command count.
+fn replay_offline_kernel(layout: &OfflineLayout) -> Result<(ShardedKernel, usize), String> {
+    let mut kernel = ShardedKernel::new(layout.kernel_config(), layout.shards);
+    let mut total = 0usize;
+    for s in 0..layout.shards {
+        let path = valori::node::shard_wal_path(
+            std::path::Path::new(&layout.wal_base),
+            s,
+            layout.shards,
+        );
+        let rec = wal::recover(&path).map_err(|e| format!("wal shard {s} ({path:?}): {e}"))?;
+        if rec.truncated_tail {
+            eprintln!("warning: shard {s}: torn tail truncated at byte {}", rec.valid_bytes);
+        }
+        for entry in &rec.entries {
+            kernel
+                .apply_canon_to_shard(s, &entry.command)
+                .map_err(|e| format!("replay shard {s} seq {}: {e}", entry.seq))?;
+        }
+        total += rec.entries.len();
+    }
+    Ok((kernel, total))
+}
+
+fn cmd_snapshot(args: &Args) -> i32 {
+    match args.positional.first().map(String::as_str) {
+        None => cmd_snapshot_offline(args),
+        Some("stream") => cmd_snapshot_stream(args),
+        Some("restore") => cmd_snapshot_restore(args),
+        Some("migrate") => cmd_snapshot_migrate(args),
+        Some(other) => fail(&format!(
+            "unknown snapshot subcommand '{other}' (want stream, restore or migrate)"
+        )),
+    }
+}
+
+/// Classic offline snapshot: replay WALs, write a VSNP/VSHM file.
+fn cmd_snapshot_offline(args: &Args) -> i32 {
+    let layout = match resolve_offline_layout(args) {
+        Ok(l) => l,
         Err(e) => return fail(&e),
     };
-    if n_shards == 1 {
-        let rec = match wal::recover(wal_path) {
+    let Some(out) = args.opt("out") else { return fail("need --out <file>") };
+    if layout.shards == 1 {
+        // Single-shard layout keeps the seed-compatible plain-VSNP file.
+        let rec = match wal::recover(&layout.wal_base) {
             Ok(r) => r,
             Err(e) => return fail(&format!("wal: {e}")),
         };
         if rec.truncated_tail {
             eprintln!("warning: torn tail truncated at byte {}", rec.valid_bytes);
         }
-        let mut kernel = Kernel::new(KernelConfig::default_q16(dim));
+        let mut kernel = Kernel::new(layout.kernel_config());
         if let Err(e) = wal::replay(&mut kernel, &rec.entries) {
             return fail(&format!("replay: {e}"));
         }
@@ -541,36 +649,160 @@ fn cmd_snapshot(args: &Args) -> i32 {
     // Sharded layout: one WAL per shard at <wal>.shard<N> (the layout the
     // node writes for --shards N); replay each into its own shard so the
     // digests match the node's /v1/hash manifest exactly.
-    let mut kernel = ShardedKernel::new(KernelConfig::default_q16(dim), n_shards);
-    let mut total = 0usize;
-    for s in 0..n_shards {
-        let path = valori::node::shard_wal_path(std::path::Path::new(wal_path), s, n_shards);
-        let rec = match wal::recover(&path) {
-            Ok(r) => r,
-            Err(e) => return fail(&format!("wal shard {s} ({path:?}): {e}")),
-        };
-        if rec.truncated_tail {
-            eprintln!("warning: shard {s}: torn tail truncated at byte {}", rec.valid_bytes);
-        }
-        for entry in &rec.entries {
-            if let Err(e) = kernel.apply_canon_to_shard(s, &entry.command) {
-                return fail(&format!("replay shard {s} seq {}: {e}", entry.seq));
-            }
-        }
-        total += rec.entries.len();
-    }
+    let (kernel, total) = match replay_offline_kernel(&layout) {
+        Ok(k) => k,
+        Err(e) => return fail(&e),
+    };
     let snap = ShardedSnapshot::capture(&kernel);
     if let Err(e) = snap.write_file(out) {
         return fail(&format!("write: {e}"));
     }
     println!(
-        "replayed {total} commands across {n_shards} shards -> root {:016x}",
+        "replayed {total} commands across {} shards -> root {:016x}",
+        layout.shards,
         snap.root_hash()
     );
     for m in snap.manifest() {
         println!("  shard {}: fnv {:016x}", m.shard, m.fnv);
     }
     0
+}
+
+/// `valori snapshot stream`: replay WALs offline and write the chunked
+/// `VSTREAM1` format — the file a `restore` endpoint (or `valori
+/// snapshot restore`) verifies chunk by chunk. Peak memory is one shard
+/// frame + one chunk, so it works where the whole-state VSHM writer
+/// would not.
+fn cmd_snapshot_stream(args: &Args) -> i32 {
+    use valori::snapshot::SnapshotWriter;
+    let layout = match resolve_offline_layout(args) {
+        Ok(l) => l,
+        Err(e) => return fail(&e),
+    };
+    let Some(out) = args.opt("out") else { return fail("need --out <file>") };
+    let chunk: usize = match args.opt_parse("chunk", valori::snapshot::DEFAULT_CHUNK) {
+        Ok(c) if (64..=16 << 20).contains(&c) => c,
+        Ok(_) => return fail("--chunk must be in [64 bytes, 16 MiB]"),
+        Err(e) => return fail(&e),
+    };
+    let (kernel, total) = match replay_offline_kernel(&layout) {
+        Ok(k) => k,
+        Err(e) => return fail(&e),
+    };
+    let mut writer = SnapshotWriter::for_kernel(&kernel, chunk);
+    let expected = writer.total_len();
+    let root = writer.root_hash();
+    let file = match std::fs::File::create(out) {
+        Ok(f) => f,
+        Err(e) => return fail(&format!("create {out}: {e}")),
+    };
+    let mut file = std::io::BufWriter::new(file);
+    let mut written = 0u64;
+    while let Some(block) = writer.next_block() {
+        let block = match block {
+            Ok(b) => b,
+            Err(e) => return fail(&format!("stream: {e}")),
+        };
+        if let Err(e) = std::io::Write::write_all(&mut file, &block) {
+            return fail(&format!("write {out}: {e}"));
+        }
+        written += block.len() as u64;
+    }
+    if let Err(e) = std::io::Write::flush(&mut file) {
+        return fail(&format!("flush {out}: {e}"));
+    }
+    if written != expected {
+        return fail(&format!("stream wrote {written} bytes, expected {expected}"));
+    }
+    println!(
+        "replayed {total} commands across {} shards -> {written} stream bytes \
+         (chunk {chunk}) | root {root:016x}",
+        layout.shards
+    );
+    0
+}
+
+/// `valori snapshot restore --in <stream>`: verify a `VSTREAM1` file
+/// chunk by chunk (exactly as the HTTP ingest does) and print the
+/// restored digests; `--out` additionally writes the classic VSHM file.
+fn cmd_snapshot_restore(args: &Args) -> i32 {
+    use valori::snapshot::SnapshotReader;
+    let Some(input) = args.opt("in") else { return fail("need --in <stream file>") };
+    let file = match std::fs::File::open(input) {
+        Ok(f) => f,
+        Err(e) => return fail(&format!("open {input}: {e}")),
+    };
+    let mut file = std::io::BufReader::new(file);
+    let mut reader = SnapshotReader::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    loop {
+        match std::io::Read::read(&mut file, &mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                if let Err(e) = reader.feed(&buf[..n]) {
+                    return fail(&format!("stream: {e}"));
+                }
+            }
+            Err(e) => return fail(&format!("read {input}: {e}")),
+        }
+    }
+    let chunks = reader.chunks_verified();
+    let snap = match reader.finalize() {
+        Ok(s) => s,
+        Err(e) => return fail(&format!("finalize: {e}")),
+    };
+    let kernel = match snap.restore() {
+        Ok(k) => k,
+        Err(e) => return fail(&format!("restore: {e}")),
+    };
+    println!(
+        "verified {chunks} chunks -> {} vectors across {} shards at seq {} | root {:016x}",
+        kernel.len(),
+        kernel.n_shards(),
+        kernel.seq(),
+        snap.root_hash()
+    );
+    for m in snap.manifest() {
+        println!("  shard {}: fnv {:016x}", m.shard, m.fnv);
+    }
+    if let Some(out) = args.opt("out") {
+        if let Err(e) = snap.write_file(out) {
+            return fail(&format!("write {out}: {e}"));
+        }
+        println!("wrote {out}");
+    }
+    0
+}
+
+/// `valori snapshot migrate --src A --dst B --collection NAME`: online
+/// tenant migration over the /v2 streaming endpoints, with the final
+/// root-hash equality check.
+fn cmd_snapshot_migrate(args: &Args) -> i32 {
+    let (Some(src_s), Some(dst_s)) = (args.opt("src"), args.opt("dst")) else {
+        return fail("need --src <addr> --dst <addr>");
+    };
+    let Some(collection) = args.opt("collection") else {
+        return fail("need --collection <name>");
+    };
+    let src: std::net::SocketAddr = match src_s.parse() {
+        Ok(a) => a,
+        Err(e) => return fail(&format!("bad --src {src_s}: {e}")),
+    };
+    let dst: std::net::SocketAddr = match dst_s.parse() {
+        Ok(a) => a,
+        Err(e) => return fail(&format!("bad --dst {dst_s}: {e}")),
+    };
+    match replication::migrate_collection(&src, &dst, collection) {
+        Ok(report) => {
+            println!(
+                "migrated '{collection}' {src} -> {dst}: {} stream bytes in {} windowed \
+                 PUTs | root {} identical on both nodes",
+                report.bytes, report.puts, report.root
+            );
+            0
+        }
+        Err(e) => fail(&format!("migrate: {e}")),
+    }
 }
 
 fn cmd_restore(args: &Args) -> i32 {

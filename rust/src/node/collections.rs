@@ -33,17 +33,36 @@ use crate::api::{
     ApiRequest, ApiResult,
 };
 use crate::hash::Fnv1a64;
-use crate::http::{Handler, Request, Response, Server, ServerConfig, ServerMetrics};
+use crate::http::{Handler, Request, Response, Server, ServerConfig, ServerMetrics, StreamingBody};
 use crate::json::Json;
 use crate::node::{route, stats_json, BatcherHandle, NodeConfig, NodeState};
-use crate::state::{IndexKind, KernelConfig, ShardedKernel};
+use crate::snapshot::{
+    FrameSource, ShardedSnapshot, Snapshot, SnapshotReader, SnapshotWriter, StreamError,
+    StreamManifestEntry, StreamSpec,
+};
+use crate::state::{IndexKind, Kernel, KernelConfig, ShardedKernel};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 /// The collection every deployment has: it backs the `/v1` adapter and
 /// cannot be deleted.
 pub const DEFAULT_COLLECTION: &str = "default";
+
+/// Base-state file for a collection installed via snapshot restore
+/// (`<data>/<name>/restored.snap`): rediscovery restores it first, then
+/// replays the (post-restore) WALs on top.
+const RESTORED_SNAP: &str = "restored.snap";
+
+/// Default / floor / ceiling for the `?chunk=` parameter of
+/// `GET /v2/collections/{name}/snapshot`. The ceiling keeps one *framed*
+/// chunk (payload + 16 B of framing) within the front end's `MAX_BODY`,
+/// so a forwarder can always ship whole chunks one restore PUT each;
+/// the floor keeps framing overhead under 2%.
+const SNAPSHOT_CHUNK_DEFAULT: usize = crate::snapshot::DEFAULT_CHUNK;
+const SNAPSHOT_CHUNK_MIN: usize = 1024;
+const SNAPSHOT_CHUNK_MAX: usize = crate::http::MAX_BODY - 16;
 
 /// Per-collection kernel shape (the PUT body can override any field).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -106,7 +125,30 @@ pub struct CollectionManager {
     /// Which front end serves this manager ("epoll"/"blocking"); set by
     /// [`serve_collections`] once the server has chosen.
     backend: OnceLock<&'static str>,
+    /// In-progress snapshot-restore sessions keyed by target collection
+    /// name (see [`Self::restore_ingest`]): each holds a resumable
+    /// [`SnapshotReader`] fed by successive `PUT …/restore` bodies, so a
+    /// whole-deployment transfer never has to fit one HTTP body.
+    restores: Mutex<BTreeMap<String, RestoreSession>>,
 }
+
+/// One resumable restore in progress.
+struct RestoreSession {
+    reader: SnapshotReader,
+    /// Last time a window landed — sessions idle past
+    /// [`RESTORE_SESSION_TTL`] are evicted (abandoned transfers must
+    /// not pin reassembled frames forever).
+    last_fed: std::time::Instant,
+}
+
+/// Bound on concurrent restore sessions (each can hold up to a full
+/// deployment's reassembled frames) — beyond it, offset-0 PUTs answer
+/// `restore_busy` (503) instead of letting a client walk the node into
+/// an OOM one abandoned session at a time.
+const MAX_RESTORE_SESSIONS: usize = 16;
+
+/// Idle TTL for restore sessions.
+const RESTORE_SESSION_TTL: std::time::Duration = std::time::Duration::from_secs(600);
 
 fn validate_collection_name(name: &str) -> ApiResult<()> {
     let ok = !name.is_empty()
@@ -139,6 +181,7 @@ impl CollectionManager {
             create_lock: Mutex::new(()),
             http_metrics: Arc::new(ServerMetrics::default()),
             backend: OnceLock::new(),
+            restores: Mutex::new(BTreeMap::new()),
         };
         let spec = manager.config.spec.clone();
         manager.create(DEFAULT_COLLECTION, spec).map_err(|e| {
@@ -244,7 +287,36 @@ impl CollectionManager {
         }
         let (wal_path, durable_dir) = self.storage_paths(name)?;
         let node_config = NodeConfig { workers: self.config.workers, wal_path };
-        let kernel = ShardedKernel::new(spec.kernel_config(), spec.shards);
+        // A collection installed by snapshot restore persists its base
+        // state as `<dir>/restored.snap` (its WALs only hold mutations
+        // applied *after* the restore). Rediscovery must start from that
+        // base, or WAL replay would rebuild a fraction of the state.
+        let kernel = match &durable_dir {
+            Some(d) if d.join(RESTORED_SNAP).exists() => {
+                let path = d.join(RESTORED_SNAP);
+                let snap = ShardedSnapshot::read_file(&path).map_err(|e| {
+                    ApiError::new(ApiCode::Internal, format!("read {path:?}: {e}"))
+                })?;
+                let kernel = snap.restore().map_err(|e| {
+                    ApiError::new(ApiCode::Internal, format!("restore {path:?}: {e}"))
+                })?;
+                if kernel.n_shards() != spec.shards || kernel.config().dim != spec.dim {
+                    return Err(ApiError::new(
+                        ApiCode::Internal,
+                        format!(
+                            "collection '{name}': {RESTORED_SNAP} shape ({} shards, dim {}) \
+                             disagrees with spec ({} shards, dim {})",
+                            kernel.n_shards(),
+                            kernel.config().dim,
+                            spec.shards,
+                            spec.dim
+                        ),
+                    ));
+                }
+                kernel
+            }
+            _ => ShardedKernel::new(spec.kernel_config(), spec.shards),
+        };
         let mut state = NodeState::new_sharded(kernel, &node_config, self.embed.clone())
             .map_err(|e| {
                 ApiError::new(ApiCode::Internal, format!("collection '{name}': {e}"))
@@ -264,6 +336,10 @@ impl CollectionManager {
             .write()
             .expect("collections poisoned")
             .insert(name.to_string(), Arc::clone(&state));
+        // A dangling restore session for this name is now moot.
+        if self.restores.lock().expect("restores poisoned").remove(name).is_some() {
+            self.http_metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
         Ok(state)
     }
 
@@ -394,6 +470,249 @@ impl CollectionManager {
     pub fn http_metrics(&self) -> &Arc<ServerMetrics> {
         &self.http_metrics
     }
+
+    /// `GET /v2/collections/{name}/snapshot`: a `VSTREAM1` response whose
+    /// body is pulled chunk by chunk from the live collection.
+    ///
+    /// Memory stays bounded at one shard frame + one chunk: the manifest
+    /// pass digests shards one at a time under a single read lock, and
+    /// the streaming source re-encodes each shard lazily as the socket
+    /// drains. Consistency is **seq-pinned**: every shard's sequence
+    /// number is recorded at header time and re-checked on every lazy
+    /// re-encode; if any mutation lands mid-stream the source aborts,
+    /// the connection tears short of its `content-length`, and the
+    /// client fails loudly — a stream never silently mixes two states.
+    fn snapshot_stream_response(&self, name: &str, chunk: usize) -> ApiResult<Response> {
+        let state = self.get(name)?;
+        let (spec, pinned, manifest) = state.with_sharded(|sk| {
+            let spec = StreamSpec {
+                dim: sk.config().dim as u32,
+                index: sk.config().index,
+                n_shards: sk.n_shards(),
+            };
+            let pinned: Vec<u64> = sk.shards().iter().map(Kernel::seq).collect();
+            let manifest: Vec<StreamManifestEntry> = sk
+                .shards()
+                .iter()
+                .map(|k| StreamManifestEntry::of(&Snapshot::capture(k)))
+                .collect();
+            (spec, pinned, manifest)
+        });
+        let source = PinnedFrames { state, pinned };
+        let mut writer = SnapshotWriter::new(spec, manifest, source, chunk);
+        let total = writer.total_len();
+        let metrics = Arc::clone(&self.http_metrics);
+        metrics.streams_in_flight.fetch_add(1, Ordering::Relaxed);
+        let guard = StreamFlightGuard { metrics: Arc::clone(&metrics) };
+        let body = StreamingBody::new(total, move || {
+            let _held_until_stream_drops = &guard;
+            match writer.next_block() {
+                Some(Ok(block)) => {
+                    metrics.stream_bytes_streamed.fetch_add(block.len() as u64, Ordering::Relaxed);
+                    Some(block)
+                }
+                // An abort yields fewer than `total` bytes; the front end
+                // tears the connection and the client sees a short body.
+                // Never substitute bytes.
+                Some(Err(_)) | None => None,
+            }
+        });
+        Ok(Response::streaming(200, "application/octet-stream", body))
+    }
+
+    /// `PUT /v2/collections/{name}/restore?offset=N`: feed one window of
+    /// a `VSTREAM1` stream into the (resumable) restore session for
+    /// `name`; when the stream completes, verify it end to end and
+    /// install it as a brand-new collection. Windowing exists because
+    /// request bodies are capped at [`crate::http::MAX_BODY`] — the
+    /// stream format is self-framing and [`SnapshotReader`] is resumable,
+    /// so a transfer of any size is just many body-sized PUTs whose
+    /// `offset` must match the session's byte count (exactly-once,
+    /// in-order ingest; a retry of the same window is rejected loudly
+    /// instead of silently double-fed).
+    pub fn restore_ingest(&self, name: &str, offset: u64, bytes: &[u8]) -> ApiResult<Json> {
+        validate_collection_name(name)?;
+        let now = std::time::Instant::now();
+        let mut sessions = self.restores.lock().expect("restores poisoned");
+        // Reap idle sessions first: abandoned transfers must not pin
+        // their reassembled frames (or the in-flight gauge) forever.
+        let before = sessions.len();
+        sessions.retain(|_, s| now.duration_since(s.last_fed) < RESTORE_SESSION_TTL);
+        let reaped = (before - sessions.len()) as u64;
+        if reaped > 0 {
+            self.http_metrics.streams_in_flight.fetch_sub(reaped, Ordering::Relaxed);
+        }
+        if self.collections.read().expect("collections poisoned").contains_key(name) {
+            // An orphaned session for a name that got created by other
+            // means is moot — drop it with the rejection.
+            if sessions.remove(name).is_some() {
+                self.http_metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
+            }
+            return Err(ApiError::new(
+                ApiCode::CollectionExists,
+                format!("collection '{name}' already exists; restore targets a fresh name"),
+            ));
+        }
+        if offset == 0 {
+            // Offset 0 (re)starts the transfer; a stale half-session for
+            // the same name is discarded.
+            if !sessions.contains_key(name) && sessions.len() >= MAX_RESTORE_SESSIONS {
+                return Err(ApiError::new(
+                    ApiCode::RestoreBusy,
+                    format!(
+                        "{MAX_RESTORE_SESSIONS} restore sessions already in progress; \
+                         retry later"
+                    ),
+                ));
+            }
+            if sessions
+                .insert(
+                    name.to_string(),
+                    RestoreSession { reader: SnapshotReader::new(), last_fed: now },
+                )
+                .is_none()
+            {
+                self.http_metrics.streams_in_flight.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let Some(session) = sessions.get_mut(name) else {
+            return Err(ApiError::new(
+                ApiCode::StreamOffsetMismatch,
+                format!("no restore session for '{name}' (start at offset 0)"),
+            ));
+        };
+        if session.reader.bytes_fed() != offset {
+            return Err(ApiError::new(
+                ApiCode::StreamOffsetMismatch,
+                format!(
+                    "restore session for '{name}' expects offset {}, got {offset}",
+                    session.reader.bytes_fed()
+                ),
+            ));
+        }
+        let verified_before = session.reader.chunks_verified();
+        if let Err(e) = session.reader.feed(bytes) {
+            sessions.remove(name);
+            self.http_metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
+            return Err(ApiError::from(e));
+        }
+        session.last_fed = now;
+        let delta = session.reader.chunks_verified() - verified_before;
+        self.http_metrics.stream_chunks_verified.fetch_add(delta, Ordering::Relaxed);
+        if !session.reader.is_complete() {
+            return Ok(Json::object(vec![
+                ("complete", Json::Bool(false)),
+                ("name", Json::str(name)),
+                ("received", Json::Int(session.reader.bytes_fed() as i64)),
+            ]));
+        }
+        let session = sessions.remove(name).expect("session checked above");
+        self.http_metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
+        // Release the session map before taking the create lock (lock
+        // order: restores → create_lock, never nested the other way, and
+        // never across the install's WAL/file work).
+        drop(sessions);
+        let snapshot = session.reader.finalize().map_err(ApiError::from)?;
+        self.install_restored(name, snapshot)
+    }
+
+    /// Install a fully verified restored snapshot as a new collection —
+    /// the receiving half of online tenant migration. When durable, the
+    /// base state persists as `restored.snap` (rediscovery restores it
+    /// first, then replays the post-restore WALs on top).
+    fn install_restored(&self, name: &str, snapshot: ShardedSnapshot) -> ApiResult<Json> {
+        let kernel = snapshot.restore().map_err(|e| {
+            ApiError::new(
+                ApiCode::StreamDigestMismatch,
+                format!("restored snapshot failed verification: {e}"),
+            )
+        })?;
+        let root = snapshot.root_hash();
+        let spec = CollectionSpec {
+            dim: kernel.config().dim,
+            shards: kernel.n_shards(),
+            flat: matches!(kernel.config().index, IndexKind::Flat),
+        };
+        let _creating = self.create_lock.lock().expect("create lock poisoned");
+        {
+            let collections = self.collections.read().expect("collections poisoned");
+            if collections.contains_key(name) {
+                return Err(ApiError::new(
+                    ApiCode::CollectionExists,
+                    format!("collection '{name}' was created while the restore was in flight"),
+                ));
+            }
+        }
+        let (wal_path, durable_dir) = self.storage_paths(name)?;
+        if let Some(d) = &durable_dir {
+            // Base state before spec.json: rediscovery only picks up
+            // directories with a spec, so a crash between the two writes
+            // leaves an inert directory, never a half-restored tenant.
+            snapshot.write_file(d.join(RESTORED_SNAP)).map_err(|e| {
+                ApiError::new(ApiCode::Internal, format!("write {RESTORED_SNAP}: {e}"))
+            })?;
+            std::fs::write(d.join("spec.json"), spec_json(&spec)).map_err(|e| {
+                ApiError::new(ApiCode::Internal, format!("write spec.json: {e}"))
+            })?;
+        }
+        let node_config = NodeConfig { workers: self.config.workers, wal_path };
+        let mut state =
+            NodeState::new_sharded(kernel, &node_config, self.embed.clone()).map_err(|e| {
+                ApiError::new(ApiCode::Internal, format!("collection '{name}': {e}"))
+            })?;
+        state.metrics.http = Arc::clone(&self.http_metrics);
+        let state = Arc::new(state);
+        let (vectors, seq) = state.with_sharded(|sk| (sk.len(), sk.seq()));
+        self.collections
+            .write()
+            .expect("collections poisoned")
+            .insert(name.to_string(), state);
+        Ok(Json::object(vec![
+            ("complete", Json::Bool(true)),
+            ("dim", Json::Int(spec.dim as i64)),
+            ("name", Json::str(name)),
+            ("root", Json::str(format!("{root:016x}"))),
+            ("seq", Json::Int(seq as i64)),
+            ("shards", Json::Int(spec.shards as i64)),
+            ("vectors", Json::Int(vectors as i64)),
+        ]))
+    }
+}
+
+/// Lazily re-encodes shard frames for a streaming snapshot, refusing to
+/// produce a frame whose shard moved past its pinned sequence number
+/// (see [`CollectionManager::snapshot_stream_response`]).
+struct PinnedFrames {
+    state: Arc<NodeState>,
+    pinned: Vec<u64>,
+}
+
+impl FrameSource for PinnedFrames {
+    fn frame(&mut self, shard: u32) -> Result<Vec<u8>, StreamError> {
+        self.state.with_sharded(|sk| {
+            let k = sk.shard(shard);
+            if k.seq() != self.pinned[shard as usize] {
+                return Err(StreamError::Aborted(format!(
+                    "shard {shard} mutated during the snapshot stream (seq {} -> {})",
+                    self.pinned[shard as usize],
+                    k.seq()
+                )));
+            }
+            Ok(Snapshot::capture(k).to_bytes())
+        })
+    }
+}
+
+/// Decrements the in-flight stream gauge when the streaming source is
+/// dropped (stream complete, aborted, or the connection died).
+struct StreamFlightGuard {
+    metrics: Arc<ServerMetrics>,
+}
+
+impl Drop for StreamFlightGuard {
+    fn drop(&mut self) {
+        self.metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// The combined-root fold: `fnv(count ‖ (len(name) ‖ name ‖ root)*)`
@@ -490,12 +809,66 @@ pub fn route_collections(manager: &CollectionManager, req: Request) -> Response 
         };
     }
     if req.path == "/v2" || req.path.starts_with("/v2/") {
+        // The snapshot stream is the one /v2 route that does not speak
+        // the JSON envelope (its success body is the raw VSTREAM1 wire
+        // format); errors still use the taxonomy envelope.
+        if let Some(result) = v2_snapshot_route(manager, &req) {
+            return match result {
+                Ok(resp) => resp,
+                Err(e) => e.response(),
+            };
+        }
         return match v2_dispatch(manager, &req) {
             Ok(data) => ok_response(data),
             Err(e) => e.response(),
         };
     }
     Response::not_found()
+}
+
+/// `GET /v2/collections/{name}/snapshot[?chunk=N]` — `None` when the
+/// request is not for a snapshot path at all.
+fn v2_snapshot_route(manager: &CollectionManager, req: &Request) -> Option<ApiResult<Response>> {
+    let name = req
+        .path
+        .strip_prefix("/v2/collections/")
+        .and_then(|tail| tail.strip_suffix("/snapshot"))?;
+    if name.is_empty() || name.contains('/') {
+        return None;
+    }
+    Some(snapshot_route_inner(manager, req, name))
+}
+
+fn snapshot_route_inner(
+    manager: &CollectionManager,
+    req: &Request,
+    name: &str,
+) -> ApiResult<Response> {
+    if req.method != "GET" {
+        return Err(method_not_allowed(req, "GET"));
+    }
+    validate_collection_name(name)?;
+    let chunk = match query_param::<usize>(req, "chunk") {
+        None => SNAPSHOT_CHUNK_DEFAULT,
+        Some(Ok(c)) if (SNAPSHOT_CHUNK_MIN..=SNAPSHOT_CHUNK_MAX).contains(&c) => c,
+        Some(_) => {
+            return Err(ApiError::bad_request(format!(
+                "chunk must be an integer in [{SNAPSHOT_CHUNK_MIN}, {SNAPSHOT_CHUNK_MAX}]"
+            )))
+        }
+    };
+    manager.snapshot_stream_response(name, chunk)
+}
+
+/// One `?key=value` query parameter, parsed: `None` = absent,
+/// `Some(Err(()))` = present but unparsable.
+fn query_param<T: std::str::FromStr>(req: &Request, param: &str) -> Option<Result<T, ()>> {
+    let q = req.query.as_deref()?;
+    q.split('&').find_map(|kv| {
+        kv.strip_prefix(param)
+            .and_then(|v| v.strip_prefix('='))
+            .map(|v| v.parse::<T>().map_err(|_| ()))
+    })
 }
 
 fn route_not_found(req: &Request) -> ApiError {
@@ -611,6 +984,23 @@ fn collection_op(
         ["insert", "insert_batch", "query", "delete", "link", "unlink", "meta", "apply"];
     const GET_OPS: [&str; 3] = ["log", "hash", "stats"];
     validate_collection_name(name)?;
+    // Restore targets a collection that does not exist yet, so it
+    // resolves before the existence check every other op performs.
+    if op == "restore" {
+        return match req.method.as_str() {
+            "PUT" => {
+                let offset = match query_param::<u64>(req, "offset") {
+                    None => 0,
+                    Some(Ok(o)) => o,
+                    Some(Err(())) => {
+                        return Err(ApiError::bad_request("offset must be a non-negative integer"))
+                    }
+                };
+                manager.restore_ingest(name, offset, &req.body)
+            }
+            _ => Err(method_not_allowed(req, "PUT")),
+        };
+    }
     let state = manager.get(name)?;
     match (req.method.as_str(), op) {
         ("POST", _) if POST_OPS.contains(&op) => {

@@ -100,6 +100,9 @@ impl Metrics {
             ("http_connections_rejected", g(&self.http.connections_rejected)),
             ("http_requests_served", g(&self.http.requests_served)),
             ("http_pipelined_rejected", g(&self.http.pipelined_rejected)),
+            ("stream_bytes_streamed", g(&self.http.stream_bytes_streamed)),
+            ("stream_chunks_verified", g(&self.http.stream_chunks_verified)),
+            ("streams_in_flight", g(&self.http.streams_in_flight)),
         ])
     }
 }

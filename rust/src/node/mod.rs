@@ -33,6 +33,8 @@
 //! | `GET /v2/collections/{name}/log?shard=S&from=N` | per-shard canonical feed |
 //! | `GET /v2/collections/{name}/hash` | per-shard FNV/SHA-256 manifest + root |
 //! | `GET /v2/collections/{name}/stats` | metrics + kernel info |
+//! | `GET /v2/collections/{name}/snapshot?chunk=N` | chunked `VSTREAM1` snapshot stream (raw body, per-chunk CRCs, seq-pinned consistency) |
+//! | `PUT /v2/collections/{name}/restore?offset=N` | windowed `VSTREAM1` ingest into a fresh collection (resumable; offset = bytes already fed) |
 //! | `GET /v2/hash` | combined root over all collections (lexicographic fold) |
 //! | `GET /v2/health` | `{"ok":true,"backend":"epoll"\|"blocking","collections":N}` |
 //!

@@ -420,6 +420,128 @@ pub fn sync_all_collections(
     Ok(out)
 }
 
+/// Outcome of one online tenant migration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MigrationReport {
+    /// Stream bytes moved (header + chunk framing + payload).
+    pub bytes: u64,
+    /// Windowed restore PUTs issued against the destination.
+    pub puts: usize,
+    /// The per-collection root hash, hex — verified identical on both
+    /// nodes after the restore.
+    pub root: String,
+}
+
+/// Restore windows stay under the front end's 1 MiB body cap with room
+/// for chunk framing.
+const MIGRATE_WINDOW: usize = 512 * 1024;
+
+/// Online tenant migration: stream `collection`'s snapshot off `src`
+/// (`GET /v2/collections/{name}/snapshot`) and pipe it into `dst`
+/// (`PUT /v2/collections/{name}/restore?offset=N`) in windowed PUTs,
+/// then require the two nodes' per-collection root hashes to be
+/// bit-identical (paper §8.1's `H_A ≡ H_B`, per tenant, over the wire).
+///
+/// Memory on this driver is O(window): response bytes flow from the
+/// source socket into at most one 512 KiB window before being PUT
+/// onward — the collection itself is never materialized here, and the
+/// source node's peak is one shard frame + one chunk (see the snapshot
+/// route). The destination must not already hold `collection`.
+pub fn migrate_collection(
+    src: &std::net::SocketAddr,
+    dst: &std::net::SocketAddr,
+    collection: &str,
+) -> std::io::Result<MigrationReport> {
+    let mut src_conn = client::Connection::connect(src)?;
+    let mut dst_conn = client::Connection::connect(dst)?;
+
+    let mut window: Vec<u8> = Vec::with_capacity(MIGRATE_WINDOW);
+    let mut sent: u64 = 0;
+    let mut puts: usize = 0;
+    let mut final_resp: Option<crate::json::Json> = None;
+
+    let flush = |window: &mut Vec<u8>,
+                 sent: &mut u64,
+                 puts: &mut usize,
+                 final_resp: &mut Option<crate::json::Json>,
+                 dst_conn: &mut client::Connection|
+     -> std::io::Result<()> {
+        if window.is_empty() {
+            return Ok(());
+        }
+        let path = format!("/v2/collections/{collection}/restore?offset={sent}");
+        let (status, body) = dst_conn.request("PUT", &path, window)?;
+        let text = String::from_utf8_lossy(&body);
+        let json = crate::json::parse(&text).unwrap_or(crate::json::Json::Null);
+        if status != 200 {
+            return Err(std::io::Error::other(format!(
+                "restore PUT at offset {sent} failed: {status}: {text}"
+            )));
+        }
+        *sent += window.len() as u64;
+        *puts += 1;
+        *final_resp = Some(json.get("data").clone());
+        window.clear();
+        Ok(())
+    };
+
+    let snapshot_path = format!("/v2/collections/{collection}/snapshot");
+    let (status, total, err_body) = {
+        let mut sink = |block: &[u8]| -> std::io::Result<()> {
+            let mut rest = block;
+            while !rest.is_empty() {
+                let room = MIGRATE_WINDOW - window.len();
+                let take = room.min(rest.len());
+                window.extend_from_slice(&rest[..take]);
+                rest = &rest[take..];
+                if window.len() == MIGRATE_WINDOW {
+                    flush(&mut window, &mut sent, &mut puts, &mut final_resp, &mut dst_conn)?;
+                }
+            }
+            Ok(())
+        };
+        src_conn.request_streaming("GET", &snapshot_path, &[], &mut sink)?
+    };
+    if status != 200 {
+        return Err(std::io::Error::other(format!(
+            "snapshot fetch failed: {status}: {}",
+            String::from_utf8_lossy(&err_body)
+        )));
+    }
+    flush(&mut window, &mut sent, &mut puts, &mut final_resp, &mut dst_conn)?;
+    if sent != total {
+        return Err(std::io::Error::other(format!(
+            "stream torn: source advertised {total} bytes, forwarded {sent}"
+        )));
+    }
+    let final_resp = final_resp
+        .ok_or_else(|| std::io::Error::other("empty snapshot stream (no restore PUT issued)"))?;
+    if final_resp.get("complete").as_bool() != Some(true) {
+        return Err(std::io::Error::other(format!(
+            "destination did not complete the restore: {final_resp}"
+        )));
+    }
+
+    // The §8.1 check, per tenant: both nodes must report the identical
+    // per-collection root hash, bit for bit.
+    let hash_path = format!("/v2/collections/{collection}/hash");
+    let (st_a, ha) = src_conn.get_json(&hash_path)?;
+    let (st_b, hb) = dst_conn.get_json(&hash_path)?;
+    if st_a != 200 || st_b != 200 {
+        return Err(std::io::Error::other(format!(
+            "post-migration hash fetch failed: src {st_a}, dst {st_b}"
+        )));
+    }
+    let root_a = ha.get("data").get("root").as_str().unwrap_or("").to_string();
+    let root_b = hb.get("data").get("root").as_str().unwrap_or("").to_string();
+    if root_a.is_empty() || root_a != root_b {
+        return Err(std::io::Error::other(format!(
+            "MIGRATION HASH MISMATCH: src root {root_a}, dst root {root_b}"
+        )));
+    }
+    Ok(MigrationReport { bytes: sent, puts, root: root_a })
+}
+
 /// Round-trip helper: serialize a command log to a hex-lines string and
 /// back (audit-file format used by the replay example).
 pub fn log_to_text(log: &[CanonCommand]) -> String {

@@ -23,8 +23,20 @@ use crate::state::{Kernel, ShardedKernel};
 use std::fs;
 use std::path::Path;
 
+pub mod stream;
+
+pub use stream::{
+    FrameSource, SnapshotReader, SnapshotWriter, StreamError, StreamManifestEntry, StreamSpec,
+    DEFAULT_CHUNK,
+};
+
 const SNAP_MAGIC: u32 = 0x56534E50; // "VSNP"
 const SNAP_VERSION: u32 = 1;
+
+/// Fixed bytes around the state payload in a `VSNP` frame:
+/// magic (4) + version (4) + state length prefix (4) + fnv (8) +
+/// sha256 (32) + crc (4).
+const FRAME_OVERHEAD: usize = 56;
 
 /// A serialized snapshot plus its digests.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -117,11 +129,31 @@ impl Snapshot {
         e.into_vec()
     }
 
+    /// Exact length of [`Self::to_bytes`] without materializing it
+    /// (streaming manifests size their chunks from this).
+    pub fn encoded_len(&self) -> usize {
+        self.state.len() + FRAME_OVERHEAD
+    }
+
     /// Parse + verify the on-disk format.
     pub fn from_bytes(bytes: &[u8]) -> Result<Self, SnapshotError> {
-        if bytes.len() < 4 {
+        // Length sanity BEFORE the CRC: a truncated file must report
+        // `UnexpectedEof` (how much is missing), not a generic
+        // `CrcMismatch` — the two call for different operator responses
+        // (retry the transfer vs investigate corruption). A corrupted
+        // length *field* also lands here, which is the right bias: the
+        // declared length is the first thing a resumed transfer needs.
+        if bytes.len() < FRAME_OVERHEAD {
             return Err(SnapshotError::Decode(DecodeError::UnexpectedEof {
-                need: 4,
+                need: FRAME_OVERHEAD,
+                have: bytes.len(),
+            }));
+        }
+        let state_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let expected = FRAME_OVERHEAD.saturating_add(state_len);
+        if bytes.len() < expected {
+            return Err(SnapshotError::Decode(DecodeError::UnexpectedEof {
+                need: expected,
                 have: bytes.len(),
             }));
         }
@@ -285,12 +317,7 @@ impl ShardedSnapshot {
 
     /// Parse + verify the on-disk format (CRC, per-shard digests, root).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self, SnapshotError> {
-        if bytes.len() < 4 {
-            return Err(SnapshotError::Decode(DecodeError::UnexpectedEof {
-                need: 4,
-                have: bytes.len(),
-            }));
-        }
+        Self::truncation_check(bytes)?;
         let body = &bytes[..bytes.len() - 4];
         let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
         if crc32(body) != stored_crc {
@@ -339,6 +366,35 @@ impl ShardedSnapshot {
     pub fn read_file(path: impl AsRef<Path>) -> Result<Self, SnapshotError> {
         let bytes = fs::read(path)?;
         Self::from_bytes(&bytes)
+    }
+
+    /// Walk the declared frame lengths so a cut-off file reports
+    /// `UnexpectedEof` (with the missing byte count) instead of a
+    /// generic CRC failure — same contract as [`Snapshot::from_bytes`].
+    /// Each iteration advances ≥ 4 bytes, so the walk is O(len) even on
+    /// a hostile shard count.
+    fn truncation_check(bytes: &[u8]) -> Result<(), SnapshotError> {
+        const TAIL: usize = 12; // root u64 + crc u32
+        let eof = |need: usize| {
+            Err(SnapshotError::Decode(DecodeError::UnexpectedEof { need, have: bytes.len() }))
+        };
+        if bytes.len() < 12 + TAIL {
+            return eof(12 + TAIL);
+        }
+        let n = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let mut need: usize = 12;
+        for _ in 0..n {
+            need = need.saturating_add(4);
+            if bytes.len() < need.saturating_add(TAIL) {
+                return eof(need.saturating_add(TAIL));
+            }
+            let flen = u32::from_le_bytes(bytes[need - 4..need].try_into().unwrap()) as usize;
+            need = need.saturating_add(flen);
+            if bytes.len() < need.saturating_add(TAIL) {
+                return eof(need.saturating_add(TAIL));
+            }
+        }
+        Ok(())
     }
 
     /// Whether a byte stream starts with the sharded-snapshot magic
@@ -445,6 +501,54 @@ mod tests {
         for cut in [0usize, 3, 10, bytes.len() - 5] {
             assert!(Snapshot::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
         }
+    }
+
+    #[test]
+    fn truncation_reports_eof_not_crc() {
+        // A cut-off file is a transfer problem (retry), not corruption
+        // (investigate): the length-prefix sanity check must classify it
+        // as UnexpectedEof *before* the CRC ever runs.
+        let snap = Snapshot::capture(&populated_kernel());
+        let bytes = snap.to_bytes();
+        for cut in [1usize, 12, 55, bytes.len() / 2, bytes.len() - 1] {
+            match Snapshot::from_bytes(&bytes[..cut]) {
+                Err(SnapshotError::Decode(DecodeError::UnexpectedEof { need, have })) => {
+                    assert_eq!(have, cut);
+                    assert!(need > cut, "need {need} must exceed the {cut} bytes present");
+                }
+                other => panic!("cut={cut}: expected UnexpectedEof, got {other:?}"),
+            }
+        }
+        // …whereas an in-place bit flip (same length) is still CRC
+        // territory.
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x01;
+        assert!(matches!(
+            Snapshot::from_bytes(&flipped),
+            Err(SnapshotError::CrcMismatch)
+        ));
+    }
+
+    #[test]
+    fn sharded_truncation_reports_eof_not_crc() {
+        let snap = ShardedSnapshot::capture(&populated_sharded(3));
+        let bytes = snap.to_bytes();
+        for cut in [0usize, 11, 30, bytes.len() / 2, bytes.len() - 1] {
+            match ShardedSnapshot::from_bytes(&bytes[..cut]) {
+                Err(SnapshotError::Decode(DecodeError::UnexpectedEof { need, have })) => {
+                    assert_eq!(have, cut);
+                    assert!(need > cut, "cut={cut}");
+                }
+                other => panic!("cut={cut}: expected UnexpectedEof, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_len_matches_to_bytes() {
+        let snap = Snapshot::capture(&populated_kernel());
+        assert_eq!(snap.encoded_len(), snap.to_bytes().len());
     }
 
     #[test]

@@ -102,6 +102,33 @@ def snapshot_bytes(state: bytes) -> bytes:
     return out
 
 
+def crc32(data: bytes) -> bytes:
+    return u32(zlib.crc32(data) & 0xFFFFFFFF)
+
+
+STREAM_CHUNK = 64  # deliberately tiny so the fixture exercises multi-chunk frames
+
+
+def stream_bytes(state: bytes, chunk: int = STREAM_CHUNK) -> bytes:
+    """Mirror of the Rust VSTREAM1 writer (`rust/src/snapshot/stream.rs`)
+    over the same single-shard golden state: header (spec + manifest +
+    crc), then per-chunk `shard ‖ seq ‖ len ‖ payload ‖ crc32` frames."""
+    frame = snapshot_bytes(state)
+    body = u32(2)  # dim
+    body += u8(1)  # IndexKind::Flat tag
+    body += u32(1)  # n_shards
+    body += u64(len(frame))  # manifest: frame_len
+    body += u64(fnv1a64(state))  # manifest: fnv (over state, like VSNP)
+    body += hashlib.sha256(state).digest()  # manifest: sha256
+    head = b"VSTREAM1" + u32(len(body)) + body
+    out = head + crc32(head)
+    for seq, off in enumerate(range(0, len(frame), chunk)):
+        payload = frame[off : off + chunk]
+        c = u32(0) + u32(seq) + u32(len(payload)) + payload
+        out += c + crc32(c)
+    return out
+
+
 def main():
     state = state_bytes()
     snap = snapshot_bytes(state)
@@ -110,7 +137,9 @@ def main():
         fnv1a64(state), hashlib.sha256(state).hexdigest()
     )
     (HERE / "golden_snapshot_v2.digests").write_text(digests)
-    print(f"state: {len(state)} bytes, snapshot: {len(snap)} bytes")
+    stream = stream_bytes(state)
+    (HERE / "golden_stream_v1.bin").write_bytes(stream)
+    print(f"state: {len(state)} bytes, snapshot: {len(snap)} bytes, stream: {len(stream)} bytes")
     print(digests, end="")
 
 
