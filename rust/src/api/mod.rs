@@ -38,12 +38,24 @@
 //! | 1402 | `stream_digest_mismatch` | 400 |
 //! | 1403 | `restore_busy` | 503 |
 //! | 1500 | `internal` | 500 |
+//! | 1600 | `rate_limited` | 429 |
+//! | 1601 | `quota_exceeded` | 429 |
 //!
 //! Codes are a compatibility contract: they may be *added*, never
 //! renumbered or reused (`tests/fixtures/api_error_codes.json` is the
 //! golden copy `tests/collections.rs` asserts against). Numbering is
 //! grouped: 10xx state-machine rejections, 11xx collection lifecycle,
-//! 12xx embedder, 13xx routing, 14xx snapshot streaming, 15xx internal.
+//! 12xx embedder, 13xx routing, 14xx snapshot streaming, 15xx internal,
+//! 16xx admission control (per-collection governance).
+//!
+//! The 16xx codes are issued by the front end *before* a request
+//! reaches the dispatch pool: admission decisions come from
+//! front-end-local state only (monotonic clocks, in-flight counters),
+//! are never logged and never hashed, so a throttled-and-retried
+//! workload replays to a root hash bit-identical to an unthrottled run.
+//! A `rate_limited` error object additionally carries a
+//! `retry_after_ms` detail field (the only taxonomy error with an extra
+//! key).
 //!
 //! ## Typed commands
 //!
@@ -111,12 +123,22 @@ pub enum ApiCode {
     RestoreBusy = 1403,
     /// I/O or other non-deterministic failure (WAL append, runtime).
     Internal = 1500,
+    /// Admission control: the collection's token bucket is empty. The
+    /// error object carries a `retry_after_ms` hint; the rejection is
+    /// issued by the front end before the request reaches the dispatch
+    /// pool and is never logged or hashed, so retried workloads replay
+    /// bit-identically.
+    RateLimited = 1600,
+    /// Admission control: the collection is already at its in-flight
+    /// request cap (quota/bulkhead) — retry once an in-flight request
+    /// completes.
+    QuotaExceeded = 1601,
 }
 
 impl ApiCode {
     /// Every variant, in code order (the golden-fixture test iterates
     /// this, so adding a variant without extending the fixture fails CI).
-    pub const ALL: [ApiCode; 21] = [
+    pub const ALL: [ApiCode; 23] = [
         ApiCode::BadRequest,
         ApiCode::DuplicateId,
         ApiCode::UnknownId,
@@ -138,6 +160,8 @@ impl ApiCode {
         ApiCode::StreamDigestMismatch,
         ApiCode::RestoreBusy,
         ApiCode::Internal,
+        ApiCode::RateLimited,
+        ApiCode::QuotaExceeded,
     ];
 
     /// The stable numeric code (the discriminant).
@@ -169,6 +193,8 @@ impl ApiCode {
             ApiCode::StreamDigestMismatch => "stream_digest_mismatch",
             ApiCode::RestoreBusy => "restore_busy",
             ApiCode::Internal => "internal",
+            ApiCode::RateLimited => "rate_limited",
+            ApiCode::QuotaExceeded => "quota_exceeded",
         }
     }
 
@@ -192,33 +218,47 @@ impl ApiCode {
             }
             ApiCode::EmbedFailed | ApiCode::Internal => 500,
             ApiCode::NoEmbedder | ApiCode::RestoreBusy => 503,
+            ApiCode::RateLimited | ApiCode::QuotaExceeded => 429,
         }
     }
 }
 
-/// A typed API error: taxonomy code + human message.
+/// A typed API error: taxonomy code + human message. `retry_after_ms`
+/// is the one optional detail field in the taxonomy, carried only by
+/// `rate_limited` rejections (the front end's refill estimate).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ApiError {
     pub code: ApiCode,
     pub message: String,
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ApiError {
     pub fn new(code: ApiCode, message: impl Into<String>) -> Self {
-        Self { code, message: message.into() }
+        Self { code, message: message.into(), retry_after_ms: None }
     }
 
     pub fn bad_request(message: impl Into<String>) -> Self {
         Self::new(ApiCode::BadRequest, message)
     }
 
+    /// Attach the client-facing backoff hint (1600 `rate_limited` only).
+    pub fn with_retry_after_ms(mut self, ms: u64) -> Self {
+        self.retry_after_ms = Some(ms);
+        self
+    }
+
     /// The wire form of the error object (inside the envelope).
     pub fn to_json(&self) -> Json {
-        Json::object(vec![
+        let mut fields = vec![
             ("code", Json::Int(self.code.code() as i64)),
             ("message", Json::str(self.message.clone())),
             ("name", Json::str(self.code.name())),
-        ])
+        ];
+        if let Some(ms) = self.retry_after_ms {
+            fields.push(("retry_after_ms", Json::Int(ms as i64)));
+        }
+        Json::object(fields)
     }
 
     /// The full enveloped HTTP response — the only error serializer any
@@ -619,7 +659,7 @@ mod tests {
         for c in ApiCode::ALL {
             assert!(seen.insert(c.code()), "duplicate code {}", c.code());
             assert!(!c.name().is_empty());
-            assert!(matches!(c.http_status(), 400 | 404 | 405 | 409 | 500 | 503));
+            assert!(matches!(c.http_status(), 400 | 404 | 405 | 409 | 429 | 500 | 503));
         }
         assert_eq!(ApiCode::ALL.len(), seen.len());
         // Spot-pin a few numbers: renumbering is a wire break.
@@ -627,6 +667,24 @@ mod tests {
         assert_eq!(ApiCode::DuplicateId.code(), 1001);
         assert_eq!(ApiCode::UnknownCollection.code(), 1100);
         assert_eq!(ApiCode::Internal.code(), 1500);
+        assert_eq!(ApiCode::RateLimited.code(), 1600);
+        assert_eq!(ApiCode::QuotaExceeded.code(), 1601);
+    }
+
+    #[test]
+    fn rate_limited_envelope_carries_retry_after_ms() {
+        let e = ApiError::new(ApiCode::RateLimited, "rate limit exceeded for 'demo'")
+            .with_retry_after_ms(17);
+        let resp = e.response();
+        assert_eq!(resp.status, 429);
+        let body = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(body.get("error").get("code").as_i64(), Some(1600));
+        assert_eq!(body.get("error").get("name").as_str(), Some("rate_limited"));
+        assert_eq!(body.get("error").get("retry_after_ms").as_i64(), Some(17));
+        // Every other error keeps the exact three-key shape the golden
+        // api-surface fixture pins — retry_after_ms is strictly additive.
+        let plain = ApiError::new(ApiCode::QuotaExceeded, "quota").to_json();
+        assert!(plain.get("retry_after_ms").as_i64().is_none());
     }
 
     #[test]

@@ -305,6 +305,7 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
                     workers: 4,
                     data_dir: None,
                     default_wal: None,
+                    governor: Default::default(),
                 },
                 None,
             )

@@ -73,10 +73,19 @@ impl Request {
 /// The boxed pull source behind a [`StreamingBody`].
 type BodySource = Box<dyn FnMut() -> Option<Vec<u8>> + Send>;
 
+/// A transfer pacer: consulted before each block pull; `Some(wait)`
+/// asks the front end to postpone the pull by roughly that long
+/// (bytes/sec budgets). The blocking front end sleeps on its worker
+/// thread; the reactor re-arms the connection on its timer wheel and
+/// never blocks the event loop. Pacing shapes *when* bytes move, never
+/// *which* bytes — a paced stream is byte-identical to an unpaced one.
+type Pacer = Arc<dyn Fn() -> Option<Duration> + Send + Sync>;
+
 #[derive(Clone)]
 pub struct StreamingBody {
     pub content_length: u64,
     source: Arc<Mutex<BodySource>>,
+    pacer: Option<Pacer>,
 }
 
 impl StreamingBody {
@@ -84,7 +93,22 @@ impl StreamingBody {
         content_length: u64,
         source: impl FnMut() -> Option<Vec<u8>> + Send + 'static,
     ) -> Self {
-        Self { content_length, source: Arc::new(Mutex::new(Box::new(source))) }
+        Self { content_length, source: Arc::new(Mutex::new(Box::new(source))), pacer: None }
+    }
+
+    /// Attach a transfer pacer (per-tenant snapshot bytes/sec budgets).
+    pub fn with_pacer(
+        mut self,
+        pacer: impl Fn() -> Option<Duration> + Send + Sync + 'static,
+    ) -> Self {
+        self.pacer = Some(Arc::new(pacer));
+        self
+    }
+
+    /// How long the front end should wait before the next pull (`None`
+    /// = pull now). Never blocks.
+    pub fn defer_for(&self) -> Option<Duration> {
+        self.pacer.as_ref().and_then(|p| p())
     }
 
     /// Pull the next block (`None` = exhausted). Blocks are written to
@@ -152,6 +176,7 @@ impl Response {
             405 => "Method Not Allowed",
             409 => "Conflict",
             413 => "Payload Too Large",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
             501 => "Not Implemented",
             503 => "Service Unavailable",
@@ -204,7 +229,14 @@ impl Response {
                 // a desynchronized socket.
                 stream.write_all(&self.head_bytes(keep_alive))?;
                 let mut written = 0u64;
-                while let Some(block) = sb.next_block() {
+                loop {
+                    // Worker-thread serializer: honoring the pacer by
+                    // sleeping is safe here (the reactor instead re-arms
+                    // its timer wheel for the same budget).
+                    while let Some(wait) = sb.defer_for() {
+                        std::thread::sleep(wait.min(Duration::from_millis(100)));
+                    }
+                    let Some(block) = sb.next_block() else { break };
                     if block.is_empty() {
                         // Contract violation; erroring beats looping on it.
                         return Err(std::io::Error::other("empty stream block"));
@@ -615,10 +647,18 @@ pub struct ServerMetrics {
     /// Snapshot streams currently in flight (gauge: outbound streams +
     /// open restore sessions).
     pub streams_in_flight: AtomicU64,
+    /// Requests rejected at admission with 1600 `rate_limited`.
+    pub requests_rate_limited: AtomicU64,
+    /// Requests rejected at admission with 1601 `quota_exceeded`.
+    pub requests_quota_rejected: AtomicU64,
+    /// Idle collections evicted (WALs closed, worker state dropped).
+    pub collections_evicted: AtomicU64,
+    /// Evicted collections rehydrated from disk on next touch.
+    pub collections_rehydrated: AtomicU64,
 }
 
 impl ServerMetrics {
-    fn add(counter: &AtomicU64, n: u64) {
+    pub fn add(counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
@@ -644,7 +684,18 @@ pub struct ServerConfig {
     pub max_requests_per_conn: u32,
     /// Shared metrics sink (pass a clone to observe the server).
     pub metrics: Arc<ServerMetrics>,
+    /// Admission hook, run after a request parses and before it reaches
+    /// the handler — on the reactor, before the job is queued to the
+    /// dispatch pool, so a rejected request never occupies a worker.
+    /// `Some(response)` rejects with that response (same keep-alive
+    /// semantics as a served request); `None` admits. Decisions must
+    /// come from front-end-local state only (monotonic clocks, in-flight
+    /// counters), never from the replayable state machine.
+    pub admission: Option<AdmissionHook>,
 }
+
+/// See [`ServerConfig::admission`].
+pub type AdmissionHook = Arc<dyn Fn(&Request) -> Option<Response> + Send + Sync>;
 
 impl Default for ServerConfig {
     fn default() -> Self {
@@ -655,6 +706,7 @@ impl Default for ServerConfig {
             write_timeout: Duration::from_secs(30),
             max_requests_per_conn: 1000,
             metrics: Arc::new(ServerMetrics::default()),
+            admission: None,
         }
     }
 }
@@ -810,10 +862,11 @@ fn start_blocking_impl(
                 }
                 match listener.accept() {
                     Ok((mut s, _)) => {
-                        ServerMetrics::add(&metrics.connections_accepted, 1);
                         // Best-effort connection cap (the gauge lags
                         // queued-but-unserved sockets slightly; the
-                        // reactor enforces the cap exactly).
+                        // reactor enforces the cap exactly). Rejected
+                        // sockets count `connections_rejected` only —
+                        // `connections_accepted` counts admissions.
                         if ServerMetrics::get(&metrics.connections_open)
                             >= max_connections as u64
                         {
@@ -823,6 +876,7 @@ fn start_blocking_impl(
                             let _ = s.write_all(&resp.to_bytes(false));
                             continue;
                         }
+                        ServerMetrics::add(&metrics.connections_accepted, 1);
                         let _ = s.set_nonblocking(false);
                         let _ = s.set_read_timeout(Some(read_timeout));
                         let _ = tx.send(s);
@@ -874,7 +928,14 @@ fn handle_connection(
         match parse_request(&mut reader) {
             Ok(req) => {
                 let keep_alive = req.wants_keep_alive();
-                let resp = handler(req);
+                // Admission runs between parse and handler — the same
+                // point the reactor checks before queueing to its
+                // dispatch pool, so both front ends put identical bytes
+                // on the wire for a rejected request.
+                let resp = match config.admission.as_ref().and_then(|a| a(&req)) {
+                    Some(rejection) => rejection,
+                    None => handler(req),
+                };
                 resp.write_to(&mut writer, keep_alive)?;
                 ServerMetrics::add(&metrics.requests_served, 1);
                 if !keep_alive {
@@ -938,12 +999,36 @@ pub mod client {
         Ok((status, len, close))
     }
 
+    /// Largest single allocation the client makes from a peer-declared
+    /// `content-length` — bodies grow chunk by chunk past this, so a
+    /// corrupt or malicious length fails with `UnexpectedEof` after
+    /// reading what actually arrived instead of pre-allocating the full
+    /// declared size up front (the same discipline `SnapshotReader`
+    /// applies to declared frame lengths).
+    const MAX_PREALLOC: usize = 64 << 10;
+
+    /// Read an exact-length body in bounded chunks (see [`MAX_PREALLOC`]).
+    pub(super) fn read_body_capped(
+        reader: &mut impl Read,
+        len: usize,
+    ) -> std::io::Result<Vec<u8>> {
+        let mut body = Vec::with_capacity(len.min(MAX_PREALLOC));
+        let mut chunk = vec![0u8; len.clamp(1, MAX_PREALLOC)];
+        let mut remaining = len;
+        while remaining > 0 {
+            let n = chunk.len().min(remaining);
+            reader.read_exact(&mut chunk[..n])?;
+            body.extend_from_slice(&chunk[..n]);
+            remaining -= n;
+        }
+        Ok(body)
+    }
+
     /// Read one response off a buffered stream: returns (status, body,
     /// server asked to close).
     fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, Vec<u8>, bool)> {
         let (status, len, close) = read_head(reader)?;
-        let mut body = vec![0u8; len];
-        reader.read_exact(&mut body)?;
+        let body = read_body_capped(reader, len)?;
         Ok((status, body, close))
     }
 
@@ -1112,8 +1197,7 @@ pub mod client {
             let (status, len, close) = read_head(&mut self.reader)?;
             self.fresh = false;
             if status != 200 {
-                let mut err_body = vec![0u8; len];
-                self.reader.read_exact(&mut err_body)?;
+                let err_body = read_body_capped(&mut self.reader, len)?;
                 return Ok((status, len as u64, err_body, close));
             }
             let mut remaining = len;
@@ -1382,6 +1466,73 @@ mod tests {
         assert_eq!(bs, 200);
         assert_eq!(bb, payload);
         blocking.stop();
+    }
+
+    #[test]
+    fn client_body_read_is_allocation_capped() {
+        // A Read that serves a few bytes then EOFs, recording the
+        // largest single read the client requested.
+        struct Short {
+            left: usize,
+            max_req: usize,
+        }
+        impl Read for Short {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                self.max_req = self.max_req.max(buf.len());
+                let n = buf.len().min(self.left);
+                self.left -= n;
+                buf[..n].fill(0x5a);
+                Ok(n)
+            }
+        }
+        // An absurd declared length (1 GiB) against 100 KiB of actual
+        // data: the read fails cleanly instead of pre-allocating 1 GiB,
+        // and no single read request exceeds the 64 KiB chunk.
+        let mut short = Short { left: 100 << 10, max_req: 0 };
+        let err = client::read_body_capped(&mut short, 1 << 30).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        assert!(short.max_req <= 64 << 10, "chunk too large: {}", short.max_req);
+        // Honest lengths still round-trip exactly.
+        let mut ok = Short { left: 200_000, max_req: 0 };
+        let body = client::read_body_capped(&mut ok, 150_000).unwrap();
+        assert_eq!(body.len(), 150_000);
+        assert!(body.iter().all(|&b| b == 0x5a));
+        let empty = client::read_body_capped(&mut Short { left: 0, max_req: 0 }, 0).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn admission_hook_rejects_before_handler_on_both_front_ends() {
+        // The handler panics if a /blocked request ever reaches it.
+        let handler: Handler = Arc::new(|req: Request| {
+            assert_ne!(req.path, "/blocked", "admission must reject before the handler");
+            Response::text(200, "served")
+        });
+        let admission: AdmissionHook = Arc::new(|req: &Request| {
+            (req.path == "/blocked").then(|| Response::json(429, r#"{"throttled":true}"#))
+        });
+        for blocking in [false, true] {
+            let config = ServerConfig { workers: 2, admission: Some(Arc::clone(&admission)), ..Default::default() };
+            let metrics = Arc::clone(&config.metrics);
+            let server = if blocking {
+                let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                let local = listener.local_addr().unwrap();
+                let handle = start_blocking_impl(listener, config, Arc::clone(&handler)).unwrap();
+                Server { addr: local, metrics: Arc::clone(&metrics), backend: Some(Backend::Blocking(handle)) }
+            } else {
+                Server::start_with("127.0.0.1:0", config, Arc::clone(&handler)).unwrap()
+            };
+            // Rejections keep the connection alive, exactly like a
+            // served response, and count toward requests_served.
+            let mut conn = client::Connection::connect(&server.addr()).unwrap();
+            let (status, body) = conn.request("GET", "/blocked", b"").unwrap();
+            assert_eq!(status, 429, "blocking={blocking}");
+            assert_eq!(body, br#"{"throttled":true}"#);
+            let (status, _) = conn.request("GET", "/ok", b"").unwrap();
+            assert_eq!(status, 200, "keep-alive must survive a rejection");
+            assert_eq!(ServerMetrics::get(&metrics.requests_served), 2);
+            server.stop();
+        }
     }
 
     #[test]

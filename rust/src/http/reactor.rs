@@ -223,6 +223,9 @@ struct Conn {
     /// Requests served on this connection (keep-alive cap).
     served: u32,
     deadline: Instant,
+    /// A paced streaming write deferred its next block pull until this
+    /// instant (transfer caps); the timer wheel resumes it.
+    write_retry_at: Option<Instant>,
 }
 
 const TOKEN_LISTENER: u64 = u64::MAX;
@@ -415,15 +418,19 @@ impl Reactor {
         loop {
             match self.listener.accept() {
                 Ok((stream, _)) => {
-                    ServerMetrics::add(&self.cfg.metrics.connections_accepted, 1);
                     if self.open >= self.cfg.max_connections {
+                        // Over the cap: `connections_rejected` only —
+                        // `connections_accepted` counts admissions. The
+                        // 503 rides the normal nonblocking write path as
+                        // a short-lived loop-owned connection (a
+                        // synchronous `write_all` on a full send buffer
+                        // would hit WouldBlock and close with no
+                        // response on the wire).
                         ServerMetrics::add(&self.cfg.metrics.connections_rejected, 1);
-                        let mut s = stream;
-                        let _ = s.set_nonblocking(true);
-                        let resp = Response::json(503, r#"{"error":"too many connections"}"#);
-                        let _ = s.write_all(&resp.to_bytes(false));
-                        continue; // dropped => closed
+                        self.install_rejection(stream, now);
+                        continue;
                     }
+                    ServerMetrics::add(&self.cfg.metrics.connections_accepted, 1);
                     if stream.set_nonblocking(true).is_err() {
                         continue;
                     }
@@ -452,6 +459,7 @@ impl Reactor {
                         close_after_write: false,
                         served: 0,
                         deadline,
+                        write_retry_at: None,
                     });
                     self.open += 1;
                     ServerMetrics::add(&self.cfg.metrics.connections_open, 1);
@@ -464,6 +472,52 @@ impl Reactor {
         }
     }
 
+    /// Register an over-cap socket just long enough to deliver its 503
+    /// through the nonblocking write machinery, then close. The slot
+    /// counts toward `open` while it drains (drop_conn's bookkeeping is
+    /// symmetric) and its deadline is the write timeout, so a client
+    /// that never reads cannot pin the slot.
+    fn install_rejection(&mut self, stream: TcpStream, now: Instant) {
+        if stream.set_nonblocking(true).is_err() {
+            return; // dropped => closed
+        }
+        let idx = self.alloc_slot();
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        let interest = EPOLLIN | EPOLLOUT | EPOLLET | EPOLLRDHUP;
+        if self.epoll.add(stream.as_raw_fd(), idx as u64, interest).is_err() {
+            self.free.push(idx);
+            return;
+        }
+        let resp = Response::json(503, r#"{"error":"too many connections"}"#);
+        let deadline = now + self.cfg.write_timeout;
+        let mut conn = Conn {
+            stream,
+            gen,
+            state: ConnState::Writing,
+            parser: RequestParser::new(),
+            write_buf: resp.to_bytes(false),
+            written: 0,
+            body_stream: None,
+            stream_remaining: 0,
+            response_keep_alive: false,
+            pipelined: false,
+            half_closed: false,
+            close_after_write: true,
+            served: 0,
+            deadline,
+            write_retry_at: None,
+        };
+        self.open += 1;
+        ServerMetrics::add(&self.cfg.metrics.connections_open, 1);
+        self.wheel.schedule(now, deadline, idx, gen);
+        if self.flush_write(idx, &mut conn, now) {
+            self.drop_conn(idx, conn);
+        } else {
+            self.conns[idx] = Some(conn);
+        }
+    }
+
     /// One epoll event for a connection slot.
     fn conn_event(&mut self, idx: usize, flags: u32, now: Instant, scratch: &mut [u8]) {
         let Some(slot) = self.conns.get_mut(idx) else { return };
@@ -472,8 +526,12 @@ impl Reactor {
         if !close && flags & EPOLLIN != 0 {
             close = self.readable(idx, &mut conn, now, scratch);
         }
-        if !close && flags & EPOLLOUT != 0 && conn.state == ConnState::Writing {
-            close = self.flush_write(&mut conn, now);
+        if !close
+            && flags & EPOLLOUT != 0
+            && conn.state == ConnState::Writing
+            && conn.write_retry_at.is_none()
+        {
+            close = self.flush_write(idx, &mut conn, now);
         }
         if !close && flags & EPOLLRDHUP != 0 {
             // Peer finished sending. If no response is owed, we're done;
@@ -508,11 +566,7 @@ impl Reactor {
                     match conn.parser.finish_eof() {
                         Ok(Some(req)) => {
                             conn.half_closed = true;
-                            conn.state = ConnState::Dispatching;
-                            conn.deadline = now + self.cfg.write_timeout;
-                            conn.response_keep_alive = req.wants_keep_alive();
-                            let _ = self.jobs.send((idx, conn.gen, req));
-                            return false;
+                            return self.admit_or_dispatch(idx, conn, req, now);
                         }
                         Ok(None) => return true,
                         Err(err) => {
@@ -522,7 +576,7 @@ impl Reactor {
                             conn.state = ConnState::Writing;
                             conn.response_keep_alive = false;
                             conn.close_after_write = true;
-                            return self.flush_write(conn, now);
+                            return self.flush_write(idx, conn, now);
                         }
                     }
                 }
@@ -547,10 +601,9 @@ impl Reactor {
                             if conn.parser.buffered() > 0 {
                                 conn.pipelined = true;
                             }
-                            conn.state = ConnState::Dispatching;
-                            conn.deadline = now + self.cfg.write_timeout;
-                            conn.response_keep_alive = req.wants_keep_alive();
-                            let _ = self.jobs.send((idx, conn.gen, req));
+                            if self.admit_or_dispatch(idx, conn, req, now) {
+                                return true;
+                            }
                             continue; // keep draining (ET)
                         }
                         Ok(None) => {
@@ -567,7 +620,7 @@ impl Reactor {
                             conn.state = ConnState::Writing;
                             conn.response_keep_alive = false;
                             conn.close_after_write = true;
-                            return self.flush_write(conn, now);
+                            return self.flush_write(idx, conn, now);
                         }
                     }
                 }
@@ -578,9 +631,35 @@ impl Reactor {
         }
     }
 
+    /// Queue a parsed request to the dispatch pool — unless the
+    /// admission hook rejects it, in which case the rejection is
+    /// installed as a normal response (same wire bytes and keep-alive
+    /// semantics as the blocking front end) without ever occupying a
+    /// dispatch worker. Returns true when the connection must close.
+    fn admit_or_dispatch(&mut self, idx: usize, conn: &mut Conn, req: Request, now: Instant) -> bool {
+        conn.state = ConnState::Dispatching;
+        conn.deadline = now + self.cfg.write_timeout;
+        conn.response_keep_alive = req.wants_keep_alive();
+        if let Some(resp) = self.cfg.admission.as_ref().and_then(|a| a(&req)) {
+            // Mirror drain_completions' keep-alive decision so a
+            // rejection and a served response behave identically on the
+            // wire (and both count toward requests_served).
+            let keep = conn.response_keep_alive
+                && conn.served + 1 < self.cfg.max_requests_per_conn
+                && !conn.pipelined;
+            conn.write_buf = resp.to_bytes(keep);
+            conn.written = 0;
+            conn.response_keep_alive = keep;
+            conn.state = ConnState::Writing;
+            return self.flush_write(idx, conn, now);
+        }
+        let _ = self.jobs.send((idx, conn.gen, req));
+        false
+    }
+
     /// Write until done or the socket would block. Returns true when the
     /// connection must close.
-    fn flush_write(&mut self, conn: &mut Conn, now: Instant) -> bool {
+    fn flush_write(&mut self, idx: usize, conn: &mut Conn, now: Instant) -> bool {
         loop {
             if conn.written == conn.write_buf.len() {
                 // Streaming body: refill from the source before treating
@@ -589,6 +668,18 @@ impl Reactor {
                 // fully on the wire, so a slow client throttles the
                 // producer instead of ballooning the buffer.
                 if let Some(sb) = conn.body_stream.clone() {
+                    if let Some(wait) = sb.defer_for() {
+                        // Transfer-capped stream: postpone the next pull
+                        // by re-arming the timer wheel — never by
+                        // blocking the event loop. The deadline extends
+                        // past the pause so pacing cannot trip the
+                        // write timeout.
+                        let resume = now + wait;
+                        conn.write_retry_at = Some(resume);
+                        conn.deadline = resume + self.cfg.write_timeout;
+                        self.wheel.schedule(now, resume, idx, conn.gen);
+                        return false;
+                    }
                     match sb.next_block() {
                         Some(block) if !block.is_empty() => {
                             if block.len() as u64 > conn.stream_remaining {
@@ -693,7 +784,7 @@ impl Reactor {
             conn.response_keep_alive = keep;
             conn.state = ConnState::Writing;
             conn.deadline = now + self.cfg.write_timeout;
-            if self.flush_write(&mut conn, now) {
+            if self.flush_write(idx, &mut conn, now) {
                 self.drop_conn(idx, conn);
             } else {
                 self.conns[idx] = Some(conn);
@@ -708,6 +799,34 @@ impl Reactor {
         let Some(conn) = slot.as_ref() else { return };
         if conn.gen != gen {
             return; // slot reused by a newer connection
+        }
+        // A paced streaming write parked a resume point (pacing pushed
+        // the deadline past it, so this check comes first).
+        if let Some(at) = conn.write_retry_at {
+            if conn.state == ConnState::Writing {
+                if now < at {
+                    self.wheel.schedule(now, at, idx, gen);
+                    return;
+                }
+                let mut conn = slot.take().expect("checked above");
+                conn.write_retry_at = None;
+                if self.flush_write(idx, &mut conn, now) {
+                    self.drop_conn(idx, conn);
+                    return;
+                }
+                self.conns[idx] = Some(conn);
+                // This pop consumed the connection's wheel entry; keep
+                // exactly one alive unless flush_write re-armed a pause
+                // (which scheduled its own).
+                let (deadline, paused) = match self.conns[idx].as_ref() {
+                    Some(c) => (c.deadline, c.write_retry_at.is_some()),
+                    None => return,
+                };
+                if !paused {
+                    self.wheel.schedule(now, deadline, idx, gen);
+                }
+                return;
+            }
         }
         if now >= conn.deadline {
             ServerMetrics::add(&self.cfg.metrics.connections_timed_out, 1);

@@ -5,12 +5,19 @@
 //! valori serve      [--addr 127.0.0.1:7431] [--dim 128] [--wal valori.wal]
 //!                   [--env b] [--no-embedder] [--flat] [--shards N]
 //!                   [--collections N] [--data DIR]
+//!                   [--rate-limit R] [--quota Q] [--bulkhead B]
+//!                   [--idle-ttl SECS] [--stream-bps BYTES]
 //!                   # /v1 = the `default` collection; /v2 = multi-tenant
+//!                   # rate-limit/quota/bulkhead/idle-ttl/stream-bps are
+//!                   # per-tenant governance knobs (0 = off, the default)
 //! valori soak       [--addr 127.0.0.1:7431] [--dim 32] [--shards N]
 //!                   [--n 256] [--requests 1000] [--clients 8]
 //!                   [--collection NAME] [--expect-backend epoll|blocking]
+//!                   [--expect-throttle]
 //!                   # keep-alive load + sequential-vs-concurrent hash check
-//!                   # (--collection drives the /v2 surface instead of /v1)
+//!                   # (--collection drives the /v2 surface instead of /v1;
+//!                   # --expect-throttle retries on 429 and requires >= 1
+//!                   # rejection — proving throttling never changes bits)
 //! valori bench      [--quick] [--n 50000] [--dim 256] [--k 10] [--shards 4]
 //!                   [--batch 512] [--seed S] [--out BENCH_search.json]
 //! valori experiment <table1|table2|table3|transfer|latency|all> [--quick]
@@ -34,7 +41,8 @@ use std::time::Duration;
 use valori::bench::BenchConfig;
 use valori::cli::Args;
 use valori::node::{
-    serve_collections, CollectionManager, CollectionSpec, EmbedBatcher, ManagerConfig,
+    serve_collections, CollectionManager, CollectionSpec, EmbedBatcher, GovernorConfig,
+    ManagerConfig,
 };
 use valori::runtime::{artifacts_available, artifacts_dir, embedder::Env, Embedder, Engine};
 use valori::snapshot::{ShardedSnapshot, Snapshot};
@@ -139,6 +147,13 @@ fn cmd_soak(args: &Args) -> i32 {
     // (the `default` collection when a manager is serving).
     let collection: Option<String> = args.opt("collection").map(String::from);
     let expect_backend: Option<String> = args.opt("expect-backend").map(String::from);
+    // --expect-throttle: the target is governed (serve --rate-limit /
+    // --quota); retry every 429 with its retry_after_ms hint and require
+    // at least one rejection — the final hash check then proves that a
+    // throttled-and-retried workload reaches a root bit-identical to an
+    // unthrottled sequential mirror.
+    let expect_throttle = args.flag("expect-throttle");
+    let throttled = std::sync::atomic::AtomicU64::new(0);
 
     // Which front end is serving, and how many tenants it holds — lets
     // CI pin the epoll reactor instead of silently testing the fallback.
@@ -210,11 +225,19 @@ fn cmd_soak(args: &Args) -> i32 {
             ("id", Json::Int(i as i64)),
             ("vector", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
         ]);
-        match conn.post_json(&insert_path, &body) {
-            Ok((200, _)) => {}
-            Ok((st, resp)) => return fail(&format!("insert {i} -> {st}: {resp}")),
-            Err(e) => return fail(&format!("insert {i}: {e}")),
+        loop {
+            match conn.post_json(&insert_path, &body) {
+                Ok((200, _)) => break,
+                Ok((429, resp)) => {
+                    throttled.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    std::thread::sleep(retry_after(&resp));
+                }
+                Ok((st, resp)) => return fail(&format!("insert {i} -> {st}: {resp}")),
+                Err(e) => return fail(&format!("insert {i}: {e}")),
+            }
         }
+        // Mirror only the accepted command — rejected attempts never
+        // reached the state machine, which is the whole point.
         if let Err(e) = mirror.apply(Command::Insert { id: i, vector: v }) {
             return fail(&format!("mirror insert {i}: {e}"));
         }
@@ -232,10 +255,19 @@ fn cmd_soak(args: &Args) -> i32 {
         .collect();
     let mut reference: Vec<Vec<u8>> = Vec::with_capacity(query_bodies.len());
     for body in &query_bodies {
-        match conn.request("POST", &query_path, body.as_bytes()) {
-            Ok((200, bytes)) => reference.push(bytes),
-            Ok((st, _)) => return fail(&format!("reference query -> {st}")),
-            Err(e) => return fail(&format!("reference query: {e}")),
+        loop {
+            match conn.request("POST", &query_path, body.as_bytes()) {
+                Ok((200, bytes)) => {
+                    reference.push(bytes);
+                    break;
+                }
+                Ok((429, bytes)) => {
+                    throttled.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    std::thread::sleep(retry_after_bytes(&bytes));
+                }
+                Ok((st, _)) => return fail(&format!("reference query -> {st}")),
+                Err(e) => return fail(&format!("reference query: {e}")),
+            }
         }
     }
     let per_client = requests.div_ceil(clients);
@@ -243,6 +275,7 @@ fn cmd_soak(args: &Args) -> i32 {
         let reference = &reference;
         let query_bodies = &query_bodies;
         let query_path = &query_path;
+        let throttled = &throttled;
         let handles: Vec<_> = (0..clients)
             .map(|_| {
                 scope.spawn(move || -> Result<usize, String> {
@@ -251,9 +284,20 @@ fn cmd_soak(args: &Args) -> i32 {
                     let mut bad = 0usize;
                     for r in 0..per_client {
                         let qi = r % query_bodies.len();
-                        let (st, bytes) = conn
-                            .request("POST", query_path, query_bodies[qi].as_bytes())
-                            .map_err(|e| format!("query: {e}"))?;
+                        // 429s are retried, not counted as mismatches: an
+                        // admission rejection carries no kernel state, so
+                        // the eventual 200 must still be byte-identical
+                        // to the sequential reference.
+                        let (st, bytes) = loop {
+                            let (st, bytes) = conn
+                                .request("POST", query_path, query_bodies[qi].as_bytes())
+                                .map_err(|e| format!("query: {e}"))?;
+                            if st != 429 {
+                                break (st, bytes);
+                            }
+                            throttled.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            std::thread::sleep(retry_after_bytes(&bytes));
+                        };
                         if st != 200 || bytes != reference[qi] {
                             bad += 1;
                         }
@@ -291,17 +335,22 @@ fn cmd_soak(args: &Args) -> i32 {
     }
 
     // phase 3: the served node must hold exactly the mirror's state
-    let server_hash = match valori::http::client::get_json(&addr, &hash_path) {
-        Ok((200, h)) => {
-            if collection.is_some() {
-                // /v2 reports the sharded root uniformly (1-shard included).
-                h.get("data").get("root").as_str().unwrap_or("").to_string()
-            } else {
-                h.get("fnv").as_str().unwrap_or("").to_string()
+    let server_hash = loop {
+        match valori::http::client::get_json(&addr, &hash_path) {
+            Ok((200, h)) => {
+                if collection.is_some() {
+                    // /v2 reports the sharded root uniformly (1-shard included).
+                    break h.get("data").get("root").as_str().unwrap_or("").to_string();
+                }
+                break h.get("fnv").as_str().unwrap_or("").to_string();
             }
+            Ok((429, resp)) => {
+                throttled.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                std::thread::sleep(retry_after(&resp));
+            }
+            Ok((st, _)) => return fail(&format!("GET {hash_path} -> {st}")),
+            Err(e) => return fail(&format!("hash fetch: {e}")),
         }
-        Ok((st, _)) => return fail(&format!("GET {hash_path} -> {st}")),
-        Err(e) => return fail(&format!("hash fetch: {e}")),
     };
     let local_hash = if collection.is_some() {
         format!("{:016x}", mirror.root_hash())
@@ -314,8 +363,42 @@ fn cmd_soak(args: &Args) -> i32 {
     if server_hash != local_hash {
         return fail("HASH MISMATCH: concurrent HTTP load diverged from the sequential mirror");
     }
+    let throttle_count = throttled.load(std::sync::atomic::Ordering::Relaxed);
+    if throttle_count > 0 {
+        println!(
+            "soak: absorbed {throttle_count} 429 rejections via retry — root still \
+             bit-identical to the ungoverned sequential mirror"
+        );
+    }
+    if expect_throttle && throttle_count == 0 {
+        return fail(
+            "--expect-throttle: the server never answered 429; is it running with \
+             --rate-limit/--quota?",
+        );
+    }
     println!("soak: OK — byte-identical responses and identical root hash under concurrency");
     0
+}
+
+/// Back-off hint from a parsed 429 body: the typed envelope puts
+/// `retry_after_ms` inside `error`, the legacy /v1 shape at top level.
+fn retry_after(resp: &valori::json::Json) -> Duration {
+    let ms = resp
+        .get("error")
+        .get("retry_after_ms")
+        .as_u64()
+        .or_else(|| resp.get("retry_after_ms").as_u64())
+        .unwrap_or(10);
+    Duration::from_millis(ms.clamp(1, 1000))
+}
+
+/// Back-off hint from a raw 429 body.
+fn retry_after_bytes(bytes: &[u8]) -> Duration {
+    std::str::from_utf8(bytes)
+        .ok()
+        .and_then(|s| valori::json::parse(s).ok())
+        .map(|j| retry_after(&j))
+        .unwrap_or(Duration::from_millis(10))
 }
 
 /// `valori bench` — the deterministic search/upsert performance suite.
@@ -406,11 +489,39 @@ fn cmd_serve(args: &Args) -> i32 {
     // pre-creates N-1 extra tenants (`c1`..`c{N-1}`) on top, and
     // `--data DIR` makes dynamically created collections durable under
     // `DIR/<name>/`.
+    // Per-tenant governance: 0 (the default) leaves each knob off, so an
+    // ungoverned `serve` is bit-for-bit the pre-governance server.
+    let nonzero_u32 = |name: &str| -> Result<Option<u32>, String> {
+        args.opt_parse(name, 0u32).map(|v| if v == 0 { None } else { Some(v) })
+    };
+    let rate_limit = match nonzero_u32("rate-limit") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    let quota = match nonzero_u32("quota") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    let bulkhead = match nonzero_u32("bulkhead") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    let idle_ttl = match args.opt_parse("idle-ttl", 0u64) {
+        Ok(0) => None,
+        Ok(secs) => Some(Duration::from_secs(secs)),
+        Err(e) => return fail(&e),
+    };
+    let stream_bytes_per_sec = match args.opt_parse("stream-bps", 0u64) {
+        Ok(0) => None,
+        Ok(bps) => Some(bps),
+        Err(e) => return fail(&e),
+    };
     let collections_config = ManagerConfig {
         spec: CollectionSpec { dim, shards: n_shards, flat: args.flag("flat") },
         workers,
         data_dir: args.opt("data").map(Into::into),
         default_wal: args.opt("wal").map(Into::into),
+        governor: GovernorConfig { rate_limit, quota, bulkhead, idle_ttl, stream_bytes_per_sec },
     };
     let manager =
         match CollectionManager::new(collections_config, batcher.as_ref().map(|b| b.handle())) {
@@ -427,6 +538,17 @@ fn cmd_serve(args: &Args) -> i32 {
         Err(e) => return fail(&format!("bind {addr}: {e}")),
     };
     println!("valori node listening on http://{}", server.addr());
+    if rate_limit.is_some()
+        || quota.is_some()
+        || bulkhead.is_some()
+        || idle_ttl.is_some()
+        || stream_bytes_per_sec.is_some()
+    {
+        println!(
+            "  governance: rate-limit={rate_limit:?}/s quota={quota:?} bulkhead={bulkhead:?} \
+             idle-ttl={idle_ttl:?} stream-bps={stream_bytes_per_sec:?}"
+        );
+    }
     println!(
         "  dim={dim} shards={n_shards} collections={:?} backend={} wal={:?} data={:?} embedder={}",
         manager.names(),

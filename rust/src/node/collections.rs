@@ -33,8 +33,11 @@ use crate::api::{
     ApiRequest, ApiResult,
 };
 use crate::hash::Fnv1a64;
-use crate::http::{Handler, Request, Response, Server, ServerConfig, ServerMetrics, StreamingBody};
+use crate::http::{
+    AdmissionHook, Handler, Request, Response, Server, ServerConfig, ServerMetrics, StreamingBody,
+};
 use crate::json::Json;
+use crate::node::governor::{Admission, Governor, GovernorConfig};
 use crate::node::{route, stats_json, BatcherHandle, NodeConfig, NodeState};
 use crate::snapshot::{
     FrameSource, ShardedSnapshot, Snapshot, SnapshotReader, SnapshotWriter, StreamError,
@@ -45,6 +48,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::{Duration, Instant};
 
 /// The collection every deployment has: it backs the `/v1` adapter and
 /// cannot be deleted.
@@ -102,6 +106,11 @@ pub struct ManagerConfig {
     /// WAL base so pre-collections deployments recover their data
     /// byte-for-byte. Takes precedence over `data_dir` for `default`.
     pub default_wal: Option<PathBuf>,
+    /// Per-tenant governance knobs (rate limits, quotas, bulkheads,
+    /// idle TTL, stream budgets). All-`None` (the default) disables
+    /// governance entirely: no admission hook, no sweeper, no per-request
+    /// bookkeeping.
+    pub governor: GovernorConfig,
 }
 
 /// N independent collections behind one front end. Cheap to share
@@ -130,6 +139,17 @@ pub struct CollectionManager {
     /// [`SnapshotReader`] fed by successive `PUT …/restore` bodies, so a
     /// whole-deployment transfer never has to fit one HTTP body.
     restores: Mutex<BTreeMap<String, RestoreSession>>,
+    /// Front-end-local admission controller (tentpole of ISSUE 6): token
+    /// buckets, in-flight caps, idle tracking, stream budgets. Decisions
+    /// happen before dispatch and are never logged or hashed, so a
+    /// throttled-and-retried workload replays to the same root as an
+    /// unthrottled one.
+    governor: Arc<Governor>,
+    /// Collections evicted by the idle sweep, with their root hash at
+    /// eviction time. The cached root keeps `/v2/hash` (and `names`/
+    /// `len`) stable while a tenant is cold; the entry is cleared when
+    /// the tenant is rehydrated (lazily, on next touch) or dropped.
+    evicted: Mutex<BTreeMap<String, u64>>,
 }
 
 /// One resumable restore in progress.
@@ -174,14 +194,19 @@ impl CollectionManager {
     /// its per-shard WALs — restart durability for dynamically created
     /// tenants, not just `default`.
     pub fn new(config: ManagerConfig, embed: Option<BatcherHandle>) -> crate::Result<Self> {
+        let http_metrics = Arc::new(ServerMetrics::default());
+        let governor =
+            Arc::new(Governor::new(config.governor.clone(), Arc::clone(&http_metrics)));
         let manager = Self {
             config,
             embed,
             collections: RwLock::new(BTreeMap::new()),
             create_lock: Mutex::new(()),
-            http_metrics: Arc::new(ServerMetrics::default()),
+            http_metrics,
             backend: OnceLock::new(),
             restores: Mutex::new(BTreeMap::new()),
+            governor,
+            evicted: Mutex::new(BTreeMap::new()),
         };
         let spec = manager.config.spec.clone();
         manager.create(DEFAULT_COLLECTION, spec).map_err(|e| {
@@ -336,6 +361,13 @@ impl CollectionManager {
             .write()
             .expect("collections poisoned")
             .insert(name.to_string(), Arc::clone(&state));
+        // The tenant is live again: clear any eviction cache entry (its
+        // WALs were just replayed) and mark it touched so the sweeper's
+        // idle clock starts now.
+        self.evicted.lock().expect("evicted poisoned").remove(name);
+        if self.governor.config().is_active() {
+            self.governor.touch(name, Instant::now());
+        }
         // A dangling restore session for this name is now moot.
         if self.restores.lock().expect("restores poisoned").remove(name).is_some() {
             self.http_metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
@@ -358,12 +390,55 @@ impl CollectionManager {
         }
     }
 
-    /// Look up a collection.
+    /// Look up a collection. A tenant evicted by the idle sweep is
+    /// **rehydrated lazily** here: its persisted `spec.json` is re-read
+    /// and [`Self::create`] replays `restored.snap` + WALs — the same
+    /// restart-rediscovery path that already proves rehydration
+    /// preserves the root hash.
     pub fn get(&self, name: &str) -> ApiResult<Arc<NodeState>> {
-        let collections = self.collections.read().expect("collections poisoned");
-        collections.get(name).cloned().ok_or_else(|| {
-            ApiError::new(ApiCode::UnknownCollection, format!("unknown collection '{name}'"))
-        })
+        {
+            let collections = self.collections.read().expect("collections poisoned");
+            if let Some(state) = collections.get(name) {
+                if self.governor.config().is_active() {
+                    self.governor.touch(name, Instant::now());
+                }
+                return Ok(Arc::clone(state));
+            }
+        }
+        if self.evicted.lock().expect("evicted poisoned").contains_key(name) {
+            return self.rehydrate(name);
+        }
+        Err(ApiError::new(ApiCode::UnknownCollection, format!("unknown collection '{name}'")))
+    }
+
+    /// Bring an evicted tenant back: re-read its persisted spec and run
+    /// it through [`Self::create`] (which replays `restored.snap` + the
+    /// per-shard WALs and clears the eviction cache entry).
+    fn rehydrate(&self, name: &str) -> ApiResult<Arc<NodeState>> {
+        let Some(dir) = &self.config.data_dir else {
+            // Unreachable in practice: only durable tenants are evicted.
+            return Err(ApiError::new(
+                ApiCode::Internal,
+                format!("collection '{name}' evicted without a data dir"),
+            ));
+        };
+        let path = dir.join(name).join("spec.json");
+        let bytes = std::fs::read(&path).map_err(|e| {
+            ApiError::new(ApiCode::Internal, format!("rehydrate '{name}': read {path:?}: {e}"))
+        })?;
+        let spec = parse_spec(&bytes, &self.config.spec).map_err(|e| {
+            ApiError::new(ApiCode::Internal, format!("rehydrate '{name}': bad spec: {}", e.message))
+        })?;
+        match self.create(name, spec) {
+            Ok(state) => {
+                ServerMetrics::add(&self.http_metrics.collections_rehydrated, 1);
+                Ok(state)
+            }
+            // Raced another rehydrator (or an explicit re-create): theirs
+            // won and the tenant is live.
+            Err(e) if e.code == ApiCode::CollectionExists => self.get(name),
+            Err(e) => Err(e),
+        }
     }
 
     /// Drop a collection (its WAL directory too, when durable). The
@@ -379,13 +454,17 @@ impl CollectionManager {
         // same name must not leave a half-registered tenant behind.
         let _creating = self.create_lock.lock().expect("create lock poisoned");
         let mut collections = self.collections.write().expect("collections poisoned");
-        if collections.remove(name).is_none() {
+        let was_live = collections.remove(name).is_some();
+        drop(collections);
+        // An evicted tenant can be dropped without rehydrating it first —
+        // its cached root and on-disk directory just go away.
+        let was_evicted = self.evicted.lock().expect("evicted poisoned").remove(name).is_some();
+        if !was_live && !was_evicted {
             return Err(ApiError::new(
                 ApiCode::UnknownCollection,
                 format!("unknown collection '{name}'"),
             ));
         }
-        drop(collections);
         if let Some(dir) = &self.config.data_dir {
             // Best-effort: open WAL handles keep writing into unlinked
             // files until the last Arc drops, which is fine on Linux.
@@ -395,14 +474,25 @@ impl CollectionManager {
     }
 
     /// Collection names, lexicographic (the `BTreeMap` order — also the
-    /// combined-root fold order).
+    /// combined-root fold order). Evicted-but-durable tenants count: they
+    /// are still part of the deployment, just cold.
     pub fn names(&self) -> Vec<String> {
-        self.collections.read().expect("collections poisoned").keys().cloned().collect()
+        let mut names: BTreeMap<String, ()> = self
+            .collections
+            .read()
+            .expect("collections poisoned")
+            .keys()
+            .map(|n| (n.clone(), ()))
+            .collect();
+        for name in self.evicted.lock().expect("evicted poisoned").keys() {
+            names.entry(name.clone()).or_insert(());
+        }
+        names.into_keys().collect()
     }
 
-    /// Number of live collections.
+    /// Number of collections (live + evicted).
     pub fn len(&self) -> usize {
-        self.collections.read().expect("collections poisoned").len()
+        self.names().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -411,12 +501,17 @@ impl CollectionManager {
 
     /// Per-collection roots in lexicographic name order (the one place
     /// the roots are computed for both the fold and the wire payload).
+    /// Evicted tenants contribute their root cached at eviction time —
+    /// nothing mutated them while cold (mutations rehydrate first), so
+    /// `/v2/hash` is invariant across evict→rehydrate round trips.
     fn collection_roots(&self) -> Vec<(String, u64)> {
+        let mut roots: BTreeMap<String, u64> =
+            self.evicted.lock().expect("evicted poisoned").clone();
         let collections = self.collections.read().expect("collections poisoned");
-        collections
-            .iter()
-            .map(|(name, state)| (name.clone(), state.with_sharded(|sk| sk.root_hash())))
-            .collect()
+        for (name, state) in collections.iter() {
+            roots.insert(name.clone(), state.with_sharded(|sk| sk.root_hash()));
+        }
+        roots.into_iter().collect()
     }
 
     /// Deterministic combined root over all collections, folded in
@@ -448,8 +543,15 @@ impl CollectionManager {
         ])
     }
 
-    /// `GET /v2/collections` payload.
+    /// `GET /v2/collections` payload. Listing reports live kernel detail
+    /// (seq, log_len, vectors), so evicted tenants are rehydrated first —
+    /// a list is an explicit touch of every tenant.
     pub fn list_json(&self) -> Json {
+        let cold: Vec<String> =
+            self.evicted.lock().expect("evicted poisoned").keys().cloned().collect();
+        for name in cold {
+            let _ = self.get(&name); // rehydrates; errors surface on direct access
+        }
         let collections = self.collections.read().expect("collections poisoned");
         let per: Vec<Json> = collections
             .iter()
@@ -464,6 +566,108 @@ impl CollectionManager {
     /// Which front end serves this manager ("unknown" until serving).
     pub fn backend_name(&self) -> &'static str {
         self.backend.get().copied().unwrap_or("unknown")
+    }
+
+    /// The admission controller (exposed for tests and the CLI).
+    pub fn governor(&self) -> &Arc<Governor> {
+        &self.governor
+    }
+
+    /// One pass of the idle sweep: reap abandoned restore sessions, evict
+    /// durable tenants idle past the configured TTL, prune governor
+    /// bookkeeping. `now` is a parameter so tests can drive time.
+    ///
+    /// Eviction closes a tenant's WALs and drops its worker pool by
+    /// removing the `NodeState` from the map (the WAL files close when
+    /// the last `Arc` drops — after any in-flight request finishes). The
+    /// root hash is cached so `/v2/hash` stays stable while the tenant
+    /// is cold; the next touch rehydrates from `spec.json` +
+    /// `restored.snap` + WAL replay (see [`Self::get`]).
+    pub fn sweep_idle(&self, now: Instant) {
+        self.reap_restores(now);
+        if let (Some(ttl), Some(_)) = (self.governor.config().idle_ttl, &self.config.data_dir) {
+            let candidates: Vec<String> = {
+                let collections = self.collections.read().expect("collections poisoned");
+                collections
+                    .keys()
+                    // `default` backs the /v1 adapter and is never
+                    // evicted (it may not even have a spec.json when it
+                    // lives on a legacy --wal path).
+                    .filter(|n| n.as_str() != DEFAULT_COLLECTION)
+                    .cloned()
+                    .collect()
+            };
+            for name in candidates {
+                match self.governor.idle_for(&name, now) {
+                    Some(idle) if idle > ttl => {
+                        self.evict(&name, ttl, now);
+                    }
+                    Some(_) => {}
+                    // Never touched (e.g. rediscovered before governance
+                    // saw traffic): start its idle clock now.
+                    None => self.governor.touch(&name, now),
+                }
+            }
+        }
+        self.governor.prune(now);
+    }
+
+    /// Evict one idle tenant. Serialized on `create_lock` against
+    /// create/drop/rehydrate; idleness is re-checked under the lock so a
+    /// request admitted after the sweep's scan blocks the eviction.
+    fn evict(&self, name: &str, ttl: Duration, now: Instant) -> bool {
+        let _creating = self.create_lock.lock().expect("create lock poisoned");
+        match self.governor.idle_for(name, now) {
+            Some(idle) if idle > ttl => {}
+            _ => return false,
+        }
+        let mut collections = self.collections.write().expect("collections poisoned");
+        let Some(state) = collections.remove(name) else { return false };
+        let root = state.with_sharded(|sk| sk.root_hash());
+        drop(collections);
+        self.evicted.lock().expect("evicted poisoned").insert(name.to_string(), root);
+        ServerMetrics::add(&self.http_metrics.collections_evicted, 1);
+        // `state` drops here — WAL handles close (while we still hold the
+        // create lock, so a rehydration cannot replay a half-closed WAL).
+        true
+    }
+
+    /// The admission hook both front ends consult **before** a request
+    /// is queued to the dispatch pool. `None` when governance is off —
+    /// the server then behaves bit-for-bit as an ungoverned build.
+    ///
+    /// Rejections never touch the state machine: nothing is logged,
+    /// nothing is hashed, and the decision clock is front-end-local — so
+    /// a throttled-and-retried workload replays to a root bit-identical
+    /// to an unthrottled run.
+    pub fn admission_hook(self: &Arc<Self>) -> Option<AdmissionHook> {
+        if !self.governor.config().is_active() {
+            return None;
+        }
+        let governor = Arc::clone(&self.governor);
+        Some(Arc::new(move |req: &Request| {
+            let name = governed_collection(&req.path)?;
+            match governor.admit(name, Instant::now()) {
+                Admission::Admit => None,
+                Admission::RateLimited { retry_after_ms } => {
+                    Some(admission_rejection(
+                        &req.path,
+                        ApiError::new(
+                            ApiCode::RateLimited,
+                            format!("collection '{name}': rate limit exceeded"),
+                        )
+                        .with_retry_after_ms(retry_after_ms),
+                    ))
+                }
+                Admission::QuotaExceeded => Some(admission_rejection(
+                    &req.path,
+                    ApiError::new(
+                        ApiCode::QuotaExceeded,
+                        format!("collection '{name}': too many requests in flight"),
+                    ),
+                )),
+            }
+        }))
     }
 
     /// The shared front-end metrics sink.
@@ -504,11 +708,23 @@ impl CollectionManager {
         let metrics = Arc::clone(&self.http_metrics);
         metrics.streams_in_flight.fetch_add(1, Ordering::Relaxed);
         let guard = StreamFlightGuard { metrics: Arc::clone(&metrics) };
+        // Per-tenant transfer cap: each produced block charges the
+        // tenant's stream budget; the pacer below makes the front end
+        // defer the *next* refill until the debt has decayed. Pacing
+        // changes only the timing of the bytes, never the bytes.
+        let charge = self
+            .governor
+            .config()
+            .stream_bytes_per_sec
+            .map(|_| (Arc::clone(&self.governor), name.to_string()));
         let body = StreamingBody::new(total, move || {
             let _held_until_stream_drops = &guard;
             match writer.next_block() {
                 Some(Ok(block)) => {
                     metrics.stream_bytes_streamed.fetch_add(block.len() as u64, Ordering::Relaxed);
+                    if let Some((governor, tenant)) = &charge {
+                        governor.stream_consume(tenant, block.len() as u64, Instant::now());
+                    }
                     Some(block)
                 }
                 // An abort yields fewer than `total` bytes; the front end
@@ -517,6 +733,14 @@ impl CollectionManager {
                 Some(Err(_)) | None => None,
             }
         });
+        let body = match self.governor.config().stream_bytes_per_sec {
+            Some(_) => {
+                let governor = Arc::clone(&self.governor);
+                let tenant = name.to_string();
+                body.with_pacer(move || governor.stream_defer(&tenant, Instant::now()))
+            }
+            None => body,
+        };
         Ok(Response::streaming(200, "application/octet-stream", body))
     }
 
@@ -532,17 +756,14 @@ impl CollectionManager {
     /// instead of silently double-fed).
     pub fn restore_ingest(&self, name: &str, offset: u64, bytes: &[u8]) -> ApiResult<Json> {
         validate_collection_name(name)?;
-        let now = std::time::Instant::now();
-        let mut sessions = self.restores.lock().expect("restores poisoned");
+        let now = Instant::now();
         // Reap idle sessions first: abandoned transfers must not pin
         // their reassembled frames (or the in-flight gauge) forever.
-        let before = sessions.len();
-        sessions.retain(|_, s| now.duration_since(s.last_fed) < RESTORE_SESSION_TTL);
-        let reaped = (before - sessions.len()) as u64;
-        if reaped > 0 {
-            self.http_metrics.streams_in_flight.fetch_sub(reaped, Ordering::Relaxed);
-        }
-        if self.collections.read().expect("collections poisoned").contains_key(name) {
+        self.reap_restores(now);
+        let mut sessions = self.restores.lock().expect("restores poisoned");
+        let exists = self.collections.read().expect("collections poisoned").contains_key(name)
+            || self.evicted.lock().expect("evicted poisoned").contains_key(name);
+        if exists {
             // An orphaned session for a name that got created by other
             // means is moot — drop it with the rejection.
             if sessions.remove(name).is_some() {
@@ -575,45 +796,79 @@ impl CollectionManager {
                 self.http_metrics.streams_in_flight.fetch_add(1, Ordering::Relaxed);
             }
         }
-        let Some(session) = sessions.get_mut(name) else {
+        // Take the session OUT of the map and feed it with the map lock
+        // released: `SnapshotReader::feed` does up to a full MAX_BODY
+        // window of CRC/SHA work, and holding the global lock across it
+        // would serialize every tenant's restore behind this one. A
+        // concurrent PUT for the *same* name while we hold the session
+        // sees "no session" (1401) — in-order windows per name is already
+        // the contract.
+        let Some(mut session) = sessions.remove(name) else {
             return Err(ApiError::new(
                 ApiCode::StreamOffsetMismatch,
                 format!("no restore session for '{name}' (start at offset 0)"),
             ));
         };
+        drop(sessions);
         if session.reader.bytes_fed() != offset {
+            let expected = session.reader.bytes_fed();
+            self.put_back_session(name, session);
             return Err(ApiError::new(
                 ApiCode::StreamOffsetMismatch,
-                format!(
-                    "restore session for '{name}' expects offset {}, got {offset}",
-                    session.reader.bytes_fed()
-                ),
+                format!("restore session for '{name}' expects offset {expected}, got {offset}"),
             ));
         }
         let verified_before = session.reader.chunks_verified();
         if let Err(e) = session.reader.feed(bytes) {
-            sessions.remove(name);
+            // Session dies with the bad window (we own it; it never goes
+            // back into the map).
             self.http_metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
             return Err(ApiError::from(e));
         }
-        session.last_fed = now;
+        session.last_fed = Instant::now();
         let delta = session.reader.chunks_verified() - verified_before;
         self.http_metrics.stream_chunks_verified.fetch_add(delta, Ordering::Relaxed);
         if !session.reader.is_complete() {
+            let received = session.reader.bytes_fed();
+            self.put_back_session(name, session);
             return Ok(Json::object(vec![
                 ("complete", Json::Bool(false)),
                 ("name", Json::str(name)),
-                ("received", Json::Int(session.reader.bytes_fed() as i64)),
+                ("received", Json::Int(received as i64)),
             ]));
         }
-        let session = sessions.remove(name).expect("session checked above");
         self.http_metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
-        // Release the session map before taking the create lock (lock
-        // order: restores → create_lock, never nested the other way, and
-        // never across the install's WAL/file work).
-        drop(sessions);
         let snapshot = session.reader.finalize().map_err(ApiError::from)?;
         self.install_restored(name, snapshot)
+    }
+
+    /// Re-insert a session taken out for an unlocked feed. If an
+    /// offset-0 restart raced in while the session was out, the restart
+    /// wins (offset 0 means "start over") and the stale session — which
+    /// the gauge still counts — is dropped.
+    fn put_back_session(&self, name: &str, session: RestoreSession) {
+        let mut sessions = self.restores.lock().expect("restores poisoned");
+        if let std::collections::btree_map::Entry::Vacant(slot) = sessions.entry(name.to_string())
+        {
+            slot.insert(session);
+        } else {
+            self.http_metrics.streams_in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop restore sessions idle past [`RESTORE_SESSION_TTL`], releasing
+    /// their reassembled frames and the in-flight gauge. Called from
+    /// every restore PUT, from the stats routes and from the idle sweep —
+    /// so abandoned transfers are reaped even with zero restore traffic.
+    pub fn reap_restores(&self, now: Instant) -> u64 {
+        let mut sessions = self.restores.lock().expect("restores poisoned");
+        let before = sessions.len();
+        sessions.retain(|_, s| now.duration_since(s.last_fed) < RESTORE_SESSION_TTL);
+        let reaped = (before - sessions.len()) as u64;
+        if reaped > 0 {
+            self.http_metrics.streams_in_flight.fetch_sub(reaped, Ordering::Relaxed);
+        }
+        reaped
     }
 
     /// Install a fully verified restored snapshot as a new collection —
@@ -715,6 +970,41 @@ impl Drop for StreamFlightGuard {
     }
 }
 
+/// Which tenant a request path is governed under: `/v1/*` adapts onto
+/// `default`; `/v2/collections/{name}...` onto `{name}`. Manager-level
+/// routes (health, `/v2/hash`, the collection list) are ungoverned —
+/// throttling a health check would defeat its purpose.
+fn governed_collection(path: &str) -> Option<&str> {
+    if path == "/v1/health" || path == "/v2/health" {
+        return None;
+    }
+    if path == "/v1" || path.starts_with("/v1/") {
+        return Some(DEFAULT_COLLECTION);
+    }
+    let tail = path.strip_prefix("/v2/collections/")?;
+    let name = tail.split('/').next().unwrap_or("");
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Serialize an admission rejection in the shape the surface expects:
+/// the typed taxonomy envelope on `/v2`, the legacy ad-hoc shape on
+/// `/v1` (with `retry_after_ms` riding along for 1600 so legacy clients
+/// can still back off precisely).
+fn admission_rejection(path: &str, err: ApiError) -> Response {
+    if path.starts_with("/v2") {
+        return err.response();
+    }
+    let mut fields = vec![("error", Json::str(err.message.clone()))];
+    if let Some(ms) = err.retry_after_ms {
+        fields.push(("retry_after_ms", Json::Int(ms as i64)));
+    }
+    Response::json(err.code.http_status(), Json::object(fields).to_string())
+}
+
 /// The combined-root fold: `fnv(count ‖ (len(name) ‖ name ‖ root)*)`
 /// over lexicographically ordered `(name, root)` pairs. One
 /// implementation serves both the in-process value and the `/v2/hash`
@@ -781,12 +1071,38 @@ pub fn serve_collections(
     let config = ServerConfig {
         workers,
         metrics: Arc::clone(&manager.http_metrics),
+        admission: manager.admission_hook(),
         ..Default::default()
     };
+    let governed = manager.governor.config().is_active();
     let m = Arc::clone(&manager);
-    let handler: Handler = Arc::new(move |req| route_collections(&m, req));
+    let handler: Handler = Arc::new(move |req| {
+        // Every admitted request pairs its `Governor::admit` with exactly
+        // one `release` once the pool worker is done with it — that
+        // counter IS the quota and the bulkhead.
+        let tenant =
+            if governed { governed_collection(&req.path).map(str::to_string) } else { None };
+        let resp = route_collections(&m, req);
+        if let Some(name) = tenant {
+            m.governor.release(&name);
+        }
+        resp
+    });
     let server = Server::start_with(addr, config, handler)?;
     let _ = manager.backend.set(server.backend_name());
+    if let Some(ttl) = manager.governor.config().idle_ttl {
+        // Periodic sweep: holds only a Weak so the manager (and its WALs)
+        // can die normally; the thread exits on the first failed upgrade.
+        let weak = Arc::downgrade(&manager);
+        let interval = (ttl / 4).clamp(Duration::from_millis(50), Duration::from_secs(30));
+        std::thread::Builder::new()
+            .name("valori-idle-sweep".into())
+            .spawn(move || loop {
+                std::thread::sleep(interval);
+                let Some(m) = weak.upgrade() else { return };
+                m.sweep_idle(Instant::now());
+            })?;
+    }
     Ok(server)
 }
 
@@ -799,6 +1115,12 @@ pub fn route_collections(manager: &CollectionManager, req: Request) -> Response 
     if req.method == "GET" && (req.path == "/v1/health" || req.path == "/v2/health") {
         let body = super::health_json(manager.backend_name(), manager.len());
         return Response::json(200, body.to_string());
+    }
+    // Stats requests double as a reap opportunity: abandoned restore
+    // sessions are released even on deployments with no idle sweeper
+    // (and the gauges a stats call reports are accurate as of the call).
+    if req.method == "GET" && (req.path == "/v1/stats" || req.path.ends_with("/stats")) {
+        manager.reap_restores(Instant::now());
     }
     if req.path == "/v1" || req.path.starts_with("/v1/") {
         // Thin adapter: the default collection IS the /v1 node, so every
@@ -1059,6 +1381,7 @@ mod tests {
                 workers: 2,
                 data_dir: None,
                 default_wal: None,
+                governor: GovernorConfig::default(),
             },
             None,
         )
@@ -1287,6 +1610,7 @@ mod tests {
             workers: 2,
             data_dir: Some(dir.clone()),
             default_wal: None,
+            governor: GovernorConfig::default(),
         };
         let root_before = {
             let m = CollectionManager::new(config.clone(), None).unwrap();

@@ -1,0 +1,406 @@
+//! Per-tenant resource governance: token-bucket rate limiting, in-flight
+//! quotas/bulkheads, idle-TTL bookkeeping and snapshot-stream transfer
+//! budgets.
+//!
+//! ## Determinism contract
+//!
+//! The governor lives entirely **outside** the replayable state machine.
+//! Admission decisions are made at the front end — before a job is queued
+//! to the dispatch pool — from a front-end-local monotonic clock
+//! ([`Instant`]). Nothing the governor computes is ever appended to a WAL,
+//! folded into a root hash, or echoed into a canonical log. A client that
+//! is throttled with `1600 rate_limited` / `1601 quota_exceeded` and
+//! retries until accepted produces **exactly** the command sequence an
+//! unthrottled client would have produced, so the resulting root hash is
+//! bit-identical to an ungoverned run (pinned by
+//! `tests/governance.rs::throttled_retried_workload_matches_ungoverned_mirror`).
+//!
+//! ## Model
+//!
+//! Each tenant (collection name) gets one [`TenantState`]:
+//!
+//! * **Rate limit** — a token bucket holding *millitokens* (1 request =
+//!   1000 millitokens) refilled at `rate_limit` req/s, with a burst
+//!   capacity of one second's worth of tokens (min 1 request). Millitoken
+//!   precision keeps `retry_after_ms` honest at low rates.
+//! * **Quota / bulkhead** — one in-flight counter checked against
+//!   `min(quota, bulkhead)`. The quota caps requests a tenant may have
+//!   admitted concurrently; the bulkhead caps dispatch-pool workers the
+//!   tenant may occupy. Both bound the same quantity at admission time
+//!   (a request admitted to the front end is the request occupying a
+//!   pool worker), so the tighter knob wins.
+//! * **Transfer cap** — snapshot streams accrue *debt* as blocks are
+//!   produced; debt decays at `stream_bytes_per_sec`. While a tenant is
+//!   in debt, its [`crate::http::StreamingBody`] defers refills (the
+//!   reactor re-arms its timer wheel; the blocking front end sleeps in
+//!   bounded slices) — the event loop never blocks and the stream bytes
+//!   are unchanged, only their pacing.
+//!
+//! All counters feed [`ServerMetrics`] gauges
+//! (`requests_rate_limited`, `requests_quota_rejected`) surfaced by
+//! `/v1/stats` and `/v2/stats`.
+
+use crate::http::ServerMetrics;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-tenant governance knobs. `None` everywhere (the default) turns the
+/// governor off entirely: no admission hook is installed, no per-request
+/// bookkeeping runs, and the server behaves bit-for-bit as before.
+#[derive(Debug, Clone, Default)]
+pub struct GovernorConfig {
+    /// Sustained request rate per tenant, requests/second.
+    pub rate_limit: Option<u32>,
+    /// Max requests a tenant may have in flight (admitted, not yet
+    /// completed).
+    pub quota: Option<u32>,
+    /// Max dispatch-pool workers one tenant may occupy concurrently
+    /// (bulkhead isolation). Enforced jointly with `quota`: the tighter
+    /// bound wins.
+    pub bulkhead: Option<u32>,
+    /// Evict a collection's kernel + WAL handles after this much
+    /// inactivity; rehydrated lazily from `spec.json`/`restored.snap` on
+    /// next touch.
+    pub idle_ttl: Option<Duration>,
+    /// Per-tenant snapshot-stream budget, bytes/second.
+    pub stream_bytes_per_sec: Option<u64>,
+}
+
+impl GovernorConfig {
+    /// Whether any knob is set. When false the manager installs no
+    /// admission hook and spawns no sweeper.
+    pub fn is_active(&self) -> bool {
+        self.rate_limit.is_some()
+            || self.quota.is_some()
+            || self.bulkhead.is_some()
+            || self.idle_ttl.is_some()
+            || self.stream_bytes_per_sec.is_some()
+    }
+}
+
+/// Millitokens granted per admitted request.
+const TOKENS_PER_REQUEST: u64 = 1000;
+/// Tenants with no in-flight work and no recent touch are dropped from
+/// the governor map after this long (bounds memory against scans that
+/// probe many bogus collection names). The idle TTL extends this if
+/// longer, so rate/stream state never outlives the collection itself.
+const TENANT_STATE_TTL: Duration = Duration::from_secs(60);
+
+/// Outcome of an admission check, decided before dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Admitted; the caller must pair this with [`Governor::release`]
+    /// once the request completes.
+    Admit,
+    /// Token bucket empty: `1600 rate_limited`, retry after roughly this
+    /// many milliseconds.
+    RateLimited {
+        /// Milliseconds until one full request token will have refilled.
+        retry_after_ms: u64,
+    },
+    /// In-flight cap (quota or bulkhead) reached: `1601 quota_exceeded`.
+    QuotaExceeded,
+}
+
+struct TenantState {
+    /// Token bucket, in millitokens.
+    tokens: u64,
+    last_refill: Instant,
+    /// Requests admitted and not yet released.
+    in_flight: u32,
+    /// Last admission/touch — drives governor-map pruning.
+    last_touch: Instant,
+    /// Outstanding stream debt, bytes.
+    stream_debt: u64,
+    stream_last: Instant,
+}
+
+impl TenantState {
+    fn new(now: Instant, burst: u64) -> Self {
+        Self {
+            tokens: burst,
+            last_refill: now,
+            in_flight: 0,
+            last_touch: now,
+            stream_debt: 0,
+            stream_last: now,
+        }
+    }
+}
+
+/// Front-end-local admission controller. One per [`CollectionManager`];
+/// shared (via `Arc`) with the admission hook, the stream pacers and the
+/// idle sweeper.
+///
+/// [`CollectionManager`]: crate::node::CollectionManager
+pub struct Governor {
+    config: GovernorConfig,
+    tenants: Mutex<BTreeMap<String, TenantState>>,
+    metrics: Arc<ServerMetrics>,
+}
+
+impl Governor {
+    pub fn new(config: GovernorConfig, metrics: Arc<ServerMetrics>) -> Self {
+        Self { config, tenants: Mutex::new(BTreeMap::new()), metrics }
+    }
+
+    pub fn config(&self) -> &GovernorConfig {
+        &self.config
+    }
+
+    /// Burst capacity in millitokens: one second of refill, min 1 request.
+    fn burst(&self) -> u64 {
+        let rate = u64::from(self.config.rate_limit.unwrap_or(0)).max(1);
+        rate * TOKENS_PER_REQUEST
+    }
+
+    /// The effective in-flight cap: the tighter of quota and bulkhead.
+    fn in_flight_cap(&self) -> Option<u32> {
+        match (self.config.quota, self.config.bulkhead) {
+            (Some(q), Some(b)) => Some(q.min(b)),
+            (Some(q), None) => Some(q),
+            (None, Some(b)) => Some(b),
+            (None, None) => None,
+        }
+    }
+
+    fn refill(&self, t: &mut TenantState, now: Instant) {
+        let Some(rate) = self.config.rate_limit else { return };
+        let elapsed_ms = now.saturating_duration_since(t.last_refill).as_millis() as u64;
+        if elapsed_ms == 0 {
+            return;
+        }
+        // rate req/s == rate millitokens/ms.
+        let refill = elapsed_ms.saturating_mul(u64::from(rate));
+        t.tokens = t.tokens.saturating_add(refill).min(self.burst());
+        t.last_refill = now;
+    }
+
+    /// Admission check for one request against `name`. On `Admit` the
+    /// tenant's in-flight counter is incremented — the caller MUST call
+    /// [`Governor::release`] when the request completes, success or not.
+    pub fn admit(&self, name: &str, now: Instant) -> Admission {
+        let mut tenants = self.tenants.lock().expect("governor poisoned");
+        let burst = self.burst();
+        let t = tenants
+            .entry(name.to_string())
+            .or_insert_with(|| TenantState::new(now, burst));
+        t.last_touch = now;
+        if let Some(rate) = self.config.rate_limit {
+            self.refill(t, now);
+            if t.tokens < TOKENS_PER_REQUEST {
+                let deficit = TOKENS_PER_REQUEST - t.tokens;
+                // deficit millitokens at `rate` millitokens/ms, rounded up.
+                let retry_after_ms = deficit.div_ceil(u64::from(rate).max(1)).max(1);
+                ServerMetrics::add(&self.metrics.requests_rate_limited, 1);
+                return Admission::RateLimited { retry_after_ms };
+            }
+        }
+        if let Some(cap) = self.in_flight_cap() {
+            if t.in_flight >= cap {
+                ServerMetrics::add(&self.metrics.requests_quota_rejected, 1);
+                return Admission::QuotaExceeded;
+            }
+        }
+        if self.config.rate_limit.is_some() {
+            t.tokens -= TOKENS_PER_REQUEST;
+        }
+        t.in_flight += 1;
+        Admission::Admit
+    }
+
+    /// Pair of a successful [`Governor::admit`]; decrements in-flight.
+    pub fn release(&self, name: &str) {
+        let mut tenants = self.tenants.lock().expect("governor poisoned");
+        if let Some(t) = tenants.get_mut(name) {
+            t.in_flight = t.in_flight.saturating_sub(1);
+        }
+    }
+
+    /// Record activity on `name` without an admission check (local API
+    /// calls, rehydration) so the idle sweeper sees it as recently used.
+    pub fn touch(&self, name: &str, now: Instant) {
+        let mut tenants = self.tenants.lock().expect("governor poisoned");
+        let burst = self.burst();
+        let t = tenants
+            .entry(name.to_string())
+            .or_insert_with(|| TenantState::new(now, burst));
+        t.last_touch = now;
+    }
+
+    /// How long `name` has been idle (no admissions/touches), if the
+    /// governor has ever seen it. `None` for unknown tenants.
+    pub fn idle_for(&self, name: &str, now: Instant) -> Option<Duration> {
+        let tenants = self.tenants.lock().expect("governor poisoned");
+        let t = tenants.get(name)?;
+        if t.in_flight > 0 {
+            return Some(Duration::ZERO);
+        }
+        Some(now.saturating_duration_since(t.last_touch))
+    }
+
+    /// Charge `bytes` of snapshot-stream transfer to `name`. Debt decays
+    /// at the configured bytes/sec before the charge is added.
+    pub fn stream_consume(&self, name: &str, bytes: u64, now: Instant) {
+        let Some(rate) = self.config.stream_bytes_per_sec else { return };
+        let mut tenants = self.tenants.lock().expect("governor poisoned");
+        let burst = self.burst();
+        let t = tenants
+            .entry(name.to_string())
+            .or_insert_with(|| TenantState::new(now, burst));
+        let elapsed_ms = now.saturating_duration_since(t.stream_last).as_millis() as u64;
+        let paid = elapsed_ms.saturating_mul(rate) / 1000;
+        t.stream_debt = t.stream_debt.saturating_sub(paid).saturating_add(bytes);
+        t.stream_last = now;
+        t.last_touch = now;
+    }
+
+    /// How long `name`'s stream must pause before producing its next
+    /// block, or `None` when it is within budget. Consulted by
+    /// [`crate::http::StreamingBody::defer_for`] before every refill.
+    pub fn stream_defer(&self, name: &str, now: Instant) -> Option<Duration> {
+        let rate = self.config.stream_bytes_per_sec?;
+        if rate == 0 {
+            return None;
+        }
+        let mut tenants = self.tenants.lock().expect("governor poisoned");
+        let t = tenants.get_mut(name)?;
+        let elapsed_ms = now.saturating_duration_since(t.stream_last).as_millis() as u64;
+        let paid = elapsed_ms.saturating_mul(rate) / 1000;
+        t.stream_debt = t.stream_debt.saturating_sub(paid);
+        t.stream_last = now;
+        if t.stream_debt == 0 {
+            return None;
+        }
+        // debt bytes at `rate` bytes/sec, in ms, rounded up; clamped so a
+        // big debt cannot park a connection for minutes.
+        let wait_ms = (t.stream_debt.saturating_mul(1000)).div_ceil(rate).max(1);
+        Some(Duration::from_millis(wait_ms.min(5_000)))
+    }
+
+    /// Drop per-tenant state that is idle (no in-flight work, no stream
+    /// debt) past `max(idle_ttl, TENANT_STATE_TTL)` — bounds governor
+    /// memory against bogus-name scans without forgetting state the idle
+    /// sweeper still needs.
+    pub fn prune(&self, now: Instant) {
+        let ttl = self.config.idle_ttl.unwrap_or(Duration::ZERO).max(TENANT_STATE_TTL);
+        let mut tenants = self.tenants.lock().expect("governor poisoned");
+        tenants.retain(|_, t| {
+            t.in_flight > 0
+                || t.stream_debt > 0
+                || now.saturating_duration_since(t.last_touch) <= ttl
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn governor(config: GovernorConfig) -> Governor {
+        Governor::new(config, Arc::new(ServerMetrics::default()))
+    }
+
+    #[test]
+    fn token_bucket_admits_burst_then_rate_limits_with_honest_retry() {
+        let g = governor(GovernorConfig {
+            rate_limit: Some(2), // burst = 2 requests
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        assert_eq!(g.admit("a", t0), Admission::Admit);
+        assert_eq!(g.admit("a", t0), Admission::Admit);
+        match g.admit("a", t0) {
+            Admission::RateLimited { retry_after_ms } => {
+                // a full token at 2 req/s (2 millitokens/ms) is 500ms away
+                assert_eq!(retry_after_ms, 500);
+            }
+            other => panic!("expected RateLimited, got {other:?}"),
+        }
+        // metrics recorded the rejection
+        assert_eq!(
+            g.metrics.requests_rate_limited.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        // after 500ms one token has refilled
+        assert_eq!(g.admit("a", t0 + Duration::from_millis(500)), Admission::Admit);
+        // …and the bucket never exceeds burst even after a long sleep
+        let later = t0 + Duration::from_secs(3600);
+        assert_eq!(g.admit("a", later), Admission::Admit);
+        assert_eq!(g.admit("a", later), Admission::Admit);
+        assert!(matches!(g.admit("a", later), Admission::RateLimited { .. }));
+    }
+
+    #[test]
+    fn tenants_have_independent_buckets() {
+        let g = governor(GovernorConfig { rate_limit: Some(1), ..Default::default() });
+        let t0 = Instant::now();
+        assert_eq!(g.admit("a", t0), Admission::Admit);
+        assert!(matches!(g.admit("a", t0), Admission::RateLimited { .. }));
+        // tenant b is untouched by a's exhaustion
+        assert_eq!(g.admit("b", t0), Admission::Admit);
+    }
+
+    #[test]
+    fn in_flight_cap_is_min_of_quota_and_bulkhead_and_release_restores() {
+        let g = governor(GovernorConfig {
+            quota: Some(5),
+            bulkhead: Some(2),
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        assert_eq!(g.admit("a", t0), Admission::Admit);
+        assert_eq!(g.admit("a", t0), Admission::Admit);
+        assert_eq!(g.admit("a", t0), Admission::QuotaExceeded);
+        assert_eq!(
+            g.metrics.requests_quota_rejected.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        g.release("a");
+        assert_eq!(g.admit("a", t0), Admission::Admit);
+    }
+
+    #[test]
+    fn stream_budget_defers_proportionally_to_debt() {
+        let g = governor(GovernorConfig {
+            stream_bytes_per_sec: Some(1000),
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        assert_eq!(g.stream_defer("a", t0), None, "no debt yet");
+        g.stream_consume("a", 500, t0);
+        let wait = g.stream_defer("a", t0).expect("500B debt at 1000B/s");
+        assert_eq!(wait, Duration::from_millis(500));
+        // after the debt has decayed the stream resumes
+        assert_eq!(g.stream_defer("a", t0 + Duration::from_millis(500)), None);
+    }
+
+    #[test]
+    fn prune_drops_idle_tenants_but_keeps_in_flight_ones() {
+        let g = governor(GovernorConfig { quota: Some(8), ..Default::default() });
+        let t0 = Instant::now();
+        assert_eq!(g.admit("busy", t0), Admission::Admit);
+        g.touch("idle", t0);
+        g.prune(t0 + Duration::from_secs(120));
+        let tenants = g.tenants.lock().unwrap();
+        assert!(tenants.contains_key("busy"), "in-flight tenant must survive prune");
+        assert!(!tenants.contains_key("idle"), "idle tenant should be pruned");
+    }
+
+    #[test]
+    fn inactive_config_short_circuits() {
+        assert!(!GovernorConfig::default().is_active());
+        assert!(GovernorConfig { rate_limit: Some(1), ..Default::default() }.is_active());
+        assert!(
+            GovernorConfig { idle_ttl: Some(Duration::from_secs(1)), ..Default::default() }
+                .is_active()
+        );
+        // no knobs: everything admits and nothing is recorded
+        let g = governor(GovernorConfig::default());
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            assert_eq!(g.admit("a", t0), Admission::Admit);
+        }
+    }
+}

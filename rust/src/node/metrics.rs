@@ -103,6 +103,10 @@ impl Metrics {
             ("stream_bytes_streamed", g(&self.http.stream_bytes_streamed)),
             ("stream_chunks_verified", g(&self.http.stream_chunks_verified)),
             ("streams_in_flight", g(&self.http.streams_in_flight)),
+            ("requests_rate_limited", g(&self.http.requests_rate_limited)),
+            ("requests_quota_rejected", g(&self.http.requests_quota_rejected)),
+            ("collections_evicted", g(&self.http.collections_evicted)),
+            ("collections_rehydrated", g(&self.http.collections_rehydrated)),
         ])
     }
 }

@@ -61,6 +61,7 @@
 
 pub mod batcher;
 pub mod collections;
+pub mod governor;
 pub mod metrics;
 
 pub use batcher::{BatcherHandle, EmbedBackend, EmbedBatcher};
@@ -68,6 +69,7 @@ pub use collections::{
     route_collections, serve_collections, CollectionManager, CollectionSpec, DEFAULT_COLLECTION,
     ManagerConfig,
 };
+pub use governor::{Admission, Governor, GovernorConfig};
 pub use metrics::Metrics;
 
 use crate::http::{Handler, Request, Response, Server};

@@ -31,7 +31,13 @@ use valori::state::{Command, Kernel, KernelConfig, ShardedKernel};
 fn manager_with(spec: CollectionSpec) -> Arc<CollectionManager> {
     Arc::new(
         CollectionManager::new(
-            ManagerConfig { spec, workers: 4, data_dir: None, default_wal: None },
+            ManagerConfig {
+                spec,
+                workers: 4,
+                data_dir: None,
+                default_wal: None,
+                governor: Default::default(),
+            },
             None,
         )
         .unwrap(),

@@ -1,0 +1,439 @@
+//! Integration: per-tenant resource governance (ISSUE 6).
+//!
+//! 1. Admission control lives strictly *outside* the state machine: a
+//!    throttled-and-retried workload replays to a root hash
+//!    bit-identical to an unthrottled sequential mirror, and the 1600
+//!    envelope carries a usable `retry_after_ms`.
+//! 2. Rate-limit and quota rejections surface in the right shape on
+//!    both API versions (typed `/v2` envelope, legacy `/v1` object) and
+//!    never govern the health routes.
+//! 3. Idle-collection eviction closes a durable tenant and rehydrates
+//!    it lazily on next touch with `/v2/hash` stable throughout.
+//! 4. Restore ingest for distinct tenants proceeds concurrently, and
+//!    abandoned restore sessions are reaped by the idle sweep.
+//! 5. Per-tenant transfer caps pace a snapshot stream without changing
+//!    a single byte of it.
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+use valori::api::ApiCode;
+use valori::http::{client, Request};
+use valori::json::{parse, Json};
+use valori::node::{
+    route_collections, serve_collections, Admission, CollectionManager, CollectionSpec,
+    GovernorConfig, ManagerConfig,
+};
+use valori::state::{Command, KernelConfig, ShardedKernel};
+
+fn spec(dim: usize, shards: u32) -> CollectionSpec {
+    CollectionSpec { dim, shards, flat: true }
+}
+
+fn governed(
+    spec: CollectionSpec,
+    governor: GovernorConfig,
+    data_dir: Option<std::path::PathBuf>,
+) -> Arc<CollectionManager> {
+    Arc::new(
+        CollectionManager::new(
+            ManagerConfig { spec, workers: 2, data_dir, default_wal: None, governor },
+            None,
+        )
+        .unwrap(),
+    )
+}
+
+fn vec_for(salt: u64, i: u64, dim: usize) -> Vec<f32> {
+    (0..dim as u64)
+        .map(|j| (((salt * 7919 + i * dim as u64 + j) as f32) * 0.0137).sin() * 0.8)
+        .collect()
+}
+
+fn insert_body(id: u64, v: &[f32]) -> Json {
+    Json::object(vec![
+        ("id", Json::Int(id as i64)),
+        ("vector", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
+    ])
+}
+
+/// Route a request in-process (bypasses the front end — and therefore
+/// admission; used where governance itself is not under test).
+fn send(m: &CollectionManager, method: &str, target: &str, body: Vec<u8>) -> (u16, Json) {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    let req = Request { method: method.into(), path, query, headers: Default::default(), body };
+    let resp = route_collections(m, req);
+    let json = std::str::from_utf8(&resp.body)
+        .ok()
+        .and_then(|t| parse(t).ok())
+        .unwrap_or(Json::Null);
+    (resp.status, json)
+}
+
+/// Drain a snapshot route's streaming response into one byte vector.
+fn snapshot_stream_via_route(m: &CollectionManager, target: &str) -> Vec<u8> {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    let req = Request {
+        method: "GET".into(),
+        path,
+        query,
+        headers: Default::default(),
+        body: Vec::new(),
+    };
+    let resp = route_collections(m, req);
+    assert_eq!(resp.status, 200);
+    let stream = resp.stream.expect("snapshot responses stream their body");
+    let mut out = Vec::new();
+    while let Some(block) = stream.next_block() {
+        out.extend_from_slice(&block);
+    }
+    out
+}
+
+/// POST over a fresh connection, retrying 429s with the server-provided
+/// backoff until admitted. Returns how many throttles were absorbed and
+/// whether every 1600 rejection carried a positive `retry_after_ms`.
+fn post_until_admitted(addr: &std::net::SocketAddr, path: &str, body: &Json) -> (u64, bool) {
+    let mut throttles = 0u64;
+    loop {
+        let (st, resp) = client::post_json(addr, path, body).unwrap();
+        if st == 200 {
+            return (throttles, true);
+        }
+        assert_eq!(st, 429, "unexpected rejection: {resp}");
+        throttles += 1;
+        let err = resp.get("error");
+        assert_eq!(err.get("code").as_i64(), Some(1600), "{resp}");
+        let ms = err.get("retry_after_ms").as_u64();
+        let Some(ms) = ms else {
+            return (throttles, false);
+        };
+        assert!(ms >= 1, "retry_after_ms must be at least 1ms");
+        std::thread::sleep(Duration::from_millis(ms.clamp(1, 1000)));
+    }
+}
+
+#[test]
+fn throttled_and_retried_workload_replays_bit_identical() {
+    // A rate small enough that a burst of 60 inserts must absorb many
+    // 429s, large enough that the test converges in a couple of seconds.
+    let manager = governed(
+        spec(4, 2),
+        GovernorConfig { rate_limit: Some(30), ..Default::default() },
+        None,
+    );
+    let server = serve_collections(Arc::clone(&manager), "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr();
+
+    // The unthrottled reference: the same commands, applied sequentially
+    // with no admission control anywhere near them.
+    let mut mirror = ShardedKernel::new(KernelConfig::default_q16(4).with_flat_index(), 2);
+    let mut throttled = 0u64;
+    for i in 0..60u64 {
+        let v = vec_for(5, i, 4);
+        let (absorbed, retry_after_present) =
+            post_until_admitted(&addr, "/v2/collections/default/insert", &insert_body(i, &v));
+        throttled += absorbed;
+        assert!(retry_after_present, "every 1600 envelope must carry retry_after_ms");
+        mirror.apply(Command::Insert { id: i, vector: v }).unwrap();
+    }
+    assert!(throttled >= 1, "workload was never throttled — the rate limiter is not engaging");
+    assert!(
+        manager.http_metrics().requests_rate_limited.load(std::sync::atomic::Ordering::Relaxed)
+            >= throttled
+    );
+
+    // Throttling changed the *timing* of the workload, never its bits:
+    // rejections are not logged, not hashed, and not replayed.
+    let root = manager.get("default").unwrap().with_sharded(|sk| sk.root_hash());
+    assert_eq!(
+        root,
+        mirror.root_hash(),
+        "throttled-and-retried workload diverged from the unthrottled mirror"
+    );
+    assert_eq!(
+        manager.get("default").unwrap().with_sharded(|sk| sk.len()),
+        60,
+        "every retried command must land exactly once"
+    );
+    server.stop();
+}
+
+#[test]
+fn quota_rejections_surface_on_both_api_versions() {
+    let manager = governed(
+        spec(4, 1),
+        GovernorConfig { quota: Some(1), ..Default::default() },
+        None,
+    );
+    let server = serve_collections(Arc::clone(&manager), "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr();
+
+    // Pin the single in-flight slot from the outside, exactly as a
+    // stalled admitted request would.
+    assert_eq!(manager.governor().admit("default", Instant::now()), Admission::Admit);
+
+    // /v2: typed 1601 envelope, no retry_after_ms (the client must wait
+    // for capacity, not a clock).
+    let body = insert_body(1, &vec_for(1, 1, 4));
+    let (st, resp) = client::post_json(&addr, "/v2/collections/default/insert", &body).unwrap();
+    assert_eq!(st, 429, "{resp}");
+    assert_eq!(resp.get("error").get("code").as_i64(), Some(1601));
+    assert_eq!(resp.get("error").get("name").as_str(), Some("quota_exceeded"));
+    assert!(resp.get("error").get("retry_after_ms").as_u64().is_none());
+
+    // /v1: the legacy ad-hoc shape — a plain string error, no taxonomy.
+    let (st, resp) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+    assert_eq!(st, 429, "{resp}");
+    assert!(resp.get("error").as_str().is_some(), "{resp}");
+    assert!(resp.get("error").get("code").as_i64().is_none());
+
+    // Health stays reachable while a tenant is saturated.
+    for path in ["/v1/health", "/v2/health"] {
+        let (st, _) = client::get_json(&addr, path).unwrap();
+        assert_eq!(st, 200, "{path} must never be governed");
+    }
+    assert!(
+        manager.http_metrics().requests_quota_rejected.load(std::sync::atomic::Ordering::Relaxed)
+            >= 2
+    );
+
+    // Releasing the slot readmits immediately — no token clock involved.
+    manager.governor().release("default");
+    let (st, resp) = client::post_json(&addr, "/v2/collections/default/insert", &body).unwrap();
+    assert_eq!(st, 200, "{resp}");
+    server.stop();
+}
+
+#[test]
+fn rate_limit_rejection_carries_backoff_on_the_legacy_surface() {
+    let manager = governed(
+        spec(4, 1),
+        GovernorConfig { rate_limit: Some(1), ..Default::default() },
+        None,
+    );
+    let server = serve_collections(Arc::clone(&manager), "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr();
+
+    // Burst is one request at rate 1/s: the first is admitted…
+    let body = insert_body(1, &vec_for(2, 1, 4));
+    let (st, resp) = client::post_json(&addr, "/v1/insert", &body).unwrap();
+    assert_eq!(st, 200, "{resp}");
+    // …and an immediate second one is throttled with a legacy-shaped
+    // body that still tells the client how long to back off.
+    let (st, resp) = client::get_json(&addr, "/v1/hash").unwrap();
+    assert_eq!(st, 429, "{resp}");
+    assert!(resp.get("error").as_str().is_some(), "{resp}");
+    let ms = resp.get("retry_after_ms").as_u64().expect("legacy 429 carries retry_after_ms");
+    assert!((1..=1000).contains(&ms), "rate 1/s deficit is at most one second, got {ms}");
+    // Honouring the backoff readmits.
+    std::thread::sleep(Duration::from_millis(ms + 50));
+    let (st, resp) = client::get_json(&addr, "/v1/hash").unwrap();
+    assert_eq!(st, 200, "{resp}");
+    server.stop();
+}
+
+#[test]
+fn idle_tenant_evicts_then_rehydrates_with_root_intact() {
+    let dir = std::env::temp_dir().join(format!("valori_governance_evict_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let manager = governed(
+        spec(4, 2),
+        GovernorConfig { idle_ttl: Some(Duration::from_secs(1)), ..Default::default() },
+        Some(dir.clone()),
+    );
+    manager.create("t", spec(4, 2)).unwrap();
+    let root_before = {
+        let state = manager.get("t").unwrap();
+        for i in 0..25u64 {
+            state.apply(Command::insert(i, vec![0.3, i as f32 * 0.02, 0.0, 0.0])).unwrap();
+        }
+        state.with_sharded(|sk| sk.root_hash())
+        // the Arc drops here: the WAL handle must not be shared with a
+        // later rehydration replay
+    };
+    let combined_before = manager.combined_root();
+    let (st, hash_before) = send(&manager, "GET", "/v2/hash", Vec::new());
+    assert_eq!(st, 200);
+
+    // Drive the sweep with a clock far past the TTL.
+    let gauge = |c: &std::sync::atomic::AtomicU64| c.load(std::sync::atomic::Ordering::Relaxed);
+    manager.sweep_idle(Instant::now() + Duration::from_secs(120));
+    assert_eq!(gauge(&manager.http_metrics().collections_evicted), 1, "only 't' evicts");
+    assert_eq!(gauge(&manager.http_metrics().collections_rehydrated), 0);
+
+    // Cold state is externally invisible: the tenant still lists, and
+    // the combined root is served from the cached per-tenant root.
+    assert!(manager.names().contains(&"t".to_string()));
+    assert_eq!(manager.len(), 2);
+    assert_eq!(manager.combined_root(), combined_before);
+    let (st, hash_cold) = send(&manager, "GET", "/v2/hash", Vec::new());
+    assert_eq!(st, 200);
+    assert_eq!(hash_cold, hash_before, "/v2/hash must be stable across eviction");
+
+    // `default` is never evicted, no matter how idle.
+    manager.sweep_idle(Instant::now() + Duration::from_secs(240));
+    assert_eq!(gauge(&manager.http_metrics().collections_evicted), 1);
+
+    // First touch rehydrates from spec.json + WAL replay, bit-exact.
+    let state = manager.get("t").expect("cold tenant rehydrates on touch");
+    assert_eq!(gauge(&manager.http_metrics().collections_rehydrated), 1);
+    assert_eq!(state.with_sharded(|sk| sk.root_hash()), root_before);
+    assert_eq!(state.with_sharded(|sk| sk.len()), 25);
+    assert_eq!(manager.combined_root(), combined_before);
+
+    // The rehydrated tenant is fully live: mutations land in its WAL.
+    state.apply(Command::insert(1000, vec![0.9, 0.9, 0.9, 0.9])).unwrap();
+    assert_ne!(manager.combined_root(), combined_before);
+    drop(state);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_restores_for_distinct_tenants_complete_independently() {
+    // Two differently-shaped sources…
+    let sources: Vec<(String, Vec<u8>, u64)> = [("alpha", 7u64, 40u64), ("beta", 13, 70)]
+        .into_iter()
+        .map(|(name, salt, n)| {
+            let src = governed(spec(4, 2), GovernorConfig::default(), None);
+            let state = src.get("default").unwrap();
+            for i in 0..n {
+                state.apply(Command::insert(i, vec_for(salt, i, 4))).unwrap();
+            }
+            let stream =
+                snapshot_stream_via_route(&src, "/v2/collections/default/snapshot?chunk=512");
+            let root = state.with_sharded(|sk| sk.root_hash());
+            (name.to_string(), stream, root)
+        })
+        .collect();
+
+    // …restored into one manager from two threads at once, in small
+    // windows, with a barrier per window to force genuine interleaving.
+    let dst = governed(spec(4, 2), GovernorConfig::default(), None);
+    let windows = sources.iter().map(|(_, stream, _)| stream.chunks(1500).count()).max().unwrap();
+    let rendezvous = Barrier::new(sources.len());
+    std::thread::scope(|s| {
+        let rendezvous = &rendezvous;
+        let dst = &dst;
+        for (name, stream, _) in &sources {
+            s.spawn(move || {
+                let mut offset = 0usize;
+                let mut complete = false;
+                for round in 0..windows {
+                    // every thread hits every rendezvous, fed or not, so
+                    // the windows really overlap instead of serializing
+                    rendezvous.wait();
+                    let window = &stream[offset..(offset + 1500).min(stream.len())];
+                    if window.is_empty() {
+                        continue;
+                    }
+                    let body = dst
+                        .restore_ingest(name, offset as u64, window)
+                        .unwrap_or_else(|e| panic!("{name} window {round}: {e:?}"));
+                    offset += window.len();
+                    complete = body.get("complete").as_bool() == Some(true);
+                }
+                assert!(complete, "{name} never completed");
+            });
+        }
+    });
+    for (name, _, root) in &sources {
+        assert_eq!(
+            dst.get(name).unwrap().with_sharded(|sk| sk.root_hash()),
+            *root,
+            "{name} restored with the wrong root"
+        );
+    }
+    assert_eq!(dst.http_metrics().streams_in_flight.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+#[test]
+fn abandoned_restore_session_is_reaped_by_the_idle_sweep() {
+    let src = governed(spec(4, 1), GovernorConfig::default(), None);
+    let stream = snapshot_stream_via_route(&src, "/v2/collections/default/snapshot");
+    let m = governed(spec(4, 1), GovernorConfig::default(), None);
+
+    // A clean-but-incomplete prefix leaves a live session behind…
+    let body = m.restore_ingest("ghost", 0, &stream[..16]).unwrap();
+    assert_eq!(body.get("complete").as_bool(), Some(false));
+    let gauge = || m.http_metrics().streams_in_flight.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(gauge(), 1);
+
+    // …which the idle sweep reaps once it ages past the session TTL.
+    m.sweep_idle(Instant::now() + Duration::from_secs(601));
+    assert_eq!(gauge(), 0, "abandoned session must release the in-flight gauge");
+
+    // The reaped session is really gone: its continuation offset is
+    // refused, and the name is free for a fresh offset-0 transfer.
+    let err = m.restore_ingest("ghost", 16, &stream[16..]).unwrap_err();
+    assert_eq!(err.code, ApiCode::StreamOffsetMismatch);
+    let body = m.restore_ingest("ghost", 0, &stream).unwrap();
+    assert_eq!(body.get("complete").as_bool(), Some(true));
+    assert_eq!(gauge(), 0);
+}
+
+#[test]
+fn paced_snapshot_stream_is_byte_identical_and_slower() {
+    const RATE: u64 = 64 * 1024; // bytes/sec
+
+    // Identical contents behind a paced and an unpaced manager.
+    let fill = |m: &CollectionManager| {
+        let state = m.get("default").unwrap();
+        for i in 0..2000u64 {
+            state.apply(Command::insert(i, vec_for(3, i, 8))).unwrap();
+        }
+    };
+    let plain = governed(spec(8, 2), GovernorConfig::default(), None);
+    fill(&plain);
+    // The chunk size is part of the wire framing — pin it so the paced
+    // and unpaced streams are comparable byte for byte.
+    let reference =
+        snapshot_stream_via_route(&plain, "/v2/collections/default/snapshot?chunk=8192");
+
+    let paced = governed(
+        spec(8, 2),
+        GovernorConfig { stream_bytes_per_sec: Some(RATE), ..Default::default() },
+        None,
+    );
+    fill(&paced);
+    let server = serve_collections(Arc::clone(&paced), "127.0.0.1:0", 2).unwrap();
+
+    // Fetch over a real socket so the front end's pacing engages.
+    let mut fetched = Vec::new();
+    let started = Instant::now();
+    let (status, total, _) = {
+        let mut conn = client::Connection::connect(&server.addr()).unwrap();
+        let mut sink = |block: &[u8]| -> std::io::Result<()> {
+            fetched.extend_from_slice(block);
+            Ok(())
+        };
+        conn.request_streaming("GET", "/v2/collections/default/snapshot?chunk=8192", &[], &mut sink)
+            .unwrap()
+    };
+    let elapsed = started.elapsed();
+    assert_eq!(status, 200);
+    assert_eq!(total, fetched.len() as u64);
+
+    // Pacing changes only when the bytes arrive, never which bytes.
+    assert!(
+        fetched == reference,
+        "paced stream diverged from the unpaced stream ({} vs {} bytes)",
+        fetched.len(),
+        reference.len()
+    );
+    // The transfer cap actually bit: a very generous lower bound (a
+    // quarter of the ideal schedule) keeps this robust on slow CI while
+    // still catching a pacer that never defers.
+    let floor = Duration::from_millis(fetched.len() as u64 * 1000 / RATE / 4);
+    assert!(
+        elapsed >= floor,
+        "{} bytes at {RATE} B/s finished in {elapsed:?} (floor {floor:?}) — pacing is off",
+        fetched.len()
+    );
+    server.stop();
+}

@@ -218,6 +218,70 @@ fn connection_cap_rejects_with_503() {
 }
 
 #[test]
+fn over_cap_rejection_counts_rejected_not_accepted() {
+    let config = ServerConfig { workers: 2, max_connections: 4, ..Default::default() };
+    let metrics = Arc::clone(&config.metrics);
+    let server = Server::start_with("127.0.0.1:0", config, echo_handler()).unwrap();
+    let addr = server.addr();
+    let mut held: Vec<client::Connection> = Vec::new();
+    for _ in 0..4 {
+        let mut c = client::Connection::connect(&addr).unwrap();
+        let (status, _) = c.request("POST", "/echo", b"hold").unwrap();
+        assert_eq!(status, 200);
+        held.push(c);
+    }
+    // Two over-cap arrivals: one reads promptly, one drags its feet.
+    // Both must receive the complete 503 and then EOF — the rejection is
+    // delivered through the nonblocking write path by a short-lived
+    // loop-owned connection, not a blocking write on the event loop.
+    let prompt = TcpStream::connect(addr).unwrap();
+    prompt.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let slow = TcpStream::connect(addr).unwrap();
+    slow.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    for stream in [prompt, slow] {
+        let mut reader = BufReader::new(stream);
+        let (status, _) = read_response(&mut reader).unwrap();
+        assert_eq!(status, 503);
+        let mut rest = Vec::new();
+        reader.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "over-cap rejection must close the connection");
+    }
+    // The bug this pins: rejections used to increment
+    // `connections_accepted`, silently shrinking the effective cap and
+    // corrupting the accept/reject accounting.
+    assert_eq!(ServerMetrics::get(&metrics.connections_accepted), 4);
+    assert!(ServerMetrics::get(&metrics.connections_rejected) >= 2);
+    // The rejection slots drain back out of the open gauge (bounded
+    // wait: drop_conn runs just after the fd close we observed as EOF).
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while ServerMetrics::get(&metrics.connections_open) != 4 {
+        assert!(std::time::Instant::now() < deadline, "open gauge stuck");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // ...and the cap still admits exactly as many as configured: closing
+    // one held connection frees a slot for a fresh client.
+    drop(held.pop());
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut c = client::Connection::connect(&addr).unwrap();
+        match c.request("POST", "/echo", b"fresh") {
+            Ok((200, body)) => {
+                assert_eq!(body, b"fresh");
+                break;
+            }
+            _ => {
+                // the reactor may not have reaped the closed conn yet
+                assert!(std::time::Instant::now() < deadline, "freed slot never reusable");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    drop(held);
+    server.stop();
+}
+
+#[test]
 fn keep_alive_request_cap_closes_then_client_reconnects() {
     let config = ServerConfig { workers: 2, max_requests_per_conn: 5, ..Default::default() };
     let metrics = Arc::clone(&config.metrics);
