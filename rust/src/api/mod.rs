@@ -57,6 +57,24 @@
 //! `retry_after_ms` detail field (the only taxonomy error with an extra
 //! key).
 //!
+//! ## Collection specs and the quantized scan tier
+//!
+//! `PUT /v2/collections/{name}` accepts a spec body of `dim`, `shards`,
+//! `index` (`"flat"` | `"hnsw"`), `quant` (`"none"` | `"sq8"`) and
+//! `overscan` (SQ8 candidate multiplier, integer >= 1, only with
+//! `"quant": "sq8"`). The i8 codes are *derived* state — rebuilt from
+//! the exact vectors on decode, never serialized — so query payloads are
+//! bit-identical to an unquantized collection fed the same commands, and
+//! snapshots grow only by the fixed-size spec (STATE_VERSION 3), never
+//! by the code arena. The spec is configuration, though: like `index` or
+//! `shards`, enabling it changes the collection's state root. Quant-free
+//! collections keep their pre-quantization (version 2) bytes and roots.
+//! `GET /v2/collections/{name}/stats` reports its footprint under
+//! `memory_bytes` (`exact_arena` / `code_arena` / `total`), plus the
+//! per-tenant `governor` block (`available_tokens`, `in_flight`,
+//! `rate_limited`, `quota_rejected`, `enabled`) and an `evicted` flag
+//! (true when this request itself rehydrated a cold tenant).
+//!
 //! ## Typed commands
 //!
 //! [`ApiRequest`] is the parsed, validated form of a `/v2` mutation or

@@ -15,7 +15,7 @@
 use crate::bench::{bench, BenchConfig, Report, Stats};
 use crate::distance::{Metric, Scalar};
 use crate::hash::splitmix64;
-use crate::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
+use crate::index::{FlatIndex, Hnsw, HnswParams, QuantSpec, VectorIndex, SQ8_DEFAULT_OVERSCAN};
 use crate::json::Json;
 use crate::state::{CanonCommand, KernelConfig, ShardedKernel};
 
@@ -55,7 +55,15 @@ impl SuiteConfig {
 
     /// CI smoke variant: same shape, two orders of magnitude less work.
     pub fn quick() -> Self {
-        Self { n: 5_000, bench: BenchConfig::quick(), ..Self::full() }
+        Self::full().quickened()
+    }
+
+    /// Shrink *this* config to its smoke variant: a tenth of the corpus
+    /// (floor 100) and the quick timing harness. Applied after CLI
+    /// overrides so `--quick --n 2000` means "a 200-vector smoke run",
+    /// not "ignore --n" (every row derives from the quickened `n`).
+    pub fn quickened(self) -> Self {
+        Self { n: (self.n / 10).max(100), bench: BenchConfig::quick(), ..self }
     }
 }
 
@@ -89,6 +97,19 @@ impl SuiteResult {
     pub fn flat_speedup_p50(&self) -> Option<f64> {
         let new = self.row("flat_search")?.stats.p50_ns;
         let old = self.row("flat_search_prerefactor_reference")?.stats.p50_ns;
+        if new > 0.0 {
+            Some(old / new)
+        } else {
+            None
+        }
+    }
+
+    /// p50 speedup of the SQ8 quantized scan (default overscan) over the
+    /// exact flat search on the same corpus — the quantization tier's
+    /// acceptance metric.
+    pub fn sq8_speedup_p50(&self) -> Option<f64> {
+        let new = self.row("sq8_scan")?.stats.p50_ns;
+        let old = self.row("flat_search")?.stats.p50_ns;
         if new > 0.0 {
             Some(old / new)
         } else {
@@ -189,6 +210,45 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
             stats,
         });
         report.add("flat_search_prerefactor_reference", stats);
+
+        // --- SQ8 quantized scan (blocked i8 phase-1 + exact re-rank) ----
+        // Correctness first, at *covering* overscan (overscan·k ≥ n):
+        // there the two-phase result is provably bit-identical to the
+        // exact scan, so any divergence is a kernel bug, not recall loss.
+        let covering = (cfg.n as u32).div_ceil(cfg.k.max(1) as u32) + 1;
+        let mut prove: FlatIndex<i32> =
+            FlatIndex::with_quant(cfg.dim, Metric::L2, QuantSpec::Sq8 { overscan: covering });
+        for (i, v) in corpus.iter().enumerate() {
+            prove.insert(i as u64, v.clone());
+        }
+        for q in &qs {
+            let two_phase: Vec<(i64, u64)> = prove
+                .search_sq8_two_phase(q, cfg.k)
+                .expect("sq8 bench index is quantized")
+                .into_iter()
+                .map(|h| (h.dist, h.id))
+                .collect();
+            let exact: Vec<(i64, u64)> =
+                flat.search(q, cfg.k).into_iter().map(|h| (h.dist, h.id)).collect();
+            assert_eq!(two_phase, exact, "sq8 two-phase diverged from exact scan");
+        }
+        drop(prove);
+        // Then time the production path at the default overscan.
+        let mut sq8: FlatIndex<i32> = FlatIndex::with_quant(
+            cfg.dim,
+            Metric::L2,
+            QuantSpec::Sq8 { overscan: SQ8_DEFAULT_OVERSCAN },
+        );
+        for (i, v) in corpus.iter().enumerate() {
+            sq8.insert(i as u64, v.clone());
+        }
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % qs.len();
+            sq8.search(&qs[qi], cfg.k)
+        });
+        rows.push(SuiteRow { name: "sq8_scan".into(), n: cfg.n, stats });
+        report.add("sq8_scan", stats);
     }
 
     // --- HNSW search (graph read path over the arena store) -------------
@@ -297,7 +357,7 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
         use crate::node::collections::{
             serve_collections, CollectionManager, CollectionSpec, ManagerConfig,
         };
-        let spec = CollectionSpec { dim: cfg.dim, shards: 1, flat: true };
+        let spec = CollectionSpec { dim: cfg.dim, shards: 1, flat: true, quant: QuantSpec::None };
         let manager = std::sync::Arc::new(
             CollectionManager::new(
                 ManagerConfig {
@@ -400,6 +460,9 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
     if let Some(speedup) = result.flat_speedup_p50() {
         println!("  note: flat search p50 speedup vs pre-refactor reference: {speedup:.2}x");
     }
+    if let Some(speedup) = result.sq8_speedup_p50() {
+        println!("  note: sq8 scan p50 speedup vs exact flat search: {speedup:.2}x");
+    }
     result
 }
 
@@ -434,6 +497,9 @@ pub fn suite_json(r: &SuiteResult) -> Json {
     ];
     if let Some(speedup) = r.flat_speedup_p50() {
         fields.push(("flat_speedup_p50_vs_prerefactor", Json::Float(speedup)));
+    }
+    if let Some(speedup) = r.sq8_speedup_p50() {
+        fields.push(("sq8_speedup_p50_vs_flat", Json::Float(speedup)));
     }
     Json::object(fields)
 }
@@ -475,6 +541,7 @@ mod tests {
         for name in [
             "flat_search",
             "flat_search_prerefactor_reference",
+            "sq8_scan",
             "hnsw_search",
             "sharded_search",
             "batch_upsert",
@@ -486,9 +553,11 @@ mod tests {
             assert!(r.row(name).unwrap().stats.iters >= 3);
         }
         assert!(r.flat_speedup_p50().is_some());
+        assert!(r.sq8_speedup_p50().is_some());
         let json = suite_json(&r).to_string();
         let parsed = crate::json::parse(&json).expect("bench json parses");
         assert_eq!(parsed.get("suite").as_str(), Some("valori-search"));
-        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(8));
+        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(9));
+        assert!(parsed.get("sq8_speedup_p50_vs_flat").as_f64().is_some());
     }
 }

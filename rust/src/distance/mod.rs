@@ -115,6 +115,17 @@ pub trait Scalar: Copy + Debug + PartialEq + 'static {
     /// Distance rendered as a real number for reporting/JSON (never used
     /// for ordering).
     fn dist_to_f64(d: Self::Dist) -> f64;
+
+    /// SQ8 quantization hook: the Q16.16 raw value of this scalar, or
+    /// `None` for scalar types the quantized scan tier does not cover
+    /// (their code arenas stay empty and search always takes the exact
+    /// path). Only `i32` — the Q16.16 representation the boundary
+    /// contract bounds — opts in; quantizing Q32.32 or the f32 baseline
+    /// would need a different scale derivation.
+    #[inline]
+    fn as_q16_raw(self) -> Option<i32> {
+        None
+    }
 }
 
 /// Q16.16 raw scalars: wide i64 distances (Q32.32). Integer math only.
@@ -162,6 +173,11 @@ impl Scalar for i32 {
     fn dist_to_f64(d: i64) -> f64 {
         // Q32.32 wide value -> real
         d as f64 / 4294967296.0
+    }
+
+    #[inline]
+    fn as_q16_raw(self) -> Option<i32> {
+        Some(self)
     }
 }
 

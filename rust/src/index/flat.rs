@@ -1,10 +1,22 @@
-//! Exact (brute-force) index.
+//! Exact (brute-force) index, with an optional deterministic SQ8 tier.
 //!
 //! Ground truth for the HNSW consistency tests and the recall experiments
 //! (Table 3 computes Recall@k against exact top-k), and a perfectly usable
 //! index in its own right for small collections. Determinism is trivial:
 //! one pass in slot order, sort by `(dist, id)`.
+//!
+//! With a [`QuantSpec::Sq8`] config the index additionally maintains an
+//! i8 *code arena* parallel to the exact arena and answers queries in two
+//! phases: a blocked i8×i8→i32 scan selects `k * overscan` candidates
+//! under the total order `(approx_dist, id)`, then an exact Q16.16
+//! re-rank of only those candidates under the existing `(dist, id)` order
+//! picks the final k. Codes are **derived state** — a pure function of
+//! the stored vectors (see [`super::quant`]) — rebuilt on decode and
+//! never serialized, so snapshot bytes are unchanged. When
+//! `overscan * k >= live_len` the approx scan could not drop anything the
+//! exact scan keeps, so search falls back to the plain exact sweep.
 
+use super::quant::{self, QuantSpec, Quantizer};
 use super::store::VecStore;
 use super::topk::TopK;
 use super::{Hit, VectorIndex};
@@ -17,16 +29,28 @@ use crate::distance::{Metric, Scalar};
 /// block kernels are exact per row and the top-k order ignores push order.
 const SCORE_BLOCK: usize = 64;
 
-/// Brute-force exact index over a [`VecStore`].
+/// Brute-force exact index over a [`VecStore`], with an optional derived
+/// i8 code arena for two-phase SQ8 search.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlatIndex<S: Scalar> {
     metric: Metric,
     store: VecStore<S>,
+    quant: QuantSpec,
+    /// Derived i8 codes, slot-parallel to the exact arena (row `i` at
+    /// `[i*dim, (i+1)*dim)`, tombstones included so slots stay aligned).
+    /// Empty unless `quant` is `Sq8` AND `S` opts into quantization
+    /// (`Scalar::as_q16_raw`). Never serialized: rebuilt from the decoded
+    /// vectors, so it can never drift from them.
+    codes: Vec<i8>,
 }
 
 impl<S: Scalar> FlatIndex<S> {
     pub fn new(dim: usize, metric: Metric) -> Self {
-        Self { metric, store: VecStore::new(dim) }
+        Self::with_quant(dim, metric, QuantSpec::None)
+    }
+
+    pub fn with_quant(dim: usize, metric: Metric, quant: QuantSpec) -> Self {
+        Self { metric, store: VecStore::new(dim), quant, codes: Vec::new() }
     }
 
     pub fn metric(&self) -> Metric {
@@ -37,26 +61,148 @@ impl<S: Scalar> FlatIndex<S> {
         &self.store
     }
 
+    pub fn quant(&self) -> QuantSpec {
+        self.quant
+    }
+
+    /// Bytes held by the exact Q16.16 arena (tombstones included).
+    pub fn exact_arena_bytes(&self) -> usize {
+        self.store.arena().len() * std::mem::size_of::<S>()
+    }
+
+    /// Bytes held by the derived i8 code arena (0 when quant is off).
+    pub fn code_arena_bytes(&self) -> usize {
+        self.codes.len()
+    }
+
     pub fn encode(&self, e: &mut Encoder) {
+        // Codes are derived state: deliberately NOT serialized, so the
+        // byte layout (and every snapshot/golden fixture) is identical
+        // with and without a quantized tier.
         e.put_u8(self.metric.tag());
         self.store.encode(e);
     }
 
     pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        Self::decode_with_quant(d, QuantSpec::None)
+    }
+
+    /// Decode the serialized form and rebuild the derived code arena for
+    /// the given quant spec (the spec lives in `KernelConfig`, not in the
+    /// index bytes).
+    pub fn decode_with_quant(d: &mut Decoder, quant: QuantSpec) -> Result<Self, DecodeError> {
         let tag = d.get_u8()?;
         let metric = Metric::from_tag(tag)
             .ok_or(DecodeError::InvalidTag { what: "metric", tag: tag as u64 })?;
         let store = VecStore::decode(d)?;
-        Ok(Self { metric, store })
+        let mut idx = Self { metric, store, quant, codes: Vec::new() };
+        if matches!(idx.quant, QuantSpec::Sq8 { .. }) {
+            idx.codes.reserve(idx.store.arena().len());
+            for slot in 0..idx.store.slots() as u32 {
+                if !push_row_codes(&mut idx.codes, idx.store.vec_at(slot)) {
+                    break; // non-quantizable scalar type: arena unused
+                }
+            }
+        }
+        Ok(idx)
     }
+
+    /// The overscan factor iff the two-phase path is usable: quant is
+    /// `Sq8`, the dimension forms rows, and the code arena is complete
+    /// (i.e. `S` opted into quantization).
+    fn sq8_ready(&self) -> Option<u32> {
+        match self.quant {
+            QuantSpec::Sq8 { overscan }
+                if self.store.dim() > 0
+                    && self.codes.len() == self.store.slots() * self.store.dim() =>
+            {
+                Some(overscan)
+            }
+            _ => None,
+        }
+    }
+
+    /// Forced two-phase search, ignoring the `overscan * k >= n` fallback
+    /// — the equivalence tests and the bench suite use it to assert the
+    /// two-phase output is bit-identical to the exact scan at covering
+    /// overscan (through `search` the fallback would short-circuit that).
+    /// `None` when the index has no usable code arena.
+    pub fn search_sq8_two_phase(&self, query: &[S], k: usize) -> Option<Vec<Hit<S::Dist>>> {
+        let dim = self.store.dim();
+        assert_eq!(query.len(), dim, "query dimension mismatch: {} != {dim}", query.len());
+        let overscan = self.sq8_ready()?;
+        if k == 0 || self.store.live_len() == 0 {
+            return Some(Vec::new());
+        }
+        self.search_sq8(query, k, overscan)
+    }
+
+    /// Phase 1 (blocked i8 scan, `(approx_dist, id)` order) + phase 2
+    /// (exact re-rank of the candidates, `(dist, id)` order).
+    fn search_sq8(&self, query: &[S], k: usize, overscan: u32) -> Option<Vec<Hit<S::Dist>>> {
+        let dim = self.store.dim();
+        let mut qcodes = Vec::with_capacity(dim);
+        for &x in query {
+            qcodes.push(Quantizer::encode_component(x.as_q16_raw()?));
+        }
+        let slots = self.store.slots();
+        let alive = self.store.alive_flags();
+        let ids = self.store.external_ids();
+        let mut approx = TopK::new((overscan as usize).saturating_mul(k));
+        let mut dists = vec![0i32; SCORE_BLOCK.min(slots)];
+        let mut base = 0usize;
+        while base < slots {
+            let rows = SCORE_BLOCK.min(slots - base);
+            let block = &self.codes[base * dim..(base + rows) * dim];
+            quant::sq8_distance_block(self.metric, &qcodes, block, dim, &mut dists[..rows]);
+            for (r, &d) in dists[..rows].iter().enumerate() {
+                let slot = base + r;
+                if alive[slot] {
+                    approx.push(d, ids[slot]);
+                }
+            }
+            base += rows;
+        }
+        // Exact Q16.16 re-rank of only the surviving candidates, under
+        // the same (dist, id) total order the exact scan uses.
+        let mut topk = TopK::new(k);
+        for hit in approx.into_sorted_hits() {
+            let slot = self.store.slot_of(hit.id).expect("candidate id must be live");
+            topk.push(S::distance(self.metric, query, self.store.vec_at(slot)), hit.id);
+        }
+        Some(topk.into_sorted_hits())
+    }
+}
+
+/// Append one row's codes; `false` (with nothing pushed) when `S` does
+/// not support quantization — `as_q16_raw` is uniform per type, so the
+/// first component decides for the whole row.
+fn push_row_codes<S: Scalar>(codes: &mut Vec<i8>, row: &[S]) -> bool {
+    for &x in row {
+        let Some(raw) = x.as_q16_raw() else {
+            return false;
+        };
+        codes.push(Quantizer::encode_component(raw));
+    }
+    true
 }
 
 impl<S: Scalar> VectorIndex<S> for FlatIndex<S> {
     fn insert(&mut self, id: u64, vector: Vec<S>) {
-        self.store.insert(id, vector);
+        let slot = self.store.insert(id, vector);
+        if matches!(self.quant, QuantSpec::Sq8 { .. }) {
+            // Keep the derived code arena slot-parallel. A non-quantizable
+            // scalar type pushes nothing on the first row, so the arena
+            // stays incomplete and `sq8_ready` keeps search on the exact
+            // path forever.
+            push_row_codes(&mut self.codes, self.store.vec_at(slot));
+        }
     }
 
     fn delete(&mut self, id: u64) -> bool {
+        // Tombstone only: codes stay slot-aligned (dead rows are scored
+        // branch-free in phase 1 and filtered, exactly like the exact
+        // sweep handles the Q16.16 arena).
         self.store.delete(id).is_some()
     }
 
@@ -72,6 +218,17 @@ impl<S: Scalar> VectorIndex<S> for FlatIndex<S> {
         let slots = self.store.slots();
         if k == 0 || self.store.live_len() == 0 {
             return Vec::new();
+        }
+        if let Some(overscan) = self.sq8_ready() {
+            // Fallback rule: when the candidate set would cover every
+            // live vector the approx phase cannot drop anything, so the
+            // exact sweep is both cheaper and trivially identical.
+            let cand = (overscan as u64).saturating_mul(k as u64);
+            if cand < self.store.live_len() as u64 {
+                if let Some(hits) = self.search_sq8(query, k, overscan) {
+                    return hits;
+                }
+            }
         }
         // Total order on (dist, id) throughout: deterministic ranking even
         // with distance ties, and identical to the former sort + truncate.
@@ -197,5 +354,135 @@ mod tests {
         idx.insert(2, vec![1.0, 1.0]);
         let hits = idx.search(&[0.9, 0.9], 2);
         assert_eq!(hits[0].id, 2);
+    }
+
+    fn corpus_vec(seed: u64, dim: usize) -> Vec<i32> {
+        (0..dim)
+            .map(|i| {
+                let x = (seed.wrapping_add(i as u64)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ((x % 131_072) as i64 - 65_536) as i32
+            })
+            .collect()
+    }
+
+    fn sq8_pair(metric: Metric, overscan: u32, n: usize) -> (FlatIndex<i32>, FlatIndex<i32>) {
+        let dim = 16;
+        let mut exact = FlatIndex::new(dim, metric);
+        let mut q8 = FlatIndex::with_quant(dim, metric, QuantSpec::Sq8 { overscan });
+        for id in 0..n as u64 {
+            let v = corpus_vec(id, dim);
+            exact.insert(id, v.clone());
+            q8.insert(id, v);
+        }
+        (exact, q8)
+    }
+
+    #[test]
+    fn sq8_two_phase_at_covering_overscan_is_bit_identical() {
+        // overscan * k >= n ⇒ phase 1 keeps every live vector, so the
+        // exact re-rank sees the full corpus and must reproduce the
+        // exact scan bit for bit.
+        let n = 60;
+        let (exact, q8) = sq8_pair(Metric::L2, 1000, n);
+        for qseed in 0..8u64 {
+            let query = corpus_vec(1_000_000 + qseed, 16);
+            let forced = q8.search_sq8_two_phase(&query, 10).expect("sq8 arena present");
+            assert_eq!(forced, exact.search(&query, 10), "query {qseed}");
+        }
+    }
+
+    #[test]
+    fn sq8_search_falls_back_when_candidates_cover_n() {
+        let (exact, q8) = sq8_pair(Metric::InnerProduct, 1000, 40);
+        let query = corpus_vec(777, 16);
+        // Through `search` the fallback takes the exact sweep directly;
+        // either way the answer equals the exact index's.
+        assert_eq!(q8.search(&query, 5), exact.search(&query, 5));
+    }
+
+    #[test]
+    fn sq8_truncating_overscan_is_deterministic_and_exact_ranked() {
+        let (exact, q8) = sq8_pair(Metric::L2, 2, 500);
+        let query = corpus_vec(424_242, 16);
+        let hits = q8.search(&query, 4);
+        let again = q8.search(&query, 4);
+        assert_eq!(hits, again, "same corpus, same query, same bits");
+        assert_eq!(hits.len(), 4);
+        // Every reported distance is the exact one (re-rank is exact even
+        // when the candidate set truncates recall).
+        let exact_hits = exact.search(&query, 500);
+        for h in &hits {
+            let reference = exact_hits.iter().find(|e| e.id == h.id).unwrap();
+            assert_eq!(h.dist, reference.dist, "id {} must carry its exact distance", h.id);
+        }
+    }
+
+    #[test]
+    fn sq8_codes_rebuild_on_decode_and_are_never_serialized() {
+        let (exact, q8) = sq8_pair(Metric::L2, 4, 32);
+        let mut e1 = Encoder::new();
+        q8.encode(&mut e1);
+        let mut e2 = Encoder::new();
+        exact.encode(&mut e2);
+        // Identical bytes with and without the quantized tier.
+        let bytes = e1.into_vec();
+        assert_eq!(bytes, e2.into_vec());
+        // Round-trip under the quant spec rebuilds a working code arena.
+        let decoded =
+            FlatIndex::<i32>::decode_with_quant(&mut Decoder::new(&bytes), q8.quant()).unwrap();
+        assert_eq!(decoded.code_arena_bytes(), 32 * 16);
+        let query = corpus_vec(9, 16);
+        assert_eq!(
+            decoded.search_sq8_two_phase(&query, 3),
+            q8.search_sq8_two_phase(&query, 3)
+        );
+    }
+
+    #[test]
+    fn sq8_tie_heavy_corpus_breaks_ties_by_id() {
+        // Many identical vectors: approx distances all tie, so phase 1
+        // selection is decided purely by id — and the re-rank keeps that
+        // order. Repeatedly identical across runs by construction.
+        let dim = 4;
+        let mut q8 = FlatIndex::with_quant(dim, Metric::L2, QuantSpec::Sq8 { overscan: 2 });
+        for id in 0..64u64 {
+            q8.insert(id, vec![1 << 16; dim]);
+        }
+        let hits = q8.search(&vec![1 << 16; dim], 5);
+        assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(hits.iter().all(|h| h.dist == 0));
+    }
+
+    #[test]
+    fn sq8_arena_bytes_report_the_shrink() {
+        let (_, q8) = sq8_pair(Metric::L2, 4, 100);
+        assert_eq!(q8.exact_arena_bytes(), 100 * 16 * 4);
+        assert_eq!(q8.code_arena_bytes(), 100 * 16);
+    }
+
+    #[test]
+    fn f32_index_ignores_quant_spec() {
+        let mut idx: FlatIndex<f32> =
+            FlatIndex::with_quant(2, Metric::L2, QuantSpec::Sq8 { overscan: 4 });
+        for id in 0..50u64 {
+            idx.insert(id, vec![id as f32, -(id as f32)]);
+        }
+        assert_eq!(idx.code_arena_bytes(), 0);
+        assert!(idx.search_sq8_two_phase(&[1.0, 2.0], 3).is_none());
+        // search silently stays on the exact path
+        let hits = idx.search(&[10.0, -10.0], 1);
+        assert_eq!(hits[0].id, 10);
+    }
+
+    #[test]
+    fn sq8_delete_keeps_codes_slot_aligned() {
+        let (mut exact, mut q8) = sq8_pair(Metric::L2, 1000, 30);
+        for id in [3u64, 17, 29] {
+            assert!(q8.delete(id));
+            assert!(exact.delete(id));
+        }
+        let query = corpus_vec(5, 16);
+        assert_eq!(q8.search_sq8_two_phase(&query, 8).unwrap(), exact.search(&query, 8));
+        assert!(q8.search(&query, 8).iter().all(|h| ![3, 17, 29].contains(&h.id)));
     }
 }

@@ -8,11 +8,13 @@
 
 pub mod flat;
 pub mod hnsw;
+pub mod quant;
 pub mod store;
 pub mod topk;
 
 pub use flat::FlatIndex;
 pub use hnsw::{Hnsw, HnswParams};
+pub use quant::{QuantSpec, Quantizer, SQ8_DEFAULT_OVERSCAN};
 pub use store::VecStore;
 pub use topk::TopK;
 

@@ -1,0 +1,330 @@
+//! Deterministic SQ8 scalar quantization for the flat scan tier.
+//!
+//! At millions of vectors the Q16.16 arena is the flat query path's
+//! bandwidth ceiling: 4 bytes per component, full-width scan per query.
+//! This module compresses each Q16.16 component to an i8 *code* so the
+//! candidate-selection scan reads 4× fewer bytes (4× more components per
+//! cache line) and runs on narrow integer SIMD; the final ranking is then
+//! decided by the exact Q16.16 kernels over only `k * overscan`
+//! candidates (see `FlatIndex::search`).
+//!
+//! ## Integer-only encode, derived from fixed corpus bounds
+//!
+//! The boundary contract (`vector::ValidationPolicy`, default
+//! `max_abs = 4.0`) guarantees every admitted Q16.16 component satisfies
+//! `|raw| ≤ 4.0 * 2^16 = 2^18`. That bound is a *config constant*, not a
+//! data statistic, so the per-dimension scale derived from it is the same
+//! for every dimension and — crucially — independent of the corpus
+//! contents: inserting or deleting vectors can never invalidate
+//! previously computed codes, and two replicas that applied the same
+//! commands hold bit-identical code arenas without ever exchanging them.
+//!
+//! The encode is pure integer arithmetic (no floats anywhere):
+//!
+//! ```text
+//! code(raw) = clamp(round_half_away_from_zero(raw * 127 / 2^18), -127, 127)
+//! ```
+//!
+//! computed in i64 (|raw * 127| ≤ 2^25, no overflow). Rounding half away
+//! from zero keeps the map odd (`code(-raw) = -code(raw)`), so quantized
+//! L2/IP geometry has no sign bias. The code −128 is never produced,
+//! which keeps the difference range symmetric in the kernels below.
+//!
+//! ## Exactness of the accumulators
+//!
+//! With codes in [-127, 127] and the kernel dim contract (dim ≤ 16384,
+//! enforced at the state boundary):
+//!
+//! - squared-L2 term ≤ 254² = 64516, sum ≤ 64516 · 16384 < 2^31 − 1;
+//! - |dot| term ≤ 127² = 16129, |sum| ≤ 16129 · 16384 < 2^29.
+//!
+//! So plain wrapping `+` on an i32 accumulator is exact — the same
+//! argument (and the same auto-vectorization payoff) as the Q16.16
+//! kernels in [`crate::distance`], one word narrower.
+//!
+//! ## Why the final top-k stays deterministic
+//!
+//! Codes are a pure per-component function of the vector, the approx scan
+//! ranks candidates under the total order `(approx_dist, id)`, and the
+//! exact re-rank ranks the surviving candidates under the existing
+//! `(dist_raw, id)` order — three pure functions composed, no clocks, no
+//! floats, no data-dependent scales. See `PERFORMANCE.md` §8 for the
+//! full exactness/recall argument.
+
+use crate::codec::{DecodeError, Decoder, Encoder};
+use crate::distance::Metric;
+
+/// Fixed per-component bound on Q16.16 raw values, from the boundary
+/// contract `max_abs = 4.0` (`4.0 * 2^16`). A config constant — never a
+/// corpus statistic — so codes are insert-order- and content-independent.
+pub const QUANT_BOUND_RAW: i32 = 1 << 18;
+
+/// Default candidate overscan for SQ8 two-phase search: the approx scan
+/// keeps `k * overscan` candidates for the exact re-rank.
+pub const SQ8_DEFAULT_OVERSCAN: u32 = 4;
+
+/// Per-collection quantization spec (part of `KernelConfig`; rides in
+/// `spec.json` and the `/v2` PUT body as `"quant": "none" | "sq8"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantSpec {
+    /// No quantized tier: every query is a full-width exact scan.
+    None,
+    /// Scalar-quantize to i8 codes; two-phase search with exact re-rank
+    /// over `k * overscan` candidates.
+    Sq8 { overscan: u32 },
+}
+
+impl QuantSpec {
+    pub fn sq8_default() -> Self {
+        QuantSpec::Sq8 { overscan: SQ8_DEFAULT_OVERSCAN }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantSpec::None => "none",
+            QuantSpec::Sq8 { .. } => "sq8",
+        }
+    }
+
+    /// Stable on-disk tag (STATE_VERSION 3 config field).
+    pub fn tag(&self) -> u8 {
+        match self {
+            QuantSpec::None => 0,
+            QuantSpec::Sq8 { .. } => 1,
+        }
+    }
+
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u8(self.tag());
+        if let QuantSpec::Sq8 { overscan } = self {
+            e.put_u32(*overscan);
+        }
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        match d.get_u8()? {
+            0 => Ok(QuantSpec::None),
+            1 => {
+                let overscan = d.get_u32()?;
+                if overscan == 0 {
+                    return Err(DecodeError::InvalidTag { what: "sq8 overscan", tag: 0 });
+                }
+                Ok(QuantSpec::Sq8 { overscan })
+            }
+            t => Err(DecodeError::InvalidTag { what: "quant spec", tag: t as u64 }),
+        }
+    }
+}
+
+/// Deterministic Q16.16 → i8 scalar quantizer. Stateless apart from the
+/// dimension it validates against: the scale is the fixed boundary-bound
+/// constant for every dimension (see module docs), so encoding is a pure
+/// per-component function.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Quantizer {
+    dim: usize,
+}
+
+impl Quantizer {
+    pub fn new(dim: usize) -> Self {
+        Self { dim }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Encode one Q16.16 raw component to its i8 code — pure integer
+    /// arithmetic, round half away from zero, clamped to [-127, 127].
+    #[inline]
+    pub fn encode_component(raw: i32) -> i8 {
+        let num = raw as i64 * 127;
+        let den = QUANT_BOUND_RAW as i64;
+        // Truncating division after biasing by den/2 toward the sign of
+        // the numerator = round half away from zero (den/2 = 2^17 exact).
+        let rounded = if num >= 0 { (num + den / 2) / den } else { (num - den / 2) / den };
+        rounded.clamp(-127, 127) as i8
+    }
+
+    /// Append the codes for one vector to a code arena. The vector must
+    /// match the quantizer's dimension (same contract as `VecStore`).
+    pub fn encode_append(&self, raw: &[i32], codes: &mut Vec<i8>) {
+        debug_assert_eq!(raw.len(), self.dim, "quantizer dimension mismatch");
+        codes.extend(raw.iter().map(|&r| Self::encode_component(r)));
+    }
+}
+
+/// Quantized squared-L2 over i8 codes, exact i32 accumulation (overflow
+/// argument in the module docs). Same reslice idiom as
+/// [`crate::distance::l2sq_q16`] so LLVM drops the inner bounds checks
+/// and auto-vectorizes.
+#[inline]
+pub fn sq8_l2(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len(), "sq8_l2: equal-length contract violated");
+    let b = &b[..a.len()];
+    let mut acc: i32 = 0;
+    for i in 0..a.len() {
+        let d = a[i] as i32 - b[i] as i32;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Quantized dot product over i8 codes (same contract as [`sq8_l2`]).
+#[inline]
+pub fn sq8_dot(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len(), "sq8_dot: equal-length contract violated");
+    let b = &b[..a.len()];
+    let mut acc: i32 = 0;
+    for i in 0..a.len() {
+        acc += a[i] as i32 * b[i] as i32;
+    }
+    acc
+}
+
+/// Approximate distance under `metric` in code space (smaller = closer,
+/// mirroring the exact kernels: IP/Cosine negate the dot).
+#[inline]
+pub fn sq8_distance(metric: Metric, a: &[i8], b: &[i8]) -> i32 {
+    match metric {
+        Metric::L2 => sq8_l2(a, b),
+        Metric::InnerProduct | Metric::Cosine => sq8_dot(a, b).saturating_neg(),
+    }
+}
+
+/// Blocked variant: score `query` against `out.len()` code rows stored
+/// back-to-back in `block` (row `r` at `block[r*dim..(r+1)*dim]`). Exact
+/// per row, so bit-identical to per-row [`sq8_distance`] calls — the
+/// batch form only changes the access pattern, like the Q16.16 block
+/// kernels. `dim` must be non-zero.
+#[inline]
+pub fn sq8_distance_block(metric: Metric, query: &[i8], block: &[i8], dim: usize, out: &mut [i32]) {
+    debug_assert!(dim > 0, "sq8_distance_block: dim must be non-zero");
+    debug_assert_eq!(query.len(), dim, "sq8_distance_block: query/dim mismatch");
+    debug_assert_eq!(block.len(), dim * out.len(), "sq8_distance_block: block shape mismatch");
+    for (row, d) in block.chunks_exact(dim).zip(out.iter_mut()) {
+        *d = sq8_distance(metric, query, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_is_odd_and_clamped() {
+        for raw in [0, 1, 2048, 2049, 123_456, QUANT_BOUND_RAW, i32::MAX] {
+            assert_eq!(
+                Quantizer::encode_component(raw),
+                -Quantizer::encode_component(raw.saturating_neg()),
+                "odd symmetry at raw={raw}"
+            );
+        }
+        assert_eq!(Quantizer::encode_component(0), 0);
+        assert_eq!(Quantizer::encode_component(QUANT_BOUND_RAW), 127);
+        assert_eq!(Quantizer::encode_component(-QUANT_BOUND_RAW), -127);
+        // Out-of-contract values still clamp instead of wrapping.
+        assert_eq!(Quantizer::encode_component(i32::MAX), 127);
+        assert_eq!(Quantizer::encode_component(i32::MIN), -127);
+        // -128 is never produced.
+        for raw in (-(1 << 19)..(1 << 19)).step_by(997) {
+            assert!(Quantizer::encode_component(raw) >= -127);
+        }
+    }
+
+    #[test]
+    fn encode_rounds_half_away_from_zero() {
+        // One code step is 2^18/127 raw units; the half-step boundary for
+        // code 1 is at num = den/2, i.e. raw = 2^17/127 rounded up.
+        let den = QUANT_BOUND_RAW as i64;
+        for code in 1..=126i64 {
+            // Smallest raw whose scaled value reaches code - 0.5.
+            let boundary = ((2 * code - 1) * den + 2 * 127 - 1) / (2 * 127);
+            let raw = boundary as i32;
+            assert_eq!(Quantizer::encode_component(raw), code as i8, "at boundary for {code}");
+            assert_eq!(Quantizer::encode_component(raw - 1), (code - 1) as i8);
+            assert_eq!(Quantizer::encode_component(-raw), -(code as i8));
+        }
+    }
+
+    #[test]
+    fn kernels_match_wide_reference() {
+        // Independent i64 reference over a pseudo-random code corpus.
+        let gen = |seed: i64, n: usize| -> Vec<i8> {
+            (0..n)
+                .map(|i| (((seed + i as i64) * 2654435761 % 255) - 127).clamp(-127, 127) as i8)
+                .collect()
+        };
+        let a = gen(1, 300);
+        let b = gen(7, 300);
+        let l2_ref: i64 =
+            a.iter().zip(&b).map(|(&x, &y)| ((x as i64) - (y as i64)).pow(2)).sum();
+        let dot_ref: i64 = a.iter().zip(&b).map(|(&x, &y)| (x as i64) * (y as i64)).sum();
+        assert_eq!(sq8_l2(&a, &b) as i64, l2_ref);
+        assert_eq!(sq8_dot(&a, &b) as i64, dot_ref);
+        assert_eq!(sq8_distance(Metric::InnerProduct, &a, &b) as i64, -dot_ref);
+        assert_eq!(
+            sq8_distance(Metric::Cosine, &a, &b),
+            sq8_distance(Metric::InnerProduct, &a, &b)
+        );
+    }
+
+    #[test]
+    fn accumulator_extremes_do_not_overflow() {
+        // Worst case under the dim contract: 16384 components at the
+        // extreme codes. 254^2 * 16384 = 1_057_030_144 < i32::MAX.
+        let a = vec![127i8; 16384];
+        let b = vec![-127i8; 16384];
+        assert_eq!(sq8_l2(&a, &b), 254 * 254 * 16384);
+        assert_eq!(sq8_dot(&a, &b), -127 * 127 * 16384);
+    }
+
+    #[test]
+    fn block_kernel_matches_per_row() {
+        let dim = 5;
+        let rows = 11;
+        let q: Vec<i8> = (0..dim).map(|i| (i as i8 * 17).wrapping_sub(40)).collect();
+        let block: Vec<i8> = (0..dim * rows).map(|i| ((i * 31 % 200) as i8)).collect();
+        for metric in [Metric::L2, Metric::InnerProduct] {
+            let mut out = vec![0i32; rows];
+            sq8_distance_block(metric, &q, &block, dim, &mut out);
+            for r in 0..rows {
+                let row = &block[r * dim..(r + 1) * dim];
+                assert_eq!(out[r], sq8_distance(metric, &q, row), "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_roundtrip_and_tags() {
+        for spec in [QuantSpec::None, QuantSpec::Sq8 { overscan: 4 }, QuantSpec::Sq8 { overscan: 100 }] {
+            let mut e = Encoder::new();
+            spec.encode(&mut e);
+            let bytes = e.into_vec();
+            let mut d = Decoder::new(&bytes);
+            assert_eq!(QuantSpec::decode(&mut d).unwrap(), spec);
+            d.finish().unwrap();
+        }
+        // zero overscan is rejected on decode
+        let mut e = Encoder::new();
+        e.put_u8(1);
+        e.put_u32(0);
+        let bytes = e.into_vec();
+        assert!(QuantSpec::decode(&mut Decoder::new(&bytes)).is_err());
+        assert_eq!(QuantSpec::None.name(), "none");
+        assert_eq!(QuantSpec::sq8_default().name(), "sq8");
+    }
+
+    #[test]
+    fn quantizer_append_encodes_rows() {
+        let qz = Quantizer::new(3);
+        let mut codes = Vec::new();
+        qz.encode_append(&[0, QUANT_BOUND_RAW, -(QUANT_BOUND_RAW / 2)], &mut codes);
+        qz.encode_append(&[1 << 16, -(1 << 16), 0], &mut codes);
+        assert_eq!(codes.len(), 6);
+        assert_eq!(codes[0], 0);
+        assert_eq!(codes[1], 127);
+        assert_eq!(codes[2], -64); // -2^17 * 127 / 2^18 = -63.5 → away from zero
+        assert_eq!(codes[3], Quantizer::encode_component(1 << 16));
+    }
+}

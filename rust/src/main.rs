@@ -40,6 +40,7 @@ use std::sync::Arc;
 use std::time::Duration;
 use valori::bench::BenchConfig;
 use valori::cli::Args;
+use valori::index::QuantSpec;
 use valori::node::{
     serve_collections, CollectionManager, CollectionSpec, EmbedBatcher, GovernorConfig,
     ManagerConfig,
@@ -407,7 +408,10 @@ fn retry_after_bytes(bytes: &[u8]) -> Duration {
 fn cmd_bench(args: &Args) -> i32 {
     use valori::bench::suite::SuiteConfig;
     let quick = args.flag("quick");
-    let mut cfg = if quick { SuiteConfig::quick() } else { SuiteConfig::full() };
+    // CLI overrides parse against the full config; the quick divisor is
+    // applied *after* them so every row (HNSW included) honors it —
+    // `--quick --n 2000` is a 200-vector smoke run, not a full-size one.
+    let mut cfg = SuiteConfig::full();
     cfg.n = match args.opt_parse("n", cfg.n) {
         Ok(v) if v > 0 => v,
         Ok(_) => return fail("--n must be > 0"),
@@ -436,6 +440,9 @@ fn cmd_bench(args: &Args) -> i32 {
         Ok(_) => return fail("--batch must be > 0"),
         Err(e) => return fail(&e),
     };
+    if quick {
+        cfg = cfg.quickened();
+    }
     let out = args.opt_or("out", "BENCH_search.json");
     let label = if quick { "quick" } else { "full" };
     let result = valori::bench::suite::run(&cfg, label);
@@ -517,7 +524,12 @@ fn cmd_serve(args: &Args) -> i32 {
         Err(e) => return fail(&e),
     };
     let collections_config = ManagerConfig {
-        spec: CollectionSpec { dim, shards: n_shards, flat: args.flag("flat") },
+        spec: CollectionSpec {
+            dim,
+            shards: n_shards,
+            flat: args.flag("flat"),
+            quant: QuantSpec::None,
+        },
         workers,
         data_dir: args.opt("data").map(Into::into),
         default_wal: args.opt("wal").map(Into::into),

@@ -36,6 +36,7 @@ use crate::hash::Fnv1a64;
 use crate::http::{
     AdmissionHook, Handler, Request, Response, Server, ServerConfig, ServerMetrics, StreamingBody,
 };
+use crate::index::QuantSpec;
 use crate::json::Json;
 use crate::node::governor::{Admission, Governor, GovernorConfig};
 use crate::node::{route, stats_json, BatcherHandle, NodeConfig, NodeState};
@@ -77,11 +78,17 @@ pub struct CollectionSpec {
     pub shards: u32,
     /// Exact flat index instead of HNSW.
     pub flat: bool,
+    /// Quantized scan tier for the flat index (`none` | `sq8`). Ignored
+    /// by HNSW collections. The i8 codes are derived state (never
+    /// serialized), so query results are bit-identical to an
+    /// unquantized twin; the spec itself is config, though, and like
+    /// `index` or `shards` it participates in the state root.
+    pub quant: QuantSpec,
 }
 
 impl CollectionSpec {
     fn kernel_config(&self) -> KernelConfig {
-        let config = KernelConfig::default_q16(self.dim);
+        let config = KernelConfig::default_q16(self.dim).with_quant(self.quant);
         if self.flat {
             config.with_flat_index()
         } else {
@@ -388,6 +395,14 @@ impl CollectionManager {
             Err(e) if e.code == ApiCode::CollectionExists => self.get(name),
             other => other,
         }
+    }
+
+    /// Whether `name` is currently cold (evicted by the idle sweep and
+    /// not yet rehydrated). Read *before* a [`Self::get`] when the
+    /// caller wants to report that its own request found the tenant
+    /// cold — `get` rehydrates lazily, so afterwards this is false.
+    pub fn is_evicted(&self, name: &str) -> bool {
+        self.evicted.lock().expect("evicted poisoned").contains_key(name)
     }
 
     /// Look up a collection. A tenant evicted by the idle sweep is
@@ -887,6 +902,7 @@ impl CollectionManager {
             dim: kernel.config().dim,
             shards: kernel.n_shards(),
             flat: matches!(kernel.config().index, IndexKind::Flat),
+            quant: kernel.config().quant,
         };
         let _creating = self.create_lock.lock().expect("create lock poisoned");
         {
@@ -1023,20 +1039,28 @@ fn fold_combined_root(roots: &[(String, u64)]) -> u64 {
 /// The persisted form of a collection's spec (`<data>/<name>/spec.json`;
 /// same field names the PUT body accepts, so [`parse_spec`] reads it).
 fn spec_json(spec: &CollectionSpec) -> String {
-    Json::object(vec![
+    let mut fields = vec![
         ("dim", Json::Int(spec.dim as i64)),
         ("index", Json::str(if spec.flat { "flat" } else { "hnsw" })),
-        ("shards", Json::Int(spec.shards as i64)),
-    ])
-    .to_string()
+    ];
+    // Quant-free specs keep the pre-quantization manifest bytes, so
+    // spec.json files written by older builds and newer ones stay
+    // interchangeable in both directions.
+    if let QuantSpec::Sq8 { overscan } = spec.quant {
+        fields.push(("overscan", Json::Int(i64::from(overscan))));
+        fields.push(("quant", Json::str(spec.quant.name())));
+    }
+    fields.push(("shards", Json::Int(spec.shards as i64)));
+    Json::object(fields).to_string()
 }
 
 /// One collection's summary object (list entries and single GET share it).
 fn collection_summary(name: &str, state: &NodeState) -> Json {
-    let (dim, index, shards, vectors, seq, root) = state.with_sharded(|sk| {
+    let (dim, index, quant, shards, vectors, seq, root) = state.with_sharded(|sk| {
         (
             sk.config().dim,
             sk.config().index,
+            sk.config().quant,
             sk.n_shards(),
             sk.len(),
             sk.seq(),
@@ -1054,10 +1078,29 @@ fn collection_summary(name: &str, state: &NodeState) -> Json {
         ),
         ("log_len", Json::Int(state.log_len() as i64)),
         ("name", Json::str(name)),
+        ("quant", Json::str(quant.name())),
         ("root", Json::str(format!("{root:016x}"))),
         ("seq", Json::Int(seq as i64)),
         ("shards", Json::Int(shards as i64)),
         ("vectors", Json::Int(vectors as i64)),
+    ])
+}
+
+/// The per-tenant governor block for `stats`. Tenants the governor has
+/// never seen (or has pruned as idle) report exactly the state they
+/// would start from on first admission: a full burst bucket, nothing in
+/// flight, zero rejection counters.
+fn governor_json(manager: &CollectionManager, name: &str) -> Json {
+    let snap = manager
+        .governor
+        .tenant_snapshot(name, Instant::now())
+        .unwrap_or_else(|| manager.governor.fresh_tenant_snapshot());
+    Json::object(vec![
+        ("available_tokens", Json::Int(snap.available_tokens as i64)),
+        ("enabled", Json::Bool(manager.governor.config().is_active())),
+        ("in_flight", Json::Int(i64::from(snap.in_flight))),
+        ("quota_rejected", Json::Int(snap.quota_rejected as i64)),
+        ("rate_limited", Json::Int(snap.rate_limited as i64)),
     ])
 }
 
@@ -1292,6 +1335,31 @@ fn parse_spec(body: &[u8], default: &CollectionSpec) -> ApiResult<CollectionSpec
             };
         }
     }
+    match json.get("quant") {
+        Json::Null => {}
+        v => {
+            spec.quant = match v.as_str() {
+                Some("none") => QuantSpec::None,
+                Some("sq8") => QuantSpec::sq8_default(),
+                _ => return Err(ApiError::bad_request("quant must be \"none\" or \"sq8\"")),
+            };
+        }
+    }
+    match json.get("overscan") {
+        Json::Null => {}
+        v => {
+            let overscan = match v.as_u64() {
+                Some(o) if (1..=u64::from(u32::MAX)).contains(&o) => o as u32,
+                _ => return Err(ApiError::bad_request("overscan must be an integer >= 1")),
+            };
+            match &mut spec.quant {
+                QuantSpec::Sq8 { overscan: o } => *o = overscan,
+                QuantSpec::None => {
+                    return Err(ApiError::bad_request("overscan requires quant \"sq8\""))
+                }
+            }
+        }
+    }
     Ok(spec)
 }
 
@@ -1323,6 +1391,9 @@ fn collection_op(
             _ => Err(method_not_allowed(req, "PUT")),
         };
     }
+    // Captured before `get` (which rehydrates lazily): the stats route
+    // reports whether *this* request found the tenant cold.
+    let was_evicted = manager.is_evicted(name);
     let state = manager.get(name)?;
     match (req.method.as_str(), op) {
         ("POST", _) if POST_OPS.contains(&op) => {
@@ -1360,6 +1431,19 @@ fn collection_op(
             };
             obj.insert("collection".into(), Json::str(name));
             obj.insert("root".into(), Json::str(root_hex(&state)));
+            // Resource accounting: exact Q16.16 arena vs the derived SQ8
+            // code arena (0 unless the collection has a quant tier).
+            let (exact_arena, code_arena) = state.with_sharded(|sk| sk.arena_bytes());
+            obj.insert(
+                "memory_bytes".into(),
+                Json::object(vec![
+                    ("code_arena", Json::Int(code_arena as i64)),
+                    ("exact_arena", Json::Int(exact_arena as i64)),
+                    ("total", Json::Int((exact_arena + code_arena) as i64)),
+                ]),
+            );
+            obj.insert("evicted".into(), Json::Bool(was_evicted));
+            obj.insert("governor".into(), governor_json(manager, name));
             Ok(Json::Object(obj))
         }
         (_, _) if POST_OPS.contains(&op) => Err(method_not_allowed(req, "POST")),
@@ -1377,7 +1461,7 @@ mod tests {
     fn manager() -> CollectionManager {
         CollectionManager::new(
             ManagerConfig {
-                spec: CollectionSpec { dim: 4, shards: 2, flat: true },
+                spec: CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None },
                 workers: 2,
                 data_dir: None,
                 default_wal: None,
@@ -1510,8 +1594,9 @@ mod tests {
     #[test]
     fn per_collection_state_is_isolated() {
         let m = manager();
-        m.create("a", CollectionSpec { dim: 4, shards: 2, flat: true }).unwrap();
-        m.create("b", CollectionSpec { dim: 4, shards: 2, flat: true }).unwrap();
+        let spec = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+        m.create("a", spec.clone()).unwrap();
+        m.create("b", spec).unwrap();
         // same id in two collections: independent namespaces
         let (st, _) =
             send(&m, "POST", "/v2/collections/a/insert", r#"{"id":1,"vector":[0.1,0,0,0]}"#);
@@ -1538,7 +1623,7 @@ mod tests {
     fn combined_root_is_order_invariant_and_content_sensitive() {
         let m1 = manager();
         let m2 = manager();
-        let spec = CollectionSpec { dim: 4, shards: 1, flat: true };
+        let spec = CollectionSpec { dim: 4, shards: 1, flat: true, quant: QuantSpec::None };
         m1.create("alpha", spec.clone()).unwrap();
         m1.create("beta", spec.clone()).unwrap();
         // reverse creation order on m2
@@ -1606,7 +1691,7 @@ mod tests {
             .join(format!("valori_collections_restart_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let config = ManagerConfig {
-            spec: CollectionSpec { dim: 4, shards: 2, flat: true },
+            spec: CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None },
             workers: 2,
             data_dir: Some(dir.clone()),
             default_wal: None,
@@ -1616,7 +1701,8 @@ mod tests {
             let m = CollectionManager::new(config.clone(), None).unwrap();
             // a tenant whose spec differs from the manager default in
             // every field — rediscovery must restore THIS shape
-            m.create("tenant", CollectionSpec { dim: 8, shards: 3, flat: false }).unwrap();
+            let spec = CollectionSpec { dim: 8, shards: 3, flat: false, quant: QuantSpec::None };
+            m.create("tenant", spec).unwrap();
             for i in 0..20 {
                 let body = format!(
                     r#"{{"id":{i},"vector":[0.1,0.2,0.3,0.4,0.5,0.6,0.7,{}]}}"#,
@@ -1659,7 +1745,7 @@ mod tests {
     fn v2_log_apply_replicates_collection_to_collection() {
         let primary = manager();
         let follower = manager();
-        let spec = CollectionSpec { dim: 4, shards: 2, flat: true };
+        let spec = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
         primary.create("t", spec.clone()).unwrap();
         follower.create("t", spec).unwrap();
         for i in 0..20u64 {
@@ -1696,5 +1782,107 @@ mod tests {
             f.with_sharded(|sk| sk.root_hash()),
             "shipped feeds must converge bit-for-bit"
         );
+    }
+
+    #[test]
+    fn parse_spec_accepts_quant_and_overscan() {
+        let default = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+        let spec = parse_spec(br#"{"quant":"sq8"}"#, &default).unwrap();
+        assert_eq!(spec.quant, QuantSpec::sq8_default());
+        let spec = parse_spec(br#"{"quant":"sq8","overscan":8}"#, &default).unwrap();
+        assert_eq!(spec.quant, QuantSpec::Sq8 { overscan: 8 });
+        let spec = parse_spec(br#"{"quant":"none"}"#, &default).unwrap();
+        assert_eq!(spec.quant, QuantSpec::None);
+        // overscan is meaningless without the sq8 tier
+        let err = parse_spec(br#"{"overscan":3}"#, &default).unwrap_err();
+        assert_eq!(err.code, ApiCode::BadRequest);
+        let err = parse_spec(br#"{"quant":"fp4"}"#, &default).unwrap_err();
+        assert_eq!(err.code, ApiCode::BadRequest);
+        let err = parse_spec(br#"{"quant":"sq8","overscan":0}"#, &default).unwrap_err();
+        assert_eq!(err.code, ApiCode::BadRequest);
+    }
+
+    #[test]
+    fn spec_json_round_trips_quant_and_keeps_quant_free_bytes() {
+        let default = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+        // quant-free manifests keep the exact pre-quantization bytes
+        assert_eq!(spec_json(&default), r#"{"dim":4,"index":"flat","shards":2}"#);
+        let sq8 = CollectionSpec {
+            dim: 8,
+            shards: 4,
+            flat: true,
+            quant: QuantSpec::Sq8 { overscan: 6 },
+        };
+        let manifest = spec_json(&sq8);
+        let back = parse_spec(manifest.as_bytes(), &default).unwrap();
+        assert_eq!(back, sq8);
+    }
+
+    #[test]
+    fn sq8_collection_serves_exact_results_over_v2() {
+        let m = manager();
+        let (st, body) = send(
+            &m,
+            "PUT",
+            "/v2/collections/q8",
+            r#"{"dim":4,"index":"flat","quant":"sq8","overscan":4}"#,
+        );
+        assert_eq!(st, 200, "{body}");
+        send(&m, "PUT", "/v2/collections/plain", r#"{"dim":4,"index":"flat"}"#);
+        for i in 0..12u64 {
+            let body = format!(r#"{{"id":{i},"vector":[{},0.5,-0.25,1.0]}}"#, (i as f32) * 0.125);
+            let (st, _) = send(&m, "POST", "/v2/collections/q8/insert", &body);
+            assert_eq!(st, 200);
+            let (st, _) = send(&m, "POST", "/v2/collections/plain/insert", &body);
+            assert_eq!(st, 200);
+        }
+        // the quant spec is configuration: like index kind or shard
+        // count it is encoded in the state bytes, so the roots differ —
+        // deterministically (the derived codes never reach the bytes)
+        let rq = m.get("q8").unwrap().with_sharded(|sk| sk.root_hash());
+        let rp = m.get("plain").unwrap().with_sharded(|sk| sk.root_hash());
+        assert_ne!(rq, rp, "quant spec is config and must be part of the root");
+        // ...and identical query results (two-phase re-rank is exact)
+        let q = r#"{"vector":[0.25,0.5,-0.25,1.0],"k":3}"#;
+        let (st, hq) = send(&m, "POST", "/v2/collections/q8/query", q);
+        assert_eq!(st, 200);
+        let (_, hp) = send(&m, "POST", "/v2/collections/plain/query", q);
+        assert_eq!(hq.get("data"), hp.get("data"), "sq8 hits diverged from exact");
+        // summary advertises the tier
+        let (_, s) = send(&m, "GET", "/v2/collections/q8", "");
+        assert_eq!(s.get("data").get("quant").as_str(), Some("sq8"));
+        let (_, s) = send(&m, "GET", "/v2/collections/plain", "");
+        assert_eq!(s.get("data").get("quant").as_str(), Some("none"));
+    }
+
+    #[test]
+    fn stats_reports_governor_memory_and_eviction() {
+        let m = manager();
+        send(&m, "POST", "/v2/collections/default/insert", r#"{"id":1,"vector":[0,0,0,0]}"#);
+        send(&m, "POST", "/v2/collections/default/insert", r#"{"id":2,"vector":[1,0,0,0]}"#);
+        let (st, body) = send(&m, "GET", "/v2/collections/default/stats", "");
+        assert_eq!(st, 200);
+        let data = body.get("data");
+        assert_eq!(data.get("evicted").as_bool(), Some(false));
+        // 2 vectors x dim 4 x 4 bytes, no code arena on a quant-free tenant
+        let mem = data.get("memory_bytes");
+        assert_eq!(mem.get("exact_arena").as_i64(), Some(32));
+        assert_eq!(mem.get("code_arena").as_i64(), Some(0));
+        assert_eq!(mem.get("total").as_i64(), Some(32));
+        // governor is off: fresh-burst bucket, zero counters
+        let gov = data.get("governor");
+        assert_eq!(gov.get("enabled").as_bool(), Some(false));
+        assert_eq!(gov.get("available_tokens").as_i64(), Some(1));
+        assert_eq!(gov.get("in_flight").as_i64(), Some(0));
+        assert_eq!(gov.get("rate_limited").as_i64(), Some(0));
+        assert_eq!(gov.get("quota_rejected").as_i64(), Some(0));
+        // a quantized tenant reports both arenas
+        send(&m, "PUT", "/v2/collections/q8", r#"{"dim":4,"quant":"sq8"}"#);
+        send(&m, "POST", "/v2/collections/q8/insert", r#"{"id":1,"vector":[0.5,0,0,0]}"#);
+        let (_, body) = send(&m, "GET", "/v2/collections/q8/stats", "");
+        let mem = body.get("data").get("memory_bytes");
+        assert_eq!(mem.get("exact_arena").as_i64(), Some(16));
+        assert_eq!(mem.get("code_arena").as_i64(), Some(4));
+        assert_eq!(mem.get("total").as_i64(), Some(20));
     }
 }

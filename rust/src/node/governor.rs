@@ -114,6 +114,10 @@ struct TenantState {
     /// Outstanding stream debt, bytes.
     stream_debt: u64,
     stream_last: Instant,
+    /// Lifetime `1600 rate_limited` rejections for this tenant.
+    rate_limited: u64,
+    /// Lifetime `1601 quota_exceeded` rejections for this tenant.
+    quota_rejected: u64,
 }
 
 impl TenantState {
@@ -125,8 +129,26 @@ impl TenantState {
             last_touch: now,
             stream_debt: 0,
             stream_last: now,
+            rate_limited: 0,
+            quota_rejected: 0,
         }
     }
+}
+
+/// Point-in-time view of one tenant's governor state, surfaced on
+/// `GET /v2/collections/{name}/stats`. Diagnostic only — never hashed,
+/// logged or replayed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantSnapshot {
+    /// Whole request tokens currently available (millitokens / 1000,
+    /// refilled to `now` before reading).
+    pub available_tokens: u64,
+    /// Requests admitted and not yet released.
+    pub in_flight: u32,
+    /// Lifetime `1600 rate_limited` rejections for this tenant.
+    pub rate_limited: u64,
+    /// Lifetime `1601 quota_exceeded` rejections for this tenant.
+    pub quota_rejected: u64,
 }
 
 /// Front-end-local admission controller. One per [`CollectionManager`];
@@ -193,12 +215,14 @@ impl Governor {
                 let deficit = TOKENS_PER_REQUEST - t.tokens;
                 // deficit millitokens at `rate` millitokens/ms, rounded up.
                 let retry_after_ms = deficit.div_ceil(u64::from(rate).max(1)).max(1);
+                t.rate_limited += 1;
                 ServerMetrics::add(&self.metrics.requests_rate_limited, 1);
                 return Admission::RateLimited { retry_after_ms };
             }
         }
         if let Some(cap) = self.in_flight_cap() {
             if t.in_flight >= cap {
+                t.quota_rejected += 1;
                 ServerMetrics::add(&self.metrics.requests_quota_rejected, 1);
                 return Admission::QuotaExceeded;
             }
@@ -238,6 +262,38 @@ impl Governor {
             return Some(Duration::ZERO);
         }
         Some(now.saturating_duration_since(t.last_touch))
+    }
+
+    /// The state an unseen tenant would start from: a full burst bucket,
+    /// nothing in flight, zero rejection counters. Used by the stats
+    /// route for tenants [`Governor::tenant_snapshot`] has no entry for.
+    pub fn fresh_tenant_snapshot(&self) -> TenantSnapshot {
+        TenantSnapshot {
+            available_tokens: self.burst() / TOKENS_PER_REQUEST,
+            in_flight: 0,
+            rate_limited: 0,
+            quota_rejected: 0,
+        }
+    }
+
+    /// Read-only view of `name`'s governor state for `stats` reporting.
+    /// Refills the token bucket to `now` first so `available_tokens` is
+    /// honest, but records no touch (observation must not keep a tenant
+    /// alive past its idle TTL). `None` for tenants the governor has
+    /// never seen (or has pruned) — their bucket is at full burst and all
+    /// counters are zero.
+    pub fn tenant_snapshot(&self, name: &str, now: Instant) -> Option<TenantSnapshot> {
+        let mut tenants = self.tenants.lock().expect("governor poisoned");
+        let t = tenants.get_mut(name)?;
+        if self.config.rate_limit.is_some() {
+            self.refill(t, now);
+        }
+        Some(TenantSnapshot {
+            available_tokens: t.tokens / TOKENS_PER_REQUEST,
+            in_flight: t.in_flight,
+            rate_limited: t.rate_limited,
+            quota_rejected: t.quota_rejected,
+        })
     }
 
     /// Charge `bytes` of snapshot-stream transfer to `name`. Debt decays
@@ -386,6 +442,42 @@ mod tests {
         let tenants = g.tenants.lock().unwrap();
         assert!(tenants.contains_key("busy"), "in-flight tenant must survive prune");
         assert!(!tenants.contains_key("idle"), "idle tenant should be pruned");
+    }
+
+    #[test]
+    fn tenant_snapshot_tracks_tokens_in_flight_and_rejections() {
+        let g = governor(GovernorConfig {
+            rate_limit: Some(2),
+            quota: Some(1),
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        assert_eq!(g.tenant_snapshot("a", t0), None, "unseen tenant has no state");
+        assert_eq!(g.admit("a", t0), Admission::Admit);
+        assert_eq!(g.admit("a", t0), Admission::QuotaExceeded);
+        assert!(matches!(
+            g.admit("a", t0 + Duration::from_millis(1)),
+            Admission::QuotaExceeded
+        ));
+        let snap = g.tenant_snapshot("a", t0 + Duration::from_millis(1)).unwrap();
+        assert_eq!(snap.in_flight, 1);
+        assert_eq!(snap.quota_rejected, 2);
+        assert_eq!(snap.rate_limited, 0);
+        assert_eq!(snap.available_tokens, 1, "burst 2, one spent, refill negligible");
+        g.release("a");
+        // rate-limit rejections are counted per tenant too
+        assert_eq!(g.admit("a", t0 + Duration::from_millis(1)), Admission::Admit);
+        assert!(matches!(
+            g.admit("a", t0 + Duration::from_millis(1)),
+            Admission::RateLimited { .. }
+        ));
+        let snap = g.tenant_snapshot("a", t0 + Duration::from_millis(1)).unwrap();
+        assert_eq!(snap.rate_limited, 1);
+        assert_eq!(snap.available_tokens, 0);
+        // snapshotting does not touch: the tenant still prunes on schedule
+        g.release("a");
+        g.prune(t0 + Duration::from_secs(120));
+        assert_eq!(g.tenant_snapshot("a", t0 + Duration::from_secs(120)), None);
     }
 
     #[test]

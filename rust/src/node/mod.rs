@@ -69,7 +69,7 @@ pub use collections::{
     route_collections, serve_collections, CollectionManager, CollectionSpec, DEFAULT_COLLECTION,
     ManagerConfig,
 };
-pub use governor::{Admission, Governor, GovernorConfig};
+pub use governor::{Admission, Governor, GovernorConfig, TenantSnapshot};
 pub use metrics::Metrics;
 
 use crate::http::{Handler, Request, Response, Server};

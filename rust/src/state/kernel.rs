@@ -12,7 +12,7 @@ use crate::distance::{Metric, Scalar};
 use crate::fixed::{FixedFormat, Q16_16};
 use crate::graph::LinkGraph;
 use crate::hash::{splitmix64, Fnv1a64};
-use crate::index::{FlatIndex, Hnsw, HnswParams, VectorIndex};
+use crate::index::{FlatIndex, Hnsw, HnswParams, QuantSpec, VectorIndex};
 use crate::state::command::{CanonCommand, Command};
 use crate::vector::{BoundaryError, FixedVector, ValidationPolicy};
 use std::collections::BTreeMap;
@@ -106,6 +106,11 @@ pub struct KernelConfig {
     pub policy: ValidationPolicy,
     /// Shard placement (`{1, 0}` for the unsharded reference contract).
     pub shard: ShardSpec,
+    /// Quantized scan tier (flat index only; HNSW ignores it). `None`
+    /// kernels serialize as STATE_VERSION 2 — byte-identical to every
+    /// pre-quant snapshot — and `Sq8` kernels as version 3 with the spec
+    /// appended after the shard spec (see [`Kernel::encode_state`]).
+    pub quant: QuantSpec,
 }
 
 impl KernelConfig {
@@ -118,6 +123,7 @@ impl KernelConfig {
             hnsw: HnswParams::default(),
             policy: ValidationPolicy::default(),
             shard: ShardSpec::default(),
+            quant: QuantSpec::None,
         }
     }
 
@@ -130,11 +136,18 @@ impl KernelConfig {
             hnsw: HnswParams::default(),
             policy: ValidationPolicy::normalized_embeddings(),
             shard: ShardSpec::default(),
+            quant: QuantSpec::None,
         }
     }
 
     pub fn with_flat_index(mut self) -> Self {
         self.index = IndexKind::Flat;
+        self
+    }
+
+    /// Enable (or disable) the quantized scan tier.
+    pub fn with_quant(mut self, quant: QuantSpec) -> Self {
+        self.quant = quant;
         self
     }
 
@@ -145,6 +158,9 @@ impl KernelConfig {
         self
     }
 
+    /// The STATE_VERSION-2 field layout. The quant spec is deliberately
+    /// NOT written here: version-2 streams must stay byte-identical, so
+    /// [`Kernel::encode_state`] appends it only under version 3.
     pub fn encode(&self, e: &mut Encoder) {
         e.put_u32(self.dim as u32);
         e.put_u8(self.metric.tag());
@@ -178,6 +194,7 @@ impl KernelConfig {
             hnsw,
             policy: ValidationPolicy { max_abs, normalize },
             shard,
+            quant: QuantSpec::None,
         })
     }
 }
@@ -266,12 +283,19 @@ const MAX_META_KEY: usize = 256;
 pub(crate) const STATE_MAGIC: u32 = 0x564C_4F52; // "VLOR"
 /// Version 2 added the shard spec to [`KernelConfig`] (PR: sharded kernel).
 pub(crate) const STATE_VERSION: u32 = 2;
+/// Version 3 appends the quantization spec after the shard spec. Emitted
+/// only when a quant tier is configured — quant-free kernels keep writing
+/// version-2 bytes, so every pre-quant snapshot (and the golden fixture)
+/// stays byte-identical; both versions decode.
+pub(crate) const STATE_VERSION_QUANT: u32 = 3;
 
 impl Kernel {
     pub fn new(config: KernelConfig) -> Self {
         let index = match config.index {
             IndexKind::Hnsw => IndexImpl::Hnsw(Hnsw::new(config.dim, config.metric, config.hnsw)),
-            IndexKind::Flat => IndexImpl::Flat(FlatIndex::new(config.dim, config.metric)),
+            IndexKind::Flat => {
+                IndexImpl::Flat(FlatIndex::with_quant(config.dim, config.metric, config.quant))
+            }
         };
         Self { config, index, links: LinkGraph::new(), meta: BTreeMap::new(), seq: 0 }
     }
@@ -507,8 +531,18 @@ impl Kernel {
     /// snapshots are computed over. Fully deterministic by construction.
     pub fn encode_state(&self, e: &mut Encoder) {
         e.put_u32(STATE_MAGIC);
-        e.put_u32(STATE_VERSION);
+        // The version is a pure function of the config: no quant tier ⇒
+        // version-2 bytes, identical to every pre-quant snapshot (the
+        // golden fixture pins this); a quant tier ⇒ version 3 with the
+        // spec appended right after the shard spec. Codes themselves are
+        // derived state and never appear in either layout.
+        let version =
+            if self.config.quant == QuantSpec::None { STATE_VERSION } else { STATE_VERSION_QUANT };
+        e.put_u32(version);
         self.config.encode(e);
+        if version == STATE_VERSION_QUANT {
+            self.config.quant.encode(e);
+        }
         e.put_u64(self.seq);
         match &self.index {
             IndexImpl::Hnsw(h) => h.encode(e),
@@ -532,14 +566,19 @@ impl Kernel {
             return Err(DecodeError::BadMagic { expected: STATE_MAGIC, found: magic });
         }
         let version = d.get_u32()?;
-        if version != STATE_VERSION {
-            return Err(DecodeError::BadVersion { expected: STATE_VERSION, found: version });
+        if version != STATE_VERSION && version != STATE_VERSION_QUANT {
+            return Err(DecodeError::BadVersion { expected: STATE_VERSION_QUANT, found: version });
         }
-        let config = KernelConfig::decode(d)?;
+        let mut config = KernelConfig::decode(d)?;
+        if version == STATE_VERSION_QUANT {
+            // v2 streams have no quant field: decode() already defaulted
+            // it to None, so pre-quant snapshots restore unchanged.
+            config.quant = QuantSpec::decode(d)?;
+        }
         let seq = d.get_u64()?;
         let index = match config.index {
             IndexKind::Hnsw => IndexImpl::Hnsw(Hnsw::decode(d)?),
-            IndexKind::Flat => IndexImpl::Flat(FlatIndex::decode(d)?),
+            IndexKind::Flat => IndexImpl::Flat(FlatIndex::decode_with_quant(d, config.quant)?),
         };
         let links = LinkGraph::decode(d)?;
         let n = d.get_u32()? as usize;
@@ -582,6 +621,19 @@ impl Kernel {
     /// Dequantized copy of a stored vector (observability only).
     pub fn get_f32(&self, id: u64) -> Option<Vec<f32>> {
         self.get_raw(id).map(|raw| raw.iter().map(|&r| Q16_16::dequantize(r) as f32).collect())
+    }
+
+    /// Resident heap bytes of the vector arenas: `(exact, codes)` — the
+    /// exact Q16.16 arena and the derived i8 code arena (0 when no quant
+    /// tier). Tombstoned slots count: this reports memory held, not live
+    /// vectors. Feeds the per-collection `memory_bytes` stat.
+    pub fn arena_bytes(&self) -> (usize, usize) {
+        match &self.index {
+            IndexImpl::Hnsw(h) => {
+                (h.store().arena().len() * std::mem::size_of::<i32>(), 0)
+            }
+            IndexImpl::Flat(f) => (f.exact_arena_bytes(), f.code_arena_bytes()),
+        }
     }
 }
 
@@ -755,6 +807,76 @@ mod tests {
             .apply(Command::SetMeta { id: 1, key: long, value: "v".into() })
             .unwrap_err();
         assert_eq!(err, StateError::MetaKeyTooLong(300));
+    }
+
+    #[test]
+    fn quant_kernel_round_trips_as_version_3() {
+        let cfg = KernelConfig::default_q16(4)
+            .with_flat_index()
+            .with_quant(QuantSpec::Sq8 { overscan: 4 });
+        let mut k = Kernel::new(cfg);
+        for i in 0..30u64 {
+            let x = (i as f32) / 30.0 - 0.5;
+            k.apply(Command::insert(i, v(x, -x, 0.25, x * 0.5))).unwrap();
+        }
+        k.apply(Command::Delete { id: 11 }).unwrap();
+        let bytes = k.to_state_bytes();
+        // magic, then version 3
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), STATE_VERSION_QUANT);
+        let k2 = Kernel::from_state_bytes(&bytes).unwrap();
+        assert_eq!(k, k2);
+        assert_eq!(k2.config().quant, QuantSpec::Sq8 { overscan: 4 });
+        assert_eq!(bytes, k2.to_state_bytes());
+        // the restored kernel searches identically (codes rebuilt)
+        let q = v(0.1, -0.1, 0.25, 0.05);
+        assert_eq!(k.search_f32(&q, 5).unwrap(), k2.search_f32(&q, 5).unwrap());
+    }
+
+    #[test]
+    fn quant_free_kernel_still_emits_version_2_bytes() {
+        let mut a = Kernel::new(KernelConfig::default_q16(4).with_flat_index());
+        a.apply(Command::insert(1, v(0.5, 0.0, 0.0, 0.0))).unwrap();
+        let bytes = a.to_state_bytes();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), STATE_VERSION);
+        // and a v2 stream decodes with quant defaulted off
+        let k2 = Kernel::from_state_bytes(&bytes).unwrap();
+        assert_eq!(k2.config().quant, QuantSpec::None);
+    }
+
+    #[test]
+    fn quant_kernel_search_matches_exact_kernel_at_covering_overscan() {
+        let exact_cfg = KernelConfig::default_q16(4).with_flat_index();
+        let quant_cfg = exact_cfg.clone().with_quant(QuantSpec::Sq8 { overscan: 1000 });
+        let mut e = Kernel::new(exact_cfg);
+        let mut q = Kernel::new(quant_cfg);
+        for i in 0..64u64 {
+            let x = (i as f32) / 64.0 - 0.5;
+            let vec = v(x, 1.0 - x, x * x, -x);
+            e.apply(Command::insert(i, vec.clone())).unwrap();
+            q.apply(Command::insert(i, vec)).unwrap();
+        }
+        // overscan * k >= n: the fallback (or a covering candidate set)
+        // must reproduce the exact kernel's hits bit for bit.
+        let query = v(0.2, 0.8, 0.05, -0.2);
+        assert_eq!(e.search_f32(&query, 7).unwrap(), q.search_f32(&query, 7).unwrap());
+        // quant never leaks into state bytes' payload beyond the config:
+        // same commands, version differs, but index payload is identical,
+        // so decoding q's bytes and re-encoding is stable
+        let restored = Kernel::from_state_bytes(&q.to_state_bytes()).unwrap();
+        assert_eq!(q.state_hash(), restored.state_hash());
+    }
+
+    #[test]
+    fn arena_bytes_reports_both_arenas() {
+        let mut k = Kernel::new(
+            KernelConfig::default_q16(4).with_flat_index().with_quant(QuantSpec::sq8_default()),
+        );
+        for i in 0..10u64 {
+            k.apply(Command::insert(i, v(0.1, 0.2, 0.3, 0.4))).unwrap();
+        }
+        assert_eq!(k.arena_bytes(), (10 * 4 * 4, 10 * 4));
+        let plain = Kernel::new(KernelConfig::default_q16(4).with_flat_index());
+        assert_eq!(plain.arena_bytes(), (0, 0));
     }
 
     #[test]

@@ -337,6 +337,16 @@ impl ShardedKernel {
         self.shards.iter().map(Kernel::seq).sum()
     }
 
+    /// Resident vector-arena bytes summed across shards:
+    /// `(exact Q16.16 arena, derived i8 code arena)` — the per-collection
+    /// `memory_bytes` stat (and the observable 4× shrink of the SQ8 tier).
+    pub fn arena_bytes(&self) -> (usize, usize) {
+        self.shards.iter().fold((0, 0), |(e, c), k| {
+            let (ke, kc) = k.arena_bytes();
+            (e + ke, c + kc)
+        })
+    }
+
     pub fn contains(&self, id: u64) -> bool {
         self.owner(id).contains(id)
     }

@@ -20,6 +20,7 @@ use std::sync::Arc;
 use std::time::Duration;
 use valori::api::ApiCode;
 use valori::http::{client, Server};
+use valori::index::QuantSpec;
 use valori::json::{parse, Json};
 use valori::node::{
     serve, serve_collections, CollectionManager, CollectionSpec, ManagerConfig, NodeConfig,
@@ -107,10 +108,11 @@ fn api_error_codes_match_golden_fixture() {
 #[test]
 fn interleaved_tenants_match_sequential_mirrors_bit_for_bit() {
     // Two tenants with different shapes on one server.
-    let (manager, server) = spawn_manager(CollectionSpec { dim: 4, shards: 1, flat: false });
+    let (manager, server) =
+        spawn_manager(CollectionSpec { dim: 4, shards: 1, flat: false, quant: QuantSpec::None });
     let addr = server.addr();
-    let spec_a = CollectionSpec { dim: 8, shards: 2, flat: true };
-    let spec_b = CollectionSpec { dim: 8, shards: 4, flat: true };
+    let spec_a = CollectionSpec { dim: 8, shards: 2, flat: true, quant: QuantSpec::None };
+    let spec_b = CollectionSpec { dim: 8, shards: 4, flat: true, quant: QuantSpec::None };
     manager.create("tenant_a", spec_a).unwrap();
     manager.create("tenant_b", spec_b).unwrap();
 
@@ -184,7 +186,7 @@ fn interleaved_tenants_match_sequential_mirrors_bit_for_bit() {
 
 #[test]
 fn combined_hash_invariant_under_creation_order_permutation() {
-    let spec = CollectionSpec { dim: 4, shards: 2, flat: true };
+    let spec = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
     let (m1, s1) = spawn_manager(spec.clone());
     let (m2, s2) = spawn_manager(spec.clone());
     // m1 creates zeta then alpha; m2 creates alpha then zeta.
@@ -296,7 +298,7 @@ fn v1_adapter_is_byte_identical_to_standalone_node() {
     let standalone = serve(Arc::clone(&standalone_state), "127.0.0.1:0", 2).unwrap();
     // …and a collection manager whose `default` has the same spec.
     let (_manager, managed) =
-        spawn_manager(CollectionSpec { dim: 4, shards: 1, flat: false });
+        spawn_manager(CollectionSpec { dim: 4, shards: 1, flat: false, quant: QuantSpec::None });
 
     // Deterministic /v1 battery (health and stats excluded: health
     // truthfully reports the manager's backend/collection count, stats
@@ -395,11 +397,15 @@ fn chunked_transfer_encoding_rejected_501_identically_on_both_front_ends() {
 
 #[test]
 fn sync_all_collections_converges_a_fresh_follower() {
-    let spec = CollectionSpec { dim: 4, shards: 2, flat: true };
+    let spec = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
     let (p_manager, primary) = spawn_manager(spec.clone());
     let (f_manager, follower) = spawn_manager(spec.clone());
-    p_manager.create("t1", CollectionSpec { dim: 4, shards: 2, flat: true }).unwrap();
-    p_manager.create("t2", CollectionSpec { dim: 4, shards: 4, flat: true }).unwrap();
+    p_manager
+        .create("t1", CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None })
+        .unwrap();
+    p_manager
+        .create("t2", CollectionSpec { dim: 4, shards: 4, flat: true, quant: QuantSpec::None })
+        .unwrap();
 
     // data in default + both tenants, via the live server
     let p_addr = primary.addr();

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Generate `sq8_recall_golden.json`: an independent (Python) mirror of
+the SQ8 quantized scan tier, pinning recall@10 of the two-phase search
+against the exact Q16.16 top-k on a fixed splitmix64 corpus.
+
+The mirror re-implements, from the documented contracts only:
+
+  * the bench/test corpus generator (splitmix64 stream, % 131072 - 65536,
+    so |raw| <= 2^16, inside the boundary contract's |raw| <= 2^18);
+  * the integer-only SQ8 encode: code = clamp(round_half_away_from_zero(
+    raw * 127 / 2^18), -127, 127) — pure integer arithmetic, no floats;
+  * phase 1: i8 L2 scan, select k * overscan candidates under the total
+    order (approx_dist, id) ascending;
+  * phase 2: exact Q16.16 L2 re-rank of those candidates under
+    (dist, id) ascending, truncate to k.
+
+`tests/quant_equivalence.rs::recall_matches_python_mirror_fixture` runs
+the same workload through the production Rust kernels and asserts the
+per-query overlap counts (and the pinned exact top-10 id lists) match
+this fixture bit for bit. Regenerate with:
+
+    python3 rust/tests/fixtures/make_sq8_recall.py
+"""
+
+import json
+import pathlib
+
+M64 = (1 << 64) - 1
+
+N = 2000
+DIM = 32
+K = 10
+SEED = 0x53513852  # "SQ8R"
+QUERY_SEED_XOR = 0x5155455259  # the bench suite's disjoint query stream
+QUERIES = 16
+OVERSCANS = [1, 2, 4, 8]
+QUANT_BOUND_RAW = 1 << 18  # boundary contract: max_abs 4.0 => |raw| <= 2^18
+
+
+def splitmix64(z):
+    z = (z + 0x9E3779B97F4A7C15) & M64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return z ^ (z >> 31)
+
+
+def raw_component(seed, index):
+    return (splitmix64(seed ^ index) % 131072) - 65536
+
+
+def raw_row(seed, i, dim):
+    return [raw_component(seed, i * dim + j) for j in range(dim)]
+
+
+def encode_component(raw):
+    # Round half away from zero with truncating integer division, exactly
+    # as the Rust encoder does (|raw * 127| <= 2^25, exact in i64).
+    num = raw * 127
+    rounded = (abs(num) + QUANT_BOUND_RAW // 2) // QUANT_BOUND_RAW
+    if num < 0:
+        rounded = -rounded
+    return max(-127, min(127, rounded))
+
+
+def l2_exact(a, b):
+    return sum((x - y) ** 2 for x, y in zip(a, b))
+
+
+def l2_sq8(a, b):
+    return sum((x - y) ** 2 for x, y in zip(a, b))
+
+
+def exact_topk(corpus, q, k):
+    hits = sorted((l2_exact(q, v), i) for i, v in enumerate(corpus))
+    return [i for _, i in hits[:k]]
+
+
+def two_phase(corpus, codes, q, qcodes, k, overscan):
+    approx = sorted((l2_sq8(qcodes, c), i) for i, c in enumerate(codes))
+    candidates = [i for _, i in approx[: k * overscan]]
+    exact = sorted((l2_exact(q, corpus[i]), i) for i in candidates)
+    return [i for _, i in exact[:k]]
+
+
+def main():
+    corpus = [raw_row(SEED, i, DIM) for i in range(N)]
+    codes = [[encode_component(x) for x in row] for row in corpus]
+    queries = [raw_row(SEED ^ QUERY_SEED_XOR, i, DIM) for i in range(QUERIES)]
+
+    exact = [exact_topk(corpus, q, K) for q in queries]
+    recall = {}
+    for overscan in OVERSCANS:
+        counts = []
+        for qi, q in enumerate(queries):
+            qcodes = [encode_component(x) for x in q]
+            got = two_phase(corpus, codes, q, qcodes, K, overscan)
+            counts.append(len(set(got) & set(exact[qi])))
+        recall[str(overscan)] = counts
+
+    doc = {
+        "comment": "SQ8 two-phase recall@10 vs exact Q16.16 top-k, from an "
+        "independent Python mirror (make_sq8_recall.py). Counts are "
+        "|two_phase_ids ∩ exact_top10| per query; exact_top10 pins the "
+        "(dist, id) total order for the first three queries.",
+        "n": N,
+        "dim": DIM,
+        "k": K,
+        "seed": SEED,
+        "query_seed_xor": QUERY_SEED_XOR,
+        "queries": QUERIES,
+        "metric": "l2",
+        "quant_bound_raw": QUANT_BOUND_RAW,
+        "exact_top10": exact[:3],
+        "recall_at_10": recall,
+    }
+    out = pathlib.Path(__file__).with_name("sq8_recall_golden.json")
+    out.write_text(json.dumps(doc, indent=1, ensure_ascii=False) + "\n")
+    total = {o: sum(c) for o, c in recall.items()}
+    print(f"wrote {out}")
+    for o in OVERSCANS:
+        print(f"  overscan {o}: mean recall@10 = {total[str(o)] / (10 * QUERIES):.3f}")
+
+
+if __name__ == "__main__":
+    main()

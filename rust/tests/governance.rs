@@ -18,6 +18,7 @@ use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 use valori::api::ApiCode;
 use valori::http::{client, Request};
+use valori::index::QuantSpec;
 use valori::json::{parse, Json};
 use valori::node::{
     route_collections, serve_collections, Admission, CollectionManager, CollectionSpec,
@@ -26,7 +27,7 @@ use valori::node::{
 use valori::state::{Command, KernelConfig, ShardedKernel};
 
 fn spec(dim: usize, shards: u32) -> CollectionSpec {
-    CollectionSpec { dim, shards, flat: true }
+    CollectionSpec { dim, shards, flat: true, quant: QuantSpec::None }
 }
 
 fn governed(
