@@ -40,6 +40,7 @@
 //! | 1500 | `internal` | 500 |
 //! | 1600 | `rate_limited` | 429 |
 //! | 1601 | `quota_exceeded` | 429 |
+//! | 1602 | `memory_quota_exceeded` | 429 |
 //!
 //! Codes are a compatibility contract: they may be *added*, never
 //! renumbered or reused (`tests/fixtures/api_error_codes.json` is the
@@ -48,14 +49,19 @@
 //! 12xx embedder, 13xx routing, 14xx snapshot streaming, 15xx internal,
 //! 16xx admission control (per-collection governance).
 //!
-//! The 16xx codes are issued by the front end *before* a request
+//! The 1600/1601 codes are issued by the front end *before* a request
 //! reaches the dispatch pool: admission decisions come from
 //! front-end-local state only (monotonic clocks, in-flight counters),
 //! are never logged and never hashed, so a throttled-and-retried
 //! workload replays to a root hash bit-identical to an unthrottled run.
 //! A `rate_limited` error object additionally carries a
 //! `retry_after_ms` detail field (the only taxonomy error with an extra
-//! key).
+//! key). 1602 `memory_quota_exceeded` rejects an insert whose projected
+//! arena footprint would exceed the collection's `memory_quota` budget;
+//! unlike its 16xx siblings it is a pure function of replicated state
+//! (arena bytes + spec), so all replicas admit and reject identically.
+//! Replication ingest (`apply`) and /v1 are exempt — quota governs new
+//! client writes, never replay convergence.
 //!
 //! ## Collection specs and the quantized scan tier
 //!
@@ -151,12 +157,17 @@ pub enum ApiCode {
     /// request cap (quota/bulkhead) — retry once an in-flight request
     /// completes.
     QuotaExceeded = 1601,
+    /// Admission control: the insert's projected arena footprint would
+    /// exceed the collection's `memory_quota` byte budget. Deterministic
+    /// (a pure function of replicated state + spec) — delete vectors or
+    /// raise the quota, then retry.
+    MemoryQuotaExceeded = 1602,
 }
 
 impl ApiCode {
     /// Every variant, in code order (the golden-fixture test iterates
     /// this, so adding a variant without extending the fixture fails CI).
-    pub const ALL: [ApiCode; 23] = [
+    pub const ALL: [ApiCode; 24] = [
         ApiCode::BadRequest,
         ApiCode::DuplicateId,
         ApiCode::UnknownId,
@@ -180,6 +191,7 @@ impl ApiCode {
         ApiCode::Internal,
         ApiCode::RateLimited,
         ApiCode::QuotaExceeded,
+        ApiCode::MemoryQuotaExceeded,
     ];
 
     /// The stable numeric code (the discriminant).
@@ -213,6 +225,7 @@ impl ApiCode {
             ApiCode::Internal => "internal",
             ApiCode::RateLimited => "rate_limited",
             ApiCode::QuotaExceeded => "quota_exceeded",
+            ApiCode::MemoryQuotaExceeded => "memory_quota_exceeded",
         }
     }
 
@@ -236,7 +249,7 @@ impl ApiCode {
             }
             ApiCode::EmbedFailed | ApiCode::Internal => 500,
             ApiCode::NoEmbedder | ApiCode::RestoreBusy => 503,
-            ApiCode::RateLimited | ApiCode::QuotaExceeded => 429,
+            ApiCode::RateLimited | ApiCode::QuotaExceeded | ApiCode::MemoryQuotaExceeded => 429,
         }
     }
 }
@@ -313,6 +326,9 @@ impl From<StateError> for ApiError {
             StateError::DimMismatch { .. } => ApiCode::DimMismatch,
             StateError::MetaKeyTooLong(_) => ApiCode::MetaKeyTooLong,
             StateError::WrongShard { .. } => ApiCode::WrongShard,
+            // A panicked scan task is a runtime fault, not a state
+            // rejection: the query (and only the query) failed.
+            StateError::ScanPoisoned => ApiCode::Internal,
         };
         // The message is the kernel's own Display text, so /v1 and /v2
         // describe a rejection with the same words.
@@ -518,6 +534,36 @@ fn seq_of(state: &NodeState) -> i64 {
     state.with_sharded(|k| k.seq()) as i64
 }
 
+/// Reject an insert of `n_new` vectors if the projected arena footprint
+/// would exceed the collection's `memory_quota` (0 = unlimited). The
+/// projection is exact for accepted inserts — `dim * 4` Q16.16 bytes per
+/// vector, plus `dim` derived i8 code bytes under SQ8 — and a pure
+/// function of replicated state, so every replica admits identically.
+/// Only called on the client write paths; replication ingest is exempt.
+fn check_memory_quota(state: &NodeState, n_new: usize) -> ApiResult<()> {
+    let quota = state.memory_quota();
+    if quota == 0 {
+        return Ok(());
+    }
+    let (current, per_vec) = state.with_sharded(|sk| {
+        let (exact, codes) = sk.arena_bytes();
+        let dim = sk.config().dim;
+        let sq8 = !matches!(sk.config().quant, crate::index::QuantSpec::None);
+        ((exact + codes) as u64, (dim * 4 + if sq8 { dim } else { 0 }) as u64)
+    });
+    let projected = current.saturating_add(per_vec.saturating_mul(n_new as u64));
+    if projected > quota {
+        return Err(ApiError::new(
+            ApiCode::MemoryQuotaExceeded,
+            format!(
+                "memory quota exceeded: {current} bytes resident + {n_new} vector(s) \
+                 would reach {projected} bytes (quota {quota})"
+            ),
+        ));
+    }
+    Ok(())
+}
+
 /// Execute one typed request against one collection's node state and
 /// return the success payload (the `data` object). Every handler in the
 /// /v2 route tree funnels through here, which is what makes the response
@@ -526,6 +572,7 @@ pub fn execute(state: &NodeState, request: ApiRequest) -> ApiResult<Json> {
     match request {
         ApiRequest::Insert { id, vector } => {
             let v = resolve_vector(state, vector)?;
+            check_memory_quota(state, 1)?;
             state.apply(Command::Insert { id, vector: v })?;
             Metrics::inc(&state.metrics.inserts);
             Ok(Json::object(vec![
@@ -535,6 +582,7 @@ pub fn execute(state: &NodeState, request: ApiRequest) -> ApiResult<Json> {
         }
         ApiRequest::InsertBatch { items } => {
             let n = items.len();
+            check_memory_quota(state, n)?;
             state.apply(Command::InsertBatch { items })?;
             Metrics::inc(&state.metrics.inserts);
             Ok(Json::object(vec![
@@ -687,6 +735,46 @@ mod tests {
         assert_eq!(ApiCode::Internal.code(), 1500);
         assert_eq!(ApiCode::RateLimited.code(), 1600);
         assert_eq!(ApiCode::QuotaExceeded.code(), 1601);
+        assert_eq!(ApiCode::MemoryQuotaExceeded.code(), 1602);
+    }
+
+    #[test]
+    fn memory_quota_rejects_projected_overflow() {
+        let kernel = Kernel::new(KernelConfig::default_q16(4));
+        let config = NodeConfig { memory_quota: 20, ..NodeConfig::default() };
+        let state = NodeState::new(kernel, &config, None).unwrap();
+        // dim 4 → 16 arena bytes per vector: the first insert fits the
+        // 20-byte budget…
+        let body = parse(r#"{"id":1,"vector":[0.1,0.2,0.3,0.4]}"#).unwrap();
+        execute(&state, ApiRequest::parse("insert", &body).unwrap()).unwrap();
+        // …the second projects 32 > 20 bytes and must reject *before*
+        // the state machine sees it.
+        let body = parse(r#"{"id":2,"vector":[0.1,0.2,0.3,0.4]}"#).unwrap();
+        let err = execute(&state, ApiRequest::parse("insert", &body).unwrap()).unwrap_err();
+        assert_eq!(err.code, ApiCode::MemoryQuotaExceeded);
+        assert_eq!(err.code.http_status(), 429);
+        assert!(!state.with_sharded(|sk| sk.contains(2)), "rejected insert must not apply");
+
+        // Batches project as a whole.
+        let body = parse(
+            r#"{"items":[{"id":2,"vector":[0.0,0.0,0.0,0.0]},{"id":3,"vector":[0.0,0.0,0.0,0.0]}]}"#,
+        )
+        .unwrap();
+        let err =
+            execute(&state, ApiRequest::parse("insert_batch", &body).unwrap()).unwrap_err();
+        assert_eq!(err.code, ApiCode::MemoryQuotaExceeded);
+
+        // Replication ingest is exempt: convergence wins over quota.
+        let canon = state
+            .with_sharded(|sk| sk.shards()[0].canonicalize(Command::insert(2, vec![0.1; 4])))
+            .unwrap();
+        let data = execute(
+            &state,
+            ApiRequest::Apply { shard: None, commands: vec![canon] },
+        )
+        .unwrap();
+        assert_eq!(data.get("applied").as_i64(), Some(1));
+        assert!(state.with_sharded(|sk| sk.contains(2)));
     }
 
     #[test]

@@ -116,6 +116,19 @@ impl SuiteResult {
             None
         }
     }
+
+    /// p50 speedup of the every-core chunk-claiming scan over the same
+    /// pooled path pinned to one worker — the scan-pool acceptance
+    /// metric (both rows are bit-identity-checked before timing).
+    pub fn parallel_scan_speedup_p50(&self) -> Option<f64> {
+        let new = self.row("parallel_scan")?.stats.p50_ns;
+        let old = self.row("parallel_scan_1worker")?.stats.p50_ns;
+        if new > 0.0 {
+            Some(old / new)
+        } else {
+            None
+        }
+    }
 }
 
 /// Deterministic raw Q16.16 component: |value| ≤ 2^16, well inside the
@@ -286,6 +299,52 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
         report.add("sharded_search", stats);
     }
 
+    // --- parallel scan (chunk-claiming pool vs a 1-worker pool) ---------
+    // One shard on purpose: before the shared scan pool, a 1-shard
+    // collection was a serial scan no matter how many cores the host
+    // had. Both rows go through the pooled path, so the speedup isolates
+    // the work-stealing fan-out (not pool dispatch overhead).
+    {
+        let mut sk = ShardedKernel::new(KernelConfig::default_q16(cfg.dim).with_flat_index(), 1);
+        let items: Vec<(u64, Vec<i32>)> =
+            (0..cfg.n as u64).map(|i| (i, raw_row(cfg.seed, i, cfg.dim))).collect();
+        for chunk in items.chunks(4096) {
+            sk.apply_canon(&CanonCommand::InsertBatch { items: chunk.to_vec() })
+                .expect("bench corpus insert");
+        }
+        // Bit-identity before timing anything: the inline scan, the
+        // 1-worker pool, and the every-core pool must agree exactly.
+        let expect: Vec<_> = qs
+            .iter()
+            .map(|q| sk.search_raw_inline(q, cfg.k).expect("bench reference scan"))
+            .collect();
+        sk.set_scan_workers(1);
+        for (q, e) in qs.iter().zip(&expect) {
+            let hits = sk.search_raw_pooled(q, cfg.k).expect("bench 1-worker scan");
+            assert_eq!(&hits, e, "1-worker pooled scan diverged from inline scan");
+        }
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % qs.len();
+            sk.search_raw_pooled(&qs[qi], cfg.k).expect("bench 1-worker scan")
+        });
+        rows.push(SuiteRow { name: "parallel_scan_1worker".into(), n: cfg.n, stats });
+        report.add("parallel_scan_1worker", stats);
+
+        sk.set_scan_workers(0); // 0 = one worker per core
+        for (q, e) in qs.iter().zip(&expect) {
+            let hits = sk.search_raw_pooled(q, cfg.k).expect("bench parallel scan");
+            assert_eq!(&hits, e, "multi-worker scan diverged from inline scan");
+        }
+        let mut qi = 0usize;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % qs.len();
+            sk.search_raw_pooled(&qs[qi], cfg.k).expect("bench parallel scan")
+        });
+        rows.push(SuiteRow { name: "parallel_scan".into(), n: cfg.n, stats });
+        report.add("parallel_scan", stats);
+    }
+
     // --- parallel batch upsert (router + per-shard worker application) --
     {
         let mut sk =
@@ -357,7 +416,7 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
         use crate::node::collections::{
             serve_collections, CollectionManager, CollectionSpec, ManagerConfig,
         };
-        let spec = CollectionSpec { dim: cfg.dim, shards: 1, flat: true, quant: QuantSpec::None };
+        let spec = CollectionSpec::new(cfg.dim, 1, true, QuantSpec::None);
         let manager = std::sync::Arc::new(
             CollectionManager::new(
                 ManagerConfig {
@@ -463,6 +522,9 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
     if let Some(speedup) = result.sq8_speedup_p50() {
         println!("  note: sq8 scan p50 speedup vs exact flat search: {speedup:.2}x");
     }
+    if let Some(speedup) = result.parallel_scan_speedup_p50() {
+        println!("  note: parallel scan p50 speedup vs 1-worker pool: {speedup:.2}x");
+    }
     result
 }
 
@@ -500,6 +562,9 @@ pub fn suite_json(r: &SuiteResult) -> Json {
     }
     if let Some(speedup) = r.sq8_speedup_p50() {
         fields.push(("sq8_speedup_p50_vs_flat", Json::Float(speedup)));
+    }
+    if let Some(speedup) = r.parallel_scan_speedup_p50() {
+        fields.push(("parallel_scan_speedup_p50_vs_1worker", Json::Float(speedup)));
     }
     Json::object(fields)
 }
@@ -544,6 +609,8 @@ mod tests {
             "sq8_scan",
             "hnsw_search",
             "sharded_search",
+            "parallel_scan_1worker",
+            "parallel_scan",
             "batch_upsert",
             "http_roundtrip",
             "multi_collection_route",
@@ -554,10 +621,12 @@ mod tests {
         }
         assert!(r.flat_speedup_p50().is_some());
         assert!(r.sq8_speedup_p50().is_some());
+        assert!(r.parallel_scan_speedup_p50().is_some());
         let json = suite_json(&r).to_string();
         let parsed = crate::json::parse(&json).expect("bench json parses");
         assert_eq!(parsed.get("suite").as_str(), Some("valori-search"));
-        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(9));
+        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(11));
         assert!(parsed.get("sq8_speedup_p50_vs_flat").as_f64().is_some());
+        assert!(parsed.get("parallel_scan_speedup_p50_vs_1worker").as_f64().is_some());
     }
 }

@@ -109,8 +109,10 @@ impl<S: Scalar> FlatIndex<S> {
 
     /// The overscan factor iff the two-phase path is usable: quant is
     /// `Sq8`, the dimension forms rows, and the code arena is complete
-    /// (i.e. `S` opted into quantization).
-    fn sq8_ready(&self) -> Option<u32> {
+    /// (i.e. `S` opted into quantization). Public so the sharded parallel
+    /// scan can make the same exact-vs-two-phase decision per shard that
+    /// [`VectorIndex::search`] makes sequentially.
+    pub fn sq8_ready(&self) -> Option<u32> {
         match self.quant {
             QuantSpec::Sq8 { overscan }
                 if self.store.dim() > 0
@@ -138,39 +140,92 @@ impl<S: Scalar> FlatIndex<S> {
     }
 
     /// Phase 1 (blocked i8 scan, `(approx_dist, id)` order) + phase 2
-    /// (exact re-rank of the candidates, `(dist, id)` order).
+    /// (exact re-rank of the candidates, `(dist, id)` order). Both phases
+    /// are full-range calls into the same sub-range primitives the
+    /// parallel scan chunks over, so sequential and parallel execution
+    /// share one code path per phase.
     fn search_sq8(&self, query: &[S], k: usize, overscan: u32) -> Option<Vec<Hit<S::Dist>>> {
+        let qcodes = Quantizer::encode_query(query)?;
+        let mut approx = TopK::new((overscan as usize).saturating_mul(k));
+        self.scan_sq8_range(&qcodes, 0, self.store.slots(), &mut approx);
+        // Exact Q16.16 re-rank of only the surviving candidates, under
+        // the same (dist, id) total order the exact scan uses.
+        let mut topk = TopK::new(k);
+        self.rerank_into(query, &approx.into_sorted_hits(), &mut topk);
+        Some(topk.into_sorted_hits())
+    }
+
+    /// Blocked exact sweep over the contiguous slot sub-range `[lo, hi)`,
+    /// alive-filtered, pushed into `out`. [`VectorIndex::search`] is this
+    /// over `[0, slots)`; the sharded parallel scan runs it per claimed
+    /// chunk. The block kernels are exact per row and `TopK` ignores push
+    /// order, so *any* partition of the slot space into sub-ranges merges
+    /// bit-identically to one sequential pass (PERFORMANCE.md §9).
+    /// Requires `dim > 0` (rows must form) and `lo <= hi <= slots`.
+    pub fn scan_exact_range(&self, query: &[S], lo: usize, hi: usize, out: &mut TopK<S::Dist>) {
         let dim = self.store.dim();
-        let mut qcodes = Vec::with_capacity(dim);
-        for &x in query {
-            qcodes.push(Quantizer::encode_component(x.as_q16_raw()?));
-        }
-        let slots = self.store.slots();
+        debug_assert!(dim > 0, "scan_exact_range: dim must be non-zero");
+        debug_assert!(lo <= hi && hi <= self.store.slots(), "scan_exact_range: bad range");
+        let arena = self.store.arena();
         let alive = self.store.alive_flags();
         let ids = self.store.external_ids();
-        let mut approx = TopK::new((overscan as usize).saturating_mul(k));
-        let mut dists = vec![0i32; SCORE_BLOCK.min(slots)];
-        let mut base = 0usize;
-        while base < slots {
-            let rows = SCORE_BLOCK.min(slots - base);
-            let block = &self.codes[base * dim..(base + rows) * dim];
-            quant::sq8_distance_block(self.metric, &qcodes, block, dim, &mut dists[..rows]);
+        let mut dists = vec![S::max_dist(); SCORE_BLOCK.min(hi - lo)];
+        let mut base = lo;
+        while base < hi {
+            let rows = SCORE_BLOCK.min(hi - base);
+            // One contiguous arena run per call: tombstoned rows are
+            // scored too (branch-free sweep) and filtered below.
+            let block = &arena[base * dim..(base + rows) * dim];
+            S::distance_block(self.metric, query, block, dim, &mut dists[..rows]);
             for (r, &d) in dists[..rows].iter().enumerate() {
                 let slot = base + r;
                 if alive[slot] {
-                    approx.push(d, ids[slot]);
+                    out.push(d, ids[slot]);
                 }
             }
             base += rows;
         }
-        // Exact Q16.16 re-rank of only the surviving candidates, under
-        // the same (dist, id) total order the exact scan uses.
-        let mut topk = TopK::new(k);
-        for hit in approx.into_sorted_hits() {
-            let slot = self.store.slot_of(hit.id).expect("candidate id must be live");
-            topk.push(S::distance(self.metric, query, self.store.vec_at(slot)), hit.id);
+    }
+
+    /// SQ8 phase-1 counterpart of [`Self::scan_exact_range`]: blocked i8
+    /// scan of the code arena over `[lo, hi)` into `out` (keyed on
+    /// `(approx_dist, id)`). Same partition-invariance argument. Requires
+    /// a complete code arena ([`Self::sq8_ready`]) and query codes from
+    /// [`Quantizer::encode_query`].
+    pub fn scan_sq8_range(&self, qcodes: &[i8], lo: usize, hi: usize, out: &mut TopK<i32>) {
+        let dim = self.store.dim();
+        debug_assert!(dim > 0, "scan_sq8_range: dim must be non-zero");
+        debug_assert!(lo <= hi && hi <= self.store.slots(), "scan_sq8_range: bad range");
+        debug_assert_eq!(self.codes.len(), self.store.slots() * dim, "code arena incomplete");
+        let alive = self.store.alive_flags();
+        let ids = self.store.external_ids();
+        let mut dists = vec![0i32; SCORE_BLOCK.min(hi - lo)];
+        let mut base = lo;
+        while base < hi {
+            let rows = SCORE_BLOCK.min(hi - base);
+            let block = &self.codes[base * dim..(base + rows) * dim];
+            quant::sq8_distance_block(self.metric, qcodes, block, dim, &mut dists[..rows]);
+            for (r, &d) in dists[..rows].iter().enumerate() {
+                let slot = base + r;
+                if alive[slot] {
+                    out.push(d, ids[slot]);
+                }
+            }
+            base += rows;
         }
-        Some(topk.into_sorted_hits())
+    }
+
+    /// SQ8 phase 2: push each candidate's *exact* Q16.16 distance into
+    /// `out` under the `(dist, id)` total order. Each candidate's key is
+    /// a pure function of the stored vector, so a static partition of the
+    /// candidate list re-ranked by parallel tasks merges bit-identically
+    /// to this sequential call over the whole list. Candidates must be
+    /// live ids (phase 1 only emits live slots).
+    pub fn rerank_into(&self, query: &[S], cands: &[Hit<i32>], out: &mut TopK<S::Dist>) {
+        for hit in cands {
+            let slot = self.store.slot_of(hit.id).expect("candidate id must be live");
+            out.push(S::distance(self.metric, query, self.store.vec_at(slot)), hit.id);
+        }
     }
 }
 
@@ -241,26 +296,7 @@ impl<S: Scalar> VectorIndex<S> for FlatIndex<S> {
             }
             return topk.into_sorted_hits();
         }
-        let arena = self.store.arena();
-        let alive = self.store.alive_flags();
-        let ids = self.store.external_ids();
-        let mut dists = vec![S::max_dist(); SCORE_BLOCK.min(slots)];
-        let mut base = 0usize;
-        while base < slots {
-            let rows = SCORE_BLOCK.min(slots - base);
-            // One contiguous arena run per call: tombstoned rows are scored
-            // too (branch-free sweep) and filtered below — cheaper than
-            // fragmenting the block, and invisible in the results.
-            let block = &arena[base * dim..(base + rows) * dim];
-            S::distance_block(self.metric, query, block, dim, &mut dists[..rows]);
-            for (r, &d) in dists[..rows].iter().enumerate() {
-                let slot = base + r;
-                if alive[slot] {
-                    topk.push(d, ids[slot]);
-                }
-            }
-            base += rows;
-        }
+        self.scan_exact_range(query, 0, slots, &mut topk);
         topk.into_sorted_hits()
     }
 

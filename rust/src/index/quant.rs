@@ -52,7 +52,7 @@
 //! full exactness/recall argument.
 
 use crate::codec::{DecodeError, Decoder, Encoder};
-use crate::distance::Metric;
+use crate::distance::{Metric, Scalar};
 
 /// Fixed per-component bound on Q16.16 raw values, from the boundary
 /// contract `max_abs = 4.0` (`4.0 * 2^16`). A config constant — never a
@@ -151,6 +151,19 @@ impl Quantizer {
     pub fn encode_append(&self, raw: &[i32], codes: &mut Vec<i8>) {
         debug_assert_eq!(raw.len(), self.dim, "quantizer dimension mismatch");
         codes.extend(raw.iter().map(|&r| Self::encode_component(r)));
+    }
+
+    /// Encode a query vector to its i8 codes, or `None` when the scalar
+    /// type does not expose Q16.16 raws (`Scalar::as_q16_raw`). Pure per
+    /// component, so every caller — the sequential two-phase search and
+    /// each parallel sub-range scan task — derives identical codes from
+    /// the same query.
+    pub fn encode_query<S: Scalar>(query: &[S]) -> Option<Vec<i8>> {
+        let mut codes = Vec::with_capacity(query.len());
+        for &x in query {
+            codes.push(Self::encode_component(x.as_q16_raw()?));
+        }
+        Some(codes)
     }
 }
 

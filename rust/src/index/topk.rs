@@ -47,6 +47,17 @@ impl<D: Ord + Copy> TopK<D> {
         }
     }
 
+    /// Absorb every candidate another `TopK` kept. Since the kept set is
+    /// a pure function of the pushed multiset (module docs), folding any
+    /// number of per-sub-range local heaps in *any* order equals one
+    /// sequential pass over the union — the reduction that makes
+    /// chunk-claiming parallel scans bit-safe (PERFORMANCE.md §9).
+    pub fn merge(&mut self, other: TopK<D>) {
+        for (dist, id) in other.heap {
+            self.push(dist, id);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -116,6 +127,37 @@ mod tests {
         assert_eq!(t.len(), 2);
         let hits: Vec<u64> = t.into_sorted_hits().iter().map(|h| h.id).collect();
         assert_eq!(hits, vec![2, 3]);
+    }
+
+    #[test]
+    fn merge_of_partitions_equals_single_pass_for_any_split() {
+        let keys: Vec<(i64, u64)> = (0..120u64)
+            .map(|i| (((i.wrapping_mul(40503)) % 31) as i64, i))
+            .collect();
+        let expect = reference_topk(&keys, 9);
+        // Every contiguous 3-way partition point, merged in both orders.
+        for a in 0..keys.len() {
+            for b in (a..keys.len()).step_by(17) {
+                let mut parts: Vec<TopK<i64>> = Vec::new();
+                for range in [&keys[..a], &keys[a..b], &keys[b..]] {
+                    let mut t = TopK::new(9);
+                    for &(d, id) in range {
+                        t.push(d, id);
+                    }
+                    parts.push(t);
+                }
+                let mut fwd = TopK::new(9);
+                for p in parts.clone() {
+                    fwd.merge(p);
+                }
+                let mut rev = TopK::new(9);
+                for p in parts.into_iter().rev() {
+                    rev.merge(p);
+                }
+                assert_eq!(fwd.into_sorted_hits(), expect, "split ({a},{b})");
+                assert_eq!(rev.into_sorted_hits(), expect, "split ({a},{b}) reversed");
+            }
+        }
     }
 
     #[test]

@@ -7,9 +7,14 @@
 //!                   [--collections N] [--data DIR]
 //!                   [--rate-limit R] [--quota Q] [--bulkhead B]
 //!                   [--idle-ttl SECS] [--stream-bps BYTES]
+//!                   [--scan-workers W] [--memory-quota BYTES]
 //!                   # /v1 = the `default` collection; /v2 = multi-tenant
 //!                   # rate-limit/quota/bulkhead/idle-ttl/stream-bps are
 //!                   # per-tenant governance knobs (0 = off, the default)
+//!                   # scan-workers caps the shared scan pool (0 = one
+//!                   # per core); memory-quota bounds arena bytes per
+//!                   # tenant (0 = unlimited) — both per-collection
+//!                   # overridable via the PUT body
 //! valori soak       [--addr 127.0.0.1:7431] [--dim 32] [--shards N]
 //!                   [--n 256] [--requests 1000] [--clients 8]
 //!                   [--collection NAME] [--expect-backend epoll|blocking]
@@ -205,6 +210,11 @@ fn cmd_soak(args: &Args) -> i32 {
             "server reports n_shards={:?}, soak was given --shards {n_shards}",
             stats.get("n_shards").as_i64()
         ));
+    }
+    // Scan-pool width is read-path tuning: whatever the server was
+    // started with, the mirror-hash check below must still pass.
+    if let Some(w) = stats.get("scan_workers").as_i64() {
+        println!("soak: server scan_workers={w} (0 = one per core)");
     }
 
     // deterministic f32 corpus: values round-trip exactly through the
@@ -523,13 +533,22 @@ fn cmd_serve(args: &Args) -> i32 {
         Ok(bps) => Some(bps),
         Err(e) => return fail(&e),
     };
+    // Scan-pool width for the default spec (0 = one worker per core) and
+    // arena-byte insert budget (0 = unlimited). Both are per-collection
+    // overridable through the PUT body.
+    let scan_workers = match args.opt_parse("scan-workers", 0u32) {
+        Ok(w) => w,
+        Err(e) => return fail(&e),
+    };
+    let memory_quota = match args.opt_parse("memory-quota", 0u64) {
+        Ok(q) => q,
+        Err(e) => return fail(&e),
+    };
+    let mut default_spec = CollectionSpec::new(dim, n_shards, args.flag("flat"), QuantSpec::None);
+    default_spec.memory_quota = memory_quota;
+    default_spec.scan_workers = scan_workers;
     let collections_config = ManagerConfig {
-        spec: CollectionSpec {
-            dim,
-            shards: n_shards,
-            flat: args.flag("flat"),
-            quant: QuantSpec::None,
-        },
+        spec: default_spec,
         workers,
         data_dir: args.opt("data").map(Into::into),
         default_wal: args.opt("wal").map(Into::into),
@@ -560,6 +579,9 @@ fn cmd_serve(args: &Args) -> i32 {
             "  governance: rate-limit={rate_limit:?}/s quota={quota:?} bulkhead={bulkhead:?} \
              idle-ttl={idle_ttl:?} stream-bps={stream_bytes_per_sec:?}"
         );
+    }
+    if scan_workers != 0 || memory_quota != 0 {
+        println!("  scan-workers={scan_workers} (0 = per core) memory-quota={memory_quota} bytes");
     }
     println!(
         "  dim={dim} shards={n_shards} collections={:?} backend={} wal={:?} data={:?} embedder={}",

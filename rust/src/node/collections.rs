@@ -84,11 +84,27 @@ pub struct CollectionSpec {
     /// unquantized twin; the spec itself is config, though, and like
     /// `index` or `shards` it participates in the state root.
     pub quant: QuantSpec,
+    /// Arena-byte budget for client inserts (0 = unlimited). Enforced at
+    /// the /v2 boundary as 1602 `memory_quota_exceeded`; runtime
+    /// governance, not state — never encoded, never hashed.
+    pub memory_quota: u64,
+    /// Scan-pool worker override for this collection (0 = one worker per
+    /// core). Read-path tuning only: results and roots are unchanged by
+    /// construction, so — unlike `index` or `quant` — it is excluded
+    /// from the state bytes and the root.
+    pub scan_workers: u32,
 }
 
 impl CollectionSpec {
+    /// Spec with the given shape and every tuning field (quota, scan
+    /// workers) at its default.
+    pub fn new(dim: usize, shards: u32, flat: bool, quant: QuantSpec) -> Self {
+        CollectionSpec { dim, shards, flat, quant, memory_quota: 0, scan_workers: 0 }
+    }
+
     fn kernel_config(&self) -> KernelConfig {
-        let config = KernelConfig::default_q16(self.dim).with_quant(self.quant);
+        let mut config = KernelConfig::default_q16(self.dim).with_quant(self.quant);
+        config.scan.workers = self.scan_workers;
         if self.flat {
             config.with_flat_index()
         } else {
@@ -318,12 +334,16 @@ impl CollectionManager {
             }
         }
         let (wal_path, durable_dir) = self.storage_paths(name)?;
-        let node_config = NodeConfig { workers: self.config.workers, wal_path };
+        let node_config = NodeConfig {
+            workers: self.config.workers,
+            wal_path,
+            memory_quota: spec.memory_quota,
+        };
         // A collection installed by snapshot restore persists its base
         // state as `<dir>/restored.snap` (its WALs only hold mutations
         // applied *after* the restore). Rediscovery must start from that
         // base, or WAL replay would rebuild a fraction of the state.
-        let kernel = match &durable_dir {
+        let mut kernel = match &durable_dir {
             Some(d) if d.join(RESTORED_SNAP).exists() => {
                 let path = d.join(RESTORED_SNAP);
                 let snap = ShardedSnapshot::read_file(&path).map_err(|e| {
@@ -349,6 +369,9 @@ impl CollectionManager {
             }
             _ => ShardedKernel::new(spec.kernel_config(), spec.shards),
         };
+        // Restored snapshots carry the encoded config, which never
+        // includes scan tuning; apply the spec's override on every path.
+        kernel.set_scan_workers(spec.scan_workers);
         let mut state = NodeState::new_sharded(kernel, &node_config, self.embed.clone())
             .map_err(|e| {
                 ApiError::new(ApiCode::Internal, format!("collection '{name}': {e}"))
@@ -903,6 +926,10 @@ impl CollectionManager {
             shards: kernel.n_shards(),
             flat: matches!(kernel.config().index, IndexKind::Flat),
             quant: kernel.config().quant,
+            // Runtime tuning and budgets are node policy, not state; a
+            // migrated tenant starts with the destination's defaults.
+            memory_quota: 0,
+            scan_workers: 0,
         };
         let _creating = self.create_lock.lock().expect("create lock poisoned");
         {
@@ -926,7 +953,11 @@ impl CollectionManager {
                 ApiError::new(ApiCode::Internal, format!("write spec.json: {e}"))
             })?;
         }
-        let node_config = NodeConfig { workers: self.config.workers, wal_path };
+        let node_config = NodeConfig {
+            workers: self.config.workers,
+            wal_path,
+            memory_quota: spec.memory_quota,
+        };
         let mut state =
             NodeState::new_sharded(kernel, &node_config, self.embed.clone()).map_err(|e| {
                 ApiError::new(ApiCode::Internal, format!("collection '{name}': {e}"))
@@ -1043,12 +1074,19 @@ fn spec_json(spec: &CollectionSpec) -> String {
         ("dim", Json::Int(spec.dim as i64)),
         ("index", Json::str(if spec.flat { "flat" } else { "hnsw" })),
     ];
-    // Quant-free specs keep the pre-quantization manifest bytes, so
-    // spec.json files written by older builds and newer ones stay
-    // interchangeable in both directions.
+    // Default-valued optional fields are omitted, so spec.json files
+    // written by older builds and newer ones stay interchangeable in
+    // both directions (quant-free specs keep the pre-quantization
+    // manifest bytes, untuned specs keep the pre-scan-pool bytes).
+    if spec.memory_quota != 0 {
+        fields.push(("memory_quota", Json::Int(spec.memory_quota as i64)));
+    }
     if let QuantSpec::Sq8 { overscan } = spec.quant {
         fields.push(("overscan", Json::Int(i64::from(overscan))));
         fields.push(("quant", Json::str(spec.quant.name())));
+    }
+    if spec.scan_workers != 0 {
+        fields.push(("scan_workers", Json::Int(i64::from(spec.scan_workers))));
     }
     fields.push(("shards", Json::Int(spec.shards as i64)));
     Json::object(fields).to_string()
@@ -1360,6 +1398,27 @@ fn parse_spec(body: &[u8], default: &CollectionSpec) -> ApiResult<CollectionSpec
             }
         }
     }
+    match json.get("memory_quota") {
+        Json::Null => {}
+        v => {
+            spec.memory_quota = v.as_u64().ok_or_else(|| {
+                ApiError::bad_request("memory_quota must be a non-negative integer (0 = unlimited)")
+            })?;
+        }
+    }
+    match json.get("scan_workers") {
+        Json::Null => {}
+        v => {
+            spec.scan_workers = match v.as_u64() {
+                Some(w) if w <= u64::from(u32::MAX) => w as u32,
+                _ => {
+                    return Err(ApiError::bad_request(
+                        "scan_workers must be a non-negative integer (0 = one per core)",
+                    ))
+                }
+            };
+        }
+    }
     Ok(spec)
 }
 
@@ -1439,11 +1498,18 @@ fn collection_op(
                 Json::object(vec![
                     ("code_arena", Json::Int(code_arena as i64)),
                     ("exact_arena", Json::Int(exact_arena as i64)),
+                    ("quota", Json::Int(state.memory_quota() as i64)),
                     ("total", Json::Int((exact_arena + code_arena) as i64)),
                 ]),
             );
             obj.insert("evicted".into(), Json::Bool(was_evicted));
             obj.insert("governor".into(), governor_json(manager, name));
+            // Configured override (0 = one worker per core), not the
+            // resolved pool width — stats stay machine-independent.
+            obj.insert(
+                "scan_workers".into(),
+                Json::Int(i64::from(state.with_sharded(|sk| sk.config().scan.workers))),
+            );
             Ok(Json::Object(obj))
         }
         (_, _) if POST_OPS.contains(&op) => Err(method_not_allowed(req, "POST")),
@@ -1461,7 +1527,7 @@ mod tests {
     fn manager() -> CollectionManager {
         CollectionManager::new(
             ManagerConfig {
-                spec: CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None },
+                spec: CollectionSpec::new(4, 2, true, QuantSpec::None),
                 workers: 2,
                 data_dir: None,
                 default_wal: None,
@@ -1594,7 +1660,7 @@ mod tests {
     #[test]
     fn per_collection_state_is_isolated() {
         let m = manager();
-        let spec = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+        let spec = CollectionSpec::new(4, 2, true, QuantSpec::None);
         m.create("a", spec.clone()).unwrap();
         m.create("b", spec).unwrap();
         // same id in two collections: independent namespaces
@@ -1623,7 +1689,7 @@ mod tests {
     fn combined_root_is_order_invariant_and_content_sensitive() {
         let m1 = manager();
         let m2 = manager();
-        let spec = CollectionSpec { dim: 4, shards: 1, flat: true, quant: QuantSpec::None };
+        let spec = CollectionSpec::new(4, 1, true, QuantSpec::None);
         m1.create("alpha", spec.clone()).unwrap();
         m1.create("beta", spec.clone()).unwrap();
         // reverse creation order on m2
@@ -1691,7 +1757,7 @@ mod tests {
             .join(format!("valori_collections_restart_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let config = ManagerConfig {
-            spec: CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None },
+            spec: CollectionSpec::new(4, 2, true, QuantSpec::None),
             workers: 2,
             data_dir: Some(dir.clone()),
             default_wal: None,
@@ -1701,7 +1767,7 @@ mod tests {
             let m = CollectionManager::new(config.clone(), None).unwrap();
             // a tenant whose spec differs from the manager default in
             // every field — rediscovery must restore THIS shape
-            let spec = CollectionSpec { dim: 8, shards: 3, flat: false, quant: QuantSpec::None };
+            let spec = CollectionSpec::new(8, 3, false, QuantSpec::None);
             m.create("tenant", spec).unwrap();
             for i in 0..20 {
                 let body = format!(
@@ -1745,7 +1811,7 @@ mod tests {
     fn v2_log_apply_replicates_collection_to_collection() {
         let primary = manager();
         let follower = manager();
-        let spec = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+        let spec = CollectionSpec::new(4, 2, true, QuantSpec::None);
         primary.create("t", spec.clone()).unwrap();
         follower.create("t", spec).unwrap();
         for i in 0..20u64 {
@@ -1786,7 +1852,7 @@ mod tests {
 
     #[test]
     fn parse_spec_accepts_quant_and_overscan() {
-        let default = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+        let default = CollectionSpec::new(4, 2, true, QuantSpec::None);
         let spec = parse_spec(br#"{"quant":"sq8"}"#, &default).unwrap();
         assert_eq!(spec.quant, QuantSpec::sq8_default());
         let spec = parse_spec(br#"{"quant":"sq8","overscan":8}"#, &default).unwrap();
@@ -1804,18 +1870,38 @@ mod tests {
 
     #[test]
     fn spec_json_round_trips_quant_and_keeps_quant_free_bytes() {
-        let default = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+        let default = CollectionSpec::new(4, 2, true, QuantSpec::None);
         // quant-free manifests keep the exact pre-quantization bytes
         assert_eq!(spec_json(&default), r#"{"dim":4,"index":"flat","shards":2}"#);
-        let sq8 = CollectionSpec {
-            dim: 8,
-            shards: 4,
-            flat: true,
-            quant: QuantSpec::Sq8 { overscan: 6 },
-        };
+        let sq8 = CollectionSpec::new(8, 4, true, QuantSpec::Sq8 { overscan: 6 });
         let manifest = spec_json(&sq8);
         let back = parse_spec(manifest.as_bytes(), &default).unwrap();
         assert_eq!(back, sq8);
+    }
+
+    #[test]
+    fn spec_json_round_trips_tuning_fields_and_omits_defaults() {
+        let default = CollectionSpec::new(4, 2, true, QuantSpec::None);
+        // untuned manifests keep the exact pre-scan-pool bytes
+        assert!(!spec_json(&default).contains("scan_workers"));
+        assert!(!spec_json(&default).contains("memory_quota"));
+        let mut tuned = CollectionSpec::new(4, 2, true, QuantSpec::None);
+        tuned.memory_quota = 1 << 20;
+        tuned.scan_workers = 4;
+        assert_eq!(
+            spec_json(&tuned),
+            r#"{"dim":4,"index":"flat","memory_quota":1048576,"scan_workers":4,"shards":2}"#
+        );
+        let back = parse_spec(spec_json(&tuned).as_bytes(), &default).unwrap();
+        assert_eq!(back, tuned);
+        // explicit zeros are accepted (they mean "unlimited" / "auto")
+        let spec = parse_spec(br#"{"memory_quota":0,"scan_workers":0}"#, &tuned).unwrap();
+        assert_eq!(spec.memory_quota, 0);
+        assert_eq!(spec.scan_workers, 0);
+        let err = parse_spec(br#"{"scan_workers":-1}"#, &default).unwrap_err();
+        assert_eq!(err.code, ApiCode::BadRequest);
+        let err = parse_spec(br#"{"memory_quota":"big"}"#, &default).unwrap_err();
+        assert_eq!(err.code, ApiCode::BadRequest);
     }
 
     #[test]
@@ -1884,5 +1970,40 @@ mod tests {
         assert_eq!(mem.get("exact_arena").as_i64(), Some(16));
         assert_eq!(mem.get("code_arena").as_i64(), Some(4));
         assert_eq!(mem.get("total").as_i64(), Some(20));
+        // untuned tenants advertise the defaults
+        assert_eq!(mem.get("quota").as_i64(), Some(0));
+        assert_eq!(body.get("data").get("scan_workers").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn scan_workers_and_memory_quota_ride_the_put_body() {
+        let m = manager();
+        let (st, body) = send(
+            &m,
+            "PUT",
+            "/v2/collections/tuned",
+            r#"{"dim":4,"memory_quota":100,"scan_workers":2}"#,
+        );
+        assert_eq!(st, 200, "{body}");
+        // dim 4 => 16 arena bytes per vector: six fit under 100 bytes
+        for i in 1..=6u64 {
+            let body = format!(r#"{{"id":{i},"vector":[{},0.5,-0.25,1.0]}}"#, (i as f32) * 0.125);
+            let (st, _) = send(&m, "POST", "/v2/collections/tuned/insert", &body);
+            assert_eq!(st, 200);
+        }
+        let (st, body) =
+            send(&m, "POST", "/v2/collections/tuned/insert", r#"{"id":7,"vector":[0,0,0,0]}"#);
+        assert_eq!(st, 429, "{body}");
+        assert_eq!(body.get("error").get("code").as_i64(), Some(1602));
+        assert_eq!(body.get("error").get("name").as_str(), Some("memory_quota_exceeded"));
+        // stats surface both knobs
+        let (_, s) = send(&m, "GET", "/v2/collections/tuned/stats", "");
+        assert_eq!(s.get("data").get("memory_bytes").get("quota").as_i64(), Some(100));
+        assert_eq!(s.get("data").get("scan_workers").as_i64(), Some(2));
+        // the scan override is read-path tuning: queries still serve
+        let (st, hits) =
+            send(&m, "POST", "/v2/collections/tuned/query", r#"{"vector":[0.2,0.5,-0.25,1],"k":3}"#);
+        assert_eq!(st, 200);
+        assert_eq!(hits.get("data").as_array().map(|a| a.len()), Some(3));
     }
 }

@@ -90,11 +90,15 @@ pub struct NodeConfig {
     /// use the path verbatim; an `n_shards`-wide node writes one WAL per
     /// shard at `<path>.shard<N>` (see [`shard_wal_path`]).
     pub wal_path: Option<std::path::PathBuf>,
+    /// Arena-byte budget for client inserts (0 = unlimited). Enforced at
+    /// the /v2 boundary as taxonomy code 1602 `memory_quota_exceeded`;
+    /// replication ingest and /v1 are exempt (see [`crate::api`]).
+    pub memory_quota: u64,
 }
 
 impl Default for NodeConfig {
     fn default() -> Self {
-        Self { workers: 4, wal_path: None }
+        Self { workers: 4, wal_path: None, memory_quota: 0 }
     }
 }
 
@@ -127,6 +131,9 @@ pub struct NodeState {
     /// Per-shard WALs (empty when running in-memory only).
     wals: Vec<Mutex<WalWriter>>,
     embed: Option<BatcherHandle>,
+    /// Arena-byte budget for /v2 inserts (0 = unlimited); from
+    /// [`NodeConfig::memory_quota`] / the collection spec.
+    memory_quota: u64,
     pub metrics: Metrics,
 }
 
@@ -218,8 +225,14 @@ impl NodeState {
             logs: logs.into_iter().map(Mutex::new).collect(),
             wals,
             embed,
+            memory_quota: config.memory_quota,
             metrics: Metrics::default(),
         })
+    }
+
+    /// The collection's arena-byte insert budget (0 = unlimited).
+    pub fn memory_quota(&self) -> u64 {
+        self.memory_quota
     }
 
     /// Apply an external command: boundary → routed state machine →

@@ -90,6 +90,44 @@ impl ShardSpec {
     }
 }
 
+/// Default parallel-scan task size in arena slots. A config constant —
+/// sub-range task boundaries are deterministic, never load- or
+/// scheduling-dependent — though results are chunk-size-invariant anyway
+/// (the top-k reduction ignores how the slot space was partitioned; see
+/// PERFORMANCE.md §9). 4096 slots ≈ 2 MiB of Q16.16 arena at dim 128:
+/// coarse enough to amortize claim/dispatch, fine enough to balance load.
+pub const SCAN_CHUNK_SLOTS: u32 = 4096;
+
+/// Read-path execution tuning: how searches parallelize over the arena.
+///
+/// Deliberately **not** part of the replayable state: two kernels that
+/// differ only in scan tuning hold the same truth and return the same
+/// bits, so this type compares always-equal and is never serialized —
+/// snapshot bytes, state hashes and every golden fixture are unchanged
+/// by any setting here.
+#[derive(Debug, Clone, Copy)]
+pub struct ScanConfig {
+    /// Scan worker threads; `0` (default) = one per available core. The
+    /// effective pool size is always `min(cores, workers)`.
+    pub workers: u32,
+    /// Sub-range task size in slots (>= 1); see [`SCAN_CHUNK_SLOTS`].
+    pub chunk: u32,
+}
+
+impl Default for ScanConfig {
+    fn default() -> Self {
+        Self { workers: 0, chunk: SCAN_CHUNK_SLOTS }
+    }
+}
+
+impl PartialEq for ScanConfig {
+    fn eq(&self, _: &Self) -> bool {
+        true // runtime tuning, not state (see type docs)
+    }
+}
+
+impl Eq for ScanConfig {}
+
 /// Kernel configuration — fixed at creation, serialized into every
 /// snapshot (two nodes comparing hashes are comparing configs too).
 #[derive(Debug, Clone, PartialEq)]
@@ -111,6 +149,10 @@ pub struct KernelConfig {
     /// pre-quant snapshot — and `Sq8` kernels as version 3 with the spec
     /// appended after the shard spec (see [`Kernel::encode_state`]).
     pub quant: QuantSpec,
+    /// Parallel-scan tuning. Excluded from serialization and equality
+    /// (see [`ScanConfig`]): it tunes *how* the read path executes, never
+    /// what it returns.
+    pub scan: ScanConfig,
 }
 
 impl KernelConfig {
@@ -124,6 +166,7 @@ impl KernelConfig {
             policy: ValidationPolicy::default(),
             shard: ShardSpec::default(),
             quant: QuantSpec::None,
+            scan: ScanConfig::default(),
         }
     }
 
@@ -137,6 +180,7 @@ impl KernelConfig {
             policy: ValidationPolicy::normalized_embeddings(),
             shard: ShardSpec::default(),
             quant: QuantSpec::None,
+            scan: ScanConfig::default(),
         }
     }
 
@@ -195,6 +239,7 @@ impl KernelConfig {
             policy: ValidationPolicy { max_abs, normalize },
             shard,
             quant: QuantSpec::None,
+            scan: ScanConfig::default(),
         })
     }
 }
@@ -221,6 +266,11 @@ pub enum StateError {
     /// different shard — a routing-layer bug or a forged per-shard log.
     /// Never raised when `n_shards == 1`.
     WrongShard { id: u64, expected: u32 },
+    /// A pooled scan task died (panicked) while serving this query. Only
+    /// the dispatching query fails — the pool respawns the worker and
+    /// state is untouched (scans only read), so the next query is served
+    /// normally.
+    ScanPoisoned,
 }
 
 impl fmt::Display for StateError {
@@ -235,6 +285,9 @@ impl fmt::Display for StateError {
             StateError::MetaKeyTooLong(n) => write!(f, "metadata key too long ({n} bytes)"),
             StateError::WrongShard { id, expected } => {
                 write!(f, "id {id} routes to shard {expected}, not this shard")
+            }
+            StateError::ScanPoisoned => {
+                write!(f, "scan worker pool poisoned (a scan task panicked); retry the query")
             }
         }
     }
@@ -302,6 +355,29 @@ impl Kernel {
 
     pub fn config(&self) -> &KernelConfig {
         &self.config
+    }
+
+    /// Override the scan-worker count (read-path tuning; see
+    /// [`ScanConfig`] — cannot change results, hashes or state bytes).
+    pub fn set_scan_workers(&mut self, workers: u32) {
+        self.config.scan.workers = workers;
+    }
+
+    /// Override the parallel-scan chunk size in slots (clamped to >= 1 —
+    /// a zero chunk could never make claim progress).
+    pub fn set_scan_chunk(&mut self, chunk: u32) {
+        self.config.scan.chunk = chunk.max(1);
+    }
+
+    /// The flat index, when this kernel maintains one. The sharded
+    /// parallel scan needs direct sub-range access to the contiguous
+    /// arena; HNSW has no chunkable arena and falls back to whole-shard
+    /// search jobs.
+    pub(crate) fn flat_index(&self) -> Option<&FlatIndex<i32>> {
+        match &self.index {
+            IndexImpl::Flat(f) => Some(f),
+            IndexImpl::Hnsw(_) => None,
+        }
     }
 
     /// Logical time `t` — number of applied commands.

@@ -15,5 +15,7 @@ pub mod kernel;
 pub mod sharded;
 
 pub use command::{CanonCommand, Command};
-pub use kernel::{Hit, IndexKind, Kernel, KernelConfig, ShardSpec, StateError};
+pub use kernel::{
+    Hit, IndexKind, Kernel, KernelConfig, ScanConfig, ShardSpec, StateError, SCAN_CHUNK_SLOTS,
+};
 pub use sharded::{Routed, ShardApply, ShardedKernel};

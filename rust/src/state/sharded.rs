@@ -19,9 +19,9 @@
 //! kernel (paper §3.1, applied per partition).
 //!
 //! **Search fan-out and bit-exact merge.** A query fans out to every shard
-//! (via the persistent per-shard worker pool above a corpus-size
-//! threshold, inline below it); each shard returns its top-k ordered by
-//! `(dist_raw, id)`. Results are collected *in shard order* (never in
+//! (via the shared scan pool above a corpus-size threshold, inline below
+//! it); each shard contributes its top-k ordered by `(dist_raw, id)`.
+//! Per-shard results are collected *in dispatch order* (never in
 //! completion order) and combined through the same bounded
 //! [`TopK`](crate::index::TopK) heap the flat index uses, keyed on
 //! `(dist_raw, id)`. The merge is therefore a pure function of the
@@ -31,17 +31,34 @@
 //! are unique, so the total order has no ties to resolve
 //! nondeterministically).
 //!
-//! **Worker pool.** Each shard owns one long-lived worker thread
-//! ([`ShardWorkerPool`]), created lazily on the first parallel operation
-//! and fed over channels; dropping the kernel disconnects the channels and
-//! joins every worker. The pool serves both the search fan-out and
-//! parallel batch upserts (large `InsertBatch` sub-batches apply on their
-//! shards concurrently). Neither use can affect results: searches are
-//! collected in shard order and merged on a total order, and the router
-//! pre-validates a batch on every target shard before dispatch, so the
-//! per-shard sub-batches — disjoint by construction — succeed
-//! unconditionally and commute across shards (paper §3.1, applied per
-//! partition).
+//! **Scan pool and intra-shard parallelism.** One shared pool of
+//! `min(cores, scan_workers)` long-lived workers ([`ScanPool`]) serves
+//! every parallel operation, created lazily on the first one and fed over
+//! a single queue; dropping the kernel disconnects the queue and joins
+//! every worker. For flat-index searches each shard's contiguous arena is
+//! split into fixed-size sub-range *chunks*
+//! ([`ScanConfig::chunk`](crate::state::kernel::ScanConfig) slots); per
+//! shard, up to `workers` lane tasks claim chunks off an
+//! atomic counter (work stealing: a stalled lane simply claims fewer
+//! chunks) and scan them into local `TopK` heaps, which are then merged.
+//! Chunk boundaries are a config constant and the bounded top-k is an
+//! order-independent reduction over the pushed multiset, so *any*
+//! claiming schedule produces bit-identical results — this is what lets
+//! a 1-shard collection scale across every core without bit drift
+//! (PERFORMANCE.md §9). SQ8 shards parallelize both phases: phase-1 i8
+//! chunk scans keep `overscan * k` candidates per shard, phase-2 exact
+//! re-rank splits the candidate list into chunk-sized tasks. HNSW shards
+//! (no contiguous arena) fall back to one whole-shard search task each.
+//! A panicked scan task fails only its own query ([`StateError::ScanPoisoned`])
+//! and the pool respawns the worker; queued queries from other clients
+//! are unaffected. The pool also runs parallel batch upserts (large
+//! `InsertBatch` sub-batches apply on their shards concurrently, one
+//! task per shard — writes keep per-shard serialization by construction).
+//! None of this can affect results: searches merge on a total order, and
+//! the router pre-validates a batch on every target shard before
+//! dispatch, so the per-shard sub-batches — disjoint by construction —
+//! succeed unconditionally and commute across shards (paper §3.1,
+//! applied per partition).
 //!
 //! **Cross-shard links.** A link `from → to` lives on the shard that owns
 //! `from`. The router checks `to` globally before logging the command;
@@ -60,11 +77,12 @@
 
 use crate::distance::Scalar;
 use crate::hash::Fnv1a64;
-use crate::index::TopK;
+use crate::index::{Hit as IndexHit, QuantSpec, Quantizer, TopK};
 use crate::state::command::{CanonCommand, Command};
 use crate::state::kernel::{Hit, Kernel, KernelConfig, StateError};
 use crate::vector::FixedVector;
 use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread;
 
@@ -92,78 +110,148 @@ pub struct ShardApply {
     pub applied: Vec<Routed>,
 }
 
-/// A job executed by one shard's worker thread.
+/// A job executed by one pool worker thread.
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// One long-lived worker thread per shard, fed over channels. Replaces the
-/// per-query scoped-thread spawn: thread creation leaves the hot path
-/// entirely (the ROADMAP's "persistent search worker pool"). Senders are
-/// mutex-wrapped so concurrent readers of a [`ShardedKernel`] (e.g. HTTP
-/// workers behind an `RwLock`) can dispatch to the same worker; the
-/// critical section is one channel send. Dropping the pool disconnects
-/// every channel and joins every worker, so queued jobs always finish
-/// before the pool — and therefore before the shards (field order in
-/// [`ShardedKernel`]) — goes away.
-///
-/// Tradeoff: one worker per shard caps *aggregate* scan parallelism at
-/// `n_shards` threads — concurrent queries' jobs for the same shard queue
-/// FIFO (each query's latency stays bounded by one shard scan plus queue
-/// wait, and determinism is unaffected since every query collects its own
-/// responses in shard order). Multiple workers per shard is a ROADMAP
-/// follow-on for read-heavy deployments with few shards.
-struct ShardWorkerPool {
-    senders: Vec<Mutex<mpsc::Sender<Job>>>,
+/// State shared between the [`ScanPool`] handle and its workers.
+struct PoolShared {
+    /// The single shared job queue. Workers take turns holding this lock
+    /// while blocked in `recv` — a cheap mutex-guarded MPMC: claiming a
+    /// job is one lock + one `recv`, and the lock is *not* held while the
+    /// job runs.
+    queue: Mutex<mpsc::Receiver<Job>>,
+    /// Set before the injector drops, so a worker dying during shutdown
+    /// does not respawn a replacement.
+    shutdown: AtomicBool,
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
-fn spawn_shard_worker(shard: usize) -> (mpsc::Sender<Job>, thread::JoinHandle<()>) {
-    let (tx, rx) = mpsc::channel::<Job>();
-    let handle = thread::Builder::new()
-        .name(format!("valori-shard-{shard}"))
-        .spawn(move || {
-            while let Ok(job) = rx.recv() {
-                job();
-            }
-        })
-        .expect("failed to spawn shard worker");
-    (tx, handle)
+/// Re-arms a replacement worker when a scan job panics: the dying
+/// thread's unwind runs this guard's `Drop`, which (unless the pool is
+/// shutting down) spawns a fresh worker before the thread exits — one
+/// poisoned query never shrinks the pool. The respawn is best-effort: if
+/// the spawn itself fails the pool degrades by one worker instead of
+/// panicking during unwind (which would abort the process).
+struct RespawnGuard {
+    shared: Arc<PoolShared>,
 }
 
-impl ShardWorkerPool {
-    fn new(n_shards: usize) -> Self {
-        let mut senders = Vec::with_capacity(n_shards);
-        let mut handles = Vec::with_capacity(n_shards);
-        for s in 0..n_shards {
-            let (tx, handle) = spawn_shard_worker(s);
-            senders.push(Mutex::new(tx));
-            handles.push(handle);
-        }
-        Self { senders, handles: Mutex::new(handles) }
-    }
-
-    /// Send a job to `shard`'s worker. If the worker died (a previous job
-    /// panicked and unwound its loop), spawn a replacement and requeue:
-    /// one panicked job must not permanently degrade the shard. The panic
-    /// itself is not swallowed — the dead job's response channel resolves
-    /// `Err`, so whoever waited on it still observes the failure.
-    fn run(&self, shard: usize, job: Job) {
-        let mut sender = self.senders[shard].lock().expect("shard sender poisoned");
-        if let Err(mpsc::SendError(job)) = sender.send(job) {
-            let (tx, handle) = spawn_shard_worker(shard);
-            *sender = tx;
-            self.handles.lock().expect("pool handles poisoned").push(handle);
-            sender.send(job).expect("fresh shard worker rejected job");
-        }
-    }
-}
-
-impl Drop for ShardWorkerPool {
+impl Drop for RespawnGuard {
     fn drop(&mut self) {
-        // Disconnect first (workers drain queued jobs, then exit) …
-        self.senders.clear();
-        // … then join so no job outlives the pool.
-        for h in self.handles.get_mut().expect("pool handles poisoned").drain(..) {
-            let _ = h.join();
+        if thread::panicking() && !self.shared.shutdown.load(Ordering::SeqCst) {
+            spawn_scan_worker(&self.shared, false);
+        }
+    }
+}
+
+fn spawn_scan_worker(shared: &Arc<PoolShared>, must: bool) {
+    let worker_shared = Arc::clone(shared);
+    let spawned = thread::Builder::new().name("valori-scan".into()).spawn(move || {
+        let _respawn = RespawnGuard { shared: Arc::clone(&worker_shared) };
+        loop {
+            let job = {
+                // A panicking job unwinds *outside* this lock (the guard
+                // drops before the job runs), so the queue mutex is never
+                // actually poisoned; recover defensively anyway.
+                let queue =
+                    worker_shared.queue.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                match queue.recv() {
+                    Ok(job) => job,
+                    Err(_) => return, // injector dropped: clean shutdown
+                }
+            };
+            job();
+        }
+    });
+    match spawned {
+        Ok(handle) => {
+            shared.handles.lock().unwrap_or_else(|p| p.into_inner()).push(handle);
+        }
+        Err(e) => {
+            if must {
+                panic!("failed to spawn scan worker: {e}");
+            }
+        }
+    }
+}
+
+/// One shared pool of `min(cores, scan_workers)` long-lived workers fed
+/// over a single FIFO queue — the execution substrate for every parallel
+/// read and write path here. Replaces the former one-thread-per-shard
+/// pool: aggregate parallelism is no longer capped at `n_shards`, so a
+/// 1-shard collection's chunked scans use every worker. Any worker can
+/// claim any job; determinism is unaffected because each dispatch site
+/// collects its responses in dispatch order and reduces on a total order
+/// (module docs). Dropping the pool disconnects the queue (workers drain
+/// outstanding jobs, then exit) and joins every worker, so no queued job
+/// outlives the pool — and therefore the shards (field order in
+/// [`ShardedKernel`]) its jobs point into.
+struct ScanPool {
+    /// `Some` until drop. Mutex-wrapped so concurrent readers of a
+    /// [`ShardedKernel`] (e.g. HTTP workers behind an `RwLock`) can
+    /// dispatch; the critical section is one channel send.
+    injector: Mutex<Option<mpsc::Sender<Job>>>,
+    workers: usize,
+    shared: Arc<PoolShared>,
+}
+
+impl ScanPool {
+    fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(rx),
+            shutdown: AtomicBool::new(false),
+            handles: Mutex::new(Vec::with_capacity(workers)),
+        });
+        for _ in 0..workers {
+            spawn_scan_worker(&shared, true);
+        }
+        Self { injector: Mutex::new(Some(tx)), workers, shared }
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue one job; the first idle worker claims it (FIFO). A job
+    /// that panics resolves its response channel `Err` (the dispatcher
+    /// observes the failure) and the dying worker respawns itself — see
+    /// [`RespawnGuard`].
+    fn run(&self, job: Job) {
+        self.injector
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .as_ref()
+            .expect("scan pool is shut down")
+            .send(job)
+            .expect("scan pool queue disappeared");
+    }
+}
+
+impl Drop for ScanPool {
+    fn drop(&mut self) {
+        // Stop respawns first, then disconnect the queue: workers drain
+        // outstanding jobs and exit on the recv error.
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        *self.injector.get_mut().unwrap_or_else(|p| p.into_inner()) = None;
+        // Join until the handle list is empty. A worker that panicked
+        // before `shutdown` was set pushes its replacement's handle
+        // during its unwind; joining the dead thread happens-after that
+        // push, so a fresh drain pass observes the replacement — and the
+        // loop converges because `shutdown` stops further respawns.
+        loop {
+            let drained: Vec<thread::JoinHandle<()>> = {
+                let mut handles =
+                    self.shared.handles.lock().unwrap_or_else(|p| p.into_inner());
+                handles.drain(..).collect()
+            };
+            if drained.is_empty() {
+                return;
+            }
+            for h in drained {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -237,7 +325,7 @@ pub struct ShardedKernel {
     /// every worker, so no queued job can outlive the kernels its raw
     /// pointers reference. Lazily created on the first parallel operation
     /// (pure-replay and snapshot workloads never pay for threads).
-    pool: OnceLock<ShardWorkerPool>,
+    pool: OnceLock<ScanPool>,
     shards: Vec<Kernel>,
 }
 
@@ -494,8 +582,11 @@ impl ShardedKernel {
         &mut self,
         per_shard: Vec<Vec<(u64, Vec<i32>)>>,
     ) -> Result<Vec<Routed>, StateError> {
-        let n = self.shards.len();
-        let pool = self.pool.get_or_init(|| ShardWorkerPool::new(n));
+        // Field-precise borrows: the pool is borrowed shared while the
+        // shards pointer is taken exclusively, so go through the field
+        // (not `pool_ref`, which borrows all of `self`).
+        let workers = self.effective_scan_workers();
+        let pool = self.pool.get_or_init(|| ScanPool::new(workers));
         let base = self.shards.as_mut_ptr();
         let mut barrier: DispatchBarrier<Result<Routed, StateError>> = DispatchBarrier::new();
         for (s, sub) in per_shard.into_iter().enumerate() {
@@ -506,22 +597,19 @@ impl ShardedKernel {
             barrier.add(rx);
             // SAFETY: `base.add(s)` stays inside the shards allocation and
             // each index is dispatched at most once (split-at-mut across
-            // workers).
+            // workers) — per-shard write serialization by construction.
             let shard_ptr = ExclusiveShard(unsafe { base.add(s) });
-            pool.run(
-                s,
-                Box::new(move || {
-                    // SAFETY: see `ExclusiveShard` — exclusive, disjoint,
-                    // and outlived by the dispatching call's barrier.
-                    let kernel: &mut Kernel = unsafe { &mut *shard_ptr.0 };
-                    let seq = kernel.seq();
-                    let command = CanonCommand::InsertBatch { items: sub };
-                    let result = kernel
-                        .apply_canon(&command)
-                        .map(|()| Routed { shard: s as u32, seq, command });
-                    let _ = tx.send(result);
-                }),
-            );
+            pool.run(Box::new(move || {
+                // SAFETY: see `ExclusiveShard` — exclusive, disjoint,
+                // and outlived by the dispatching call's barrier.
+                let kernel: &mut Kernel = unsafe { &mut *shard_ptr.0 };
+                let seq = kernel.seq();
+                let command = CanonCommand::InsertBatch { items: sub };
+                let result = kernel
+                    .apply_canon(&command)
+                    .map(|()| Routed { shard: s as u32, seq, command });
+                let _ = tx.send(result);
+            }));
         }
         // Barrier FIRST — every job must have resolved (and released its
         // shard pointer) before anything, panic included, can leave this
@@ -567,14 +655,17 @@ impl ShardedKernel {
     /// results argument, as the search threshold).
     const PARALLEL_UPSERT_MIN_ITEMS: usize = 256;
 
-    /// k-NN over raw quantized values: fan out to every shard (persistent
-    /// per-shard workers for large corpora, inline for small ones) and
-    /// merge. Bit-identical to a single kernel holding all vectors when
-    /// the index is exact; always identical across runs and platforms
-    /// regardless of thread scheduling (results are collected in shard
-    /// order and merged by the total order `(dist_raw, id)`).
+    /// k-NN over raw quantized values: fan out (the shared chunk-claiming
+    /// scan pool for large corpora, inline for small ones) and merge.
+    /// Bit-identical to a single kernel holding all vectors when the
+    /// index is exact; always identical across runs, platforms, worker
+    /// counts and chunk sizes regardless of thread scheduling (results
+    /// are collected in dispatch order and every reduction is over the
+    /// total order `(dist_raw, id)`).
     pub fn search_raw(&self, query: &[i32], k: usize) -> Result<Vec<Hit>, StateError> {
-        if self.shards.len() == 1 {
+        if self.shards.len() == 1 && self.len() < Self::PARALLEL_SEARCH_MIN_VECTORS {
+            // Small single-shard corpus: the plain kernel path, no
+            // dispatch overhead (and trivially bit-identical).
             return self.shards[0].search_raw(query, k);
         }
         self.validate_query(query)?;
@@ -598,13 +689,50 @@ impl ShardedKernel {
     }
 
     /// Force the pooled fan-out regardless of corpus size (counterpart of
-    /// [`Self::search_raw_inline`]).
+    /// [`Self::search_raw_inline`]). No single-shard shortcut here: one
+    /// shard parallelizing across the whole pool is the point of the
+    /// chunked scan, and the equivalence tests drive this entry directly.
     pub fn search_raw_pooled(&self, query: &[i32], k: usize) -> Result<Vec<Hit>, StateError> {
-        if self.shards.len() == 1 {
-            return self.shards[0].search_raw(query, k);
-        }
         self.validate_query(query)?;
         Ok(merge_hits(&self.per_shard_pooled(query, k)?, k))
+    }
+
+    /// Override the scan-worker count on every shard and retire the
+    /// current pool: the next parallel operation lazily builds one at the
+    /// new effective size. Read-path tuning only — results and hashes
+    /// are unchanged by construction (see module docs).
+    pub fn set_scan_workers(&mut self, workers: u32) {
+        for shard in &mut self.shards {
+            shard.set_scan_workers(workers);
+        }
+        self.pool = OnceLock::new();
+    }
+
+    /// Override the parallel-scan chunk size (slots) on every shard.
+    /// Chunk boundaries move, results cannot (PERFORMANCE.md §9); the
+    /// tests pin exactly that.
+    pub fn set_scan_chunk(&mut self, chunk: u32) {
+        for shard in &mut self.shards {
+            shard.set_scan_chunk(chunk);
+        }
+    }
+
+    /// Effective pool size: `min(cores, scan_workers)`, where a
+    /// configured `0` means one worker per core.
+    fn effective_scan_workers(&self) -> usize {
+        let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let configured = self.config().scan.workers;
+        if configured == 0 {
+            cores
+        } else {
+            cores.min(configured as usize)
+        }
+    }
+
+    /// The shared scan pool, created on first use at the currently
+    /// configured size.
+    fn pool_ref(&self) -> &ScanPool {
+        self.pool.get_or_init(|| ScanPool::new(self.effective_scan_workers()))
     }
 
     /// Validate once up front (all shards share the contract) so the
@@ -622,34 +750,46 @@ impl ShardedKernel {
         self.shards.iter().map(|shard| shard.search_raw(query, k)).collect()
     }
 
-    /// Fan the query out to the persistent per-shard workers and collect
-    /// the responses in shard order (never completion order): reassembly
-    /// is deterministic no matter which worker finishes first.
+    /// Pooled fan-out, collected in dispatch order (never completion
+    /// order). Flat-index deployments take the chunked intra-shard path;
+    /// HNSW (no contiguous arena to sub-range) and degenerate queries
+    /// fall back to one whole-shard job per shard — still on the shared
+    /// pool, so cross-shard parallelism is preserved.
     fn per_shard_pooled(&self, query: &[i32], k: usize) -> Result<Vec<Vec<Hit>>, StateError> {
-        let n = self.shards.len();
-        let pool = self.pool.get_or_init(|| ShardWorkerPool::new(n));
+        // Config is uniform across shards (only `shard_id` differs), so
+        // chunkability is uniform too.
+        let chunkable = self.shards[0].flat_index().is_some() && self.config().dim > 0 && k > 0;
+        if chunkable {
+            self.per_shard_chunked(query, k)
+        } else {
+            self.per_shard_jobs(query, k)
+        }
+    }
+
+    /// One whole-shard search job per shard on the shared pool (the
+    /// non-chunkable fallback; also the write path's shape).
+    fn per_shard_jobs(&self, query: &[i32], k: usize) -> Result<Vec<Vec<Hit>>, StateError> {
+        let pool = self.pool_ref();
         // One dim-sized copy per query, shared by every job. Negligible
         // against the ≥ PARALLEL_SEARCH_MIN_VECTORS scan this path is
         // gated on, and it keeps the query owned (`'static`) rather than
         // widening the raw-pointer surface to a second borrow.
         let query: Arc<Vec<i32>> = Arc::new(query.to_vec());
         let mut barrier: DispatchBarrier<Result<Vec<Hit>, StateError>> = DispatchBarrier::new();
-        for (s, shard) in self.shards.iter().enumerate() {
+        for shard in &self.shards {
             let (tx, rx) = mpsc::channel();
             barrier.add(rx);
             let shard_ptr = SharedShard(shard as *const Kernel);
             let query = Arc::clone(&query);
-            pool.run(
-                s,
-                Box::new(move || {
-                    // SAFETY: see `SharedShard` — the dispatching call
-                    // waits on the barrier until this job resolves, so the
-                    // shard (borrowed from `&self`) outlives the job;
-                    // searches only read.
-                    let shard: &Kernel = unsafe { &*shard_ptr.0 };
-                    let _ = tx.send(shard.search_raw(&query, k));
-                }),
-            );
+            pool.run(Box::new(move || {
+                // SAFETY: see `SharedShard` — the dispatching call waits
+                // on the barrier until this job resolves, so the shard
+                // (borrowed from `&self`) outlives the job; searches only
+                // read.
+                let shard: &Kernel = unsafe { &*shard_ptr.0 };
+                maybe_panic(k);
+                let _ = tx.send(shard.search_raw(&query, k));
+            }));
         }
         // Barrier FIRST — every job must have resolved (and released its
         // shard pointer) before any result, even an error or panic, can
@@ -658,9 +798,215 @@ impl ShardedKernel {
         let results = barrier.wait_all();
         let mut per_shard = Vec::with_capacity(results.len());
         for r in results {
-            per_shard.push(r.expect("shard search worker died")?);
+            per_shard.push(r.map_err(|_| StateError::ScanPoisoned)??);
         }
         Ok(per_shard)
+    }
+
+    /// Chunk-claiming parallel scan over every shard's flat arena. Per
+    /// shard, `min(workers, n_chunks)` lane tasks claim fixed-size slot
+    /// sub-ranges off a shared atomic counter and scan each into a local
+    /// `TopK`; the lane heaps then merge into the shard's top-k. *Which*
+    /// lane scans which chunk is scheduling-dependent — the result is
+    /// not, because the chunks partition the slot space exactly and the
+    /// bounded top-k is a pure function of the pushed multiset
+    /// (PERFORMANCE.md §9). SQ8 shards run two waves: phase-1 i8 chunk
+    /// scans keep `overscan * k` candidates, then phase-2 exact re-rank
+    /// splits the (deterministically ordered) candidate list into
+    /// chunk-sized tasks. The exact-vs-two-phase decision is made per
+    /// shard with the same rule the sequential [`crate::index::FlatIndex`]
+    /// path uses, so every worker count — one included — reproduces the
+    /// sequential bits.
+    fn per_shard_chunked(&self, query: &[i32], k: usize) -> Result<Vec<Vec<Hit>>, StateError> {
+        let pool = self.pool_ref();
+        let workers = pool.workers();
+        let chunk = self.config().scan.chunk.max(1) as usize;
+        let query: Arc<Vec<i32>> = Arc::new(query.to_vec());
+        // Query codes are computed once and shared by every phase-1 lane
+        // (encoding is pure per component, so per-lane encoding would be
+        // identical — sharing is just cheaper).
+        let qcodes: Option<Arc<Vec<i8>>> = match self.config().quant {
+            QuantSpec::Sq8 { .. } => Quantizer::encode_query(query.as_slice()).map(Arc::new),
+            QuantSpec::None => None,
+        };
+        // Per-shard plan, exactly mirroring the sequential decision:
+        // two-phase iff the code arena is usable, the query encodes, and
+        // `overscan * k` cannot cover the live set (at coverage the exact
+        // sweep is cheaper and bit-identical).
+        let plans: Vec<ShardPlan> = self
+            .shards
+            .iter()
+            .map(|shard| {
+                let flat = shard.flat_index().expect("chunked scan requires a flat index");
+                match flat.sq8_ready() {
+                    Some(overscan)
+                        if qcodes.is_some()
+                            && (overscan as u64).saturating_mul(k as u64)
+                                < flat.store().live_len() as u64 =>
+                    {
+                        ShardPlan::Sq8 { overscan }
+                    }
+                    _ => ShardPlan::Exact,
+                }
+            })
+            .collect();
+
+        // Phase 1: one wave of chunk-claiming lanes across all shards
+        // (shard-major dispatch; lanes of different shards interleave
+        // freely on the pool).
+        let mut barrier: DispatchBarrier<LaneOut> = DispatchBarrier::new();
+        let mut lane_counts: Vec<usize> = Vec::with_capacity(self.shards.len());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let slots =
+                shard.flat_index().expect("chunked scan requires a flat index").store().slots();
+            let lanes = workers.min(slots.div_ceil(chunk));
+            lane_counts.push(lanes);
+            let counter = Arc::new(AtomicUsize::new(0));
+            let plan = plans[s];
+            for _ in 0..lanes {
+                let (tx, rx) = mpsc::channel();
+                barrier.add(rx);
+                let shard_ptr = SharedShard(shard as *const Kernel);
+                let query = Arc::clone(&query);
+                let qcodes = qcodes.clone();
+                let counter = Arc::clone(&counter);
+                pool.run(Box::new(move || {
+                    // SAFETY: see `SharedShard` — the dispatching call
+                    // waits on the barrier until this job resolves, so
+                    // the shard outlives the job; scans only read.
+                    let flat = unsafe { &*shard_ptr.0 }
+                        .flat_index()
+                        .expect("chunked job on a non-flat shard");
+                    maybe_panic(k);
+                    let out = match plan {
+                        ShardPlan::Exact => {
+                            let mut local = TopK::new(k);
+                            loop {
+                                let lo = counter
+                                    .fetch_add(1, Ordering::Relaxed)
+                                    .saturating_mul(chunk);
+                                if lo >= slots {
+                                    break;
+                                }
+                                flat.scan_exact_range(
+                                    &query,
+                                    lo,
+                                    (lo + chunk).min(slots),
+                                    &mut local,
+                                );
+                            }
+                            LaneOut::Exact(local)
+                        }
+                        ShardPlan::Sq8 { overscan } => {
+                            let qcodes =
+                                qcodes.as_deref().expect("sq8 plan without query codes");
+                            let mut local = TopK::new((overscan as usize).saturating_mul(k));
+                            loop {
+                                let lo = counter
+                                    .fetch_add(1, Ordering::Relaxed)
+                                    .saturating_mul(chunk);
+                                if lo >= slots {
+                                    break;
+                                }
+                                flat.scan_sq8_range(
+                                    qcodes,
+                                    lo,
+                                    (lo + chunk).min(slots),
+                                    &mut local,
+                                );
+                            }
+                            LaneOut::Approx(local)
+                        }
+                    };
+                    let _ = tx.send(out);
+                }));
+            }
+        }
+        // Reduce lanes per shard, in dispatch order. The merge is a pure
+        // function of the lane heaps' multiset union — completion order
+        // and chunk assignment cannot change it.
+        let mut results = barrier.wait_all().into_iter();
+        let mut per_shard: Vec<Option<Vec<Hit>>> = vec![None; self.shards.len()];
+        let mut rerank: Vec<(usize, Arc<Vec<IndexHit<i32>>>)> = Vec::new();
+        for (s, &lanes) in lane_counts.iter().enumerate() {
+            match plans[s] {
+                ShardPlan::Exact => {
+                    let mut merged = TopK::new(k);
+                    for _ in 0..lanes {
+                        let lane = results
+                            .next()
+                            .expect("lane accounting")
+                            .map_err(|_| StateError::ScanPoisoned)?;
+                        match lane {
+                            LaneOut::Exact(local) => merged.merge(local),
+                            LaneOut::Approx(_) => unreachable!("exact plan produced approx lane"),
+                        }
+                    }
+                    per_shard[s] = Some(exact_hits(merged));
+                }
+                ShardPlan::Sq8 { overscan } => {
+                    let mut merged = TopK::new((overscan as usize).saturating_mul(k));
+                    for _ in 0..lanes {
+                        let lane = results
+                            .next()
+                            .expect("lane accounting")
+                            .map_err(|_| StateError::ScanPoisoned)?;
+                        match lane {
+                            LaneOut::Approx(local) => merged.merge(local),
+                            LaneOut::Exact(_) => unreachable!("sq8 plan produced exact lane"),
+                        }
+                    }
+                    // Same candidate multiset — and, via `(dist, id)`
+                    // sorting, the same candidate *list* — as the
+                    // sequential phase 1 over the whole arena.
+                    rerank.push((s, Arc::new(merged.into_sorted_hits())));
+                }
+            }
+        }
+
+        // Phase 2 (SQ8 shards only): exact re-rank of the candidates,
+        // split into chunk-sized tasks. A static partition is already
+        // bit-safe — each candidate's exact key is pure — so no claiming
+        // counter is needed here.
+        let mut barrier2: DispatchBarrier<TopK<i64>> = DispatchBarrier::new();
+        let mut rerank_tasks: Vec<(usize, usize)> = Vec::with_capacity(rerank.len());
+        for (s, cands) in &rerank {
+            let n_tasks = cands.len().div_ceil(chunk).max(1);
+            rerank_tasks.push((*s, n_tasks));
+            for t in 0..n_tasks {
+                let (tx, rx) = mpsc::channel();
+                barrier2.add(rx);
+                let shard_ptr = SharedShard(&self.shards[*s] as *const Kernel);
+                let query = Arc::clone(&query);
+                let cands = Arc::clone(cands);
+                let lo = t * chunk;
+                pool.run(Box::new(move || {
+                    // SAFETY: as above — the second barrier holds this
+                    // frame open until the job resolves.
+                    let flat = unsafe { &*shard_ptr.0 }
+                        .flat_index()
+                        .expect("rerank job on a non-flat shard");
+                    let hi = (lo + chunk).min(cands.len());
+                    let mut local = TopK::new(k);
+                    flat.rerank_into(&query, &cands[lo..hi], &mut local);
+                    let _ = tx.send(local);
+                }));
+            }
+        }
+        let mut results2 = barrier2.wait_all().into_iter();
+        for (s, n_tasks) in rerank_tasks {
+            let mut merged = TopK::new(k);
+            for _ in 0..n_tasks {
+                merged.merge(
+                    results2
+                        .next()
+                        .expect("rerank accounting")
+                        .map_err(|_| StateError::ScanPoisoned)?,
+                );
+            }
+            per_shard[s] = Some(exact_hits(merged));
+        }
+        Ok(per_shard.into_iter().map(|hits| hits.expect("every shard resolved")).collect())
     }
 
     /// k-NN over a float query (same boundary as inserts, then integer
@@ -696,6 +1042,48 @@ pub fn root_hash_of(shard_hashes: &[u64]) -> u64 {
     }
     h.finish()
 }
+
+/// Per-shard execution plan for the chunked scan (mirrors the sequential
+/// exact-vs-two-phase decision in the flat index's `search`).
+#[derive(Clone, Copy)]
+enum ShardPlan {
+    Exact,
+    Sq8 { overscan: u32 },
+}
+
+/// One phase-1 lane's local reduction: exact `(dist_raw, id)` keys, or
+/// SQ8 `(approx_dist, id)` keys awaiting the exact re-rank.
+enum LaneOut {
+    Exact(TopK<i64>),
+    Approx(TopK<i32>),
+}
+
+/// Render a merged exact `TopK` into kernel [`Hit`]s — the same mapping
+/// [`Kernel::search_raw`] applies, so pooled and sequential results are
+/// byte-identical.
+fn exact_hits(topk: TopK<i64>) -> Vec<Hit> {
+    topk.into_sorted_hits()
+        .into_iter()
+        .map(|h| Hit { id: h.id, dist_raw: h.dist, dist: <i32 as Scalar>::dist_to_f64(h.dist) })
+        .collect()
+}
+
+/// Test-only fault injection: a scan job panics iff the armed sentinel
+/// matches its `k`. Keyed on an improbable exact `k` so concurrent tests
+/// sharing the process can never trip each other's injection.
+#[cfg(test)]
+static PANIC_ON_K: AtomicUsize = AtomicUsize::new(0);
+
+#[cfg(test)]
+fn maybe_panic(k: usize) {
+    let armed = PANIC_ON_K.load(Ordering::SeqCst);
+    if armed != 0 && armed == k {
+        panic!("injected scan-task panic (k = {k})");
+    }
+}
+
+#[cfg(not(test))]
+fn maybe_panic(_k: usize) {}
 
 /// Deterministic merge of per-shard hit lists (each already its shard's
 /// top-k under `(dist_raw, id)`) into the global top-k: every candidate
@@ -968,6 +1356,80 @@ mod tests {
         assert_eq!(sk, cloned);
         assert_eq!(cloned.search_raw(fv.raw(), 10).unwrap(), expect);
         assert_eq!(cloned.root_hash(), sk.root_hash());
+    }
+
+    #[test]
+    fn scan_pool_survives_a_panicking_job() {
+        // One worker, so the follow-up job *must* run on the respawned
+        // replacement — a hang here means respawn is broken.
+        let pool = ScanPool::new(1);
+        let (tx, rx) = mpsc::channel::<i32>();
+        pool.run(Box::new(move || {
+            let _tx = tx; // dropped without sending, during the unwind
+            panic!("injected job panic");
+        }));
+        assert!(rx.recv().is_err(), "panicked job must resolve its channel with Err");
+        let (tx2, rx2) = mpsc::channel::<i32>();
+        pool.run(Box::new(move || {
+            let _ = tx2.send(42);
+        }));
+        assert_eq!(rx2.recv(), Ok(42));
+        drop(pool); // shutdown joins cleanly even after a respawn
+    }
+
+    #[test]
+    fn panicked_scan_task_poisons_only_that_query() {
+        // The injection sentinel: a k no other test uses, so concurrent
+        // tests sharing the process-wide hook can never trip it.
+        const SENTINEL_K: usize = 31337;
+        let mut sk = ShardedKernel::new(flat_config(4), 1);
+        for (id, v) in vecs(600, 4) {
+            sk.apply(Command::insert(id, v)).unwrap();
+        }
+        sk.set_scan_chunk(64);
+        let fv =
+            FixedVector::from_f32(&[0.2, -0.1, 0.3, 0.05], 4, &sk.config().policy).unwrap();
+        let expect = sk.search_raw_pooled(fv.raw(), 10).unwrap();
+
+        PANIC_ON_K.store(SENTINEL_K, Ordering::SeqCst);
+        let err = sk.search_raw_pooled(fv.raw(), SENTINEL_K).unwrap_err();
+        PANIC_ON_K.store(0, Ordering::SeqCst);
+        assert_eq!(err, StateError::ScanPoisoned, "panicked task must fail its own query");
+
+        // Only that query: the pool recovered and the same search returns
+        // the original bits.
+        assert_eq!(sk.search_raw_pooled(fv.raw(), 10).unwrap(), expect);
+    }
+
+    #[test]
+    fn one_shard_pooled_scan_matches_inline() {
+        // The point of the chunked scan: a single shard parallelizes, and
+        // the pooled result is bit-identical to the plain kernel's.
+        let mut sk = ShardedKernel::new(flat_config(4), 1);
+        for (id, v) in vecs(5000, 4) {
+            sk.apply(Command::insert(id, v)).unwrap();
+        }
+        let fv =
+            FixedVector::from_f32(&[0.3, -0.2, 0.1, 0.4], 4, &sk.config().policy).unwrap();
+        // Above the corpus threshold search_raw itself takes the pooled path.
+        let pooled = sk.search_raw(fv.raw(), 10).unwrap();
+        assert_eq!(pooled, sk.shard(0).search_raw(fv.raw(), 10).unwrap());
+        assert_eq!(pooled, sk.search_raw_pooled(fv.raw(), 10).unwrap());
+    }
+
+    #[test]
+    fn hnsw_shards_use_whole_shard_jobs() {
+        // No contiguous arena to chunk: the pooled path falls back to one
+        // job per shard and still agrees with the inline fan-out.
+        let mut sk = ShardedKernel::new(KernelConfig::default_q16(8), 2);
+        for (id, v) in vecs(300, 8) {
+            sk.apply(Command::insert(id, v)).unwrap();
+        }
+        let fv = FixedVector::from_f32(&[0.1f32; 8], 8, &sk.config().policy).unwrap();
+        assert_eq!(
+            sk.search_raw_pooled(fv.raw(), 10).unwrap(),
+            sk.search_raw_inline(fv.raw(), 10).unwrap()
+        );
     }
 
     #[test]

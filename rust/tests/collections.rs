@@ -109,10 +109,10 @@ fn api_error_codes_match_golden_fixture() {
 fn interleaved_tenants_match_sequential_mirrors_bit_for_bit() {
     // Two tenants with different shapes on one server.
     let (manager, server) =
-        spawn_manager(CollectionSpec { dim: 4, shards: 1, flat: false, quant: QuantSpec::None });
+        spawn_manager(CollectionSpec::new(4, 1, false, QuantSpec::None));
     let addr = server.addr();
-    let spec_a = CollectionSpec { dim: 8, shards: 2, flat: true, quant: QuantSpec::None };
-    let spec_b = CollectionSpec { dim: 8, shards: 4, flat: true, quant: QuantSpec::None };
+    let spec_a = CollectionSpec::new(8, 2, true, QuantSpec::None);
+    let spec_b = CollectionSpec::new(8, 4, true, QuantSpec::None);
     manager.create("tenant_a", spec_a).unwrap();
     manager.create("tenant_b", spec_b).unwrap();
 
@@ -186,7 +186,7 @@ fn interleaved_tenants_match_sequential_mirrors_bit_for_bit() {
 
 #[test]
 fn combined_hash_invariant_under_creation_order_permutation() {
-    let spec = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+    let spec = CollectionSpec::new(4, 2, true, QuantSpec::None);
     let (m1, s1) = spawn_manager(spec.clone());
     let (m2, s2) = spawn_manager(spec.clone());
     // m1 creates zeta then alpha; m2 creates alpha then zeta.
@@ -298,7 +298,7 @@ fn v1_adapter_is_byte_identical_to_standalone_node() {
     let standalone = serve(Arc::clone(&standalone_state), "127.0.0.1:0", 2).unwrap();
     // …and a collection manager whose `default` has the same spec.
     let (_manager, managed) =
-        spawn_manager(CollectionSpec { dim: 4, shards: 1, flat: false, quant: QuantSpec::None });
+        spawn_manager(CollectionSpec::new(4, 1, false, QuantSpec::None));
 
     // Deterministic /v1 battery (health and stats excluded: health
     // truthfully reports the manager's backend/collection count, stats
@@ -397,14 +397,14 @@ fn chunked_transfer_encoding_rejected_501_identically_on_both_front_ends() {
 
 #[test]
 fn sync_all_collections_converges_a_fresh_follower() {
-    let spec = CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None };
+    let spec = CollectionSpec::new(4, 2, true, QuantSpec::None);
     let (p_manager, primary) = spawn_manager(spec.clone());
     let (f_manager, follower) = spawn_manager(spec.clone());
     p_manager
-        .create("t1", CollectionSpec { dim: 4, shards: 2, flat: true, quant: QuantSpec::None })
+        .create("t1", CollectionSpec::new(4, 2, true, QuantSpec::None))
         .unwrap();
     p_manager
-        .create("t2", CollectionSpec { dim: 4, shards: 4, flat: true, quant: QuantSpec::None })
+        .create("t2", CollectionSpec::new(4, 4, true, QuantSpec::None))
         .unwrap();
 
     // data in default + both tenants, via the live server

@@ -27,7 +27,7 @@ use valori::node::{
 use valori::state::{Command, KernelConfig, ShardedKernel};
 
 fn spec(dim: usize, shards: u32) -> CollectionSpec {
-    CollectionSpec { dim, shards, flat: true, quant: QuantSpec::None }
+    CollectionSpec::new(dim, shards, true, QuantSpec::None)
 }
 
 fn governed(

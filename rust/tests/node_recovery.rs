@@ -13,7 +13,7 @@ fn tmp(name: &str) -> std::path::PathBuf {
 fn node_recovers_state_from_wal_on_restart() {
     let wal = tmp("restart.wal");
     std::fs::remove_file(&wal).ok();
-    let config = NodeConfig { workers: 2, wal_path: Some(wal.clone()) };
+    let config = NodeConfig { workers: 2, wal_path: Some(wal.clone()), ..NodeConfig::default() };
 
     // incarnation 1: write some state
     let hash1 = {
@@ -51,7 +51,7 @@ fn node_recovers_state_from_wal_on_restart() {
 fn node_repairs_torn_wal_tail_on_restart() {
     let wal = tmp("torn.wal");
     std::fs::remove_file(&wal).ok();
-    let config = NodeConfig { workers: 2, wal_path: Some(wal.clone()) };
+    let config = NodeConfig { workers: 2, wal_path: Some(wal.clone()), ..NodeConfig::default() };
     {
         let state =
             NodeState::new(Kernel::new(KernelConfig::default_q16(4)), &config, None).unwrap();

@@ -330,7 +330,7 @@ fn sharded_node_recovers_from_per_shard_wals() {
     for s in 0..4u32 {
         std::fs::remove_file(valori::node::shard_wal_path(&base, s, 4)).ok();
     }
-    let config = NodeConfig { workers: 2, wal_path: Some(base.clone()) };
+    let config = NodeConfig { workers: 2, wal_path: Some(base.clone()), ..NodeConfig::default() };
     let root = {
         let kernel = ShardedKernel::new(KernelConfig::default_q16(4), 4);
         let state = NodeState::new_sharded(kernel, &config, None).unwrap();
