@@ -90,6 +90,8 @@
 //! [`ApiRequest::parse`], all state-machine rejections from the kernel's
 //! own [`StateError`], mapped 1:1 onto the taxonomy.
 
+#![forbid(unsafe_code)]
+
 use crate::http::Response;
 use crate::json::{parse, Json};
 use crate::node::{hex_decode, hex_encode, Metrics, NodeState};

@@ -5,6 +5,8 @@
 //! under `rust/benches/` and by the experiment drivers that report the
 //! paper's latency numbers (§8.2).
 
+#![forbid(unsafe_code)]
+
 pub mod suite;
 
 use std::time::{Duration, Instant};

@@ -12,6 +12,8 @@
 //! (`BENCH_search.json` at the repo root, written by the CLI) for CI
 //! trend tracking.
 
+#![forbid(unsafe_code)]
+
 use crate::bench::{bench, BenchConfig, Report, Stats};
 use crate::distance::{Metric, Scalar};
 use crate::hash::splitmix64;

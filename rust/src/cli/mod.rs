@@ -3,6 +3,8 @@
 //! Supports `program <subcommand> [--flag] [--key value] [positional...]`.
 //! Enough surface for the `valori` binary and the experiment drivers.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 
 /// Parsed command line.

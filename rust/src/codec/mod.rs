@@ -8,6 +8,8 @@
 //! sequences, and decoding is strict (trailing garbage and truncation are
 //! errors).
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// Encoding buffer.
@@ -57,6 +59,7 @@ impl Encoder {
 
     /// f32 stored as raw IEEE-754 bits (only used outside the determinism
     /// boundary, e.g. the float baseline index).
+    // lint: float-boundary — bit-exact IEEE-754 transport, no float arithmetic
     #[inline]
     pub fn put_f32(&mut self, v: f32) {
         self.put_u32(v.to_bits());
@@ -98,6 +101,7 @@ impl Encoder {
     }
 
     /// Length-prefixed f32 slice (bit-exact).
+    // lint: float-boundary — bit-exact IEEE-754 transport, no float arithmetic
     pub fn put_f32_slice(&mut self, v: &[f32]) {
         self.put_u32(v.len() as u32);
         for &x in v {
@@ -222,6 +226,7 @@ impl<'a> Decoder<'a> {
         Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    // lint: float-boundary — bit-exact IEEE-754 transport, no float arithmetic
     pub fn get_f32(&mut self) -> Result<f32, DecodeError> {
         Ok(f32::from_bits(self.get_u32()?))
     }
@@ -279,6 +284,7 @@ impl<'a> Decoder<'a> {
         Ok(v)
     }
 
+    // lint: float-boundary — bit-exact IEEE-754 transport, no float arithmetic
     pub fn get_f32_vec(&mut self) -> Result<Vec<f32>, DecodeError> {
         let n = self.get_u32()? as usize;
         if n.checked_mul(4).map_or(true, |b| b > self.remaining()) {

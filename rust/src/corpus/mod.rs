@@ -10,6 +10,8 @@
 //! Everything is driven by a seeded [`XorShift64`] — corpora are
 //! reproducible by construction.
 
+#![forbid(unsafe_code)]
+
 use crate::hash::XorShift64;
 
 /// Topic templates: (topic name, content words, sentence frames).

@@ -9,6 +9,8 @@
 //! (DESIGN §2 substitution: different evaluation orders on one host stand
 //! in for different ISAs).
 
+#![forbid(unsafe_code)]
+
 /// Plain sequential left-to-right accumulation — what a scalar x86 build
 /// without FMA does.
 #[inline]

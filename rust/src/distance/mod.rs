@@ -13,6 +13,8 @@
 //! orders, generally different bits. They power the divergence experiments
 //! (Table 1's mechanism, isolated).
 
+#![forbid(unsafe_code)]
+
 pub mod float;
 
 use crate::codec::{DecodeError, Decoder, Encoder};
@@ -114,6 +116,7 @@ pub trait Scalar: Copy + Debug + PartialEq + 'static {
 
     /// Distance rendered as a real number for reporting/JSON (never used
     /// for ordering).
+    // lint: float-boundary — display-only rendering, never ordered on
     fn dist_to_f64(d: Self::Dist) -> f64;
 
     /// SQ8 quantization hook: the Q16.16 raw value of this scalar, or
@@ -169,6 +172,7 @@ impl Scalar for i32 {
         d.get_i32()
     }
 
+    // lint: float-boundary — display-only rendering, never ordered on
     #[inline]
     fn dist_to_f64(d: i64) -> f64 {
         // Q32.32 wide value -> real
@@ -221,6 +225,7 @@ impl Scalar for i64 {
         d.get_i64()
     }
 
+    // lint: float-boundary — display-only rendering, never ordered on
     #[inline]
     fn dist_to_f64(d: i128) -> f64 {
         // Q64.64 wide value -> real
@@ -230,6 +235,7 @@ impl Scalar for i64 {
 
 /// f32 baseline scalars: distances are [`OrderedF32`] (total order), values
 /// computed with the plain sequential loop (what a naive scalar build does).
+// lint: float-boundary — the float *baseline* instantiation, measured but never hashed
 impl Scalar for f32 {
     type Dist = OrderedF32;
 
@@ -335,6 +341,7 @@ pub fn l2sq_q16_block(query: &[i32], block: &[i32], dim: usize, out: &mut [i64])
 
 /// f32 wrapper with IEEE-754 `total_cmp` ordering, so the float baseline
 /// can share the integer index code (heaps need `Ord`).
+// lint: float-boundary — baseline-only ordering wrapper (total_cmp)
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OrderedF32(pub f32);
 

@@ -11,6 +11,8 @@
 //! reduction-order variants in [`crate::distance::float`], which isolates
 //! the identical root cause without the model.
 
+#![forbid(unsafe_code)]
+
 use crate::corpus::CorpusGen;
 use crate::runtime::{artifacts_available, artifacts_dir, embedder::Env, Embedder, Engine};
 

@@ -5,6 +5,8 @@
 //! (10k × dim-128, k=10) on this host for the Q16.16 HNSW, the f32 HNSW
 //! and the flat scans, with the in-crate bench harness.
 
+#![forbid(unsafe_code)]
+
 use crate::bench::{bench, BenchConfig, Report, Stats};
 use crate::distance::Metric;
 use crate::experiments::synthetic_embeddings;

@@ -4,6 +4,8 @@
 //! same code backs (a) the `valori experiment <id>` CLI, (b) the bench
 //! targets under `rust/benches/`, and (c) assertions in integration tests.
 
+#![forbid(unsafe_code)]
+
 pub mod divergence;
 pub mod latency;
 pub mod precision;

@@ -6,6 +6,8 @@
 //! over the normalized-embedding regime, and the determinism property
 //! (always true — checked, not assumed).
 
+#![forbid(unsafe_code)]
+
 use crate::fixed::{FixedFormat, Q16_16, Q32_32, Q8_24};
 use crate::hash::XorShift64;
 

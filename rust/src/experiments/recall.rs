@@ -8,6 +8,8 @@
 //! numeric representation alone. We additionally report both indices'
 //! recall against exact (flat) ground truth, which the paper omits.
 
+#![forbid(unsafe_code)]
+
 use crate::distance::Metric;
 use crate::experiments::{recall_overlap, synthetic_embeddings};
 use crate::fixed::{FixedFormat, Q16_16};

@@ -10,6 +10,8 @@
 //! snapshot_roundtrip integration test; this driver measures the in-repo
 //! protocol end-to-end and reports timings.
 
+#![forbid(unsafe_code)]
+
 use crate::experiments::synthetic_embeddings;
 use crate::snapshot::Snapshot;
 use crate::state::{Command, Kernel, KernelConfig};

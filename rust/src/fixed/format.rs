@@ -13,12 +13,15 @@
 //! defines exactly (no implementation-defined behaviour), so results are
 //! bit-identical on every supported target.
 
+#![forbid(unsafe_code)]
+
 use core::fmt;
 
 /// A fixed-point precision contract (paper §6).
 ///
 /// Implementors provide the storage width, fractional bits and saturating
 /// arithmetic. All methods must be pure and integer-only.
+// lint: float-boundary — quantize/dequantize are the paper's single allowed float crossing (§5.3)
 pub trait FixedFormat: Copy + Clone + fmt::Debug + PartialEq + Eq {
     /// Raw storage type (`i32` for Q8.24/Q16.16, `i64` for Q32.32).
     type Raw: Copy + Ord + fmt::Debug;
@@ -107,6 +110,7 @@ pub trait FixedFormat: Copy + Clone + fmt::Debug + PartialEq + Eq {
 }
 
 /// Generates a fixed-point format backed by a primitive signed integer.
+// lint: float-boundary — generated impls of the quantize/dequantize boundary above
 macro_rules! fixed_format {
     ($(#[$doc:meta])* $name:ident, $raw:ty, $wide:ty, $frac:expr, $bits:expr, $disp:expr) => {
         $(#[$doc])*
@@ -221,6 +225,7 @@ macro_rules! fixed_format {
 
 /// `f64::round_ties_even` is unstable on older toolchains; implement the
 /// IEEE-754 roundTiesToEven reconstruction explicitly so behaviour is pinned.
+// lint: float-boundary — the boundary rounding step itself (IEEE-754 exact)
 #[inline]
 pub fn round_ties_even_f64(x: f64) -> f64 {
     let r = x.round(); // round half away from zero

@@ -6,6 +6,8 @@
 //! integer-only, loop bounds fixed by the type width, so it is bit-identical
 //! on every platform (no float sqrt involved anywhere).
 
+#![forbid(unsafe_code)]
+
 /// Floor of the square root of a `u64`.
 #[inline]
 pub fn isqrt_u64(n: u64) -> u64 {

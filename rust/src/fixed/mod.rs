@@ -14,6 +14,8 @@
 //! - [`isqrt`]    — deterministic integer square root (used by fixed-point
 //!   L2 normalization).
 
+#![forbid(unsafe_code)]
+
 pub mod format;
 pub mod isqrt;
 pub mod ops;

@@ -8,6 +8,8 @@
 //! vectorized code is still bit-identical to the scalar loop. This is the
 //! crucial asymmetry with floats the paper exploits.
 
+#![forbid(unsafe_code)]
+
 use super::format::FixedFormat;
 use super::isqrt::{isqrt_u128, isqrt_u64};
 

@@ -8,6 +8,8 @@
 //! / `BTreeSet` so iteration (and therefore serialization and hashing) is
 //! canonical.
 
+#![forbid(unsafe_code)]
+
 use crate::codec::{DecodeError, Decoder, Encoder};
 use std::collections::{BTreeMap, BTreeSet};
 

@@ -4,6 +4,8 @@
 //! Matches zlib's `crc32` (init `0xFFFF_FFFF`, final xor `0xFFFF_FFFF`),
 //! so fixtures can be generated and verified by any standard tool.
 
+#![forbid(unsafe_code)]
+
 const fn build_table() -> [u32; 256] {
     let mut table = [0u32; 256];
     let mut i = 0usize;

@@ -13,6 +13,8 @@
 //! A small deterministic PRNG (xorshift) is also provided for the test and
 //! workload-generation substrates.
 
+#![forbid(unsafe_code)]
+
 pub mod crc32;
 pub mod sha256;
 
@@ -126,12 +128,14 @@ impl XorShift64 {
     }
 
     /// Uniform f64 in `[0, 1)`.
+    // lint: float-boundary — seeded test-corpus generator, never feeds hashed state directly
     #[inline]
     pub fn next_f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
     /// Uniform f32 in `[lo, hi)`.
+    // lint: float-boundary — seeded test-corpus generator, never feeds hashed state directly
     #[inline]
     pub fn next_f32_range(&mut self, lo: f32, hi: f32) -> f32 {
         lo + (self.next_f64() as f32) * (hi - lo)

@@ -6,6 +6,8 @@
 //! boundary with everything else. Pure integer math, no platform-dependent
 //! behaviour, verified against the FIPS test vectors below.
 
+#![forbid(unsafe_code)]
+
 /// Streaming SHA-256 hasher.
 #[derive(Debug, Clone)]
 pub struct Sha256 {

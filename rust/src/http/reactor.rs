@@ -43,6 +43,11 @@
 //! streams and asserts byte-identical responses and identical state
 //! hashes.
 
+// R5 allowlisted file (see DETERMINISM.md): the epoll FFI. Every unsafe
+// site carries a SAFETY comment; `valori lint` rejects any that does not.
+#![allow(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use super::{
     parse_error_response, Handler, ParsePhase, Request, RequestParser, Response, ServerConfig,
     ServerMetrics, StreamingBody,
@@ -97,6 +102,8 @@ struct Epoll {
 
 impl Epoll {
     fn new() -> std::io::Result<Self> {
+        // SAFETY: epoll_create1 takes no pointers; the returned fd is
+        // validated below and owned by this RAII wrapper.
         let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
         if fd < 0 {
             return Err(std::io::Error::last_os_error());
@@ -106,6 +113,8 @@ impl Epoll {
 
     fn add(&self, fd: RawFd, token: u64, events: u32) -> std::io::Result<()> {
         let mut ev = EpollEvent { events, data: token };
+        // SAFETY: `ev` is a live, properly-aligned repr(C) struct for the
+        // duration of the call; the kernel copies it before returning.
         let rc = unsafe { epoll_ctl(self.fd, EPOLL_CTL_ADD, fd, &mut ev) };
         if rc < 0 {
             return Err(std::io::Error::last_os_error());
@@ -117,12 +126,16 @@ impl Epoll {
         // A dummy event keeps pre-2.6.9 kernels happy; errors are moot
         // because the fd is about to be closed anyway.
         let mut ev = EpollEvent { events: 0, data: 0 };
+        // SAFETY: `ev` is a live repr(C) struct for the call; DEL ignores
+        // its contents on modern kernels.
         unsafe { epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, &mut ev) };
     }
 
     /// Wait for events; EINTR reports as zero events.
     fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> usize {
         let max = events.len() as c_int;
+        // SAFETY: the pointer/len pair comes from a live `&mut [EpollEvent]`;
+        // the kernel writes at most `max` entries into it.
         let rc = unsafe { epoll_wait(self.fd, events.as_mut_ptr(), max, timeout_ms) };
         if rc < 0 {
             0
@@ -134,6 +147,8 @@ impl Epoll {
 
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is the epoll fd this wrapper owns exclusively;
+        // Drop runs once, so it is not closed twice.
         unsafe { close(self.fd) };
     }
 }

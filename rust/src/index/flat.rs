@@ -16,6 +16,8 @@
 //! `overscan * k >= live_len` the approx scan could not drop anything the
 //! exact scan keeps, so search falls back to the plain exact sweep.
 
+#![forbid(unsafe_code)]
+
 use super::quant::{self, QuantSpec, Quantizer};
 use super::store::VecStore;
 use super::topk::TopK;

@@ -20,6 +20,8 @@
 //! [`crate::distance::OrderedF32`] keys), which keeps Table 3's control:
 //! identical parameters, identical insertion order, different arithmetic.
 
+#![forbid(unsafe_code)]
+
 use super::store::VecStore;
 use super::topk::TopK;
 use super::{Hit, VectorIndex};

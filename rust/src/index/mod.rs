@@ -6,6 +6,8 @@
 //! ("identical insertion order, identical HNSW configuration parameters"):
 //! recall differences can only come from the numeric representation.
 
+#![forbid(unsafe_code)]
+
 pub mod flat;
 pub mod hnsw;
 pub mod quant;

@@ -51,6 +51,8 @@
 //! floats, no data-dependent scales. See `PERFORMANCE.md` §8 for the
 //! full exactness/recall argument.
 
+#![forbid(unsafe_code)]
+
 use crate::codec::{DecodeError, Decoder, Encoder};
 use crate::distance::{Metric, Scalar};
 

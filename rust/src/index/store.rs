@@ -6,6 +6,8 @@
 //! makes deterministic (paper §7.1 "fixed ordering"). The id map is a
 //! `BTreeMap` (sorted iteration) so serialization order is canonical.
 
+#![forbid(unsafe_code)]
+
 use crate::codec::{DecodeError, Decoder, Encoder};
 use crate::distance::Scalar;
 use std::collections::BTreeMap;

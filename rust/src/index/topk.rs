@@ -12,6 +12,8 @@
 //! scheduling, block size, or traversal order upstream) cannot change the
 //! result: the heap output is bit-identical to sort + truncate.
 
+#![forbid(unsafe_code)]
+
 use super::Hit;
 use std::collections::BinaryHeap;
 

@@ -5,6 +5,8 @@
 //! full JSON value model; numbers are kept as f64 (plus an exact i64 fast
 //! path for integers, which the API uses for ids).
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::fmt;
 

@@ -16,7 +16,9 @@
 //!   multi-tenant collection manager, embed batching), [`replication`]
 //!   (multi-node state convergence), [`cli`].
 //! - **Build-every-substrate support:** [`http`], [`json`], [`bench`],
-//!   [`testing`], [`tokenizer`], [`corpus`], [`experiments`].
+//!   [`testing`], [`tokenizer`], [`corpus`], [`experiments`], and the
+//!   determinism auditor [`lint`] (`valori lint`), which enforces this
+//!   very zone layout statically (see DETERMINISM.md).
 //!
 //! ## Quickstart
 //!
@@ -29,6 +31,13 @@
 //! assert_eq!(hits[0].id, 0);
 //! println!("state hash = {:#018x}", kernel.state_hash());
 //! ```
+
+// `unsafe` is confined to the two allowlisted files (state/sharded.rs,
+// http/reactor.rs — lint rule R5); everything else forbids it at the
+// module level, and this crate-wide deny backstops any file that
+// forgets its own attribute. `forbid` cannot live here because the two
+// allowlisted files must still opt back in with `allow`.
+#![deny(unsafe_code)]
 
 pub mod api;
 pub mod bench;
@@ -43,6 +52,7 @@ pub mod hash;
 pub mod http;
 pub mod index;
 pub mod json;
+pub mod lint;
 pub mod node;
 pub mod replication;
 pub mod runtime;

@@ -1,0 +1,213 @@
+//! Baseline handling: grandfathered findings, diffed on every run.
+//!
+//! The committed `lint_baseline.json` is the *only* mutable state the
+//! auditor consults. Its contract is strict in both directions:
+//!
+//! - a finding **not** in the baseline fails the run (new violation),
+//! - a baseline entry with **no** matching finding fails the run too
+//!   (stale entry — the debt was paid, delete the line so it cannot
+//!   mask a future regression at the same site).
+//!
+//! Entries are identified by `(rule, file, key)` — never by line
+//! number, so unrelated edits shifting code around cannot churn the
+//! baseline. Multiple identical findings in one file are matched by
+//! count (the multiset must agree exactly).
+
+#![forbid(unsafe_code)]
+
+use super::{Finding, Rule};
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+/// One grandfathered finding.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BaselineEntry {
+    pub rule: Rule,
+    pub file: String,
+    pub key: String,
+}
+
+/// The parsed baseline file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+impl Baseline {
+    /// Parse the JSON baseline format (see [`Baseline::to_json`]).
+    pub fn from_json_text(text: &str) -> Result<Baseline, String> {
+        let doc = crate::json::parse(text).map_err(|e| format!("baseline: {e}"))?;
+        if doc.get("version").as_i64() != Some(1) {
+            return Err("baseline: unsupported or missing `version` (want 1)".to_string());
+        }
+        let Some(items) = doc.get("entries").as_array() else {
+            return Err("baseline: missing `entries` array".to_string());
+        };
+        let mut entries = Vec::with_capacity(items.len());
+        for it in items {
+            let rule = it
+                .get("rule")
+                .as_str()
+                .and_then(Rule::from_code)
+                .ok_or_else(|| format!("baseline: bad rule in {it:?}"))?;
+            let file = it
+                .get("file")
+                .as_str()
+                .ok_or_else(|| format!("baseline: missing file in {it:?}"))?
+                .to_string();
+            let key = it
+                .get("key")
+                .as_str()
+                .ok_or_else(|| format!("baseline: missing key in {it:?}"))?
+                .to_string();
+            entries.push(BaselineEntry { rule, file, key });
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Serialize back to the canonical JSON format (sorted entries, so
+    /// regenerating a baseline is a stable diff).
+    pub fn to_json(&self) -> Json {
+        let mut entries = self.entries.clone();
+        entries.sort();
+        Json::object(vec![
+            ("version", Json::Int(1)),
+            (
+                "entries",
+                Json::Array(
+                    entries
+                        .iter()
+                        .map(|e| {
+                            Json::object(vec![
+                                ("rule", Json::str(e.rule.code())),
+                                ("file", Json::str(e.file.clone())),
+                                ("key", Json::str(e.key.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Build a baseline that grandfathers exactly `findings`.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        Baseline {
+            entries: findings
+                .iter()
+                .map(|f| BaselineEntry {
+                    rule: f.rule,
+                    file: f.file.clone(),
+                    key: f.key.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The result of diffing live findings against the baseline.
+#[derive(Debug, Default)]
+pub struct Diff {
+    /// Findings not covered by the baseline (fail).
+    pub new: Vec<Finding>,
+    /// Baseline entries with no live finding left (fail: delete them).
+    pub stale: Vec<BaselineEntry>,
+}
+
+impl Diff {
+    pub fn is_clean(&self) -> bool {
+        self.new.is_empty() && self.stale.is_empty()
+    }
+}
+
+/// Multiset-diff `findings` against `baseline` by `(rule, file, key)`.
+pub fn diff(findings: &[Finding], baseline: &Baseline) -> Diff {
+    let mut budget: BTreeMap<(Rule, &str, &str), i64> = BTreeMap::new();
+    for e in &baseline.entries {
+        *budget.entry((e.rule, e.file.as_str(), e.key.as_str())).or_insert(0) += 1;
+    }
+    let mut out = Diff::default();
+    for f in findings {
+        let slot = budget.entry((f.rule, f.file.as_str(), f.key.as_str())).or_insert(0);
+        if *slot > 0 {
+            *slot -= 1;
+        } else {
+            out.new.push(f.clone());
+        }
+    }
+    for ((rule, file, key), left) in budget {
+        for _ in 0..left {
+            out.stale.push(BaselineEntry {
+                rule,
+                file: file.to_string(),
+                key: key.to_string(),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::lint::Zone;
+
+    fn finding(rule: Rule, file: &str, key: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line: 1,
+            zone: Zone::State,
+            key: key.to_string(),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let fs = [finding(Rule::R1, "state/a.rs", "f32"), finding(Rule::R5, "b.rs", "x")];
+        let b = Baseline::from_findings(&fs);
+        let text = b.to_json().to_string();
+        let back = Baseline::from_json_text(&text).unwrap();
+        let mut want = b.entries.clone();
+        want.sort();
+        assert_eq!(back.entries, want);
+    }
+
+    #[test]
+    fn diff_matches_multisets_exactly() {
+        let live = [
+            finding(Rule::R1, "a.rs", "f32"),
+            finding(Rule::R1, "a.rs", "f32"),
+            finding(Rule::R3, "a.rs", "Instant"),
+        ];
+        // baseline covers one f32 and a Duration that no longer exists
+        let base = Baseline {
+            entries: vec![
+                BaselineEntry { rule: Rule::R1, file: "a.rs".into(), key: "f32".into() },
+                BaselineEntry { rule: Rule::R2, file: "a.rs".into(), key: "HashMap".into() },
+            ],
+        };
+        let d = diff(&live, &base);
+        assert_eq!(d.new.len(), 2, "{:?}", d.new); // second f32 + Instant
+        assert_eq!(d.stale.len(), 1);
+        assert_eq!(d.stale[0].key, "HashMap");
+        assert!(!d.is_clean());
+        // the exact-cover case is clean both ways
+        let exact = Baseline::from_findings(&live);
+        assert!(diff(&live, &exact).is_clean());
+        // empty-vs-empty is clean
+        assert!(diff(&[], &Baseline::default()).is_clean());
+    }
+
+    #[test]
+    fn bad_baselines_are_rejected() {
+        assert!(Baseline::from_json_text("{}").is_err());
+        assert!(Baseline::from_json_text(r#"{"version":2,"entries":[]}"#).is_err());
+        assert!(Baseline::from_json_text(
+            r#"{"version":1,"entries":[{"rule":"R9","file":"x","key":"y"}]}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,459 @@
+//! Token-level Rust scanner for the determinism auditor.
+//!
+//! This is deliberately *not* a parser: the lint's rule set (see
+//! [`super::rules`]) only needs the identifier/number/punct stream with
+//! line numbers, plus the comment side-channel (`// SAFETY:` and
+//! `// lint:` markers). Keeping it token-level means zero dependencies,
+//! no syntax-tree drift when rustc grows new syntax, and a scanner small
+//! enough to audit by eye — the auditor itself must be auditable.
+//!
+//! What the scanner understands well enough to never mis-tokenize:
+//! line comments, nested block comments, string literals (escaped, raw,
+//! byte), char literals vs. lifetimes, numeric literals with suffixes
+//! (`1.0f32`, `2f64`, `0x1F`, `1e3`), and raw identifiers (`r#type`).
+
+#![forbid(unsafe_code)]
+
+/// Token classes the rules care about. Strings and chars are kept in the
+/// stream (so neighbor lookups stay positional) but carry no text — rule
+/// patterns must never match inside literal data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`f32`, `unsafe`, `env`, ...).
+    Ident,
+    /// Numeric literal, text preserved for float-literal detection.
+    Num,
+    /// Single punctuation character (`{`, `;`, `#`, ...).
+    Punct,
+    /// String/char literal (text discarded).
+    Lit,
+    /// Lifetime (`'a`), kept so `'a` never reads as a char literal.
+    Lifetime,
+}
+
+/// One source token with its 1-based line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+    pub text: String,
+}
+
+/// One comment (line or block), with the line span it covers and whether
+/// code tokens preceded it on its first line (a *trailing* comment).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub first_line: u32,
+    pub last_line: u32,
+    pub text: String,
+    pub trailing: bool,
+}
+
+/// Scanner output: the code-token stream plus the comment side-channel.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+impl Scan {
+    /// Lines that carry at least one code token.
+    pub fn token_lines(&self) -> std::collections::BTreeSet<u32> {
+        self.tokens.iter().map(|t| t.line).collect()
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Does this numeric-literal text denote a float? Covers `1.5`, `1e3`,
+/// `1.0e-3`, and suffixed forms (`2f64`); hex/octal/binary never float.
+pub fn is_float_literal(text: &str) -> bool {
+    if text.starts_with("0x") || text.starts_with("0o") || text.starts_with("0b") {
+        return false;
+    }
+    if text.ends_with("f32") || text.ends_with("f64") {
+        return true;
+    }
+    if text.contains('.') {
+        return true;
+    }
+    // an exponent needs a digit after the `e` (`1e3`, `1e-3`); a bare
+    // `e` inside an int suffix (`7usize`) is not one
+    let b = text.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        if matches!(c, b'e' | b'E') {
+            let mut j = i + 1;
+            if j < b.len() && matches!(b[j], b'+' | b'-') {
+                j += 1;
+            }
+            while j < b.len() && b[j] == b'_' {
+                j += 1;
+            }
+            if j < b.len() && b[j].is_ascii_digit() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes are emitted as punct
+/// so a weird file degrades to noisy tokens, not a lost audit.
+pub fn scan(src: &str) -> Scan {
+    let b = src.as_bytes();
+    let mut out = Scan::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut last_tok_line = 0u32;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // comments
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            out.comments.push(Comment {
+                first_line: line,
+                last_line: line,
+                text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+                trailing: last_tok_line == line,
+            });
+            continue;
+        }
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let first = line;
+            let trailing = last_tok_line == line;
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment {
+                first_line: first,
+                last_line: line,
+                text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+                trailing,
+            });
+            continue;
+        }
+        // strings
+        if c == b'"' {
+            i = skip_escaped_string(b, i + 1, &mut line);
+            out.tokens.push(Tok { line, kind: TokKind::Lit, text: String::new() });
+            last_tok_line = line;
+            continue;
+        }
+        // char literal or lifetime
+        if c == b'\'' {
+            let (next, kind) = scan_quote(b, i, &mut line);
+            i = next;
+            out.tokens.push(Tok { line, kind, text: String::new() });
+            last_tok_line = line;
+            continue;
+        }
+        // identifiers (and raw-string / raw-ident prefixes)
+        if is_ident_start(c) {
+            let start = i;
+            while i < b.len() && is_ident_char(b[i]) {
+                i += 1;
+            }
+            let ident = &src[start..i];
+            if matches!(ident, "r" | "b" | "br") {
+                if let Some(next) = try_raw_or_byte_string(b, i, ident, &mut line) {
+                    i = next;
+                    out.tokens.push(Tok { line, kind: TokKind::Lit, text: String::new() });
+                    last_tok_line = line;
+                    continue;
+                }
+            }
+            // raw identifier r#name: emit the name itself
+            if ident == "r"
+                && i + 1 < b.len()
+                && b[i] == b'#'
+                && is_ident_start(b[i + 1])
+            {
+                let rstart = i + 1;
+                i += 1;
+                while i < b.len() && is_ident_char(b[i]) {
+                    i += 1;
+                }
+                out.tokens.push(Tok {
+                    line,
+                    kind: TokKind::Ident,
+                    text: src[rstart..i].to_string(),
+                });
+                last_tok_line = line;
+                continue;
+            }
+            out.tokens.push(Tok { line, kind: TokKind::Ident, text: ident.to_string() });
+            last_tok_line = line;
+            continue;
+        }
+        // numbers
+        if c.is_ascii_digit() {
+            let start = i;
+            if c == b'0' && i + 1 < b.len() && matches!(b[i + 1], b'x' | b'o' | b'b') {
+                i += 2;
+                while i < b.len() && (is_ident_char(b[i])) {
+                    i += 1;
+                }
+            } else {
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+                    i += 1;
+                }
+                // fractional part: `1.5` yes, `1..3` / `x.method()` no
+                if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+                        i += 1;
+                    }
+                }
+                // exponent
+                if i < b.len() && matches!(b[i], b'e' | b'E') {
+                    let sign = i + 1 < b.len() && matches!(b[i + 1], b'+' | b'-');
+                    let digit_at = i + if sign { 2 } else { 1 };
+                    if digit_at < b.len() && b[digit_at].is_ascii_digit() {
+                        i = digit_at + 1;
+                        while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+                            i += 1;
+                        }
+                    }
+                }
+                // type suffix (`u64`, `f32`, `usize`, ...)
+                while i < b.len() && is_ident_char(b[i]) {
+                    i += 1;
+                }
+            }
+            out.tokens.push(Tok { line, kind: TokKind::Num, text: src[start..i].to_string() });
+            last_tok_line = line;
+            continue;
+        }
+        // everything else: single punct char (multi-byte UTF-8 bytes land
+        // here too; they only occur inside comments/strings in practice)
+        out.tokens.push(Tok {
+            line,
+            kind: TokKind::Punct,
+            text: (c as char).to_string(),
+        });
+        last_tok_line = line;
+        i += 1;
+    }
+    out
+}
+
+/// Skip past a `"`-delimited string with backslash escapes. `i` points
+/// just after the opening quote; returns the index after the closer.
+fn skip_escaped_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// `'` at `b[i]`: decide char literal vs. lifetime and skip it.
+fn scan_quote(b: &[u8], i: usize, line: &mut u32) -> (usize, TokKind) {
+    let mut j = i + 1;
+    if j >= b.len() {
+        return (j, TokKind::Punct);
+    }
+    if b[j] == b'\\' {
+        // escaped char: skip the backslash and the escaped character,
+        // then scan to the closing quote (handles '\u{..}', '\x41', '\'')
+        j += 2;
+        while j < b.len() && b[j] != b'\'' {
+            if b[j] == b'\n' {
+                *line += 1;
+            }
+            j += 1;
+        }
+        return (j + 1, TokKind::Lit);
+    }
+    if is_ident_start(b[j]) {
+        // 'a' is a char literal; 'a (no closing quote) is a lifetime
+        let mut k = j;
+        while k < b.len() && is_ident_char(b[k]) {
+            k += 1;
+        }
+        if k < b.len() && b[k] == b'\'' {
+            return (k + 1, TokKind::Lit);
+        }
+        return (k, TokKind::Lifetime);
+    }
+    // non-identifier char ('+', multi-byte UTF-8, ...): scan to closer
+    while j < b.len() && b[j] != b'\'' {
+        if b[j] == b'\n' {
+            *line += 1;
+        }
+        j += 1;
+    }
+    (j + 1, TokKind::Lit)
+}
+
+/// After the ident `r` / `b` / `br` at `b[i]`: if a raw/byte string
+/// follows, skip it and return the index after its closer.
+fn try_raw_or_byte_string(
+    b: &[u8],
+    i: usize,
+    prefix: &str,
+    line: &mut u32,
+) -> Option<usize> {
+    if i >= b.len() {
+        return None;
+    }
+    if prefix == "b" && b[i] == b'"' {
+        return Some(skip_escaped_string(b, i + 1, line));
+    }
+    // raw forms: r"..."  r#"..."#  br#"..."#
+    let mut hashes = 0usize;
+    let mut j = i;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' || (prefix == "b" && hashes == 0) {
+        return None;
+    }
+    if prefix == "b" {
+        return None; // b#"..." is not a string form
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == b'"' {
+            let end = j + 1;
+            let mut h = 0usize;
+            while h < hashes && end + h < b.len() && b[end + h] == b'#' {
+                h += 1;
+            }
+            if h == hashes {
+                return Some(end + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        scan(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_never_leak_tokens() {
+        let src = r##"
+            // f32 in a comment
+            /* f64 in a /* nested */ block */
+            let s = "f32 inside a string";
+            let r = r#"f64 raw "quoted" string"#;
+            let b = b"bytes f32";
+            let c = '\'';
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|t| t == "f32" || t == "f64"), "{ids:?}");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let s = scan(src);
+        assert!(s.tokens.iter().any(|t| t.kind == TokKind::Lifetime));
+        // the str idents after lifetimes still tokenize
+        assert_eq!(s.tokens.iter().filter(|t| t.text == "str").count(), 3);
+    }
+
+    #[test]
+    fn float_literals_are_classified() {
+        for (text, want) in [
+            ("1.5", true),
+            ("1.0e-3", true),
+            ("2f64", true),
+            ("1e3", true),
+            ("3f32", true),
+            ("42", false),
+            ("1u64", false),
+            ("7usize", false),
+            ("0x1E", false),
+            ("0b101", false),
+            ("1_000", false),
+        ] {
+            assert_eq!(is_float_literal(text), want, "{text}");
+        }
+    }
+
+    #[test]
+    fn range_and_tuple_dots_are_not_floats() {
+        let s = scan("let a = 0..10; let b = t.0; let c = 1.5;");
+        let nums: Vec<&str> = s
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "10", "0", "1.5"]);
+    }
+
+    #[test]
+    fn comment_spans_and_trailing_flags() {
+        let src = "let x = 1; // trailing\n/* block\nspans */\nlet y = 2;\n";
+        let s = scan(src);
+        assert_eq!(s.comments.len(), 2);
+        assert!(s.comments[0].trailing);
+        assert_eq!((s.comments[1].first_line, s.comments[1].last_line), (2, 3));
+        assert!(!s.comments[1].trailing);
+    }
+
+    #[test]
+    fn raw_identifiers_emit_the_inner_name() {
+        let ids = idents("let r#type = 1;");
+        assert!(ids.contains(&"type".to_string()));
+    }
+}

@@ -1,0 +1,293 @@
+//! `valori lint` — the determinism auditor.
+//!
+//! The paper's thesis is that determinism is enforced *at the memory
+//! boundary*, not by reviewer vigilance. This module makes the informal
+//! zone discipline a checked invariant: every file under `rust/src` is
+//! classified into a determinism zone by the checked-in [`zone_of`] map,
+//! and a closed, token-level rule set (R1–R6, see [`rules`]) rejects
+//! the constructs that historically break bit-reproducibility — floats
+//! in the state path, hash-randomized iteration, wall-clock and
+//! environment reads feeding state, stray `unsafe`, and platform-width
+//! encodes. DETERMINISM.md at the repo root documents the rules, the
+//! zones, and the annotation workflow.
+//!
+//! Zones:
+//!
+//! - **state** — code the state hash can observe. Everything here must
+//!   be integer-only and platform-independent.
+//! - **boundary** — the front end: admission control may read the
+//!   clock (deliberately unlogged), floats are fine (JSON carries
+//!   them), but hash-randomized collections are still banned.
+//! - **exempt** — experiments, benches, test support, the float
+//!   baseline: measured, never hashed.
+//!
+//! Legitimate float crossings in the state zone (quantize/dequantize,
+//! the boundary contract types) are annotated in place:
+//!
+//! ```text
+//! // lint: float-boundary — quantization entry point, floats stop here
+//! pub fn from_f32(v: &[f32], ...) -> Result<FixedVector, BoundaryError>
+//! ```
+//!
+//! A standalone marker covers the next item; a trailing marker covers
+//! its own line; a marker without a justification is itself a finding.
+//!
+//! Findings diff against the committed `lint_baseline.json` (see
+//! [`baseline`]): new findings fail, stale baseline entries fail. The
+//! repo's committed baseline is empty — keep it that way.
+
+#![forbid(unsafe_code)]
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use crate::json::Json;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Determinism zone of a source file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Zone {
+    State,
+    Boundary,
+    Exempt,
+}
+
+impl Zone {
+    pub fn name(self) -> &'static str {
+        match self {
+            Zone::State => "state",
+            Zone::Boundary => "boundary",
+            Zone::Exempt => "exempt",
+        }
+    }
+}
+
+/// Rule identifiers. The set is closed on purpose: a lint that grows
+/// rules silently is a lint nobody trusts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// No floats in the state zone outside annotated boundary items.
+    R1,
+    /// No hash-randomized collections (state + boundary).
+    R2,
+    /// No wall-clock reads in the state zone.
+    R3,
+    /// No randomness / environment reads in the state zone.
+    R4,
+    /// `unsafe` confined to the allowlist, each site `// SAFETY:`-ed.
+    R5,
+    /// No platform-width / native-endian encode–decode.
+    R6,
+}
+
+impl Rule {
+    pub fn code(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+            Rule::R6 => "R6",
+        }
+    }
+
+    pub fn from_code(code: &str) -> Option<Rule> {
+        Some(match code {
+            "R1" => Rule::R1,
+            "R2" => Rule::R2,
+            "R3" => Rule::R3,
+            "R4" => Rule::R4,
+            "R5" => Rule::R5,
+            "R6" => Rule::R6,
+            _ => return None,
+        })
+    }
+}
+
+/// One audit finding. `key` is the stable identity used by the
+/// baseline (`(rule, file, key)` — line numbers deliberately excluded
+/// so edits that shift code never churn the baseline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: Rule,
+    pub file: String,
+    pub line: u32,
+    pub zone: Zone,
+    pub key: String,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} [{}] {}",
+            self.file,
+            self.line,
+            self.rule.code(),
+            self.zone.name(),
+            self.message
+        )
+    }
+}
+
+/// Directories (first path segment under `rust/src`) in the state zone.
+pub const STATE_DIRS: &[&str] = &[
+    "state", "index", "fixed", "hash", "snapshot", "wal", "codec", "vector", "graph", "distance",
+];
+
+/// Directories in the boundary zone.
+pub const BOUNDARY_DIRS: &[&str] =
+    &["api", "node", "http", "replication", "cli", "json", "lint", "tokenizer"];
+
+/// Directories in the exempt zone (measured, never hashed).
+pub const EXEMPT_DIRS: &[&str] = &["experiments", "bench", "testing", "corpus", "runtime"];
+
+/// File-granular overrides, consulted before the directory map.
+pub const EXEMPT_FILES: &[&str] = &["distance/float.rs"];
+
+/// Top-level files in the boundary zone.
+pub const BOUNDARY_FILES: &[&str] = &["lib.rs", "main.rs"];
+
+/// Classify a path (relative to the audit root, `/`-separated) into its
+/// determinism zone. Unknown paths default to **state** — a new module
+/// gets the strictest rules until someone classifies it here, on
+/// purpose.
+pub fn zone_of(rel: &str) -> Zone {
+    if EXEMPT_FILES.contains(&rel) {
+        return Zone::Exempt;
+    }
+    if BOUNDARY_FILES.contains(&rel) {
+        return Zone::Boundary;
+    }
+    let first = rel.split('/').next().unwrap_or(rel);
+    if EXEMPT_DIRS.contains(&first) {
+        return Zone::Exempt;
+    }
+    if BOUNDARY_DIRS.contains(&first) {
+        return Zone::Boundary;
+    }
+    if STATE_DIRS.contains(&first) {
+        return Zone::State;
+    }
+    Zone::State
+}
+
+/// Audit one file's source text under an explicit zone (test hook; the
+/// walker uses [`audit_file`]).
+pub fn audit_source(rel: &str, zone: Zone, src: &str) -> Vec<Finding> {
+    let scan = lexer::scan(src);
+    let (ctx, mut findings) = rules::RuleContext::new(rel, zone, &scan);
+    ctx.check(&mut findings);
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Audit one file's source text, zone-classified by [`zone_of`].
+pub fn audit_file(rel: &str, src: &str) -> Vec<Finding> {
+    audit_source(rel, zone_of(rel), src)
+}
+
+/// Collect every `.rs` file under `root`, sorted by relative path so
+/// the finding order (and therefore the JSON output) is deterministic.
+pub fn source_files(root: &Path) -> std::io::Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push((rel, path));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Walk `root` and audit every source file.
+pub fn audit_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for (rel, path) in source_files(root)? {
+        let src = std::fs::read_to_string(&path)?;
+        findings.extend(audit_file(&rel, &src));
+    }
+    Ok(findings)
+}
+
+/// Machine-readable report: the findings plus the baseline diff.
+pub fn report_json(findings: &[Finding], diff: &baseline::Diff) -> Json {
+    let finding_json = |f: &Finding| {
+        Json::object(vec![
+            ("rule", Json::str(f.rule.code())),
+            ("file", Json::str(f.file.clone())),
+            ("line", Json::Int(f.line as i64)),
+            ("zone", Json::str(f.zone.name())),
+            ("key", Json::str(f.key.clone())),
+            ("message", Json::str(f.message.clone())),
+        ])
+    };
+    Json::object(vec![
+        ("version", Json::Int(1)),
+        ("findings", Json::Array(findings.iter().map(finding_json).collect())),
+        ("new", Json::Array(diff.new.iter().map(finding_json).collect())),
+        (
+            "stale",
+            Json::Array(
+                diff.stale
+                    .iter()
+                    .map(|e| {
+                        Json::object(vec![
+                            ("rule", Json::str(e.rule.code())),
+                            ("file", Json::str(e.file.clone())),
+                            ("key", Json::str(e.key.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("clean", Json::Bool(diff.is_clean())),
+    ])
+}
+
+/// Insert `// SAFETY: TODO` stubs above every `unsafe` in `src` that
+/// the auditor reports as missing its comment. Returns the rewritten
+/// source and how many stubs were inserted. The stubs still fail the
+/// lint (`todo-safety-comment`) — they make the finding actionable,
+/// they do not silence it.
+pub fn add_safety_stubs(rel: &str, src: &str) -> (String, usize) {
+    let missing: Vec<u32> = audit_file(rel, src)
+        .into_iter()
+        .filter(|f| f.rule == Rule::R5 && f.key == "missing-safety-comment")
+        .map(|f| f.line)
+        .collect();
+    if missing.is_empty() {
+        return (src.to_string(), 0);
+    }
+    let lines: Vec<&str> = src.split('\n').collect();
+    let mut out: Vec<String> = Vec::with_capacity(lines.len() + missing.len());
+    let mut inserted = 0usize;
+    for (idx, text) in lines.iter().enumerate() {
+        let lineno = (idx + 1) as u32;
+        if missing.contains(&lineno) {
+            let indent: String = text.chars().take_while(|c| c.is_whitespace()).collect();
+            out.push(format!("{indent}// SAFETY: TODO — document why this is sound"));
+            inserted += 1;
+        }
+        out.push((*text).to_string());
+    }
+    (out.join("\n"), inserted)
+}

@@ -1,0 +1,465 @@
+//! The closed determinism rule set (R1–R6) over the token stream.
+//!
+//! | rule | zone     | what it rejects                                       |
+//! |------|----------|-------------------------------------------------------|
+//! | R1   | state    | `f32`/`f64` type tokens and float literals, unless the
+//! |      |          | site is inside a `// lint: float-boundary — why` item |
+//! | R2   | state+boundary | `HashMap` / `HashSet` / `RandomState` (iteration
+//! |      |          | order is hash-seed randomized)                        |
+//! | R3   | state    | `Instant` / `SystemTime` (wall-clock reads)           |
+//! | R4   | state    | `rand::` / `getrandom` / OS rngs / `env::var*`        |
+//! | R5   | all      | `unsafe` outside the allowlisted files; inside them,  |
+//! |      |          | every `unsafe` needs a `// SAFETY:` comment (and      |
+//! |      |          | `SAFETY: TODO` stubs still fail)                      |
+//! | R6   | state    | platform-width or native-endian encode/decode:        |
+//! |      |          | `usize`/`isize` `to/from_*_bytes`, `to_ne_bytes`,     |
+//! |      |          | `put_usize`/`get_usize`                               |
+//!
+//! `#[cfg(test)]` items are exempt from R1–R4/R6 (tests may read clocks
+//! and print floats); R5 applies everywhere — unsafe in a test block of
+//! a non-allowlisted file is still a finding.
+//!
+//! Suppression is explicit and auditable: a standalone
+//! `// lint: float-boundary — <one-line justification>` comment covers
+//! the next item (to the end of its brace block, or its terminating
+//! `;`); a trailing one covers only its own line. A marker without a
+//! justification, or an unknown `// lint:` marker, is itself a finding.
+
+#![forbid(unsafe_code)]
+
+use super::lexer::{is_float_literal, Comment, Scan, Tok, TokKind};
+use super::{Finding, Rule, Zone};
+use std::collections::BTreeSet;
+
+/// Files allowed to contain `unsafe` (R5), relative to the audit root.
+pub const UNSAFE_ALLOWLIST: &[&str] = &["state/sharded.rs", "http/reactor.rs"];
+
+/// The annotation marker the float-boundary suppression looks for.
+pub const FLOAT_BOUNDARY_MARKER: &str = "float-boundary";
+
+/// An inclusive line range.
+#[derive(Debug, Clone, Copy)]
+struct Span {
+    first: u32,
+    last: u32,
+}
+
+impl Span {
+    fn contains(&self, line: u32) -> bool {
+        (self.first..=self.last).contains(&line)
+    }
+}
+
+/// A parsed `// lint:` comment.
+#[derive(Debug)]
+struct Annotation {
+    line: u32,
+    trailing: bool,
+    marker: String,
+    has_reason: bool,
+}
+
+fn parse_annotation(c: &Comment) -> Option<Annotation> {
+    let pos = c.text.find("lint:")?;
+    // only honor the marker in a comment, right after the comment
+    // leader — `"lint:"` inside prose does not count
+    let lead: String = c.text[..pos]
+        .chars()
+        .filter(|ch| !ch.is_whitespace())
+        .collect();
+    if !matches!(lead.as_str(), "//" | "///" | "//!" | "/*" | "/**" | "/*!") {
+        return None;
+    }
+    let rest = c.text[pos + "lint:".len()..].trim();
+    let (marker, tail) = match rest.split_once(char::is_whitespace) {
+        Some((m, t)) => (m, t),
+        None => (rest, ""),
+    };
+    let marker = marker.trim_end_matches(|ch| ch == ':' || ch == ',');
+    let reason = tail
+        .trim_start_matches(|ch: char| {
+            ch.is_whitespace() || matches!(ch, '-' | '—' | '–' | ':' | '.')
+        })
+        .trim_end_matches("*/")
+        .trim();
+    Some(Annotation {
+        line: c.first_line,
+        trailing: c.trailing,
+        marker: marker.to_string(),
+        has_reason: !reason.is_empty(),
+    })
+}
+
+/// Is the `cfg(...)` predicate (tokens between the outer parens)
+/// test-gated? `test` counts unless it sits under a `not(...)`.
+fn cfg_is_test_gated(toks: &[&Tok]) -> bool {
+    let mut stack: Vec<String> = Vec::new();
+    let mut prev_ident = String::new();
+    for t in toks {
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "(") => {
+                stack.push(std::mem::take(&mut prev_ident));
+            }
+            (TokKind::Punct, ")") => {
+                stack.pop();
+            }
+            (TokKind::Ident, name) => {
+                if name == "test" && !stack.iter().any(|s| s == "not") {
+                    return true;
+                }
+                prev_ident = name.to_string();
+            }
+            _ => prev_ident.clear(),
+        }
+    }
+    false
+}
+
+/// From token index `start`, find the line where the item ends: the
+/// matching `}` of the first brace block, or a `;` before any brace.
+fn item_end_line(tokens: &[Tok], start: usize) -> u32 {
+    let mut depth = 0i32;
+    for t in &tokens[start..] {
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "{") => depth += 1,
+            (TokKind::Punct, "}") => {
+                depth -= 1;
+                if depth <= 0 {
+                    return t.line;
+                }
+            }
+            (TokKind::Punct, ";") if depth == 0 => return t.line,
+            _ => {}
+        }
+    }
+    tokens.last().map(|t| t.line).unwrap_or(0)
+}
+
+/// Line ranges of `#[cfg(test)]`-gated items.
+fn test_spans(tokens: &[Tok]) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        let is_attr_start = tokens[i].text == "#"
+            && tokens[i].kind == TokKind::Punct
+            && tokens.get(i + 1).is_some_and(|t| t.text == "[");
+        if !is_attr_start {
+            i += 1;
+            continue;
+        }
+        let attr_line = tokens[i].line;
+        // collect the bracket group
+        let mut j = i + 1;
+        let mut bdepth = 0i32;
+        let mut group: Vec<&Tok> = Vec::new();
+        while j < tokens.len() {
+            match tokens[j].text.as_str() {
+                "[" => bdepth += 1,
+                "]" => {
+                    bdepth -= 1;
+                    if bdepth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            group.push(&tokens[j]);
+            j += 1;
+        }
+        // gated iff the group is `cfg( <test-gated predicate> )`
+        let gated = group.len() > 2
+            && group[1].kind == TokKind::Ident
+            && group[1].text == "cfg"
+            && cfg_is_test_gated(&group[2..]);
+        if gated {
+            let end = item_end_line(tokens, j + 1);
+            spans.push(Span { first: attr_line, last: end.max(attr_line) });
+        }
+        i = j + 1;
+    }
+    spans
+}
+
+/// Context shared by the per-token rule checks.
+pub struct RuleContext<'a> {
+    file: &'a str,
+    zone: Zone,
+    allowlisted_unsafe: bool,
+    scan: &'a Scan,
+    token_lines: BTreeSet<u32>,
+    test_spans: Vec<Span>,
+    float_ok_spans: Vec<Span>,
+    safety_lines: BTreeSet<u32>,
+    safety_todo_lines: BTreeSet<u32>,
+}
+
+impl<'a> RuleContext<'a> {
+    pub fn new(file: &'a str, zone: Zone, scan: &'a Scan) -> (Self, Vec<Finding>) {
+        let mut findings = Vec::new();
+        let token_lines = scan.token_lines();
+        let mut float_ok_spans = Vec::new();
+        for c in &scan.comments {
+            let Some(ann) = parse_annotation(c) else { continue };
+            if ann.marker != FLOAT_BOUNDARY_MARKER {
+                findings.push(Finding {
+                    rule: Rule::R1,
+                    file: file.to_string(),
+                    line: ann.line,
+                    zone,
+                    key: "bad-annotation".to_string(),
+                    message: format!("unknown lint marker `lint: {}`", ann.marker),
+                });
+                continue;
+            }
+            if !ann.has_reason {
+                findings.push(Finding {
+                    rule: Rule::R1,
+                    file: file.to_string(),
+                    line: ann.line,
+                    zone,
+                    key: "bad-annotation".to_string(),
+                    message: "float-boundary annotation without a justification".to_string(),
+                });
+                continue;
+            }
+            if ann.trailing {
+                float_ok_spans.push(Span { first: ann.line, last: ann.line });
+            } else {
+                // standalone: cover the next item
+                let start = scan.tokens.iter().position(|t| t.line > ann.line);
+                if let Some(s) = start {
+                    let first = scan.tokens[s].line;
+                    let last = item_end_line(&scan.tokens, s);
+                    float_ok_spans.push(Span { first, last: last.max(first) });
+                }
+            }
+        }
+        let mut safety_lines = BTreeSet::new();
+        let mut safety_todo_lines = BTreeSet::new();
+        for c in &scan.comments {
+            if let Some(pos) = c.text.find("SAFETY:") {
+                for l in c.first_line..=c.last_line {
+                    safety_lines.insert(l);
+                }
+                let after = c.text[pos + "SAFETY:".len()..].trim_start();
+                if after.starts_with("TODO") {
+                    for l in c.first_line..=c.last_line {
+                        safety_todo_lines.insert(l);
+                    }
+                }
+            }
+        }
+        let ctx = RuleContext {
+            file,
+            zone,
+            allowlisted_unsafe: UNSAFE_ALLOWLIST.contains(&file),
+            scan,
+            token_lines,
+            test_spans: test_spans(&scan.tokens),
+            float_ok_spans,
+            safety_lines,
+            safety_todo_lines,
+        };
+        (ctx, findings)
+    }
+
+    fn in_test(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|s| s.contains(line))
+    }
+
+    fn float_ok(&self, line: u32) -> bool {
+        self.float_ok_spans.iter().any(|s| s.contains(line))
+    }
+
+    /// Walk upward over comment/blank lines looking for `// SAFETY:`;
+    /// a trailing SAFETY comment on the `unsafe` line itself also counts.
+    fn safety_near(&self, line: u32) -> Option<bool> {
+        // Some(todo?) if a SAFETY comment covers this unsafe
+        if self.safety_lines.contains(&line) {
+            return Some(self.safety_todo_lines.contains(&line));
+        }
+        let mut j = line.saturating_sub(1);
+        while j >= 1 && !self.token_lines.contains(&j) {
+            if self.safety_lines.contains(&j) {
+                return Some(self.safety_todo_lines.contains(&j));
+            }
+            if j == 1 {
+                break;
+            }
+            j -= 1;
+        }
+        None
+    }
+
+    fn finding(&self, rule: Rule, line: u32, key: &str, message: String) -> Finding {
+        Finding {
+            rule,
+            file: self.file.to_string(),
+            line,
+            zone: self.zone,
+            key: key.to_string(),
+            message,
+        }
+    }
+
+    /// Run R1–R6 over the token stream, appending to `findings`.
+    pub fn check(&self, findings: &mut Vec<Finding>) {
+        let toks = &self.scan.tokens;
+        for (i, t) in toks.iter().enumerate() {
+            let in_test = self.in_test(t.line);
+            // R5 is file-scoped and applies to test code too.
+            if t.kind == TokKind::Ident && t.text == "unsafe" {
+                if !self.allowlisted_unsafe {
+                    findings.push(self.finding(
+                        Rule::R5,
+                        t.line,
+                        "unsafe-outside-allowlist",
+                        format!("`unsafe` in non-allowlisted file {}", self.file),
+                    ));
+                } else {
+                    match self.safety_near(t.line) {
+                        None => findings.push(self.finding(
+                            Rule::R5,
+                            t.line,
+                            "missing-safety-comment",
+                            "`unsafe` without a `// SAFETY:` comment".to_string(),
+                        )),
+                        Some(true) => findings.push(self.finding(
+                            Rule::R5,
+                            t.line,
+                            "todo-safety-comment",
+                            "`// SAFETY: TODO` stub must be filled in".to_string(),
+                        )),
+                        Some(false) => {}
+                    }
+                }
+            }
+            if in_test {
+                continue;
+            }
+            match t.kind {
+                TokKind::Ident => self.check_ident(i, t, findings),
+                TokKind::Num => {
+                    if self.zone == Zone::State
+                        && is_float_literal(&t.text)
+                        && !self.float_ok(t.line)
+                    {
+                        findings.push(self.finding(
+                            Rule::R1,
+                            t.line,
+                            "float-literal",
+                            format!("float literal `{}` in state zone", t.text),
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn check_ident(&self, i: usize, t: &Tok, findings: &mut Vec<Finding>) {
+        let toks = &self.scan.tokens;
+        let text = t.text.as_str();
+        // R1: float types
+        if self.zone == Zone::State && matches!(text, "f32" | "f64") && !self.float_ok(t.line) {
+            findings.push(self.finding(
+                Rule::R1,
+                t.line,
+                text,
+                format!("`{text}` in state zone without a float-boundary annotation"),
+            ));
+        }
+        // R2: hash-randomized collections
+        if self.zone != Zone::Exempt && matches!(text, "HashMap" | "HashSet" | "RandomState") {
+            findings.push(self.finding(
+                Rule::R2,
+                t.line,
+                text,
+                format!("`{text}` iteration order is hash-seed randomized"),
+            ));
+        }
+        // R3: wall-clock reads
+        if self.zone == Zone::State && matches!(text, "Instant" | "SystemTime") {
+            findings.push(self.finding(
+                Rule::R3,
+                t.line,
+                text,
+                format!("`{text}` wall-clock read in state zone"),
+            ));
+        }
+        // R4: randomness and environment-derived values
+        if self.zone == Zone::State {
+            if matches!(text, "getrandom" | "thread_rng" | "ThreadRng" | "OsRng" | "from_entropy") {
+                findings.push(self.finding(
+                    Rule::R4,
+                    t.line,
+                    text,
+                    format!("`{text}` nondeterministic randomness in state zone"),
+                ));
+            }
+            if text == "rand" && self.path_sep_follows(i) {
+                findings.push(self.finding(
+                    Rule::R4,
+                    t.line,
+                    "rand",
+                    "`rand::` in state zone".to_string(),
+                ));
+            }
+            if text == "env" && self.path_sep_follows(i) {
+                if let Some(next) = self.ident_after_path_sep(i) {
+                    if matches!(next, "var" | "var_os" | "vars" | "vars_os" | "args") {
+                        findings.push(self.finding(
+                            Rule::R4,
+                            t.line,
+                            "env",
+                            format!("`env::{next}` environment read in state zone"),
+                        ));
+                    }
+                }
+            }
+        }
+        // R6: platform-width / native-endian encode paths
+        if self.zone == Zone::State {
+            if matches!(text, "to_ne_bytes" | "from_ne_bytes") {
+                findings.push(self.finding(
+                    Rule::R6,
+                    t.line,
+                    text,
+                    format!("`{text}` native endianness in state zone"),
+                ));
+            }
+            if matches!(text, "to_le_bytes" | "to_be_bytes" | "from_le_bytes" | "from_be_bytes") {
+                let lookback = toks[i.saturating_sub(4)..i]
+                    .iter()
+                    .any(|p| p.kind == TokKind::Ident && (p.text == "usize" || p.text == "isize"));
+                if lookback {
+                    findings.push(self.finding(
+                        Rule::R6,
+                        t.line,
+                        text,
+                        format!("`usize::{text}` platform-width encode in state zone"),
+                    ));
+                }
+            }
+            if matches!(text, "put_usize" | "get_usize") {
+                findings.push(self.finding(
+                    Rule::R6,
+                    t.line,
+                    text,
+                    format!("`{text}` platform-width codec call"),
+                ));
+            }
+        }
+    }
+
+    fn path_sep_follows(&self, i: usize) -> bool {
+        let toks = &self.scan.tokens;
+        toks.get(i + 1).is_some_and(|a| a.text == ":")
+            && toks.get(i + 2).is_some_and(|b| b.text == ":")
+    }
+
+    fn ident_after_path_sep(&self, i: usize) -> Option<&str> {
+        let t = self.scan.tokens.get(i + 3)?;
+        (t.kind == TokKind::Ident).then_some(t.text.as_str())
+    }
+}

@@ -10,6 +10,8 @@
 //! approaches B × single-request rate; at low load, latency is bounded by
 //! the window.
 
+#![forbid(unsafe_code)]
+
 use crate::runtime::Embedder;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};

@@ -28,6 +28,8 @@
 //! bytes on the wire are identical to a pre-collections node and every
 //! existing /v1 client (the replication driver included) keeps working.
 
+#![forbid(unsafe_code)]
+
 use crate::api::{
     body_json, execute, hash_manifest, log_feed, ok_response, root_hex, ApiCode, ApiError,
     ApiRequest, ApiResult,

@@ -40,6 +40,8 @@
 //! (`requests_rate_limited`, `requests_quota_rejected`) surfaced by
 //! `/v1/stats` and `/v2/stats`.
 
+#![forbid(unsafe_code)]
+
 use crate::http::ServerMetrics;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};

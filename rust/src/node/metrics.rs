@@ -3,6 +3,8 @@
 //! Observability lives strictly *outside* the kernel (metrics are not part
 //! of the deterministic state and never enter the snapshot/hash).
 
+#![forbid(unsafe_code)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Exponential latency histogram: bucket i covers [2^i, 2^(i+1)) µs.

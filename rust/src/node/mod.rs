@@ -59,6 +59,8 @@
 //! | `POST /v1/apply` | `{"commands":["<hex>"...]}` | apply canonical commands (follower ingest) |
 //! | `GET /v1/health` | — | `{"ok":true,"backend":…,"collections":…}` |
 
+#![forbid(unsafe_code)]
+
 pub mod batcher;
 pub mod collections;
 pub mod governor;

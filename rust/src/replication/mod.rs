@@ -22,6 +22,8 @@
 //! a fresh follower (collection-by-collection, shard-by-shard,
 //! first-error-wins).
 
+#![forbid(unsafe_code)]
+
 use crate::http::client;
 use crate::node::{hex_decode, hex_encode};
 use crate::state::{CanonCommand, Command, Kernel, KernelConfig, StateError};

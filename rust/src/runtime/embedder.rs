@@ -4,6 +4,8 @@
 //! plus the exported weights, and serves `embed_batch` on fixed-shape
 //! batches. Weights are uploaded once as literals and reused across calls.
 
+#![forbid(unsafe_code)]
+
 use super::engine::{literal_f32, literal_i32, Engine, LoadedComputation};
 use super::manifest::Manifest;
 use super::xla_stub as xla;

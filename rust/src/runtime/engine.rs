@@ -9,6 +9,8 @@
 //! and feeds it through the batcher's channel (see [`crate::node`]), which
 //! is also the right serving shape — one compiled executable, one queue.
 
+#![forbid(unsafe_code)]
+
 use super::xla_stub as xla;
 use crate::Error;
 use std::path::Path;

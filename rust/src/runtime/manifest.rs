@@ -4,6 +4,8 @@
 //! constants; this module parses it with the in-crate JSON parser and loads
 //! the little-endian weight binaries.
 
+#![forbid(unsafe_code)]
+
 use crate::json::{parse, Json};
 use crate::Error;
 use std::fs;

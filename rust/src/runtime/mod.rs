@@ -10,6 +10,8 @@
 //! Everything here is *outside* the determinism boundary (float model
 //! compute); results cross the boundary in [`crate::state`].
 
+#![forbid(unsafe_code)]
+
 pub mod embedder;
 pub mod engine;
 pub mod manifest;

@@ -17,6 +17,8 @@
 //! `use super::xla_stub as xla;` lines in `engine.rs`/`embedder.rs` for the
 //! real crate. Nothing else in the tree touches PJRT types.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 use std::path::Path;
 

@@ -17,6 +17,8 @@
 //! The FNV hash is the cheap cross-node comparison value (H_A ≡ H_B); the
 //! SHA-256 is the audit-grade digest; the CRC detects storage corruption.
 
+#![forbid(unsafe_code)]
+
 use crate::codec::{DecodeError, Decoder, Encoder};
 use crate::hash::{crc32, fnv1a64, Sha256};
 use crate::state::{Kernel, ShardedKernel};

@@ -7,10 +7,13 @@
 //! purely integer even though quantization itself is already deterministic
 //! (single correctly-rounded multiply, DESIGN §6).
 
+#![forbid(unsafe_code)]
+
 use crate::codec::{DecodeError, Decoder, Encoder};
 
 /// External command — what clients (HTTP, FFI, examples) submit. `Insert`
 /// carries floats; everything else is already exact.
+// lint: float-boundary — client-facing command type; floats are quantized at apply
 #[derive(Debug, Clone, PartialEq)]
 pub enum Command {
     /// Insert a float vector under a fresh id (crosses the boundary).
@@ -30,6 +33,7 @@ pub enum Command {
     SetMeta { id: u64, key: String, value: String },
 }
 
+// lint: float-boundary — constructor takes the client's float payload
 impl Command {
     /// Convenience constructor used throughout examples and tests.
     pub fn insert(id: u64, vector: Vec<f32>) -> Self {

@@ -7,6 +7,8 @@
 //! files) and networking live in outer layers (paper §5.3's kernel/node
 //! split) — and it contains no randomness and no floating-point state.
 
+#![forbid(unsafe_code)]
+
 use crate::codec::{DecodeError, Decoder, Encoder};
 use crate::distance::{Metric, Scalar};
 use crate::fixed::{FixedFormat, Q16_16};
@@ -309,7 +311,7 @@ pub struct Hit {
     /// Exact wide fixed-point distance — the value replicas compare.
     pub dist_raw: i64,
     /// `dist_raw` as a real number (display only, never ordered on).
-    pub dist: f64,
+    pub dist: f64, // lint: float-boundary — display-only rendering of dist_raw
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -598,6 +600,7 @@ impl Kernel {
     /// k-NN over a float query: the query crosses the same boundary as
     /// inserts (same validation, same quantization, same normalization
     /// policy), then the search is integer-only.
+    // lint: float-boundary — query entry point, floats stop at from_f32
     pub fn search_f32(&self, query: &[f32], k: usize) -> Result<Vec<Hit>, StateError> {
         let fv = FixedVector::from_f32(query, self.config.dim, &self.config.policy)?;
         self.search_raw(fv.raw(), k)
@@ -695,6 +698,7 @@ impl Kernel {
     }
 
     /// Dequantized copy of a stored vector (observability only).
+    // lint: float-boundary — observability read-out, exact dequantization
     pub fn get_f32(&self, id: u64) -> Option<Vec<f32>> {
         self.get_raw(id).map(|raw| raw.iter().map(|&r| Q16_16::dequantize(r) as f32).collect())
     }

@@ -75,6 +75,12 @@
 //! the sharded deployment). [`crate::snapshot::ShardedSnapshot`] persists
 //! the same manifest with audit-grade SHA-256 digests per shard.
 
+// R5 allowlisted file (see DETERMINISM.md): raw-pointer shard handles for
+// the scan pool. Every unsafe site carries a SAFETY comment; `valori lint`
+// rejects any that does not.
+#![allow(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use crate::distance::Scalar;
 use crate::hash::Fnv1a64;
 use crate::index::{Hit as IndexHit, QuantSpec, Quantizer, TopK};
@@ -306,6 +312,9 @@ impl<T> Drop for DispatchBarrier<T> {
 /// unwind) until all jobs have resolved, so the pointee (borrowed from
 /// `&self`) strictly outlives the job, and search jobs only ever read.
 struct SharedShard(*const Kernel);
+// SAFETY: dispatch registers every job with a DispatchBarrier and waits on it
+// (normally or via Drop during unwind) before the `&self` borrow ends, so the
+// pointee outlives the job; jobs only read, so shared access is sound.
 unsafe impl Send for SharedShard {}
 
 /// Send-able `*mut Kernel` for pooled upsert jobs. Safe by protocol: the
@@ -315,6 +324,10 @@ unsafe impl Send for SharedShard {}
 /// resolved — the disjoint `&mut Kernel`s never alias and never outlive
 /// the borrow, on the unwind path included.
 struct ExclusiveShard(*mut Kernel);
+// SAFETY: the dispatching call holds `&mut self` (exclusive access to all
+// shards), hands each shard index to at most one worker (split-at-mut), and
+// barrier-waits until every job resolves — the disjoint `&mut Kernel`s never
+// alias and never outlive the borrow, unwind path included.
 unsafe impl Send for ExclusiveShard {}
 
 /// N independent kernels behind a deterministic router. See the module
@@ -443,6 +456,7 @@ impl ShardedKernel {
         self.owner(id).get_raw(id)
     }
 
+    // lint: float-boundary — observability read-out, exact dequantization
     pub fn get_f32(&self, id: u64) -> Option<Vec<f32>> {
         self.owner(id).get_f32(id)
     }
@@ -1011,6 +1025,7 @@ impl ShardedKernel {
 
     /// k-NN over a float query (same boundary as inserts, then integer
     /// search — see [`Kernel::search_f32`]).
+    // lint: float-boundary — query entry point, floats stop at from_f32
     pub fn search_f32(&self, query: &[f32], k: usize) -> Result<Vec<Hit>, StateError> {
         let config = self.shards[0].config();
         let fv = FixedVector::from_f32(query, config.dim, &config.policy)?;

@@ -11,6 +11,8 @@
 //!       |(a, b)| a + b == b + a);
 //! ```
 
+#![forbid(unsafe_code)]
+
 use crate::hash::XorShift64;
 use std::fmt::Debug;
 

@@ -9,6 +9,8 @@
 //! matching the paper's §2.2 claim that divergence enters at embedding
 //! generation.
 
+#![forbid(unsafe_code)]
+
 use crate::hash::fnv1a64;
 
 /// Token id 0 is reserved for padding (must match `model.PAD_ID`).

@@ -8,10 +8,13 @@
 //! [`ValidationPolicy`] and converted to [`FixedVector`]s. Everything past
 //! this point is integer math.
 
+#![forbid(unsafe_code)]
+
 use crate::fixed::{ops, FixedFormat, Q16_16};
 use std::fmt;
 
 /// Why a vector was rejected at the boundary.
+// lint: float-boundary — rejection reasons echo the offending float back to the client
 #[derive(Debug, Clone, PartialEq)]
 pub enum BoundaryError {
     /// NaN component at the given index.
@@ -51,6 +54,7 @@ impl std::error::Error for BoundaryError {}
 /// ≤ 2^36, and a dot product over dim ≤ 16384 is ≤ 2^50 ≪ i64::MAX. The
 /// same bound is what lets the Pallas int64 kernel match the Rust kernel
 /// bit-for-bit (experiment E9).
+// lint: float-boundary — admission policy is stated in client units (f32 magnitude)
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ValidationPolicy {
     /// Maximum absolute component value accepted.
@@ -59,12 +63,14 @@ pub struct ValidationPolicy {
     pub normalize: bool,
 }
 
+// lint: float-boundary — default admission bound in client units
 impl Default for ValidationPolicy {
     fn default() -> Self {
         Self { max_abs: 4.0, normalize: false }
     }
 }
 
+// lint: float-boundary — validation IS the boundary: floats are inspected here, then quantized
 impl ValidationPolicy {
     /// Policy for pipelines that already normalize embeddings (typical
     /// sentence-transformer deployments, paper §5.1 rationale).
@@ -138,6 +144,7 @@ pub struct FixedVector {
     raw: Vec<i32>,
 }
 
+// lint: float-boundary — from_f32/to_f32 are the quantization entry and observability exit
 impl FixedVector {
     /// Quantize a float vector through the boundary: validate, convert
     /// (round-ties-even, saturating), optionally fixed-point-normalize.

@@ -17,6 +17,8 @@
 //! standard WAL recovery. Corruption *before* the tail is an error: that is
 //! data loss, not a crash artifact, and must be surfaced.
 
+#![forbid(unsafe_code)]
+
 use crate::codec::{DecodeError, Decoder, Encoder};
 use crate::hash::crc32;
 use crate::state::CanonCommand;

@@ -22,6 +22,10 @@ use valori::index::{FlatIndex, Hit, Hnsw, HnswParams, VectorIndex};
 use valori::state::{Command, Kernel, KernelConfig, ShardedKernel};
 use valori::testing::{check, Gen};
 
+/// Under Miri the same properties run on reduced corpora/trial counts
+/// (the interpreter is ~1000x slower; the aliasing coverage is the same).
+const MIRI: bool = cfg!(miri);
+
 /// Pre-refactor flat search semantics, reimplemented independently of the
 /// index internals: score every live vector, sort by `(dist, id)`,
 /// truncate to k.
@@ -61,7 +65,8 @@ fn flat_arena_search_matches_reference_sort() {
             for id in [0u64, 5, 63, 64, 65, 127, 128, 149] {
                 assert!(idx.delete(id));
             }
-            for trial in 0..20 {
+            let trials = if MIRI { 3 } else { 20 };
+            for trial in 0..trials {
                 let q = random_raw(&mut rng, dim);
                 for k in [0usize, 1, 7, 64, 142, 150, 500] {
                     assert_eq!(
@@ -82,7 +87,7 @@ fn flat_arena_search_matches_reference_property() {
     // common and the (dist, id) tie-break is genuinely exercised.
     check(
         "arena flat search == collect+sort reference",
-        60,
+        if MIRI { 8 } else { 60 },
         Gen::pair(
             Gen::vec_len(Gen::vec_of(Gen::i32_range(-3, 3), 4), 1, 80),
             Gen::vec_of(Gen::i32_range(-3, 3), 4),
@@ -153,7 +158,8 @@ fn hnsw_arena_graph_is_bit_deterministic() {
     let build = || {
         let mut rng = XorShift64::new(9001);
         let mut h: Hnsw<i32> = Hnsw::new(8, Metric::L2, HnswParams::default());
-        for id in 0..300u64 {
+        let n = if MIRI { 60u64 } else { 300 };
+        for id in 0..n {
             h.insert(id, random_raw(&mut rng, 8));
         }
         h
@@ -187,16 +193,18 @@ fn pooled_fanout_equals_inline_fanout_across_shard_counts() {
         let mut sk = ShardedKernel::new(config, n_shards);
         let mut single = Kernel::new(KernelConfig::default_q16(6).with_flat_index());
         let mut rng = XorShift64::new(1234 + n_shards as u64);
-        for id in 0..500u64 {
+        let n = if MIRI { 120u64 } else { 500 };
+        for id in 0..n {
             let v: Vec<f32> = (0..6).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
             sk.apply(Command::insert(id, v.clone())).unwrap();
             single.apply(Command::insert(id, v)).unwrap();
         }
-        for id in (0..500u64).step_by(11) {
+        for id in (0..n).step_by(11) {
             sk.apply(Command::Delete { id }).unwrap();
             single.apply(Command::Delete { id }).unwrap();
         }
-        for trial in 0..15 {
+        let trials = if MIRI { 4 } else { 15 };
+        for trial in 0..trials {
             let q: Vec<f32> =
                 (0..6).map(|j| ((trial * 6 + j) as f32 * 0.11).sin() * 0.9).collect();
             let fv = valori::vector::FixedVector::from_f32(
@@ -221,7 +229,8 @@ fn pooled_fanout_is_stable_across_repeated_queries() {
     // (collection is in shard order, merge is a pure function).
     let mut sk = ShardedKernel::new(KernelConfig::default_q16(4).with_flat_index(), 4);
     let mut rng = XorShift64::new(5);
-    for id in 0..400u64 {
+    let n = if MIRI { 100u64 } else { 400 };
+    for id in 0..n {
         let v: Vec<f32> = (0..4).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
         sk.apply(Command::insert(id, v)).unwrap();
     }
@@ -232,7 +241,8 @@ fn pooled_fanout_is_stable_across_repeated_queries() {
     )
     .unwrap();
     let first = sk.search_raw_pooled(fv.raw(), 20).unwrap();
-    for _ in 0..50 {
+    let repeats = if MIRI { 10 } else { 50 };
+    for _ in 0..repeats {
         assert_eq!(sk.search_raw_pooled(fv.raw(), 20).unwrap(), first);
     }
 }

@@ -1,0 +1,396 @@
+//! Integration tests for the determinism auditor (`valori::lint`).
+//!
+//! Three layers:
+//!
+//! 1. inline good/bad source fixtures pinning every rule (R1–R6) and
+//!    the annotation / `#[cfg(test)]` semantics to exact findings,
+//! 2. the zone map against the *real* source tree (every file must be
+//!    classified by an explicit table entry, and a spot-check table
+//!    pins the zone of load-bearing files),
+//! 3. a self-audit: the repo at the committed `lint_baseline.json`
+//!    must be clean, both through the library API and through the
+//!    `valori lint` CLI (which must also exit nonzero on seeded
+//!    violations for each rule).
+
+use std::path::Path;
+use std::process::Command;
+
+use valori::lint::baseline::{diff, Baseline};
+use valori::lint::{
+    self, audit_source, zone_of, Finding, Rule, Zone, BOUNDARY_DIRS, BOUNDARY_FILES, EXEMPT_DIRS,
+    EXEMPT_FILES, STATE_DIRS,
+};
+
+fn keys(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.key.as_str()).collect()
+}
+
+fn rules(findings: &[Finding]) -> Vec<Rule> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// R1: floats in the state zone
+
+#[test]
+fn r1_flags_float_types_and_literals_in_state_zone() {
+    let src = "pub fn scale(x: f32) -> f64 {\n    x as f64 * 2.5\n}\n";
+    let f = audit_source("state/bad.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["f32", "f64", "f64", "float-literal"], "{f:?}");
+    assert!(f.iter().all(|x| x.rule == Rule::R1));
+    // the same source is fine outside the state zone
+    assert!(audit_source("http/ok.rs", Zone::Boundary, src).is_empty());
+    assert!(audit_source("bench/ok.rs", Zone::Exempt, src).is_empty());
+}
+
+#[test]
+fn r1_suffixed_integers_are_not_float_literals() {
+    // `0usize` / `7e` lookalikes: the `e` in a suffix is not an exponent
+    let src = "pub fn n() -> usize {\n    let k = 0usize;\n    k + 10_000usize\n}\n";
+    assert!(audit_source("state/ok.rs", Zone::State, src).is_empty());
+}
+
+#[test]
+fn r1_standalone_annotation_covers_the_next_item() {
+    let src = "// lint: float-boundary — quantization entry point, floats stop here\n\
+               pub fn from_f32(x: f32) -> i32 {\n    (x * 65536.0) as i32\n}\n\
+               pub fn leak(x: f32) -> f32 {\n    x\n}\n";
+    let f = audit_source("state/mixed.rs", Zone::State, src);
+    // only the *second* (unannotated) item is flagged
+    assert_eq!(keys(&f), ["f32", "f32"], "{f:?}");
+    assert!(f.iter().all(|x| x.line == 5));
+}
+
+#[test]
+fn r1_trailing_annotation_covers_its_own_line_only() {
+    let src = "pub struct Hit {\n    pub dist: f64, // lint: float-boundary — display only\n    pub raw: f64,\n}\n";
+    let f = audit_source("state/hit.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["f64"], "{f:?}");
+    assert_eq!(f[0].line, 3);
+}
+
+#[test]
+fn r1_annotation_without_justification_is_a_finding() {
+    let src = "// lint: float-boundary\npub fn f(x: f32) -> f32 {\n    x\n}\n";
+    let f = audit_source("state/bad_ann.rs", Zone::State, src);
+    // the bad annotation itself, plus the now-unsuppressed floats
+    assert_eq!(keys(&f), ["bad-annotation", "f32", "f32"], "{f:?}");
+}
+
+#[test]
+fn r1_unknown_marker_is_a_finding() {
+    let src = "// lint: allow-everything — nice try\npub fn f() {}\n";
+    let f = audit_source("state/unknown.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["bad-annotation"], "{f:?}");
+    assert!(f[0].message.contains("allow-everything"), "{}", f[0].message);
+}
+
+#[test]
+fn r1_prose_mention_of_the_marker_does_not_activate() {
+    // "lint:" not directly after a comment leader is prose, not an
+    // annotation — it must neither suppress nor be a bad-annotation
+    let src = "// The auditor accepts `// lint: float-boundary — why` markers.\n\
+               pub fn f(x: f32) -> f32 {\n    x\n}\n";
+    let f = audit_source("state/prose.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["f32", "f32"], "{f:?}");
+}
+
+#[test]
+fn cfg_test_blocks_are_exempt_from_r1_but_not_cfg_not_test() {
+    let gated = "#[cfg(test)]\nmod tests {\n    fn approx(x: f32) -> f32 {\n        x + 0.5\n    }\n}\n";
+    assert!(audit_source("state/t.rs", Zone::State, gated).is_empty());
+    let inverted = "#[cfg(not(test))]\nfn live(x: f32) -> f32 {\n    x\n}\n";
+    let f = audit_source("state/nt.rs", Zone::State, inverted);
+    assert_eq!(keys(&f), ["f32", "f32"], "cfg(not(test)) must stay audited: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// R2–R4, R6
+
+#[test]
+fn r2_flags_hash_collections_in_state_and_boundary_but_not_exempt() {
+    let src = "use std::collections::{HashMap, HashSet};\n";
+    let f = audit_source("state/m.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["HashMap", "HashSet"], "{f:?}");
+    assert_eq!(rules(&f), [Rule::R2, Rule::R2]);
+    assert_eq!(keys(&audit_source("http/m.rs", Zone::Boundary, src)), ["HashMap", "HashSet"]);
+    assert!(audit_source("experiments/m.rs", Zone::Exempt, src).is_empty());
+}
+
+#[test]
+fn r3_flags_wall_clock_in_state_zone_only() {
+    let src = "pub fn t() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    let f = audit_source("state/t.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["Instant", "Instant"], "{f:?}");
+    assert!(f.iter().all(|x| x.rule == Rule::R3));
+    // boundary admission control may read the clock (deliberately unlogged)
+    assert!(audit_source("http/t.rs", Zone::Boundary, src).is_empty());
+}
+
+#[test]
+fn r4_flags_randomness_and_env_reads_in_state_zone() {
+    let src = "pub fn bad() -> u64 {\n    let _ = std::env::var(\"SEED\");\n    rand::random()\n}\n";
+    let f = audit_source("state/r.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["env", "rand"], "{f:?}");
+    assert!(f.iter().all(|x| x.rule == Rule::R4));
+    // a field named `env` or `rand` without `::` is not a finding
+    let fields = "pub struct S {\n    env: u32,\n    rand: u32,\n}\n";
+    assert!(audit_source("state/s.rs", Zone::State, fields).is_empty());
+}
+
+#[test]
+fn r6_flags_platform_width_and_native_endian_encodes() {
+    let src = "pub fn enc(n: usize, x: u32) -> Vec<u8> {\n\
+               let mut v = usize::to_le_bytes(n).to_vec();\n\
+               v.extend(x.to_ne_bytes());\n    v\n}\n";
+    let f = audit_source("codec/e.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["to_le_bytes", "to_ne_bytes"], "{f:?}");
+    assert!(f.iter().all(|x| x.rule == Rule::R6));
+    // explicit-width little-endian is the sanctioned path
+    let ok = "pub fn enc(n: usize) -> [u8; 8] {\n    (n as u64).to_le_bytes()\n}\n";
+    assert!(audit_source("codec/ok.rs", Zone::State, ok).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R5: unsafe confinement
+
+#[test]
+fn r5_flags_unsafe_outside_the_allowlist_even_in_tests() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        let _ = unsafe { DANGER };\n    }\n}\n";
+    let f = audit_source("codec/u.rs", Zone::State, src);
+    assert_eq!(keys(&f), ["unsafe-outside-allowlist"], "{f:?}");
+    assert_eq!(rules(&f), [Rule::R5]);
+}
+
+#[test]
+fn r5_allowlisted_files_need_safety_comments() {
+    let bare = "fn f() {\n    let _ = unsafe { danger() };\n}\n";
+    let f = audit_source("state/sharded.rs", Zone::State, bare);
+    assert_eq!(keys(&f), ["missing-safety-comment"], "{f:?}");
+
+    let commented = "fn f() {\n    // SAFETY: danger() is pure for these inputs\n    let _ = unsafe { danger() };\n}\n";
+    assert!(audit_source("state/sharded.rs", Zone::State, commented).is_empty());
+
+    let trailing = "fn f() {\n    let _ = unsafe { danger() }; // SAFETY: pure\n}\n";
+    assert!(audit_source("http/reactor.rs", Zone::Boundary, trailing).is_empty());
+
+    let todo = "fn f() {\n    // SAFETY: TODO — document why this is sound\n    let _ = unsafe { danger() };\n}\n";
+    let f = audit_source("state/sharded.rs", Zone::State, todo);
+    assert_eq!(keys(&f), ["todo-safety-comment"], "TODO stubs must still fail: {f:?}");
+}
+
+#[test]
+fn safety_stub_insertion_roundtrip() {
+    let src = "fn f() {\n    let _ = unsafe { danger() };\n}\n";
+    let (stubbed, inserted) = lint::add_safety_stubs("state/sharded.rs", src);
+    assert_eq!(inserted, 1);
+    assert!(stubbed.contains("// SAFETY: TODO"), "{stubbed}");
+    // the stub keeps the finding alive (as todo), it does not silence it
+    let f = audit_source("state/sharded.rs", Zone::State, &stubbed);
+    assert_eq!(keys(&f), ["todo-safety-comment"], "{f:?}");
+    // idempotent: a second pass has nothing left to stub
+    let (again, n) = lint::add_safety_stubs("state/sharded.rs", &stubbed);
+    assert_eq!(n, 0);
+    assert_eq!(again, stubbed);
+    // non-allowlisted files never get stubs (the finding is "move the
+    // code", not "comment it")
+    let (_, n) = lint::add_safety_stubs("codec/u.rs", src);
+    assert_eq!(n, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Zone map
+
+#[test]
+fn zone_map_spot_checks() {
+    let table: &[(&str, Zone)] = &[
+        ("state/kernel.rs", Zone::State),
+        ("state/sharded.rs", Zone::State),
+        ("index/hnsw.rs", Zone::State),
+        ("fixed/format.rs", Zone::State),
+        ("hash/mod.rs", Zone::State),
+        ("codec/mod.rs", Zone::State),
+        ("wal/mod.rs", Zone::State),
+        ("distance/mod.rs", Zone::State),
+        ("distance/float.rs", Zone::Exempt), // file override beats its state dir
+        ("http/reactor.rs", Zone::Boundary),
+        ("api/mod.rs", Zone::Boundary),
+        ("lint/rules.rs", Zone::Boundary),
+        ("lib.rs", Zone::Boundary),
+        ("main.rs", Zone::Boundary),
+        ("experiments/table1.rs", Zone::Exempt),
+        ("bench/mod.rs", Zone::Exempt),
+        ("testing/mod.rs", Zone::Exempt),
+        // unknown modules default to the strictest zone
+        ("brand_new_subsystem/mod.rs", Zone::State),
+        ("loose_file.rs", Zone::State),
+    ];
+    for (rel, want) in table {
+        assert_eq!(zone_of(rel), *want, "zone_of({rel})");
+    }
+}
+
+#[test]
+fn every_real_source_file_is_explicitly_classified() {
+    // Unknown paths *default* to state, which is safe but unaudited
+    // intent. This test pins the stronger property: every file in the
+    // tree is covered by an explicit zone-map entry, so adding a module
+    // forces a conscious classification.
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let files = lint::source_files(&src).expect("walk rust/src");
+    assert!(files.len() > 50, "walker found only {} files", files.len());
+    for (rel, _) in &files {
+        let first = rel.split('/').next().unwrap();
+        let known = STATE_DIRS.contains(&first)
+            || BOUNDARY_DIRS.contains(&first)
+            || EXEMPT_DIRS.contains(&first)
+            || BOUNDARY_FILES.contains(&rel.as_str())
+            || EXEMPT_FILES.contains(&rel.as_str());
+        assert!(known, "{rel}: not covered by the zone map — classify it in lint::zone_of");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline
+
+#[test]
+fn baseline_add_remove_roundtrip() {
+    let src = "pub fn f(x: f32) -> f32 {\n    x\n}\n";
+    let findings = audit_source("state/f.rs", Zone::State, src);
+    assert_eq!(findings.len(), 2);
+
+    // grandfather everything: clean
+    let base = Baseline::from_findings(&findings);
+    assert!(diff(&findings, &base).is_clean());
+
+    // round-trip through the JSON file format
+    let reparsed = Baseline::from_json_text(&base.to_json().to_string()).unwrap();
+    assert!(diff(&findings, &reparsed).is_clean());
+
+    // fix one float: the remaining finding is covered, the freed
+    // baseline entry goes stale (and must be deleted)
+    let fixed = audit_source("state/f.rs", Zone::State, "pub fn f(x: i32) -> f32 {\n    x as f32\n}\n");
+    assert_eq!(fixed.len(), 2, "{fixed:?}"); // still two f32 tokens here
+    let partially_fixed = audit_source("state/f.rs", Zone::State, "pub fn f(x: i64) -> f32 {\n    0\n}\n");
+    assert_eq!(partially_fixed.len(), 1);
+    let d = diff(&partially_fixed, &base);
+    assert!(d.new.is_empty(), "{:?}", d.new);
+    assert_eq!(d.stale.len(), 1, "{:?}", d.stale);
+
+    // a new finding in another file is new even with a fat baseline
+    let elsewhere = audit_source("state/g.rs", Zone::State, "pub const E: f64 = 2.7;\n");
+    let d = diff(&elsewhere, &base);
+    assert_eq!(d.new.len(), elsewhere.len());
+}
+
+// ---------------------------------------------------------------------------
+// Self-audit: the repo is clean at the committed (empty) baseline
+
+#[test]
+fn repo_is_clean_at_committed_baseline() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint::audit_tree(&manifest.join("src")).expect("walk rust/src");
+    let text = std::fs::read_to_string(manifest.join("../lint_baseline.json"))
+        .expect("read committed lint_baseline.json");
+    let baseline = Baseline::from_json_text(&text).expect("parse committed baseline");
+    let d = diff(&findings, &baseline);
+    assert!(
+        d.is_clean(),
+        "repo is not lint-clean at the committed baseline\nnew findings:\n{}\nstale entries: {:?}",
+        d.new.iter().map(|f| format!("  {f}")).collect::<Vec<_>>().join("\n"),
+        d.stale,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI: exit codes through the real binary
+
+fn lint_cli(dir: &Path, extra: &[&str]) -> std::process::Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_valori"));
+    cmd.arg("lint").arg("--root").arg(dir);
+    cmd.args(extra);
+    cmd.output().expect("spawn valori lint")
+}
+
+#[test]
+fn cli_exits_zero_on_the_repo_at_the_committed_baseline() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let out = lint_cli(
+        &manifest.join("src"),
+        &["--baseline", manifest.join("../lint_baseline.json").to_str().unwrap()],
+    );
+    assert!(
+        out.status.success(),
+        "valori lint failed on the repo:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+#[test]
+fn cli_exits_nonzero_on_each_seeded_rule_violation() {
+    let fixtures: &[(&str, &str)] = &[
+        ("R1", "pub fn f(x: f32) -> f32 {\n    x * 0.5\n}\n"),
+        ("R2", "use std::collections::HashMap;\npub type M = HashMap<u64, u64>;\n"),
+        ("R3", "pub fn t() -> std::time::Instant {\n    std::time::Instant::now()\n}\n"),
+        ("R4", "pub fn s() -> String {\n    std::env::var(\"SEED\").unwrap()\n}\n"),
+        ("R5", "pub fn u() {\n    unsafe { core::hint::unreachable_unchecked() }\n}\n"),
+        ("R6", "pub fn e(n: usize) -> [u8; 8] {\n    usize::to_le_bytes(n)\n}\n"),
+    ];
+    let tmp = std::env::temp_dir().join(format!("valori_lint_seeded_{}", std::process::id()));
+    for (rule, src) in fixtures {
+        let root = tmp.join(rule);
+        std::fs::create_dir_all(root.join("state")).unwrap();
+        std::fs::write(root.join("state/seeded.rs"), src).unwrap();
+        // empty baseline: any finding must fail the run
+        let base = root.join("empty_baseline.json");
+        std::fs::write(&base, "{\"entries\": [], \"version\": 1}\n").unwrap();
+        let out = lint_cli(&root, &["--baseline", base.to_str().unwrap()]);
+        assert_eq!(
+            out.status.code(),
+            Some(1),
+            "{rule} fixture: want exit 1, got {:?}\n{}",
+            out.status.code(),
+            String::from_utf8_lossy(&out.stdout),
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains(rule), "{rule} fixture output missing rule code:\n{stdout}");
+
+        // the same tree is machine-readable with --format json
+        let out = lint_cli(&root, &["--baseline", base.to_str().unwrap(), "--format", "json"]);
+        assert_eq!(out.status.code(), Some(1));
+        let doc = valori::json::parse(&String::from_utf8_lossy(&out.stdout)).expect("json output");
+        assert_eq!(doc.get("clean"), &valori::json::Json::Bool(false));
+        let new = doc.get("new").as_array().expect("new array");
+        assert!(!new.is_empty());
+        assert_eq!(new[0].get("rule").as_str(), Some(*rule));
+
+        // grandfathering exactly those findings turns the run green …
+        let grandfathered: Vec<valori::json::Json> = new
+            .iter()
+            .map(|f| {
+                valori::json::Json::object(vec![
+                    ("rule", f.get("rule").clone()),
+                    ("file", f.get("file").clone()),
+                    ("key", f.get("key").clone()),
+                ])
+            })
+            .collect();
+        let fat = valori::json::Json::object(vec![
+            ("version", valori::json::Json::Int(1)),
+            ("entries", valori::json::Json::Array(grandfathered)),
+        ]);
+        let fat_path = root.join("fat_baseline.json");
+        std::fs::write(&fat_path, fat.to_string()).unwrap();
+        let out = lint_cli(&root, &["--baseline", fat_path.to_str().unwrap()]);
+        assert_eq!(out.status.code(), Some(0), "{rule}: grandfathered run should be clean");
+
+        // … and fixing the file then makes those entries stale (exit 1)
+        std::fs::write(root.join("state/seeded.rs"), "pub fn ok() {}\n").unwrap();
+        let out = lint_cli(&root, &["--baseline", fat_path.to_str().unwrap()]);
+        assert_eq!(out.status.code(), Some(1), "{rule}: stale baseline entries must fail");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains("stale"), "{rule}: expected stale-entry report:\n{stdout}");
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -19,6 +19,11 @@ use valori::state::{CanonCommand, Command, KernelConfig, ShardedKernel, SCAN_CHU
 
 const WORKER_COUNTS: [u32; 4] = [1, 2, 4, 8];
 
+/// Miri interprets every instruction (~1000x slower) but needs only the
+/// aliasing/atomics coverage, not thousands of rows — the same matrix
+/// runs at a fraction of the corpus size under `cargo miri test`.
+const MIRI: bool = cfg!(miri);
+
 /// Deterministic raw Q16.16 component, well inside the boundary
 /// contract (|raw| ≤ 2^17 < the 2^18 bound for max_abs = 4.0).
 fn raw_component(seed: u64, index: u64) -> i32 {
@@ -44,7 +49,9 @@ fn build(n: usize, dim: usize, shards: u32, quant: QuantSpec) -> ShardedKernel {
 /// worker count, and that retuning the pool never moves the root.
 fn assert_worker_invariance(sk: &mut ShardedKernel, dim: usize, label: &str) {
     let k = 10;
-    let queries: Vec<Vec<i32>> = (0..8u64).map(|q| raw_row(q ^ 0xC0FFEE, q, dim)).collect();
+    let n_queries = if MIRI { 2u64 } else { 8 };
+    let queries: Vec<Vec<i32>> =
+        (0..n_queries).map(|q| raw_row(q ^ 0xC0FFEE, q, dim)).collect();
     let expect: Vec<_> = queries
         .iter()
         .map(|q| sk.search_raw_inline(q, k).expect("sequential reference scan"))
@@ -68,13 +75,13 @@ fn assert_worker_invariance(sk: &mut ShardedKernel, dim: usize, label: &str) {
 fn worker_count_never_changes_bits_exact_and_sq8() {
     // Big enough that every shard spans multiple chunks at the reduced
     // chunk size, small enough to stay a fast tier-1 test.
-    let (n, dim) = (3000, 16);
+    let (n, dim) = if MIRI { (96, 8) } else { (3000, 16) };
     for &shards in &[1u32, 4] {
         for quant in [QuantSpec::None, QuantSpec::sq8_default()] {
             let mut sk = build(n, dim, shards, quant);
             // 256-slot chunks force real multi-task fan-out per shard on
             // both the phase-1 scan and the sq8 phase-2 re-rank.
-            sk.set_scan_chunk(256);
+            sk.set_scan_chunk(if MIRI { 16 } else { 256 });
             let label = format!("shards={shards} quant={quant:?}");
             assert_worker_invariance(&mut sk, dim, &label);
         }
@@ -91,11 +98,12 @@ fn tie_heavy_corpus_breaks_ties_by_id_under_any_worker_count() {
     for quant in [QuantSpec::None, QuantSpec::sq8_default()] {
         let config = KernelConfig::default_q16(dim).with_flat_index().with_quant(quant);
         let mut sk = ShardedKernel::new(config, 2);
+        let ids = if MIRI { 200u64 } else { 2000 };
         let items: Vec<(u64, Vec<i32>)> =
-            (0..2000u64).map(|i| (i, bases[(i % 8) as usize].clone())).collect();
+            (0..ids).map(|i| (i, bases[(i % 8) as usize].clone())).collect();
         sk.apply_canon(&CanonCommand::InsertBatch { items }).expect("corpus insert");
-        sk.set_scan_chunk(128);
-        let k = 64;
+        sk.set_scan_chunk(if MIRI { 32 } else { 128 });
+        let k = if MIRI { 16 } else { 64 };
         let expect = sk.search_raw_inline(&bases[0], k).expect("sequential reference scan");
         // ties resolved ascending-id within each distance class
         for pair in expect.windows(2) {
@@ -115,9 +123,9 @@ fn tie_heavy_corpus_breaks_ties_by_id_under_any_worker_count() {
 #[test]
 fn chunk_boundary_edges_are_bit_identical() {
     let dim = 8;
-    let chunk = 64usize;
+    let chunk = if MIRI { 16usize } else { 64 };
     // n < chunk, n == chunk ± 1, exact multiples, multiples ± 1.
-    for n in [17, chunk - 1, chunk, chunk + 1, 3 * chunk - 1, 3 * chunk, 3 * chunk + 1] {
+    for n in [7, chunk - 1, chunk, chunk + 1, 3 * chunk - 1, 3 * chunk, 3 * chunk + 1] {
         let mut sk = build(n, dim, 1, QuantSpec::None);
         sk.set_scan_chunk(chunk as u32);
         assert_worker_invariance(&mut sk, dim, &format!("edge n={n} chunk={chunk}"));
@@ -127,19 +135,21 @@ fn chunk_boundary_edges_are_bit_identical() {
 #[test]
 fn deleted_slot_holes_spanning_chunk_edges_are_bit_identical() {
     let dim = 8;
-    let chunk = 64u32;
+    let chunk = if MIRI { 16u32 } else { 64 };
+    let n = if MIRI { 80u64 } else { 300 };
     for quant in [QuantSpec::None, QuantSpec::sq8_default()] {
         let config = KernelConfig::default_q16(dim).with_flat_index().with_quant(quant);
         let mut sk = ShardedKernel::new(config, 1);
-        for i in 0..300u64 {
+        for i in 0..n {
             sk.apply_canon(&CanonCommand::Insert { id: i, raw: raw_row(3, i, dim) })
                 .expect("insert");
         }
-        // Tombstone a run straddling the first chunk edge (slots 62..=66
-        // in insertion order), one exactly at an edge (128), and the
-        // last slot — a claimed range must skip holes identically to the
-        // sequential scan.
-        for id in [62u64, 63, 64, 65, 66, 128, 299] {
+        // Tombstone a run straddling the first chunk edge (slots
+        // chunk-2..=chunk+2 in insertion order), one exactly at the
+        // second edge, and the last slot — a claimed range must skip
+        // holes identically to the sequential scan.
+        let edge = chunk as u64;
+        for id in [edge - 2, edge - 1, edge, edge + 1, edge + 2, 2 * edge, n - 1] {
             sk.apply(Command::Delete { id }).expect("delete");
         }
         sk.set_scan_chunk(chunk);
