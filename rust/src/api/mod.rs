@@ -41,13 +41,17 @@
 //! | 1600 | `rate_limited` | 429 |
 //! | 1601 | `quota_exceeded` | 429 |
 //! | 1602 | `memory_quota_exceeded` | 429 |
+//! | 1700 | `proof_invalid` | 400 |
+//! | 1701 | `proof_out_of_range` | 400 |
+//! | 1702 | `repair_mismatch` | 409 |
 //!
 //! Codes are a compatibility contract: they may be *added*, never
 //! renumbered or reused (`tests/fixtures/api_error_codes.json` is the
 //! golden copy `tests/collections.rs` asserts against). Numbering is
 //! grouped: 10xx state-machine rejections, 11xx collection lifecycle,
 //! 12xx embedder, 13xx routing, 14xx snapshot streaming, 15xx internal,
-//! 16xx admission control (per-collection governance).
+//! 16xx admission control (per-collection governance), 17xx verifiable
+//! state receipts (Merkle proofs and divergence repair).
 //!
 //! The 1600/1601 codes are issued by the front end *before* a request
 //! reaches the dispatch pool: admission decisions come from
@@ -164,12 +168,22 @@ pub enum ApiCode {
     /// (a pure function of replicated state + spec) — delete vectors or
     /// raise the quota, then retry.
     MemoryQuotaExceeded = 1602,
+    /// Malformed proof/repair payload: bad leaf-encoding hex, a leaf
+    /// that fails canonical decode, or missing proof fields.
+    ProofInvalid = 1700,
+    /// Proof/repair request addresses a shard, level, slot, or hash
+    /// range beyond the collection's Merkle tree.
+    ProofOutOfRange = 1701,
+    /// Repair payload disagrees with the addressed slot (wrong external
+    /// id, or vector dimensionality) — repairing it would corrupt, not
+    /// converge.
+    RepairMismatch = 1702,
 }
 
 impl ApiCode {
     /// Every variant, in code order (the golden-fixture test iterates
     /// this, so adding a variant without extending the fixture fails CI).
-    pub const ALL: [ApiCode; 24] = [
+    pub const ALL: [ApiCode; 27] = [
         ApiCode::BadRequest,
         ApiCode::DuplicateId,
         ApiCode::UnknownId,
@@ -194,6 +208,9 @@ impl ApiCode {
         ApiCode::RateLimited,
         ApiCode::QuotaExceeded,
         ApiCode::MemoryQuotaExceeded,
+        ApiCode::ProofInvalid,
+        ApiCode::ProofOutOfRange,
+        ApiCode::RepairMismatch,
     ];
 
     /// The stable numeric code (the discriminant).
@@ -228,6 +245,9 @@ impl ApiCode {
             ApiCode::RateLimited => "rate_limited",
             ApiCode::QuotaExceeded => "quota_exceeded",
             ApiCode::MemoryQuotaExceeded => "memory_quota_exceeded",
+            ApiCode::ProofInvalid => "proof_invalid",
+            ApiCode::ProofOutOfRange => "proof_out_of_range",
+            ApiCode::RepairMismatch => "repair_mismatch",
         }
     }
 
@@ -243,12 +263,15 @@ impl ApiCode {
             | ApiCode::InvalidCollectionName
             | ApiCode::ReservedCollection
             | ApiCode::StreamCorrupt
-            | ApiCode::StreamDigestMismatch => 400,
+            | ApiCode::StreamDigestMismatch
+            | ApiCode::ProofInvalid
+            | ApiCode::ProofOutOfRange => 400,
             ApiCode::UnknownId | ApiCode::UnknownCollection | ApiCode::RouteNotFound => 404,
             ApiCode::MethodNotAllowed => 405,
-            ApiCode::DuplicateId | ApiCode::CollectionExists | ApiCode::StreamOffsetMismatch => {
-                409
-            }
+            ApiCode::DuplicateId
+            | ApiCode::CollectionExists
+            | ApiCode::StreamOffsetMismatch
+            | ApiCode::RepairMismatch => 409,
             ApiCode::EmbedFailed | ApiCode::Internal => 500,
             ApiCode::NoEmbedder | ApiCode::RestoreBusy => 503,
             ApiCode::RateLimited | ApiCode::QuotaExceeded | ApiCode::MemoryQuotaExceeded => 429,
@@ -687,22 +710,28 @@ pub fn log_feed(state: &NodeState, shard: u32, from: usize) -> ApiResult<Json> {
 }
 
 /// Per-shard hash manifest of one collection (audit-grade: FNV for the
-/// cheap compare, SHA-256 per shard for the paper's §8.1 verification).
+/// cheap compare, SHA-256 per shard for the paper's §8.1 verification,
+/// and — since PR-10 — the incrementally-maintained Merkle roots that
+/// anchor record-level membership proofs, see [`crate::proof`]).
 pub fn hash_manifest(state: &NodeState) -> Json {
     state.with_sharded(|sk| {
         let snap = crate::snapshot::ShardedSnapshot::capture(sk);
+        let merkle_roots = sk.merkle_shard_roots();
         let shards: Vec<Json> = snap
             .manifest()
             .iter()
-            .map(|m| {
+            .zip(&merkle_roots)
+            .map(|(m, root)| {
                 Json::object(vec![
                     ("fnv", Json::str(format!("{:016x}", m.fnv))),
+                    ("merkle", Json::str(crate::hash::hex_lower(root))),
                     ("sha256", Json::str(crate::hash::sha256_hex(&m.sha256))),
                     ("shard", Json::Int(m.shard as i64)),
                 ])
             })
             .collect();
         Json::object(vec![
+            ("merkle_root", Json::str(crate::hash::hex_lower(&sk.merkle_root()))),
             ("root", Json::str(format!("{:016x}", snap.root_hash()))),
             ("seq", Json::Int(sk.seq() as i64)),
             ("shards", Json::Array(shards)),
@@ -738,6 +767,10 @@ mod tests {
         assert_eq!(ApiCode::RateLimited.code(), 1600);
         assert_eq!(ApiCode::QuotaExceeded.code(), 1601);
         assert_eq!(ApiCode::MemoryQuotaExceeded.code(), 1602);
+        assert_eq!(ApiCode::ProofInvalid.code(), 1700);
+        assert_eq!(ApiCode::ProofOutOfRange.code(), 1701);
+        assert_eq!(ApiCode::RepairMismatch.code(), 1702);
+        assert_eq!(ApiCode::RepairMismatch.http_status(), 409);
     }
 
     #[test]
@@ -891,5 +924,11 @@ mod tests {
         let shards = m.get("shards").as_array().unwrap();
         assert_eq!(shards.len(), 1);
         assert_eq!(shards[0].get("sha256").as_str().unwrap().len(), 64);
+        // PR-10: the manifest carries the Merkle receipt roots too
+        assert_eq!(shards[0].get("merkle").as_str().unwrap().len(), 64);
+        let combined = m.get("merkle_root").as_str().unwrap();
+        assert_eq!(combined.len(), 64);
+        let expected = state.with_sharded(|sk| crate::hash::hex_lower(&sk.merkle_root()));
+        assert_eq!(combined, expected);
     }
 }

@@ -19,7 +19,7 @@ use crate::distance::{Metric, Scalar};
 use crate::hash::splitmix64;
 use crate::index::{FlatIndex, Hnsw, HnswParams, QuantSpec, VectorIndex, SQ8_DEFAULT_OVERSCAN};
 use crate::json::Json;
-use crate::state::{CanonCommand, KernelConfig, ShardedKernel};
+use crate::state::{CanonCommand, Kernel, KernelConfig, ShardedKernel};
 
 /// Suite parameters (all CLI-overridable).
 #[derive(Debug, Clone, Copy)]
@@ -508,6 +508,42 @@ pub fn run(cfg: &SuiteConfig, label: &str) -> SuiteResult {
         report.add("snapshot_stream", stats);
     }
 
+    // --- Merkle maintenance + membership proofs (crate::proof) ----------
+    // merkle_update: one iteration = one record-level tree refresh —
+    // re-encode the slot's canonical leaf and recompute its O(log n) root
+    // path, the exact incremental work every applied command adds.
+    // Driving it through `repair_slot` with the record's own bytes makes
+    // the workload a state no-op, so the timing is steady-state (the
+    // corpus never grows) and the root is asserted unchanged after.
+    {
+        use crate::proof::leaf;
+        let mut kernel = Kernel::new(KernelConfig::default_q16(cfg.dim).with_flat_index());
+        for i in 0..cfg.n as u64 {
+            kernel
+                .apply_canon(&CanonCommand::Insert { id: i, raw: raw_row(cfg.seed, i, cfg.dim) })
+                .expect("bench corpus insert");
+        }
+        let rec = leaf::decode(&kernel.merkle_leaf_encoding(0).expect("bench slot 0 leaf"))
+            .expect("bench leaf decode");
+        let root = kernel.merkle_root();
+        let stats = bench(&cfg.bench, || {
+            kernel.repair_slot(0, &rec).expect("bench merkle refresh")
+        });
+        assert_eq!(kernel.merkle_root(), root, "no-op merkle refresh changed the root");
+        rows.push(SuiteRow { name: "merkle_update".into(), n: cfg.n, stats });
+        report.add("merkle_update", stats);
+
+        // proof_generate: canonical leaf encode + sibling-path walk for a
+        // rotating id — the `GET .../proof?id=N` hot path.
+        let mut qi = 0u64;
+        let stats = bench(&cfg.bench, || {
+            qi = (qi + 1) % cfg.n as u64;
+            kernel.merkle_proof(qi).expect("bench membership proof")
+        });
+        rows.push(SuiteRow { name: "proof_generate".into(), n: cfg.n, stats });
+        report.add("proof_generate", stats);
+    }
+
     report.print();
     let result = SuiteResult {
         config_label: label.to_string(),
@@ -617,6 +653,8 @@ mod tests {
             "http_roundtrip",
             "multi_collection_route",
             "snapshot_stream",
+            "merkle_update",
+            "proof_generate",
         ] {
             assert!(r.row(name).is_some(), "missing row {name}");
             assert!(r.row(name).unwrap().stats.iters >= 3);
@@ -627,7 +665,7 @@ mod tests {
         let json = suite_json(&r).to_string();
         let parsed = crate::json::parse(&json).expect("bench json parses");
         assert_eq!(parsed.get("suite").as_str(), Some("valori-search"));
-        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(11));
+        assert_eq!(parsed.get("rows").as_array().map(|a| a.len()), Some(13));
         assert!(parsed.get("sq8_speedup_p50_vs_flat").as_f64().is_some());
         assert!(parsed.get("parallel_scan_speedup_p50_vs_1worker").as_f64().is_some());
     }

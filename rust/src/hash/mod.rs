@@ -86,6 +86,44 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h.finish()
 }
 
+/// Lowercase hex encoding of arbitrary bytes. The canonical byte-string
+/// wire format for receipts and membership proofs ([`crate::proof`]).
+pub fn hex_lower(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        out.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    out
+}
+
+/// Parse a hex string (either case) into bytes. `None` on odd length or
+/// non-hex characters.
+pub fn hex_to_bytes(s: &str) -> Option<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16)?;
+        let lo = (pair[1] as char).to_digit(16)?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Some(out)
+}
+
+/// Parse a 64-character hex string into a 32-byte digest.
+pub fn hex_to_digest(s: &str) -> Option<[u8; 32]> {
+    if s.len() != 64 {
+        return None;
+    }
+    let v = hex_to_bytes(s)?;
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&v);
+    Some(out)
+}
+
 /// splitmix64 — the finalizer used for data-dependent HNSW level assignment.
 /// Excellent avalanche behaviour; integer-only.
 #[inline]
@@ -169,6 +207,17 @@ mod tests {
         let mut b = Fnv1a64::new();
         b.update(&[0x04, 0x03, 0x02, 0x01]);
         assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        assert_eq!(hex_lower(&[0x00, 0xab, 0xff]), "00abff");
+        assert_eq!(hex_to_bytes("00abFF"), Some(vec![0x00, 0xab, 0xff]));
+        assert_eq!(hex_to_bytes("0"), None);
+        assert_eq!(hex_to_bytes("zz"), None);
+        let d = [7u8; 32];
+        assert_eq!(hex_to_digest(&hex_lower(&d)), Some(d));
+        assert_eq!(hex_to_digest("ab"), None);
     }
 
     #[test]

@@ -217,6 +217,26 @@ impl<S: Scalar> FlatIndex<S> {
         }
     }
 
+    /// Divergence repair (see [`crate::proof`]): overwrite one slot's
+    /// exact row and/or liveness in place, keeping the derived i8 code
+    /// arena slot-parallel. Slot numbering, the id map and the logical
+    /// clock are untouched — this is state surgery, not a command.
+    pub(crate) fn repair_slot(&mut self, slot: u32, vector: Option<&[S]>, alive: bool) {
+        self.store.overwrite_slot(slot, vector, alive);
+        let dim = self.store.dim();
+        if let Some(v) = vector {
+            // Re-derive this row's codes only when the arena is complete
+            // (an incomplete arena means `S` never opted into SQ8).
+            if dim > 0 && self.codes.len() == self.store.slots() * dim {
+                let mut row = Vec::with_capacity(dim);
+                if push_row_codes(&mut row, v) {
+                    let start = slot as usize * dim;
+                    self.codes[start..start + dim].copy_from_slice(&row);
+                }
+            }
+        }
+    }
+
     /// SQ8 phase 2: push each candidate's *exact* Q16.16 distance into
     /// `out` under the `(dist, id)` total order. Each candidate's key is
     /// a pure function of the stored vector, so a static partition of the
@@ -510,6 +530,18 @@ mod tests {
         // search silently stays on the exact path
         let hits = idx.search(&[10.0, -10.0], 1);
         assert_eq!(hits[0].id, 10);
+    }
+
+    #[test]
+    fn repair_slot_rederives_codes() {
+        let (exact, mut q8) = sq8_pair(Metric::L2, 1000, 20);
+        // corrupt slot 5's row, then repair it back to the true vector:
+        // both the exact arena and the derived codes must follow
+        q8.repair_slot(5, Some(&corpus_vec(999, 16)), true);
+        q8.repair_slot(5, Some(&corpus_vec(5, 16)), true);
+        let query = corpus_vec(3, 16);
+        assert_eq!(q8.search_sq8_two_phase(&query, 6).unwrap(), exact.search(&query, 6));
+        assert_eq!(q8.store(), exact.store());
     }
 
     #[test]

@@ -113,6 +113,15 @@ impl<S: Scalar> Hnsw<S> {
         self.entry
     }
 
+    /// Divergence repair (see [`crate::proof`]): overwrite one slot's
+    /// arena row and/or liveness in place. The graph is untouched —
+    /// tombstones are already valid routing waypoints, and a repaired
+    /// vector restores exactly the value the adjacency was built against
+    /// (repair ships the *correct* record, never a new one).
+    pub(crate) fn repair_slot(&mut self, slot: u32, vector: Option<&[S]>, alive: bool) {
+        self.store.overwrite_slot(slot, vector, alive);
+    }
+
     /// Deterministic data-dependent level (paper §7.2): geometric with
     /// ratio 1/M via trailing zeros of a splitmix64 of the external id.
     pub fn assign_level(&self, id: u64) -> usize {

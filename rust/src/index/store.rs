@@ -91,6 +91,12 @@ impl<S: Scalar> VecStore<S> {
         self.id_to_slot.get(&id).copied().filter(|&s| self.alive[s as usize])
     }
 
+    /// Slot of an external id, live or tombstoned. Membership proofs cover
+    /// deleted records too (the tombstone leaf, see [`crate::proof`]).
+    pub fn any_slot_of(&self, id: u64) -> Option<u32> {
+        self.id_to_slot.get(&id).copied()
+    }
+
     pub fn external_id(&self, slot: u32) -> u64 {
         self.external_ids[slot as usize]
     }
@@ -132,6 +138,28 @@ impl<S: Scalar> VecStore<S> {
         self.alive[slot as usize] = false;
         self.live_count -= 1;
         Some(slot)
+    }
+
+    /// In-place divergence repair (see [`crate::proof`]): overwrite one
+    /// slot's vector and/or liveness without touching slot numbering or
+    /// the id map. `vector = None` keeps the arena row's current bytes
+    /// (tombstone repair — the leaf encoding carries no vector).
+    pub fn overwrite_slot(&mut self, slot: u32, vector: Option<&[S]>, alive: bool) {
+        let s = slot as usize;
+        assert!(s < self.external_ids.len(), "slot out of range");
+        if let Some(v) = vector {
+            assert_eq!(v.len(), self.dim, "dimension mismatch");
+            let start = s * self.dim;
+            self.data[start..start + self.dim].copy_from_slice(v);
+        }
+        if self.alive[s] != alive {
+            if alive {
+                self.live_count += 1;
+            } else {
+                self.live_count -= 1;
+            }
+            self.alive[s] = alive;
+        }
     }
 
     /// Iterate live (slot, external id, vector) in slot (= insertion) order.
@@ -251,6 +279,27 @@ mod tests {
         s.delete(20);
         let ids: Vec<u64> = s.iter_live().map(|(_, id, _)| id).collect();
         assert_eq!(ids, vec![10, 5]);
+    }
+
+    #[test]
+    fn overwrite_slot_repairs_in_place() {
+        let mut s = sample();
+        s.overwrite_slot(1, Some(&[9, 9]), true);
+        assert_eq!(s.get(20), Some(&[9, 9][..]));
+        assert_eq!(s.live_len(), 3);
+        // tombstone repair keeps the arena bytes but kills the slot
+        s.overwrite_slot(1, None, false);
+        assert_eq!(s.get(20), None);
+        assert_eq!(s.any_slot_of(20), Some(1));
+        assert_eq!(s.vec_at(1), &[9, 9]);
+        assert_eq!(s.live_len(), 2);
+        // resurrect (repairing a wrongly-deleted record)
+        s.overwrite_slot(1, Some(&[3, 4]), true);
+        assert_eq!(s.get(20), Some(&[3, 4][..]));
+        assert_eq!(s.live_len(), 3);
+        // idempotent liveness
+        s.overwrite_slot(1, None, true);
+        assert_eq!(s.live_len(), 3);
     }
 
     #[test]

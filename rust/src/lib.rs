@@ -7,7 +7,8 @@
 //!
 //! - **Inside the boundary (integer-only, bit-deterministic):**
 //!   [`fixed`], [`vector`], [`distance`], [`index`], [`state`], [`wal`],
-//!   [`snapshot`], [`graph`], [`codec`], [`hash`].
+//!   [`snapshot`], [`graph`], [`codec`], [`hash`], [`proof`] (Merkle
+//!   receipts over the canonical state).
 //! - **Outside the boundary (float, may diverge across platforms):**
 //!   [`runtime`] (the AOT-compiled embedding model executed via PJRT) and
 //!   the `f32` baseline instantiations used for the paper's comparisons.
@@ -54,6 +55,7 @@ pub mod index;
 pub mod json;
 pub mod lint;
 pub mod node;
+pub mod proof;
 pub mod replication;
 pub mod runtime;
 pub mod snapshot;

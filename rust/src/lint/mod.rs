@@ -137,6 +137,7 @@ impl fmt::Display for Finding {
 /// Directories (first path segment under `rust/src`) in the state zone.
 pub const STATE_DIRS: &[&str] = &[
     "state", "index", "fixed", "hash", "snapshot", "wal", "codec", "vector", "graph", "distance",
+    "proof",
 ];
 
 /// Directories in the boundary zone.

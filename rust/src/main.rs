@@ -38,6 +38,14 @@
 //! valori restore    --snapshot <file>           # verify + print hashes
 //!                                               # (plain or sharded file)
 //! valori replay     --log <file> [--dim N]      # audit replay from hex log
+//! valori verify     --a <snap> --b <snap>       # compare two snapshots
+//! valori verify     --receipt <file> [--proof <file>]
+//!                   # offline receipt + membership-proof verification:
+//!                   # files hold the `GET .../proof` wire JSON (enveloped
+//!                   # or bare); exit 0 = verified, 1 = rejected
+//! valori verify     --addr A:P [--collection NAME] [--id N]
+//!                   # fetch a live receipt (and --id's membership proof)
+//!                   # and run the same offline verification against it
 //! valori lint       [--format json] [--baseline FILE] [--root DIR]
 //!                   [--fix-safety-stubs]
 //!                   # determinism auditor: zone-classified R1-R6 scan of
@@ -108,8 +116,8 @@ fn parse_shards(args: &Args) -> Result<u32, String> {
 
 fn print_usage() {
     eprintln!(
-        "usage: valori <serve|soak|bench|experiment|snapshot|restore|replay|lint|quickstart> \
-         [options]\n\
+        "usage: valori <serve|soak|bench|experiment|snapshot|restore|replay|verify|lint|\
+         quickstart> [options]\n\
          see `rust/src/main.rs` header or README.md for details"
     );
 }
@@ -1061,11 +1069,24 @@ fn cmd_replay(args: &Args) -> i32 {
     0
 }
 
-/// `valori verify --a <snap> --b <snap>` — compare two snapshots (the §9
-/// "do two nodes hold the same truth?" check, offline).
+/// `valori verify` — three offline-verifiable "same truth?" checks (§9):
+/// `--a/--b` compares two snapshot files; `--receipt [--proof]` verifies
+/// a state receipt (and a membership proof against it) from captured
+/// `GET .../proof` wire JSON, with no server and no state; `--addr`
+/// fetches a live receipt first and then runs the identical offline
+/// verification. Exit 0 = verified, 1 = rejected.
 fn cmd_verify(args: &Args) -> i32 {
+    if args.opt("receipt").is_some() {
+        return cmd_verify_receipt(args);
+    }
+    if args.opt("addr").is_some() {
+        return cmd_verify_live(args);
+    }
     let (Some(a), Some(b)) = (args.opt("a"), args.opt("b")) else {
-        return fail("need --a <snapshot> --b <snapshot>");
+        return fail(
+            "need --a <snapshot> --b <snapshot>, --receipt <file> [--proof <file>], \
+             or --addr <host:port> [--collection NAME] [--id N]",
+        );
     };
     let (bytes_a, bytes_b) = match (std::fs::read(a), std::fs::read(b)) {
         (Ok(x), Ok(y)) => (x, y),
@@ -1127,6 +1148,151 @@ fn verify_sharded(a: &str, bytes_a: &[u8], b: &str, bytes_b: &[u8]) -> i32 {
     } else {
         println!("DIVERGED at shard(s) {diverged:?}");
         1
+    }
+}
+
+/// Read a `GET .../proof` capture: accepts both the bare payload and the
+/// `/v2` typed envelope (`{"data": ..., "ok": true}` — what a curl of the
+/// route actually saves).
+fn read_proof_wire(path: &str) -> Result<valori::json::Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let json = valori::json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    Ok(if json.get("ok").as_bool().is_some() { json.get("data").clone() } else { json })
+}
+
+/// `valori verify --receipt <file> [--proof <file>]` — the fully offline
+/// leg: re-derive the combined Merkle root from the receipt's shard
+/// roots, then (with `--proof`) fold the membership path from the leaf
+/// encoding up and require it to land on the receipt. A single flipped
+/// bit anywhere — leaf, path, claimed position, shard roots — rejects.
+fn cmd_verify_receipt(args: &Args) -> i32 {
+    use valori::proof::{leaf, verify_membership, verify_receipt, LeafBody, MembershipProof, Receipt};
+
+    let Some(receipt_path) = args.opt("receipt") else { return fail("need --receipt <file>") };
+    let receipt = match read_proof_wire(receipt_path) {
+        Ok(j) => match Receipt::from_json(&j) {
+            Some(r) => r,
+            None => return fail(&format!("{receipt_path}: not a receipt (bad wire shape)")),
+        },
+        Err(e) => return fail(&e),
+    };
+    println!(
+        "receipt: state_version {} seq {} shards {} wal {:016x}",
+        receipt.state_version,
+        receipt.seq,
+        receipt.shard_roots.len(),
+        receipt.wal_hash
+    );
+    println!("  merkle_root {}", valori::hash::hex_lower(&receipt.merkle_root));
+    if let Err(e) = verify_receipt(&receipt) {
+        println!("REJECTED: {e}");
+        return 1;
+    }
+    let Some(proof_path) = args.opt("proof") else {
+        println!("VERIFIED: shard roots fold to the combined merkle_root");
+        return 0;
+    };
+    let proof = match read_proof_wire(proof_path) {
+        Ok(j) => match MembershipProof::from_json(&j) {
+            Some(p) => p,
+            None => return fail(&format!("{proof_path}: not a membership proof (bad wire shape)")),
+        },
+        Err(e) => return fail(&e),
+    };
+    let kind = match leaf::decode(&proof.record) {
+        Ok(rec) if rec.id != proof.id => {
+            println!("REJECTED: leaf encodes id {}, proof claims id {}", rec.id, proof.id);
+            return 1;
+        }
+        Ok(rec) => match rec.body {
+            LeafBody::Live { .. } => "live",
+            LeafBody::Tombstone => "tombstone",
+        },
+        Err(e) => {
+            println!("REJECTED: bad leaf encoding: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "proof: id {} ({kind}) shard {} slot {} path {} hashes",
+        proof.id,
+        proof.shard,
+        proof.slot,
+        proof.path.len()
+    );
+    match verify_membership(&proof, &receipt) {
+        Ok(()) => {
+            println!("VERIFIED: record is provably part of the receipt's state");
+            0
+        }
+        Err(e) => {
+            println!("REJECTED: {e}");
+            1
+        }
+    }
+}
+
+/// `valori verify --addr A:P [--collection NAME] [--id N]` — fetch the
+/// live receipt (and `--id`'s membership proof) over HTTP, then run the
+/// exact offline verification a third party would.
+fn cmd_verify_live(args: &Args) -> i32 {
+    use valori::proof::{verify_membership, verify_receipt, MembershipProof, Receipt};
+
+    let addr_s = args.opt_or("addr", "127.0.0.1:7431");
+    let addr: std::net::SocketAddr = match addr_s.parse() {
+        Ok(a) => a,
+        Err(e) => return fail(&format!("bad --addr {addr_s}: {e}")),
+    };
+    let collection = args.opt_or("collection", "default");
+    let proof_path = format!("/v2/collections/{collection}/proof");
+    let body = match valori::http::client::get_json(&addr, &proof_path) {
+        Ok((200, b)) => b,
+        Ok((st, b)) => return fail(&format!("GET {proof_path} -> {st}: {b}")),
+        Err(e) => return fail(&format!("cannot reach {addr}: {e}")),
+    };
+    let Some(receipt) = Receipt::from_json(body.get("data")) else {
+        return fail("receipt: bad wire shape");
+    };
+    println!(
+        "receipt: state_version {} seq {} shards {} merkle_root {}",
+        receipt.state_version,
+        receipt.seq,
+        receipt.shard_roots.len(),
+        valori::hash::hex_lower(&receipt.merkle_root)
+    );
+    if let Err(e) = verify_receipt(&receipt) {
+        println!("REJECTED: {e}");
+        return 1;
+    }
+    if args.opt("id").is_none() {
+        println!("VERIFIED: shard roots fold to the combined merkle_root");
+        return 0;
+    }
+    let id: u64 = match args.opt_parse("id", 0u64) {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    let body = match valori::http::client::get_json(&addr, &format!("{proof_path}?id={id}")) {
+        Ok((200, b)) => b,
+        Ok((st, b)) => return fail(&format!("GET {proof_path}?id={id} -> {st}: {b}")),
+        Err(e) => return fail(&format!("proof fetch: {e}")),
+    };
+    let Some(proof) = MembershipProof::from_json(body.get("data")) else {
+        return fail("membership proof: bad wire shape");
+    };
+    if proof.id != id {
+        return fail(&format!("server answered a proof for id {}, asked for {id}", proof.id));
+    }
+    println!("proof: id {id} shard {} slot {} path {} hashes", proof.shard, proof.slot, proof.path.len());
+    match verify_membership(&proof, &receipt) {
+        Ok(()) => {
+            println!("VERIFIED: id {id} is provably part of the receipt's state");
+            0
+        }
+        Err(e) => {
+            println!("REJECTED: {e}");
+            1
+        }
     }
 }
 

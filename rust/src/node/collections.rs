@@ -41,7 +41,8 @@ use crate::http::{
 use crate::index::QuantSpec;
 use crate::json::Json;
 use crate::node::governor::{Admission, Governor, GovernorConfig};
-use crate::node::{route, stats_json, BatcherHandle, NodeConfig, NodeState};
+use crate::node::{hex_decode, hex_encode, route, stats_json, BatcherHandle, NodeConfig, NodeState};
+use crate::proof::Receipt;
 use crate::snapshot::{
     FrameSource, ShardedSnapshot, Snapshot, SnapshotReader, SnapshotWriter, StreamError,
     StreamManifestEntry, StreamSpec,
@@ -1431,9 +1432,9 @@ fn collection_op(
     name: &str,
     op: &str,
 ) -> ApiResult<Json> {
-    const POST_OPS: [&str; 8] =
-        ["insert", "insert_batch", "query", "delete", "link", "unlink", "meta", "apply"];
-    const GET_OPS: [&str; 3] = ["log", "hash", "stats"];
+    const POST_OPS: [&str; 9] =
+        ["insert", "insert_batch", "query", "delete", "link", "unlink", "meta", "apply", "repair"];
+    const GET_OPS: [&str; 4] = ["log", "hash", "stats", "proof"];
     validate_collection_name(name)?;
     // Restore targets a collection that does not exist yet, so it
     // resolves before the existence check every other op performs.
@@ -1457,6 +1458,11 @@ fn collection_op(
     let was_evicted = manager.is_evicted(name);
     let state = manager.get(name)?;
     match (req.method.as_str(), op) {
+        // Repair carries a raw leaf encoding, not a typed command — it
+        // must never flow through `execute` (it is state surgery, not a
+        // logged mutation), so it gets its own arm ahead of the generic
+        // POST dispatch.
+        ("POST", "repair") => repair_route(&state, &req.body),
         ("POST", _) if POST_OPS.contains(&op) => {
             let body = body_json(&req.body)?;
             let typed = ApiRequest::parse(op, &body)?;
@@ -1485,6 +1491,7 @@ fn collection_op(
             }
         }
         ("GET", "hash") => Ok(hash_manifest(&state)),
+        ("GET", "proof") => proof_route(&state, req),
         ("GET", "stats") => {
             let mut obj = match stats_json(&state) {
                 Json::Object(o) => o,
@@ -1518,6 +1525,188 @@ fn collection_op(
         (_, _) if GET_OPS.contains(&op) => Err(method_not_allowed(req, "GET")),
         _ => Err(route_not_found(req)),
     }
+}
+
+/// Response-size bound for one bisection window of tree hashes (64
+/// bytes of hex each on the wire). The Merkle-diff walk only ever needs
+/// sibling pairs; the cap exists for clients dumping whole levels.
+const PROOF_HASHES_MAX: usize = 4096;
+
+/// Build one collection's verifiable state receipt (see [`crate::proof`]
+/// for field semantics). `snapshot_hash` and `merkle_root` are pure
+/// functions of the replicated state; `wal_hash` is an advisory FNV fold
+/// over the canonical per-shard logs (two replicas that shipped the same
+/// history agree, but log truncation would change it without changing
+/// state — which is why it is not part of membership verification).
+fn build_receipt(state: &NodeState) -> Receipt {
+    let (state_version, seq, snapshot_hash, merkle_root, shard_roots) =
+        state.with_sharded(|sk| {
+            let snap = ShardedSnapshot::capture(sk);
+            (
+                sk.shard(0).state_version(),
+                sk.seq(),
+                snap.receipt_snapshot_hash(),
+                sk.merkle_root(),
+                sk.merkle_shard_roots(),
+            )
+        });
+    let mut h = Fnv1a64::new();
+    h.update_u32(state.n_shards());
+    for s in 0..state.n_shards() {
+        let cmds = state.log_slice_shard(s, 0, usize::MAX);
+        h.update_u32(cmds.len() as u32);
+        for c in &cmds {
+            let bytes = c.to_bytes();
+            h.update_u32(bytes.len() as u32);
+            h.update(&bytes);
+        }
+    }
+    Receipt { state_version, seq, snapshot_hash, wal_hash: h.finish(), merkle_root, shard_roots }
+}
+
+/// `GET /v2/collections/{name}/proof`: with no parameters the state
+/// receipt; `?id=N` a membership proof (tombstones included; 1002 for
+/// never-inserted ids); `?shard=S[&level=L&from=A&count=K]` a window of
+/// tree hashes (the Merkle-diff bisection primitive; level 0 = leaves);
+/// `?shard=S&slot=N` one canonical leaf encoding.
+fn proof_route(state: &NodeState, req: &Request) -> ApiResult<Json> {
+    fn parsed<T: std::str::FromStr>(req: &Request, name: &str) -> ApiResult<Option<T>> {
+        match query_param::<T>(req, name) {
+            None => Ok(None),
+            Some(Ok(v)) => Ok(Some(v)),
+            Some(Err(())) => Err(ApiError::bad_request(format!(
+                "'{name}' must be a non-negative integer"
+            ))),
+        }
+    }
+    if let Some(id) = parsed::<u64>(req, "id")? {
+        let proof = state
+            .with_sharded(|sk| sk.merkle_proof(id))
+            .ok_or_else(|| ApiError::new(ApiCode::UnknownId, format!("unknown id {id}")))?;
+        return Ok(proof.to_json());
+    }
+    let Some(shard) = parsed::<u32>(req, "shard")? else {
+        return Ok(build_receipt(state).to_json());
+    };
+    let slot = parsed::<u32>(req, "slot")?;
+    let level = parsed::<usize>(req, "level")?.unwrap_or(0);
+    let from = parsed::<usize>(req, "from")?.unwrap_or(0);
+    let count = parsed::<usize>(req, "count")?.unwrap_or(PROOF_HASHES_MAX);
+    if count == 0 || count > PROOF_HASHES_MAX {
+        return Err(ApiError::bad_request(format!("count must be in [1, {PROOF_HASHES_MAX}]")));
+    }
+    state.with_sharded(|sk| {
+        if shard >= sk.n_shards() {
+            return Err(ApiError::new(
+                ApiCode::ProofOutOfRange,
+                format!("shard {shard} out of range (n_shards = {})", sk.n_shards()),
+            ));
+        }
+        let kernel = sk.shard(shard);
+        if let Some(slot) = slot {
+            let record = kernel.merkle_leaf_encoding(slot).ok_or_else(|| {
+                ApiError::new(
+                    ApiCode::ProofOutOfRange,
+                    format!("slot {slot} beyond shard {shard}'s arena"),
+                )
+            })?;
+            return Ok(Json::object(vec![
+                ("record", Json::str(hex_encode(&record))),
+                ("shard", Json::Int(i64::from(shard))),
+                ("slot", Json::Int(i64::from(slot))),
+            ]));
+        }
+        let levels = kernel.merkle_levels();
+        let capacity = kernel.merkle_capacity();
+        if level >= levels {
+            return Err(ApiError::new(
+                ApiCode::ProofOutOfRange,
+                format!("level {level} out of range (tree has {levels} levels)"),
+            ));
+        }
+        let level_len = capacity >> level;
+        if from >= level_len {
+            return Err(ApiError::new(
+                ApiCode::ProofOutOfRange,
+                format!("from {from} out of range (level {level} has {level_len} hashes)"),
+            ));
+        }
+        let count = count.min(level_len - from);
+        let hashes = kernel.merkle_level(level, from, count).ok_or_else(|| {
+            ApiError::new(ApiCode::ProofOutOfRange, "hash range out of bounds")
+        })?;
+        Ok(Json::object(vec![
+            ("capacity", Json::Int(capacity as i64)),
+            ("count", Json::Int(hashes.len() as i64)),
+            ("from", Json::Int(from as i64)),
+            (
+                "hashes",
+                Json::Array(
+                    hashes.iter().map(|h| Json::str(crate::hash::hex_lower(h))).collect(),
+                ),
+            ),
+            ("level", Json::Int(level as i64)),
+            ("levels", Json::Int(levels as i64)),
+            ("shard", Json::Int(i64::from(shard))),
+        ]))
+    })
+}
+
+/// `POST /v2/collections/{name}/repair`: overwrite one slot with its
+/// canonical leaf record — un-logged divergence repair driven by a
+/// Merkle diff (see [`crate::proof`] and [`NodeState::repair_slot`]).
+/// Body: `{"shard": S, "slot": N, "record": "<hex leaf encoding>"}`.
+fn repair_route(state: &NodeState, body: &[u8]) -> ApiResult<Json> {
+    let json = body_json(body)?;
+    let proof_invalid = |msg: &str| ApiError::new(ApiCode::ProofInvalid, msg.to_string());
+    let shard_raw = json
+        .get("shard")
+        .as_u64()
+        .ok_or_else(|| proof_invalid("need numeric 'shard'"))?;
+    let slot_raw = json.get("slot").as_u64().ok_or_else(|| proof_invalid("need numeric 'slot'"))?;
+    let hex = json
+        .get("record")
+        .as_str()
+        .ok_or_else(|| proof_invalid("need 'record' (hex leaf encoding)"))?;
+    let bytes = hex_decode(hex).ok_or_else(|| proof_invalid("'record' is not valid hex"))?;
+    let rec = crate::proof::leaf::decode(&bytes)
+        .map_err(|e| ApiError::new(ApiCode::ProofInvalid, format!("bad leaf encoding: {e}")))?;
+    let (Ok(shard), Ok(slot)) = (u32::try_from(shard_raw), u32::try_from(slot_raw)) else {
+        return Err(ApiError::new(
+            ApiCode::ProofOutOfRange,
+            format!("shard {shard_raw} / slot {slot_raw} out of range"),
+        ));
+    };
+    if shard >= state.n_shards() {
+        return Err(ApiError::new(
+            ApiCode::ProofOutOfRange,
+            format!("shard {shard} out of range (n_shards = {})", state.n_shards()),
+        ));
+    }
+    state.repair_slot(shard, slot, &rec).map_err(|e| match e {
+        crate::state::RepairError::SlotOutOfRange => ApiError::new(
+            ApiCode::ProofOutOfRange,
+            format!("slot {slot} beyond shard {shard}'s arena"),
+        ),
+        crate::state::RepairError::IdMismatch => ApiError::new(
+            ApiCode::RepairMismatch,
+            format!("record id {} does not own shard {shard} slot {slot}", rec.id),
+        ),
+        crate::state::RepairError::DimMismatch => ApiError::new(
+            ApiCode::RepairMismatch,
+            "record vector dimensionality disagrees with the collection",
+        ),
+    })?;
+    let (merkle_root, root) = state.with_sharded(|sk| {
+        (crate::hash::hex_lower(&sk.merkle_root()), format!("{:016x}", sk.root_hash()))
+    });
+    Ok(Json::object(vec![
+        ("merkle_root", Json::str(merkle_root)),
+        ("repaired", Json::Bool(true)),
+        ("root", Json::str(root)),
+        ("shard", Json::Int(i64::from(shard))),
+        ("slot", Json::Int(i64::from(slot))),
+    ]))
 }
 
 #[cfg(test)]
@@ -2007,5 +2196,92 @@ mod tests {
             send(&m, "POST", "/v2/collections/tuned/query", r#"{"vector":[0.2,0.5,-0.25,1],"k":3}"#);
         assert_eq!(st, 200);
         assert_eq!(hits.get("data").as_array().map(|a| a.len()), Some(3));
+    }
+
+    #[test]
+    fn proof_route_receipt_membership_and_repair() {
+        use crate::proof::{verify_membership, verify_receipt, MembershipProof, Receipt};
+        let m = manager();
+        for i in 1..=10u64 {
+            let body = format!(r#"{{"id":{i},"vector":[{},0.5,-0.25,1.0]}}"#, (i as f32) * 0.125);
+            let (st, _) = send(&m, "POST", "/v2/collections/default/insert", &body);
+            assert_eq!(st, 200);
+        }
+        // bare proof = the state receipt, internally consistent offline
+        let (st, body) = send(&m, "GET", "/v2/collections/default/proof", "");
+        assert_eq!(st, 200, "{body}");
+        let receipt = Receipt::from_json(body.get("data")).expect("receipt wire shape");
+        assert!(verify_receipt(&receipt).is_ok());
+        assert_eq!(receipt.seq, 10);
+        assert_eq!(receipt.shard_roots.len(), 4);
+        // ?id → membership proof that verifies against the receipt
+        let (st, body) = send(&m, "GET", "/v2/collections/default/proof?id=3", "");
+        assert_eq!(st, 200, "{body}");
+        let proof = MembershipProof::from_json(body.get("data")).expect("proof wire shape");
+        assert!(verify_membership(&proof, &receipt).is_ok());
+        // single-bit tamper in the leaf must be rejected
+        let mut bad = proof.clone();
+        bad.record[1] ^= 0x01;
+        assert!(verify_membership(&bad, &receipt).is_err());
+        // never-inserted id → 1002
+        let (st, body) = send(&m, "GET", "/v2/collections/default/proof?id=999", "");
+        assert_eq!(st, 404, "{body}");
+        assert_eq!(body.get("error").get("code").as_i64(), Some(1002));
+        // bisection window: leaf level of the proof's own shard
+        let target = format!("/v2/collections/default/proof?shard={}&level=0", proof.shard);
+        let (st, body) = send(&m, "GET", &target, "");
+        assert_eq!(st, 200, "{body}");
+        let data = body.get("data");
+        assert_eq!(data.get("capacity").as_u64(), Some(proof.capacity));
+        assert_eq!(data.get("count").as_u64(), Some(proof.capacity));
+        assert_eq!(
+            data.get("hashes").as_array().map(|a| a.len()),
+            Some(proof.capacity as usize)
+        );
+        let (st, body) = send(&m, "GET", "/v2/collections/default/proof?shard=99", "");
+        assert_eq!(st, 400, "{body}");
+        assert_eq!(body.get("error").get("code").as_i64(), Some(1701));
+        // ?shard&slot serves the canonical leaf encoding the proof carries
+        let target =
+            format!("/v2/collections/default/proof?shard={}&slot={}", proof.shard, proof.slot);
+        let (st, body) = send(&m, "GET", &target, "");
+        assert_eq!(st, 200, "{body}");
+        assert_eq!(body.get("data").get("record").as_str(), Some(hex_encode(&proof.record).as_str()));
+        // repair round-trip with the record's own canonical bytes is a no-op
+        let repair = format!(
+            r#"{{"shard":{},"slot":{},"record":"{}"}}"#,
+            proof.shard,
+            proof.slot,
+            hex_encode(&proof.record)
+        );
+        let (st, body) = send(&m, "POST", "/v2/collections/default/repair", &repair);
+        assert_eq!(st, 200, "{body}");
+        let data = body.get("data");
+        assert_eq!(data.get("repaired").as_bool(), Some(true));
+        assert_eq!(
+            data.get("merkle_root").as_str(),
+            Some(crate::hash::hex_lower(&receipt.merkle_root).as_str())
+        );
+        // malformed record hex → 1700, id/slot mismatch → 1702
+        let (st, body) = send(
+            &m,
+            "POST",
+            "/v2/collections/default/repair",
+            r#"{"shard":0,"slot":0,"record":"zz"}"#,
+        );
+        assert_eq!(st, 400, "{body}");
+        assert_eq!(body.get("error").get("code").as_i64(), Some(1700));
+        let wrong_id = format!(
+            r#"{{"shard":{},"slot":{},"record":"{}"}}"#,
+            proof.shard,
+            proof.slot,
+            hex_encode(
+                &crate::proof::LeafRecord { id: 999, body: crate::proof::LeafBody::Tombstone }
+                    .encode()
+            )
+        );
+        let (st, body) = send(&m, "POST", "/v2/collections/default/repair", &wrong_id);
+        assert_eq!(st, 409, "{body}");
+        assert_eq!(body.get("error").get("code").as_i64(), Some(1702));
     }
 }

@@ -31,7 +31,9 @@
 //! | `POST /v2/collections/{name}/meta` | `{"id":1,"key":"k","value":"v"}` |
 //! | `POST /v2/collections/{name}/apply` | `{"commands":["<hex>",…],"shard":S?}` (follower ingest) |
 //! | `GET /v2/collections/{name}/log?shard=S&from=N` | per-shard canonical feed |
-//! | `GET /v2/collections/{name}/hash` | per-shard FNV/SHA-256 manifest + root |
+//! | `GET /v2/collections/{name}/hash` | per-shard FNV/SHA-256/Merkle manifest + roots |
+//! | `GET /v2/collections/{name}/proof` | state receipt (`state_version`, `seq`, `snapshot_hash`, `wal_hash`, `merkle_root`, per-shard roots); `?id=N` → membership proof; `?shard=S&level=L&from=A&count=K` → bisection hashes; `?shard=S&slot=N` → canonical leaf encoding |
+//! | `POST /v2/collections/{name}/repair` | `{"shard":S,"slot":N,"record":"<hex leaf>"}` record-level divergence repair (un-logged state surgery; seq untouched) |
 //! | `GET /v2/collections/{name}/stats` | metrics + kernel info |
 //! | `GET /v2/collections/{name}/snapshot?chunk=N` | chunked `VSTREAM1` snapshot stream (raw body, per-chunk CRCs, seq-pinned consistency) |
 //! | `PUT /v2/collections/{name}/restore?offset=N` | windowed `VSTREAM1` ingest into a fresh collection (resumable; offset = bytes already fed) |
@@ -364,6 +366,22 @@ impl NodeState {
     pub fn embedder(&self) -> Option<&BatcherHandle> {
         self.embed.as_ref()
     }
+
+    /// Record-level divergence repair (see [`crate::proof`]): overwrite
+    /// one slot on one shard with its canonical record, under the write
+    /// lock. Deliberately **not** recorded to the log or WAL — repair is
+    /// state surgery that reconciles a replica *outside* the command
+    /// history, and the shard's logical clock is untouched (both sides
+    /// already agree on the sequence; they disagree on one record).
+    pub fn repair_slot(
+        &self,
+        shard: u32,
+        slot: u32,
+        rec: &crate::proof::LeafRecord,
+    ) -> Result<(), crate::state::RepairError> {
+        let mut kernel = self.kernel.write().expect("kernel poisoned");
+        kernel.repair_slot(shard, slot, rec)
+    }
 }
 
 /// Start the HTTP server for a node (epoll reactor front end). The
@@ -651,6 +669,7 @@ pub(crate) fn stats_json(state: &NodeState) -> Json {
                     ("vectors", Json::Int(k.len() as i64)),
                     ("seq", Json::Int(k.seq() as i64)),
                     ("fnv", Json::str(format!("{:016x}", k.state_hash()))),
+                    ("merkle", Json::str(crate::hash::hex_lower(&k.merkle_root()))),
                 ])
             })
             .collect();
@@ -686,17 +705,21 @@ fn handle_hash(state: &NodeState) -> Response {
                 ("sha256", Json::str(snap.sha256_hex())),
                 ("seq", Json::Int(sk.seq() as i64)),
                 ("root", Json::str(format!("{:016x}", sk.root_hash()))),
+                ("merkle_root", Json::str(crate::hash::hex_lower(&sk.merkle_root()))),
             ]))
         } else {
             let snap = crate::snapshot::ShardedSnapshot::capture(sk);
+            let merkle_roots = sk.merkle_shard_roots();
             let shards: Vec<Json> = snap
                 .manifest()
                 .iter()
-                .map(|m| {
+                .zip(&merkle_roots)
+                .map(|(m, root)| {
                     Json::object(vec![
                         ("shard", Json::Int(m.shard as i64)),
                         ("fnv", Json::str(format!("{:016x}", m.fnv))),
                         ("sha256", Json::str(crate::hash::sha256_hex(&m.sha256))),
+                        ("merkle", Json::str(crate::hash::hex_lower(root))),
                     ])
                 })
                 .collect();
@@ -704,6 +727,7 @@ fn handle_hash(state: &NodeState) -> Response {
                 ("fnv", Json::str(format!("{:016x}", snap.root_hash()))),
                 ("root", Json::str(format!("{:016x}", snap.root_hash()))),
                 ("seq", Json::Int(sk.seq() as i64)),
+                ("merkle_root", Json::str(crate::hash::hex_lower(&sk.merkle_root()))),
                 ("shards", Json::Array(shards)),
             ]))
         }

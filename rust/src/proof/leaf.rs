@@ -1,0 +1,314 @@
+//! Canonical per-slot leaf encoding.
+//!
+//! One leaf is one arena slot. The encoding is the *complete* auditable
+//! record — `id ‖ vector bytes ‖ meta ‖ links` — so the same bytes that
+//! hash into the Merkle tree can be shipped verbatim to repair a diverged
+//! replica ([`crate::replication::merkle_diff_repair`]). Three shapes:
+//!
+//! - live record:  `0x01 ‖ id:u64 ‖ dim:u32 ‖ raw_i32×dim ‖
+//!   n_meta:u32 ‖ (klen:u32 ‖ key ‖ vlen:u32 ‖ val)* ‖
+//!   n_links:u32 ‖ target:u64×n_links`
+//! - tombstone:    `0x02 ‖ id:u64`
+//! - empty slot:   `0x00` (the fixed sentinel, see
+//!   [`super::tree::EMPTY_SLOT_ENCODING`])
+//!
+//! All integers are fixed-width little-endian (never platform-width), meta
+//! pairs are sorted by key (BTreeMap iteration order), and link targets are
+//! ascending ([`crate::graph::LinkGraph::links_from`]) — the encoding of a
+//! slot is a pure function of the logical record, independent of mutation
+//! history.
+//!
+//! Only a record's **outgoing** links are encoded. Incoming links live in
+//! the source record's leaf, so every link is covered by exactly one leaf
+//! and no edge is double-counted.
+
+#![forbid(unsafe_code)]
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Tag byte for a live record leaf.
+pub const LEAF_LIVE: u8 = 0x01;
+/// Tag byte for a tombstone leaf.
+pub const LEAF_TOMBSTONE: u8 = 0x02;
+
+/// Hostile-input caps for [`decode`] (repair bodies arrive over HTTP).
+const MAX_DIM: usize = 1 << 20;
+const MAX_META: usize = 1 << 16;
+const MAX_STR: usize = 1 << 16;
+const MAX_LINKS: usize = 1 << 20;
+
+/// Encode a live record's canonical leaf.
+pub fn encode_live(
+    id: u64,
+    raw: &[i32],
+    meta: Option<&BTreeMap<String, String>>,
+    links: &[u64],
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(21 + raw.len() * 4 + links.len() * 8);
+    out.push(LEAF_LIVE);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
+    for &c in raw {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    let n_meta = meta.map_or(0, |m| m.len());
+    out.extend_from_slice(&(n_meta as u32).to_le_bytes());
+    if let Some(m) = meta {
+        for (k, v) in m {
+            out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+            out.extend_from_slice(k.as_bytes());
+            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            out.extend_from_slice(v.as_bytes());
+        }
+    }
+    out.extend_from_slice(&(links.len() as u32).to_le_bytes());
+    for &t in links {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    out
+}
+
+/// Encode a tombstone leaf (deleted record; slot number is retired).
+pub fn encode_tombstone(id: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9);
+    out.push(LEAF_TOMBSTONE);
+    out.extend_from_slice(&id.to_le_bytes());
+    out
+}
+
+/// A decoded leaf (the repair path parses these from the wire).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeafRecord {
+    pub id: u64,
+    pub body: LeafBody,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LeafBody {
+    Live { vector: Vec<i32>, meta: BTreeMap<String, String>, links: Vec<u64> },
+    Tombstone,
+}
+
+impl LeafRecord {
+    /// Re-encode canonically; `decode(encode(r)) == r` and
+    /// `encode(decode(b)) == b` for canonical `b`.
+    pub fn encode(&self) -> Vec<u8> {
+        match &self.body {
+            LeafBody::Live { vector, meta, links } => {
+                let m = if meta.is_empty() { None } else { Some(meta) };
+                encode_live(self.id, vector, m, links)
+            }
+            LeafBody::Tombstone => encode_tombstone(self.id),
+        }
+    }
+}
+
+/// Leaf decode error (closed set; maps to API code 1700).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeafError {
+    Truncated,
+    BadTag,
+    TooLarge,
+    BadUtf8,
+    UnsortedMeta,
+    UnsortedLinks,
+    TrailingBytes,
+}
+
+impl fmt::Display for LeafError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            LeafError::Truncated => "truncated leaf encoding",
+            LeafError::BadTag => "unknown leaf tag",
+            LeafError::TooLarge => "leaf field exceeds size cap",
+            LeafError::BadUtf8 => "meta key/value is not utf-8",
+            LeafError::UnsortedMeta => "meta pairs not sorted by key",
+            LeafError::UnsortedLinks => "link targets not strictly ascending",
+            LeafError::TrailingBytes => "trailing bytes after leaf",
+        };
+        f.write_str(s)
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], LeafError> {
+        let end = self.pos.checked_add(n).ok_or(LeafError::Truncated)?;
+        let s = self.bytes.get(self.pos..end).ok_or(LeafError::Truncated)?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, LeafError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, LeafError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, LeafError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn i32(&mut self) -> Result<i32, LeafError> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn string(&mut self) -> Result<String, LeafError> {
+        let len = self.u32()? as usize;
+        if len > MAX_STR {
+            return Err(LeafError::TooLarge);
+        }
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| LeafError::BadUtf8)
+    }
+}
+
+/// Parse a canonical live/tombstone leaf encoding. Rejects the empty-slot
+/// sentinel (there is no record to repair with), non-canonical ordering,
+/// and trailing bytes — a decoded leaf always re-encodes to the same bytes.
+pub fn decode(bytes: &[u8]) -> Result<LeafRecord, LeafError> {
+    let mut c = Cursor { bytes, pos: 0 };
+    let rec = match c.u8()? {
+        LEAF_TOMBSTONE => LeafRecord { id: c.u64()?, body: LeafBody::Tombstone },
+        LEAF_LIVE => {
+            let id = c.u64()?;
+            let dim = c.u32()? as usize;
+            if dim > MAX_DIM {
+                return Err(LeafError::TooLarge);
+            }
+            let mut vector = Vec::with_capacity(dim.min(4096));
+            for _ in 0..dim {
+                vector.push(c.i32()?);
+            }
+            let n_meta = c.u32()? as usize;
+            if n_meta > MAX_META {
+                return Err(LeafError::TooLarge);
+            }
+            let mut meta = BTreeMap::new();
+            let mut prev_key: Option<String> = None;
+            for _ in 0..n_meta {
+                let k = c.string()?;
+                let v = c.string()?;
+                if let Some(p) = &prev_key {
+                    if *p >= k {
+                        return Err(LeafError::UnsortedMeta);
+                    }
+                }
+                prev_key = Some(k.clone());
+                meta.insert(k, v);
+            }
+            let n_links = c.u32()? as usize;
+            if n_links > MAX_LINKS {
+                return Err(LeafError::TooLarge);
+            }
+            let mut links = Vec::with_capacity(n_links.min(4096));
+            for _ in 0..n_links {
+                let t = c.u64()?;
+                if links.last().is_some_and(|&p| p >= t) {
+                    return Err(LeafError::UnsortedLinks);
+                }
+                links.push(t);
+            }
+            LeafRecord { id, body: LeafBody::Live { vector, meta, links } }
+        }
+        _ => return Err(LeafError::BadTag),
+    };
+    if c.pos != bytes.len() {
+        return Err(LeafError::TrailingBytes);
+    }
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LeafRecord {
+        let mut meta = BTreeMap::new();
+        meta.insert("a".to_string(), "1".to_string());
+        meta.insert("kind".to_string(), "doc".to_string());
+        LeafRecord {
+            id: 42,
+            body: LeafBody::Live {
+                vector: vec![65536, -32768, 0, i32::MAX],
+                meta,
+                links: vec![3, 7, 900],
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_live_and_tombstone() {
+        let rec = sample();
+        let enc = rec.encode();
+        assert_eq!(decode(&enc).unwrap(), rec);
+        assert_eq!(decode(&enc).unwrap().encode(), enc);
+
+        let t = LeafRecord { id: 9, body: LeafBody::Tombstone };
+        let enc = t.encode();
+        assert_eq!(enc.len(), 9);
+        assert_eq!(decode(&enc).unwrap(), t);
+    }
+
+    #[test]
+    fn encoding_layout_is_pinned() {
+        // Byte-for-byte pin: the Python mirror (fixtures/make_proof.py)
+        // reproduces exactly this layout.
+        let enc = encode_live(1, &[65536], None, &[2]);
+        let expected: Vec<u8> = [
+            &[0x01][..],                  // live tag
+            &1u64.to_le_bytes(),          // id
+            &1u32.to_le_bytes(),          // dim
+            &65536i32.to_le_bytes(),      // raw component
+            &0u32.to_le_bytes(),          // n_meta
+            &1u32.to_le_bytes(),          // n_links
+            &2u64.to_le_bytes(),          // link target
+        ]
+        .concat();
+        assert_eq!(enc, expected);
+        assert_eq!(encode_tombstone(1), [&[0x02][..], &1u64.to_le_bytes()].concat());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert_eq!(decode(&[]), Err(LeafError::Truncated));
+        assert_eq!(decode(&[0x00]), Err(LeafError::BadTag)); // sentinel is not a record
+        assert_eq!(decode(&[0x07, 0, 0]), Err(LeafError::BadTag));
+        assert_eq!(decode(&[0x02, 1, 2]), Err(LeafError::Truncated));
+        let mut enc = sample().encode();
+        enc.push(0);
+        assert_eq!(decode(&enc), Err(LeafError::TrailingBytes));
+    }
+
+    #[test]
+    fn rejects_non_canonical_order() {
+        // meta out of order: "b" before "a"
+        let mut enc = Vec::new();
+        enc.push(LEAF_LIVE);
+        enc.extend_from_slice(&5u64.to_le_bytes());
+        enc.extend_from_slice(&0u32.to_le_bytes()); // dim 0
+        enc.extend_from_slice(&2u32.to_le_bytes()); // n_meta
+        for (k, v) in [("b", "1"), ("a", "2")] {
+            enc.extend_from_slice(&(k.len() as u32).to_le_bytes());
+            enc.extend_from_slice(k.as_bytes());
+            enc.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            enc.extend_from_slice(v.as_bytes());
+        }
+        enc.extend_from_slice(&0u32.to_le_bytes()); // n_links
+        assert_eq!(decode(&enc), Err(LeafError::UnsortedMeta));
+
+        // links not strictly ascending
+        let dup = encode_live(5, &[], None, &[4, 4]);
+        assert_eq!(decode(&dup), Err(LeafError::UnsortedLinks));
+    }
+}

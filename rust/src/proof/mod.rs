@@ -1,0 +1,38 @@
+//! Verifiable state receipts (paper §8, PR-10).
+//!
+//! The flat per-shard FNV fold ([`crate::snapshot`]) can say *that* two
+//! replicas diverged but never *where*, and gives an auditor nothing they
+//! can check without the full state. This module turns the state root into
+//! a proof system:
+//!
+//! - [`tree`] — a deterministic binary Merkle tree over per-slot digests.
+//!   The tree shape is a pure function of the arena capacity (slots are
+//!   padded to the next power of two with a fixed empty-leaf sentinel), so
+//!   two kernels that applied the same command log have bit-identical
+//!   trees. The kernel maintains it **incrementally**: every applied
+//!   command recomputes only the O(log n) root path of the slots it dirtied
+//!   ([`crate::state::Kernel`]), never a full rebuild.
+//! - [`leaf`] — the canonical leaf encoding
+//!   `id ‖ vector bytes ‖ meta ‖ links` (all fixed-width little-endian, meta
+//!   sorted by key, links ascending). A leaf is self-describing: the same
+//!   bytes that hash into the tree are shipped for divergence repair.
+//! - [`receipt`] — the signed-shape receipt
+//!   `{state_version, seq, snapshot_hash, wal_hash, merkle_root}` returned
+//!   by `GET /v2/collections/{name}/proof`, the per-record
+//!   [`MembershipProof`], and the offline verifier shared by
+//!   `valori verify` and the test suite.
+//!
+//! Determinism discipline: the tree is **derived state** — it is never
+//! serialized (snapshots stay byte-identical) and is rebuilt on decode,
+//! exactly like the SQ8 code arena. This module is a *state* zone in the
+//! `valori lint` zone map: integer-only, no clocks, no randomness.
+
+#![forbid(unsafe_code)]
+
+pub mod leaf;
+pub mod receipt;
+pub mod tree;
+
+pub use leaf::{LeafBody, LeafError, LeafRecord};
+pub use receipt::{verify_membership, verify_receipt, MembershipProof, Receipt, VerifyError};
+pub use tree::{combined_root, fold_path, leaf_hash, node_hash, MerkleTree};

@@ -1,0 +1,319 @@
+//! State receipts, membership proofs, and the shared offline verifier.
+//!
+//! A **receipt** is the signable summary of one collection's state at one
+//! logical instant: `{state_version, seq, snapshot_hash, wal_hash,
+//! merkle_root}` plus the per-shard Merkle roots the combined root folds
+//! over. `snapshot_hash` pins the canonical snapshot byte stream (SHA-256
+//! fold, [`crate::snapshot`]), `wal_hash` is the advisory FNV fold over the
+//! canonical command logs, and `merkle_root` is the proof-carrying root.
+//!
+//! A **membership proof** ties one record to a receipt: the record's
+//! canonical leaf encoding plus the sibling path from its slot to its
+//! shard root. [`verify_membership`] checks the whole chain — leaf →
+//! shard root → combined root — with `log2(capacity) + 1` hashes and no
+//! access to the node or its state. The same function backs
+//! `valori verify` and the test suite, so the CLI can never drift from
+//! what the tests pin.
+
+#![forbid(unsafe_code)]
+
+use super::leaf;
+use super::tree::{combined_root, fold_path};
+use crate::hash::{hex_lower, hex_to_bytes, hex_to_digest};
+use crate::json::Json;
+use std::fmt;
+
+/// Signable state summary for one collection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Receipt {
+    /// Snapshot format version (quantized collections use a distinct one).
+    pub state_version: u32,
+    /// Logical clock: number of successfully applied commands.
+    pub seq: u64,
+    /// SHA-256 fold over the per-shard canonical snapshot digests.
+    pub snapshot_hash: [u8; 32],
+    /// Advisory FNV-1a 64 fold over the per-shard canonical command logs.
+    pub wal_hash: u64,
+    /// Combined Merkle root ([`combined_root`] over `shard_roots`).
+    pub merkle_root: [u8; 32],
+    /// Per-shard Merkle roots, shard order.
+    pub shard_roots: Vec<[u8; 32]>,
+}
+
+/// Proof that one record is part of a receipt's `merkle_root`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipProof {
+    pub id: u64,
+    /// Owning shard (`splitmix64(id) % n_shards`, the canonical routing).
+    pub shard: u64,
+    /// Arena slot inside the shard.
+    pub slot: u64,
+    /// Shard tree capacity (power of two; fixes the path length).
+    pub capacity: u64,
+    /// Canonical leaf encoding ([`crate::proof::leaf`]).
+    pub record: Vec<u8>,
+    /// Sibling digests, bottom-up.
+    pub path: Vec<[u8; 32]>,
+}
+
+/// Closed verification-failure taxonomy (shared by CLI exit codes, tests,
+/// and error messages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyError {
+    /// `combined_root(shard_roots) != merkle_root` — receipt is internally
+    /// inconsistent.
+    CombinedRootMismatch,
+    /// Proof's shard index is outside the receipt's shard list.
+    ShardOutOfRange,
+    /// Capacity is not a power of two or path length != log2(capacity).
+    PathShape,
+    /// Slot index is outside the claimed capacity.
+    SlotOutOfRange,
+    /// Leaf encoding does not parse canonically.
+    BadLeaf(leaf::LeafError),
+    /// Leaf parses but carries a different record id than claimed.
+    IdMismatch,
+    /// Folded path does not reproduce the shard root.
+    RootMismatch,
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::CombinedRootMismatch => {
+                f.write_str("shard roots do not fold to the receipt merkle_root")
+            }
+            VerifyError::ShardOutOfRange => f.write_str("proof shard outside receipt shard list"),
+            VerifyError::PathShape => f.write_str("sibling path length does not match capacity"),
+            VerifyError::SlotOutOfRange => f.write_str("slot outside claimed tree capacity"),
+            VerifyError::BadLeaf(e) => write!(f, "leaf encoding invalid: {e}"),
+            VerifyError::IdMismatch => f.write_str("leaf id differs from claimed id"),
+            VerifyError::RootMismatch => f.write_str("folded path does not match shard root"),
+        }
+    }
+}
+
+/// Check a receipt's internal consistency: the per-shard roots must fold
+/// to the combined `merkle_root`.
+pub fn verify_receipt(receipt: &Receipt) -> Result<(), VerifyError> {
+    if combined_root(&receipt.shard_roots) != receipt.merkle_root {
+        return Err(VerifyError::CombinedRootMismatch);
+    }
+    Ok(())
+}
+
+/// Offline membership verification: leaf encoding → shard root → combined
+/// root. Rejects any single-bit tamper in the leaf, the path, the claimed
+/// position, or the receipt itself.
+pub fn verify_membership(proof: &MembershipProof, receipt: &Receipt) -> Result<(), VerifyError> {
+    verify_receipt(receipt)?;
+    let shard = proof.shard as usize;
+    if shard >= receipt.shard_roots.len() {
+        return Err(VerifyError::ShardOutOfRange);
+    }
+    if proof.capacity == 0 || !proof.capacity.is_power_of_two() {
+        return Err(VerifyError::PathShape);
+    }
+    if proof.path.len() != proof.capacity.trailing_zeros() as usize {
+        return Err(VerifyError::PathShape);
+    }
+    if proof.slot >= proof.capacity {
+        return Err(VerifyError::SlotOutOfRange);
+    }
+    let rec = leaf::decode(&proof.record).map_err(VerifyError::BadLeaf)?;
+    if rec.id != proof.id {
+        return Err(VerifyError::IdMismatch);
+    }
+    let folded = fold_path(&proof.record, proof.slot as usize, &proof.path);
+    if folded != receipt.shard_roots[shard] {
+        return Err(VerifyError::RootMismatch);
+    }
+    Ok(())
+}
+
+impl Receipt {
+    /// Canonical JSON shape served by `GET /v2/collections/{name}/proof`.
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("state_version", Json::Int(self.state_version as i64)),
+            ("seq", Json::Int(self.seq as i64)),
+            ("snapshot_hash", Json::str(hex_lower(&self.snapshot_hash))),
+            ("wal_hash", Json::str(format!("{:016x}", self.wal_hash))),
+            ("merkle_root", Json::str(hex_lower(&self.merkle_root))),
+            (
+                "shards",
+                Json::Array(self.shard_roots.iter().map(|r| Json::str(hex_lower(r))).collect()),
+            ),
+        ])
+    }
+
+    /// Parse the wire shape back. `None` on any missing/ill-typed field.
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let shard_roots = j
+            .get("shards")
+            .as_array()?
+            .iter()
+            .map(|s| hex_to_digest(s.as_str()?))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Self {
+            state_version: u32::try_from(j.get("state_version").as_u64()?).ok()?,
+            seq: j.get("seq").as_u64()?,
+            snapshot_hash: hex_to_digest(j.get("snapshot_hash").as_str()?)?,
+            wal_hash: u64::from_str_radix(j.get("wal_hash").as_str()?, 16).ok()?,
+            merkle_root: hex_to_digest(j.get("merkle_root").as_str()?)?,
+            shard_roots,
+        })
+    }
+}
+
+impl MembershipProof {
+    /// Canonical JSON shape served by `GET …/proof?id=N`.
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("id", Json::Int(self.id as i64)),
+            ("shard", Json::Int(self.shard as i64)),
+            ("slot", Json::Int(self.slot as i64)),
+            ("capacity", Json::Int(self.capacity as i64)),
+            ("record", Json::str(hex_lower(&self.record))),
+            ("path", Json::Array(self.path.iter().map(|h| Json::str(hex_lower(h))).collect())),
+        ])
+    }
+
+    /// Parse the wire shape back. `None` on any missing/ill-typed field.
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let path = j
+            .get("path")
+            .as_array()?
+            .iter()
+            .map(|s| hex_to_digest(s.as_str()?))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Self {
+            id: j.get("id").as_u64()?,
+            shard: j.get("shard").as_u64()?,
+            slot: j.get("slot").as_u64()?,
+            capacity: j.get("capacity").as_u64()?,
+            record: hex_to_bytes(j.get("record").as_str()?)?,
+            path,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proof::tree::MerkleTree;
+
+    /// Two-shard fixture: shard 0 holds ids {0, 2}, shard 1 holds id {1}.
+    fn fixture() -> (Receipt, MembershipProof) {
+        let enc0 = leaf::encode_live(0, &[65536, 0], None, &[2]);
+        let enc2 = leaf::encode_live(2, &[0, -65536], None, &[]);
+        let enc1 = leaf::encode_live(1, &[1, 2], None, &[]);
+        let mut t0 = MerkleTree::new();
+        t0.set_leaf(0, &enc0);
+        t0.set_leaf(1, &enc2);
+        let mut t1 = MerkleTree::new();
+        t1.set_leaf(0, &enc1);
+        let shard_roots = vec![t0.root(), t1.root()];
+        let receipt = Receipt {
+            state_version: 2,
+            seq: 3,
+            snapshot_hash: [0xaa; 32],
+            wal_hash: 0x1234_5678_9abc_def0,
+            merkle_root: combined_root(&shard_roots),
+            shard_roots,
+        };
+        let proof = MembershipProof {
+            id: 2,
+            shard: 0,
+            slot: 1,
+            capacity: t0.capacity() as u64,
+            record: enc2,
+            path: t0.proof_path(1).unwrap(),
+        };
+        (receipt, proof)
+    }
+
+    #[test]
+    fn valid_proof_verifies() {
+        let (receipt, proof) = fixture();
+        assert_eq!(verify_receipt(&receipt), Ok(()));
+        assert_eq!(verify_membership(&proof, &receipt), Ok(()));
+    }
+
+    #[test]
+    fn every_single_bit_tamper_is_rejected() {
+        let (receipt, proof) = fixture();
+
+        let mut p = proof.clone();
+        p.record[10] ^= 1;
+        assert!(verify_membership(&p, &receipt).is_err());
+
+        let mut p = proof.clone();
+        p.path[0][31] ^= 1;
+        assert_eq!(verify_membership(&p, &receipt), Err(VerifyError::RootMismatch));
+
+        let mut p = proof.clone();
+        p.slot = 0;
+        assert!(verify_membership(&p, &receipt).is_err());
+
+        let mut p = proof.clone();
+        p.id = 3;
+        assert_eq!(verify_membership(&p, &receipt), Err(VerifyError::IdMismatch));
+
+        let mut p = proof.clone();
+        p.shard = 5;
+        assert_eq!(verify_membership(&p, &receipt), Err(VerifyError::ShardOutOfRange));
+
+        let mut p = proof.clone();
+        p.capacity = 3;
+        assert_eq!(verify_membership(&p, &receipt), Err(VerifyError::PathShape));
+
+        let mut r = receipt.clone();
+        r.merkle_root[0] ^= 1;
+        assert_eq!(verify_membership(&proof, &r), Err(VerifyError::CombinedRootMismatch));
+
+        let mut r = receipt.clone();
+        r.shard_roots[1][0] ^= 1;
+        assert_eq!(verify_membership(&proof, &r), Err(VerifyError::CombinedRootMismatch));
+    }
+
+    #[test]
+    fn receipt_json_roundtrip() {
+        let (receipt, proof) = fixture();
+        let r2 = Receipt::from_json(&receipt.to_json()).unwrap();
+        assert_eq!(receipt, r2);
+        let p2 = MembershipProof::from_json(&proof.to_json()).unwrap();
+        assert_eq!(proof, p2);
+        // parse survives a serialize->parse cycle through text
+        let text = receipt.to_json().to_string();
+        let parsed = crate::json::parse(&text).unwrap();
+        assert_eq!(Receipt::from_json(&parsed).unwrap(), receipt);
+        assert!(Receipt::from_json(&Json::Null).is_none());
+        assert!(MembershipProof::from_json(&Json::Int(3)).is_none());
+    }
+
+    #[test]
+    fn tombstone_membership_verifies() {
+        let enc = leaf::encode_tombstone(7);
+        let mut t = MerkleTree::new();
+        t.set_leaf(0, &enc);
+        let shard_roots = vec![t.root()];
+        let receipt = Receipt {
+            state_version: 2,
+            seq: 2,
+            snapshot_hash: [0; 32],
+            wal_hash: 0,
+            merkle_root: combined_root(&shard_roots),
+            shard_roots,
+        };
+        let proof = MembershipProof {
+            id: 7,
+            shard: 0,
+            slot: 0,
+            capacity: 1,
+            record: enc,
+            path: vec![],
+        };
+        assert_eq!(verify_membership(&proof, &receipt), Ok(()));
+    }
+}

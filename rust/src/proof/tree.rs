@@ -1,0 +1,305 @@
+//! Deterministic binary Merkle tree over per-slot digests.
+//!
+//! Shape rule: the leaf layer always holds `capacity = next_pow2(slots)`
+//! leaves; slots beyond the arena hash the fixed empty-slot sentinel
+//! (`0x00`). Because capacity is a pure function of the slot count and the
+//! slot count is a pure function of the command log, two replicas that
+//! applied the same log have bit-identical trees — no balancing decisions,
+//! no insertion-order sensitivity.
+//!
+//! Domain separation (second-preimage hardening): leaves hash as
+//! `SHA256(0x00 ‖ encoding)`, internal nodes as `SHA256(0x01 ‖ L ‖ R)`, and
+//! the cross-shard combined root as `SHA256(0x02 ‖ n ‖ roots…)` — a leaf
+//! encoding can never be confused with a node pair.
+//!
+//! Updates are incremental: [`MerkleTree::set_leaf`] recomputes exactly the
+//! `log2(capacity)` internal nodes on the slot's root path. Capacity growth
+//! doubles the leaf layer and rebuilds from the *cached leaf hashes*
+//! (amortized O(1) per insert, and it never re-reads record bytes).
+
+#![forbid(unsafe_code)]
+
+use crate::hash::sha256;
+
+/// Domain tag for leaf hashes.
+pub const LEAF_DOMAIN: u8 = 0x00;
+/// Domain tag for internal-node hashes.
+pub const NODE_DOMAIN: u8 = 0x01;
+/// Domain tag for the cross-shard combined root fold.
+pub const ROOT_DOMAIN: u8 = 0x02;
+
+/// Canonical encoding of a never-used slot (single sentinel byte).
+pub const EMPTY_SLOT_ENCODING: [u8; 1] = [0x00];
+
+/// `SHA256(0x00 ‖ encoding)` — digest of one slot's canonical encoding.
+pub fn leaf_hash(encoding: &[u8]) -> [u8; 32] {
+    let mut buf = Vec::with_capacity(1 + encoding.len());
+    buf.push(LEAF_DOMAIN);
+    buf.extend_from_slice(encoding);
+    sha256(&buf)
+}
+
+/// `SHA256(0x01 ‖ left ‖ right)` — internal node over two children.
+pub fn node_hash(left: &[u8; 32], right: &[u8; 32]) -> [u8; 32] {
+    let mut buf = [0u8; 65];
+    buf[0] = NODE_DOMAIN;
+    buf[1..33].copy_from_slice(left);
+    buf[33..65].copy_from_slice(right);
+    sha256(&buf)
+}
+
+/// `SHA256(0x02 ‖ n_shards ‖ root_0 ‖ …)` — the collection-level root over
+/// per-shard Merkle roots (the Merkle analogue of
+/// [`crate::state::sharded::root_hash_of`]).
+pub fn combined_root(shard_roots: &[[u8; 32]]) -> [u8; 32] {
+    let mut buf = Vec::with_capacity(5 + shard_roots.len() * 32);
+    buf.push(ROOT_DOMAIN);
+    buf.extend_from_slice(&(shard_roots.len() as u32).to_le_bytes());
+    for r in shard_roots {
+        buf.extend_from_slice(r);
+    }
+    sha256(&buf)
+}
+
+/// Recompute a shard root from a leaf encoding, its slot, and a sibling
+/// path (one digest per level, bottom-up). This is the offline side of a
+/// membership proof: no tree, no state, just `path.len()` hashes.
+pub fn fold_path(leaf_encoding: &[u8], slot: usize, path: &[[u8; 32]]) -> [u8; 32] {
+    let mut h = leaf_hash(leaf_encoding);
+    let mut idx = slot;
+    for sib in path {
+        h = if idx % 2 == 0 { node_hash(&h, sib) } else { node_hash(sib, &h) };
+        idx /= 2;
+    }
+    h
+}
+
+/// Incrementally-maintained Merkle tree. `levels[0]` is the leaf-hash
+/// layer (length = capacity, a power of two); `levels.last()` is `[root]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MerkleTree {
+    levels: Vec<Vec<[u8; 32]>>,
+    /// `empties[l]` = root of an all-empty subtree of height `l`
+    /// (precomputed so growth and padding never rehash sentinel bytes).
+    empties: Vec<[u8; 32]>,
+}
+
+impl Default for MerkleTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MerkleTree {
+    /// Empty tree: capacity 1, root = hash of the empty-slot sentinel.
+    pub fn new() -> Self {
+        let e0 = leaf_hash(&EMPTY_SLOT_ENCODING);
+        Self { levels: vec![vec![e0]], empties: vec![e0] }
+    }
+
+    /// Leaf-layer width (always a power of two, ≥ 1).
+    pub fn capacity(&self) -> usize {
+        self.levels[0].len()
+    }
+
+    /// Number of internal levels above the leaves = `log2(capacity)`.
+    pub fn depth(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    /// Current root digest.
+    pub fn root(&self) -> [u8; 32] {
+        self.levels[self.levels.len() - 1][0]
+    }
+
+    /// Set slot `slot` to the digest of `encoding`, growing capacity if
+    /// needed, and recompute the O(log n) root path.
+    pub fn set_leaf(&mut self, slot: usize, encoding: &[u8]) {
+        self.set_leaf_hash(slot, leaf_hash(encoding));
+    }
+
+    fn set_leaf_hash(&mut self, slot: usize, h: [u8; 32]) {
+        self.ensure_capacity(slot + 1);
+        self.levels[0][slot] = h;
+        let mut idx = slot;
+        for l in 0..self.levels.len() - 1 {
+            idx /= 2;
+            let combined = node_hash(&self.levels[l][idx * 2], &self.levels[l][idx * 2 + 1]);
+            self.levels[l + 1][idx] = combined;
+        }
+    }
+
+    /// Grow the leaf layer to `next_pow2(n)` and rebuild the internal
+    /// levels from the cached leaf hashes. Doubling keeps this amortized
+    /// O(1) per insert.
+    fn ensure_capacity(&mut self, n: usize) {
+        if n <= self.levels[0].len() {
+            return;
+        }
+        let new_cap = n.next_power_of_two();
+        let depth = new_cap.trailing_zeros() as usize;
+        while self.empties.len() <= depth {
+            let last = self.empties[self.empties.len() - 1];
+            self.empties.push(node_hash(&last, &last));
+        }
+        let mut leaves = std::mem::take(&mut self.levels[0]);
+        leaves.resize(new_cap, self.empties[0]);
+        let mut levels = vec![leaves];
+        for l in 0..depth {
+            let mut above = Vec::with_capacity(levels[l].len() / 2);
+            for pair in levels[l].chunks_exact(2) {
+                above.push(node_hash(&pair[0], &pair[1]));
+            }
+            levels.push(above);
+        }
+        self.levels = levels;
+    }
+
+    /// Digest stored at `(level, index)`; `None` out of range. Level 0 is
+    /// the leaf layer.
+    pub fn hash_at(&self, level: usize, index: usize) -> Option<[u8; 32]> {
+        self.levels.get(level)?.get(index).copied()
+    }
+
+    /// Contiguous digests `[from, from+count)` at `level`; `None` if any
+    /// index is out of range. This is the bisection wire for Merkle-diff
+    /// repair ([`crate::replication`]).
+    pub fn level_hashes(&self, level: usize, from: usize, count: usize) -> Option<&[[u8; 32]]> {
+        let row = self.levels.get(level)?;
+        let end = from.checked_add(count)?;
+        row.get(from..end)
+    }
+
+    /// Sibling path for `slot`, bottom-up (one digest per level). Folded
+    /// with [`fold_path`] it reproduces [`Self::root`]. `None` if `slot`
+    /// is beyond capacity.
+    pub fn proof_path(&self, slot: usize) -> Option<Vec<[u8; 32]>> {
+        if slot >= self.capacity() {
+            return None;
+        }
+        let mut path = Vec::with_capacity(self.depth());
+        let mut idx = slot;
+        for l in 0..self.depth() {
+            path.push(self.levels[l][idx ^ 1]);
+            idx /= 2;
+        }
+        Some(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_tree_root_is_sentinel_leaf() {
+        let t = MerkleTree::new();
+        assert_eq!(t.capacity(), 1);
+        assert_eq!(t.depth(), 0);
+        assert_eq!(t.root(), leaf_hash(&EMPTY_SLOT_ENCODING));
+        assert_eq!(t.proof_path(0), Some(vec![]));
+        assert_eq!(t.proof_path(1), None);
+    }
+
+    #[test]
+    fn incremental_matches_scratch_rebuild() {
+        // Apply leaves one by one to tree A; build tree B from scratch in
+        // a different order. Roots must agree at every prefix of A.
+        let encodings: Vec<Vec<u8>> =
+            (0..13u8).map(|i| vec![i, i.wrapping_mul(7), 0xab]).collect();
+        let mut a = MerkleTree::new();
+        for (slot, enc) in encodings.iter().enumerate() {
+            a.set_leaf(slot, enc);
+            let mut b = MerkleTree::new();
+            for (s2, e2) in encodings.iter().enumerate().take(slot + 1).rev() {
+                b.set_leaf(s2, e2);
+            }
+            assert_eq!(a.root(), b.root(), "prefix {}", slot + 1);
+        }
+        assert_eq!(a.capacity(), 16);
+        assert_eq!(a.depth(), 4);
+    }
+
+    #[test]
+    fn growth_preserves_existing_leaves() {
+        let mut t = MerkleTree::new();
+        t.set_leaf(0, b"first");
+        let h0 = t.hash_at(0, 0).unwrap();
+        t.set_leaf(9, b"tenth"); // forces capacity 1 -> 16
+        assert_eq!(t.capacity(), 16);
+        assert_eq!(t.hash_at(0, 0), Some(h0));
+        assert_eq!(t.hash_at(0, 3), Some(leaf_hash(&EMPTY_SLOT_ENCODING)));
+    }
+
+    #[test]
+    fn proof_path_folds_to_root() {
+        let mut t = MerkleTree::new();
+        for slot in 0..6usize {
+            t.set_leaf(slot, &[slot as u8; 5]);
+        }
+        for slot in 0..t.capacity() {
+            let path = t.proof_path(slot).unwrap();
+            assert_eq!(path.len(), t.depth());
+            let enc: Vec<u8> = if slot < 6 {
+                vec![slot as u8; 5]
+            } else {
+                EMPTY_SLOT_ENCODING.to_vec()
+            };
+            assert_eq!(fold_path(&enc, slot, &path), t.root());
+        }
+    }
+
+    #[test]
+    fn tampered_path_or_leaf_changes_root() {
+        let mut t = MerkleTree::new();
+        for slot in 0..4usize {
+            t.set_leaf(slot, &[slot as u8, 0x55]);
+        }
+        let mut path = t.proof_path(2).unwrap();
+        assert_eq!(fold_path(&[2, 0x55], 2, &path), t.root());
+        // single-bit tamper in the leaf
+        assert_ne!(fold_path(&[2, 0x54], 2, &path), t.root());
+        // single-bit tamper in a sibling digest
+        path[0][0] ^= 1;
+        assert_ne!(fold_path(&[2, 0x55], 2, &path), t.root());
+        // wrong slot index (changes fold orientation)
+        assert_ne!(fold_path(&[2, 0x55], 3, &t.proof_path(2).unwrap()), t.root());
+    }
+
+    #[test]
+    fn level_hashes_ranges() {
+        let mut t = MerkleTree::new();
+        for slot in 0..8usize {
+            t.set_leaf(slot, &[slot as u8]);
+        }
+        assert_eq!(t.level_hashes(0, 0, 8).unwrap().len(), 8);
+        assert_eq!(t.level_hashes(1, 2, 2).unwrap().len(), 2);
+        assert_eq!(t.level_hashes(3, 0, 1).unwrap()[0], t.root());
+        assert!(t.level_hashes(0, 7, 2).is_none());
+        assert!(t.level_hashes(4, 0, 1).is_none());
+        // children at level l fold into level l+1
+        let kids = t.level_hashes(0, 4, 2).unwrap();
+        assert_eq!(node_hash(&kids[0], &kids[1]), t.hash_at(1, 2).unwrap());
+    }
+
+    #[test]
+    fn combined_root_is_length_and_order_sensitive() {
+        let a = leaf_hash(b"a");
+        let b = leaf_hash(b"b");
+        assert_ne!(combined_root(&[a, b]), combined_root(&[b, a]));
+        assert_ne!(combined_root(&[a]), combined_root(&[a, a]));
+        assert_eq!(combined_root(&[a, b]), combined_root(&[a, b]));
+    }
+
+    #[test]
+    fn domain_separation_leaf_vs_node() {
+        // A 64-byte "encoding" that mimics two concatenated digests must
+        // not collide with the internal node over those digests.
+        let l = leaf_hash(b"left");
+        let r = leaf_hash(b"right");
+        let mut fake = Vec::new();
+        fake.extend_from_slice(&l);
+        fake.extend_from_slice(&r);
+        assert_ne!(leaf_hash(&fake), node_hash(&l, &r));
+    }
+}

@@ -21,6 +21,15 @@
 //! and [`sync_all_collections`] discovers and mirrors a whole fleet onto
 //! a fresh follower (collection-by-collection, shard-by-shard,
 //! first-error-wins).
+//!
+//! When hashes *disagree*, the FNV root only says "diverged"; the Merkle
+//! trees of [`crate::proof`] say **where**. [`merkle_diff_repair`] walks
+//! the per-shard trees top-down over `GET …/proof` (two child hashes per
+//! diverged node per level — O(d · log n) hashes for d diverged records,
+//! never the full state), pinpoints the exact diverged slots, ships each
+//! one's canonical leaf encoding from the primary, and installs it on the
+//! follower via `POST …/repair` (un-logged state surgery; see
+//! [`crate::state::Kernel::repair_slot`]).
 
 #![forbid(unsafe_code)]
 
@@ -542,6 +551,174 @@ pub fn migrate_collection(
         )));
     }
     Ok(MigrationReport { bytes: sent, puts, root: root_a })
+}
+
+/// Outcome of one record-level divergence repair (paper §9's convergence
+/// check, sharpened to record granularity by [`crate::proof`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepairReport {
+    /// Every diverged record the walk pinpointed: `(shard, slot, id)`.
+    pub diverged: Vec<(u32, u32, u64)>,
+    /// Tree hashes fetched across both nodes during the bisection —
+    /// O(d · log n) for d diverged records, never O(n).
+    pub hashes_transferred: usize,
+    /// Canonical leaf encodings shipped primary → follower.
+    pub records_transferred: usize,
+    /// The follower's combined Merkle root after repair, hex — verified
+    /// bit-identical to the primary's before returning.
+    pub root: String,
+}
+
+/// Record-level divergence repair: compare two nodes' Merkle receipts for
+/// one collection, bisect every diverged shard tree top-down to the exact
+/// slots that disagree, and overwrite each one on the follower with the
+/// primary's canonical leaf encoding.
+///
+/// The walk is the whole point: where log re-shipping moves O(n) state to
+/// fix one flipped bit, this moves `2·log2(capacity)` hashes per diverged
+/// record plus the one record itself. Both nodes must have applied the
+/// same log prefix (equal `seq`/tree shape — slot→id assignment is a pure
+/// function of the log); structural divergence fails loudly and needs a
+/// real re-sync instead.
+pub fn merkle_diff_repair(
+    primary: &std::net::SocketAddr,
+    follower: &std::net::SocketAddr,
+    collection: &str,
+) -> std::io::Result<RepairReport> {
+    use crate::json::Json;
+    use crate::proof::Receipt;
+
+    fn get_data(
+        conn: &mut client::Connection,
+        path: &str,
+        what: &str,
+    ) -> std::io::Result<Json> {
+        let (status, body) = conn.get_json(path)?;
+        if status != 200 {
+            return Err(std::io::Error::other(format!("{what} fetch failed: {status}: {body}")));
+        }
+        Ok(body.get("data").clone())
+    }
+
+    fn receipt(data: &Json, who: &str) -> std::io::Result<Receipt> {
+        Receipt::from_json(data)
+            .ok_or_else(|| std::io::Error::other(format!("{who} receipt: bad wire shape")))
+    }
+
+    fn hex_hashes(data: &Json) -> std::io::Result<Vec<String>> {
+        data.get("hashes")
+            .as_array()
+            .unwrap_or(&[])
+            .iter()
+            .map(|h| h.as_str().map(String::from))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| std::io::Error::other("proof response: non-string hash"))
+    }
+
+    let mut pc = client::Connection::connect(primary)?;
+    let mut fc = client::Connection::connect(follower)?;
+    let proof = format!("/v2/collections/{collection}/proof");
+
+    let pr = receipt(&get_data(&mut pc, &proof, "primary receipt")?, "primary")?;
+    let fr = receipt(&get_data(&mut fc, &proof, "follower receipt")?, "follower")?;
+    if pr.shard_roots.len() != fr.shard_roots.len() {
+        return Err(std::io::Error::other(format!(
+            "shard count mismatch: primary {}, follower {} — repair needs a full re-sync",
+            pr.shard_roots.len(),
+            fr.shard_roots.len(),
+        )));
+    }
+    let mut report = RepairReport {
+        diverged: Vec::new(),
+        hashes_transferred: 0,
+        records_transferred: 0,
+        root: crate::hash::hex_lower(&fr.merkle_root),
+    };
+    if pr.merkle_root == fr.merkle_root {
+        return Ok(report); // converged already; nothing moved
+    }
+
+    for shard in 0..pr.shard_roots.len() as u32 {
+        if pr.shard_roots[shard as usize] == fr.shard_roots[shard as usize] {
+            continue;
+        }
+        // Probe the tree shape on both sides (one hash each).
+        let probe = format!("{proof}?shard={shard}&level=0&from=0&count=1");
+        let pd = get_data(&mut pc, &probe, "primary probe")?;
+        let fd = get_data(&mut fc, &probe, "follower probe")?;
+        report.hashes_transferred += 2;
+        let levels = pd.get("levels").as_u64().unwrap_or(0) as usize;
+        let capacity = pd.get("capacity").as_u64().unwrap_or(0);
+        if fd.get("levels").as_u64().unwrap_or(0) as usize != levels
+            || fd.get("capacity").as_u64().unwrap_or(0) != capacity
+        {
+            return Err(std::io::Error::other(format!(
+                "shard {shard}: tree shape mismatch (structural divergence) — \
+                 repair needs a full re-sync"
+            )));
+        }
+        // Top-down bisection: the frontier is the set of diverged node
+        // indices at the current level; each step fetches only their two
+        // children. The shard root already disagrees, so start from it.
+        let mut frontier: Vec<usize> = vec![0];
+        for level in (0..levels.saturating_sub(1)).rev() {
+            let mut next = Vec::new();
+            for &i in &frontier {
+                let path = format!("{proof}?shard={shard}&level={level}&from={}&count=2", 2 * i);
+                let ph = hex_hashes(&get_data(&mut pc, &path, "primary hashes")?)?;
+                let fh = hex_hashes(&get_data(&mut fc, &path, "follower hashes")?)?;
+                report.hashes_transferred += ph.len() + fh.len();
+                for (j, (a, b)) in ph.iter().zip(&fh).enumerate() {
+                    if a != b {
+                        next.push(2 * i + j);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        // The frontier now holds diverged *leaf slots* (a capacity-1 tree
+        // has its leaf as the root, so the initial frontier already did).
+        for slot in frontier {
+            let slot = slot as u32;
+            let leaf =
+                get_data(&mut pc, &format!("{proof}?shard={shard}&slot={slot}"), "primary leaf")?;
+            let hex = leaf
+                .get("record")
+                .as_str()
+                .ok_or_else(|| std::io::Error::other("leaf response missing record"))?;
+            let bytes = hex_decode(hex)
+                .ok_or_else(|| std::io::Error::other("leaf response: bad record hex"))?;
+            let rec = crate::proof::leaf::decode(&bytes)
+                .map_err(|e| std::io::Error::other(format!("leaf response: bad encoding: {e}")))?;
+            let body = Json::object(vec![
+                ("record", Json::str(hex)),
+                ("shard", Json::Int(shard as i64)),
+                ("slot", Json::Int(slot as i64)),
+            ]);
+            let (status, resp) =
+                fc.post_json(&format!("/v2/collections/{collection}/repair"), &body)?;
+            if status != 200 {
+                return Err(std::io::Error::other(format!(
+                    "shard {shard} slot {slot}: repair failed: {status}: {resp}"
+                )));
+            }
+            report.records_transferred += 1;
+            report.diverged.push((shard, slot, rec.id));
+        }
+    }
+
+    // The §9 convergence check, sharpened: after record-level repair the
+    // follower's combined root must equal the primary's, bit for bit.
+    let fr = receipt(&get_data(&mut fc, &proof, "follower receipt")?, "follower")?;
+    if fr.merkle_root != pr.merkle_root {
+        return Err(std::io::Error::other(format!(
+            "REPAIR DID NOT CONVERGE: primary root {}, follower root {}",
+            crate::hash::hex_lower(&pr.merkle_root),
+            crate::hash::hex_lower(&fr.merkle_root),
+        )));
+    }
+    report.root = crate::hash::hex_lower(&fr.merkle_root);
+    Ok(report)
 }
 
 /// Round-trip helper: serialize a command log to a hex-lines string and

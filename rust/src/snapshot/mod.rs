@@ -279,6 +279,20 @@ impl ShardedSnapshot {
         crate::state::sharded::root_hash_of(&fnvs)
     }
 
+    /// Receipt-grade snapshot digest: SHA-256 over the ordered per-shard
+    /// snapshot digests (`sha256(n ‖ d_0 ‖ … ‖ d_{n-1})`, `n` as u32 LE).
+    /// This is the `snapshot_hash` field of a state receipt (see
+    /// [`crate::proof`]) — a pure function of the per-shard audit
+    /// digests, recomputable offline from a snapshot file.
+    pub fn receipt_snapshot_hash(&self) -> [u8; 32] {
+        let mut h = crate::hash::Sha256::new();
+        h.update(&(self.shards.len() as u32).to_le_bytes());
+        for snap in &self.shards {
+            h.update(&snap.sha256);
+        }
+        h.finalize()
+    }
+
     /// Rebuild the sharded kernel, verifying every shard's digests and the
     /// shard-spec consistency of the restored configs.
     pub fn restore(&self) -> Result<ShardedKernel, SnapshotError> {

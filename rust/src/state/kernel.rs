@@ -14,7 +14,8 @@ use crate::distance::{Metric, Scalar};
 use crate::fixed::{FixedFormat, Q16_16};
 use crate::graph::LinkGraph;
 use crate::hash::{splitmix64, Fnv1a64};
-use crate::index::{FlatIndex, Hnsw, HnswParams, QuantSpec, VectorIndex};
+use crate::index::{FlatIndex, Hnsw, HnswParams, QuantSpec, VecStore, VectorIndex};
+use crate::proof::{leaf, LeafBody, LeafRecord, MembershipProof, MerkleTree};
 use crate::state::command::{CanonCommand, Command};
 use crate::vector::{BoundaryError, FixedVector, ValidationPolicy};
 use std::collections::BTreeMap;
@@ -320,6 +321,63 @@ enum IndexImpl {
     Flat(FlatIndex<i32>),
 }
 
+/// The kernel's incrementally-maintained Merkle tree over slot digests
+/// ([`crate::proof`]).
+///
+/// **Derived state**, like the SQ8 code arena: a pure function of the
+/// replayable state, never serialized (snapshot bytes and every golden
+/// fixture are unchanged), rebuilt on decode. Two kernels that compare
+/// equal necessarily hold bit-identical trees, so — exactly like
+/// [`ScanConfig`] — this wrapper compares always-equal rather than
+/// re-hashing what `PartialEq` already compared.
+#[derive(Clone)]
+struct MerkleState {
+    tree: MerkleTree,
+}
+
+impl PartialEq for MerkleState {
+    fn eq(&self, _: &Self) -> bool {
+        true // derived from the compared state (see type docs)
+    }
+}
+
+impl Eq for MerkleState {}
+
+impl fmt::Debug for MerkleState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The full level table is noise in kernel diffs; the root is the
+        // tree for all observable purposes.
+        write!(f, "MerkleState(root={}, capacity={})",
+            crate::hash::hex_lower(&self.tree.root()), self.tree.capacity())
+    }
+}
+
+/// Why an un-logged [`Kernel::repair_slot`] was refused. Closed set,
+/// mapped onto the 1700-range API codes by the node layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepairError {
+    /// Slot beyond the arena (repair never allocates slots — slot
+    /// numbering is log-derived and a missing slot means a missing
+    /// command, which is replication's job, not repair's).
+    SlotOutOfRange,
+    /// The shipped record's id differs from the id this slot has always
+    /// held (slot→id is a pure function of the log; a mismatch means the
+    /// two nodes diverged structurally, not in one record).
+    IdMismatch,
+    /// The shipped vector has the wrong dimensionality for this kernel.
+    DimMismatch,
+}
+
+impl fmt::Display for RepairError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RepairError::SlotOutOfRange => f.write_str("repair slot beyond arena"),
+            RepairError::IdMismatch => f.write_str("repair record id does not match slot"),
+            RepairError::DimMismatch => f.write_str("repair vector has wrong dimension"),
+        }
+    }
+}
+
 /// The deterministic memory kernel (Q16.16 reference contract).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Kernel {
@@ -330,6 +388,9 @@ pub struct Kernel {
     /// Logical clock: number of successfully applied commands (paper §3.1's
     /// `t`).
     seq: u64,
+    /// Derived Merkle tree over slot digests — updated in O(log n) per
+    /// applied command, see [`MerkleState`].
+    merkle: MerkleState,
 }
 
 const MAX_META_KEY: usize = 256;
@@ -352,7 +413,14 @@ impl Kernel {
                 IndexImpl::Flat(FlatIndex::with_quant(config.dim, config.metric, config.quant))
             }
         };
-        Self { config, index, links: LinkGraph::new(), meta: BTreeMap::new(), seq: 0 }
+        Self {
+            config,
+            index,
+            links: LinkGraph::new(),
+            meta: BTreeMap::new(),
+            seq: 0,
+            merkle: MerkleState { tree: MerkleTree::new() },
+        }
     }
 
     pub fn config(&self) -> &KernelConfig {
@@ -463,7 +531,14 @@ impl Kernel {
 
     /// The transition function `F` (paper §3.1): integer-only, pure, total
     /// over validated commands. Errors leave the state untouched.
+    ///
+    /// Every arm records the slots whose canonical leaf encoding it
+    /// changed; on success the Merkle tree recomputes exactly those
+    /// O(log n) root paths ([`crate::proof`]) — never a full rebuild.
     pub fn apply_canon(&mut self, canon: &CanonCommand) -> Result<(), StateError> {
+        // Dirty-slot set for the incremental Merkle update. Tiny (1 for
+        // point commands, batch size for batches, fan-in for deletes).
+        let mut dirty: Vec<u32> = Vec::new();
         match canon {
             CanonCommand::Insert { id, raw } => {
                 // The contract check runs on the canonical path too: a
@@ -478,6 +553,7 @@ impl Kernel {
                     IndexImpl::Hnsw(h) => h.insert(*id, raw.clone()),
                     IndexImpl::Flat(f) => f.insert(*id, raw.clone()),
                 }
+                dirty.extend(self.store_ref().slot_of(*id));
             }
             CanonCommand::InsertBatch { items } => {
                 // Validate the whole batch before touching the index —
@@ -500,10 +576,17 @@ impl Kernel {
                         IndexImpl::Hnsw(h) => h.insert(*id, raw.clone()),
                         IndexImpl::Flat(f) => f.insert(*id, raw.clone()),
                     }
+                    dirty.extend(self.store_ref().slot_of(*id));
                 }
             }
             CanonCommand::Delete { id } => {
                 self.check_owned(*id)?;
+                // Capture the dirtied slots *before* mutating: slot_of is
+                // live-filtered, and remove_node erases the incoming-edge
+                // list whose source records lose an outgoing link (their
+                // leaves encode outgoing links, so they re-hash too).
+                let own_slot = self.store_ref().slot_of(*id);
+                let sources = self.links.links_to(*id);
                 let removed = match &mut self.index {
                     IndexImpl::Hnsw(h) => h.delete(*id),
                     IndexImpl::Flat(f) => f.delete(*id),
@@ -513,6 +596,12 @@ impl Kernel {
                 }
                 self.links.remove_node(*id);
                 self.meta.remove(id);
+                dirty.extend(own_slot);
+                for src in sources {
+                    if src != *id {
+                        dirty.extend(self.store_ref().slot_of(src));
+                    }
+                }
             }
             CanonCommand::Link { from, to } => {
                 // Links live on the shard that owns `from`. `to` can only
@@ -528,6 +617,7 @@ impl Kernel {
                     return Err(StateError::UnknownId(*to));
                 }
                 self.links.link(*from, *to);
+                dirty.extend(self.store_ref().slot_of(*from));
             }
             CanonCommand::Unlink { from, to } => {
                 self.check_owned(*from)?;
@@ -535,6 +625,7 @@ impl Kernel {
                     return Err(StateError::UnknownId(*from));
                 }
                 self.links.unlink(*from, *to);
+                dirty.extend(self.store_ref().slot_of(*from));
             }
             CanonCommand::SetMeta { id, key, value } => {
                 if key.len() > MAX_META_KEY {
@@ -545,7 +636,11 @@ impl Kernel {
                     return Err(StateError::UnknownId(*id));
                 }
                 self.meta.entry(*id).or_default().insert(key.clone(), value.clone());
+                dirty.extend(self.store_ref().slot_of(*id));
             }
+        }
+        for slot in dirty {
+            self.refresh_merkle_slot(slot);
         }
         self.seq += 1;
         Ok(())
@@ -615,8 +710,7 @@ impl Kernel {
         // golden fixture pins this); a quant tier ⇒ version 3 with the
         // spec appended right after the shard spec. Codes themselves are
         // derived state and never appear in either layout.
-        let version =
-            if self.config.quant == QuantSpec::None { STATE_VERSION } else { STATE_VERSION_QUANT };
+        let version = self.state_version();
         e.put_u32(version);
         self.config.encode(e);
         if version == STATE_VERSION_QUANT {
@@ -673,7 +767,19 @@ impl Kernel {
             }
             meta.insert(id, kv);
         }
-        Ok(Self { config, index, links, meta, seq })
+        let mut kernel = Self {
+            config,
+            index,
+            links,
+            meta,
+            seq,
+            merkle: MerkleState { tree: MerkleTree::new() },
+        };
+        // The Merkle tree is derived state: never on the wire, rebuilt
+        // here — exactly like the SQ8 code arena, it can never drift from
+        // the decoded records.
+        kernel.rebuild_merkle();
+        Ok(kernel)
     }
 
     pub fn to_state_bytes(&self) -> Vec<u8> {
@@ -714,6 +820,149 @@ impl Kernel {
             }
             IndexImpl::Flat(f) => (f.exact_arena_bytes(), f.code_arena_bytes()),
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Verifiable state receipts (PR-10, see `crate::proof`)
+    // ------------------------------------------------------------------
+
+    /// The backing slot store, independent of index kind.
+    fn store_ref(&self) -> &VecStore<i32> {
+        match &self.index {
+            IndexImpl::Hnsw(h) => h.store(),
+            IndexImpl::Flat(f) => f.store(),
+        }
+    }
+
+    /// Snapshot format version this kernel serializes as (receipts pin it
+    /// so a verifier knows which decoder applies).
+    pub fn state_version(&self) -> u32 {
+        if self.config.quant == QuantSpec::None { STATE_VERSION } else { STATE_VERSION_QUANT }
+    }
+
+    /// Canonical leaf encoding of one arena slot
+    /// ([`crate::proof::leaf`]: live record, or tombstone). `None` beyond
+    /// the arena — slots inside tree capacity but beyond the arena hash
+    /// the fixed empty sentinel and carry no record.
+    pub fn merkle_leaf_encoding(&self, slot: u32) -> Option<Vec<u8>> {
+        let st = self.store_ref();
+        if (slot as usize) >= st.slots() {
+            return None;
+        }
+        let id = st.external_id(slot);
+        Some(if st.is_alive(slot) {
+            leaf::encode_live(id, st.vec_at(slot), self.meta.get(&id), &self.links.links_from(id))
+        } else {
+            leaf::encode_tombstone(id)
+        })
+    }
+
+    /// Re-hash one slot's leaf and its O(log n) root path.
+    fn refresh_merkle_slot(&mut self, slot: u32) {
+        if let Some(enc) = self.merkle_leaf_encoding(slot) {
+            self.merkle.tree.set_leaf(slot as usize, &enc);
+        }
+    }
+
+    /// Full rebuild from current records — decode-time only; the command
+    /// path is always the incremental per-slot update.
+    fn rebuild_merkle(&mut self) {
+        for slot in 0..self.store_ref().slots() as u32 {
+            self.refresh_merkle_slot(slot);
+        }
+    }
+
+    /// This kernel's (= this shard's) Merkle root over slot digests.
+    pub fn merkle_root(&self) -> [u8; 32] {
+        self.merkle.tree.root()
+    }
+
+    /// Merkle leaf capacity (`next_pow2(slots)`, ≥ 1).
+    pub fn merkle_capacity(&self) -> usize {
+        self.merkle.tree.capacity()
+    }
+
+    /// Number of tree levels (`log2(capacity) + 1`; level 0 = leaves).
+    pub fn merkle_levels(&self) -> usize {
+        self.merkle.tree.depth() + 1
+    }
+
+    /// Digest range `[from, from+count)` at one tree level — the
+    /// bisection wire Merkle-diff repair walks ([`crate::replication`]).
+    pub fn merkle_level(&self, level: usize, from: usize, count: usize) -> Option<Vec<[u8; 32]>> {
+        self.merkle.tree.level_hashes(level, from, count).map(|s| s.to_vec())
+    }
+
+    /// Membership proof for an id this kernel ever owned (live record or
+    /// tombstone — deletion is provable too). `None` for never-inserted
+    /// ids.
+    pub fn merkle_proof(&self, id: u64) -> Option<MembershipProof> {
+        let slot = self.store_ref().any_slot_of(id)?;
+        let record = self.merkle_leaf_encoding(slot)?;
+        let path = self.merkle.tree.proof_path(slot as usize)?;
+        Some(MembershipProof {
+            id,
+            shard: self.config.shard.shard_id as u64,
+            slot: slot as u64,
+            capacity: self.merkle.tree.capacity() as u64,
+            record,
+            path,
+        })
+    }
+
+    /// Un-logged record-level divergence repair: overwrite one slot with
+    /// the canonical record a trusted primary shipped for it.
+    ///
+    /// This is state *surgery*, not a command — it never advances `seq`
+    /// and is never logged, because the two replicas already agree on the
+    /// command history length; what diverged is one slot's contents. The
+    /// slot's id must match (slot→id assignment is a pure function of the
+    /// log; a mismatch means structural divergence that only replay can
+    /// fix). Repairing a live record restores vector bytes, metadata and
+    /// outgoing links; repairing to a tombstone kills the slot and clears
+    /// its meta/outgoing links (incoming links belong to *their* source
+    /// records' leaves and are repaired there).
+    pub fn repair_slot(&mut self, slot: u32, rec: &LeafRecord) -> Result<(), RepairError> {
+        if (slot as usize) >= self.store_ref().slots() {
+            return Err(RepairError::SlotOutOfRange);
+        }
+        if rec.id != self.store_ref().external_id(slot) {
+            return Err(RepairError::IdMismatch);
+        }
+        match &rec.body {
+            LeafBody::Live { vector, meta, links } => {
+                if vector.len() != self.config.dim {
+                    return Err(RepairError::DimMismatch);
+                }
+                match &mut self.index {
+                    IndexImpl::Hnsw(h) => h.repair_slot(slot, Some(vector), true),
+                    IndexImpl::Flat(f) => f.repair_slot(slot, Some(vector), true),
+                }
+                for t in self.links.links_from(rec.id) {
+                    self.links.unlink(rec.id, t);
+                }
+                for &t in links {
+                    self.links.link(rec.id, t);
+                }
+                if meta.is_empty() {
+                    self.meta.remove(&rec.id);
+                } else {
+                    self.meta.insert(rec.id, meta.clone());
+                }
+            }
+            LeafBody::Tombstone => {
+                match &mut self.index {
+                    IndexImpl::Hnsw(h) => h.repair_slot(slot, None, false),
+                    IndexImpl::Flat(f) => f.repair_slot(slot, None, false),
+                }
+                for t in self.links.links_from(rec.id) {
+                    self.links.unlink(rec.id, t);
+                }
+                self.meta.remove(&rec.id);
+            }
+        }
+        self.refresh_merkle_slot(slot);
+        Ok(())
     }
 }
 
@@ -957,6 +1206,87 @@ mod tests {
         assert_eq!(k.arena_bytes(), (10 * 4 * 4, 10 * 4));
         let plain = Kernel::new(KernelConfig::default_q16(4).with_flat_index());
         assert_eq!(plain.arena_bytes(), (0, 0));
+    }
+
+    #[test]
+    fn merkle_rebuild_on_decode_matches_incremental_tree() {
+        let mut k = kernel4();
+        let empty_root = k.merkle_root();
+        for i in 0..20u64 {
+            let x = (i as f32) / 20.0 - 0.5;
+            k.apply(Command::insert(i, v(x, -x, 0.25, 0.0))).unwrap();
+        }
+        k.apply(Command::Link { from: 1, to: 2 }).unwrap();
+        k.apply(Command::SetMeta { id: 3, key: "k".into(), value: "v".into() }).unwrap();
+        // deleting 2 also re-hashes 1's leaf (it loses an outgoing link)
+        k.apply(Command::Delete { id: 2 }).unwrap();
+        assert_ne!(k.merkle_root(), empty_root);
+        assert_eq!(k.merkle_capacity(), 32);
+        let restored = Kernel::from_state_bytes(&k.to_state_bytes()).unwrap();
+        assert_eq!(k.merkle_root(), restored.merkle_root());
+        // the incremental tree keeps matching after further commands
+        let mut k2 = restored.clone();
+        let mut k1 = k.clone();
+        k1.apply(Command::insert(100, v(0.1, 0.2, 0.3, 0.4))).unwrap();
+        k2.apply(Command::insert(100, v(0.1, 0.2, 0.3, 0.4))).unwrap();
+        assert_eq!(k1.merkle_root(), k2.merkle_root());
+    }
+
+    #[test]
+    fn failed_commands_leave_merkle_root_untouched() {
+        let mut k = kernel4();
+        k.apply(Command::insert(1, v(0.5, 0.0, 0.0, 0.0))).unwrap();
+        let root = k.merkle_root();
+        assert!(k.apply(Command::insert(1, v(0.1, 0.0, 0.0, 0.0))).is_err());
+        assert!(k.apply(Command::Delete { id: 9 }).is_err());
+        assert_eq!(k.merkle_root(), root);
+    }
+
+    #[test]
+    fn merkle_proof_and_repair_round_trip() {
+        let mut a = kernel4();
+        let mut b = kernel4();
+        for i in 0..8u64 {
+            let x = (i as f32) / 8.0;
+            a.apply(Command::insert(i, v(x, 0.0, 0.0, 0.0))).unwrap();
+            b.apply(Command::insert(i, v(x, 0.0, 0.0, 0.0))).unwrap();
+        }
+        assert_eq!(a.merkle_root(), b.merkle_root());
+        let proof = a.merkle_proof(3).unwrap();
+        assert_eq!(proof.slot, 3);
+        assert_eq!(proof.capacity as usize, a.merkle_capacity());
+
+        // corrupt b's slot 3 via repair with a bit-flipped (id-matching)
+        // record — seq stays equal, exactly one leaf diverges
+        let mut rec = leaf::decode(&b.merkle_leaf_encoding(3).unwrap()).unwrap();
+        if let LeafBody::Live { vector, .. } = &mut rec.body {
+            vector[0] ^= 1;
+        }
+        b.repair_slot(3, &rec).unwrap();
+        assert_ne!(a.merkle_root(), b.merkle_root());
+        assert_ne!(a.state_hash(), b.state_hash());
+        assert_eq!(a.seq(), b.seq()); // repair never advances the clock
+
+        // repair back from a's canonical leaf: full convergence, both
+        // the Merkle root and the flat FNV state hash
+        let good = leaf::decode(&a.merkle_leaf_encoding(3).unwrap()).unwrap();
+        b.repair_slot(3, &good).unwrap();
+        assert_eq!(a.merkle_root(), b.merkle_root());
+        assert_eq!(a.state_hash(), b.state_hash());
+
+        assert_eq!(b.repair_slot(99, &good), Err(RepairError::SlotOutOfRange));
+        let wrong_id = LeafRecord { id: 7, body: LeafBody::Tombstone };
+        assert_eq!(b.repair_slot(3, &wrong_id), Err(RepairError::IdMismatch));
+        let bad_dim = LeafRecord {
+            id: 3,
+            body: LeafBody::Live { vector: vec![1, 2], meta: BTreeMap::new(), links: vec![] },
+        };
+        assert_eq!(b.repair_slot(3, &bad_dim), Err(RepairError::DimMismatch));
+        // deleted records still prove membership (tombstone leaf)
+        a.apply(Command::Delete { id: 3 }).unwrap();
+        let tomb = a.merkle_proof(3).unwrap();
+        assert_eq!(leaf::decode(&tomb.record).unwrap().body, LeafBody::Tombstone);
+        assert!(a.merkle_proof(999).is_none());
     }
 
     #[test]

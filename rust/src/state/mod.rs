@@ -16,6 +16,7 @@ pub mod sharded;
 
 pub use command::{CanonCommand, Command};
 pub use kernel::{
-    Hit, IndexKind, Kernel, KernelConfig, ScanConfig, ShardSpec, StateError, SCAN_CHUNK_SLOTS,
+    Hit, IndexKind, Kernel, KernelConfig, RepairError, ScanConfig, ShardSpec, StateError,
+    SCAN_CHUNK_SLOTS,
 };
 pub use sharded::{Routed, ShardApply, ShardedKernel};

@@ -84,8 +84,9 @@
 use crate::distance::Scalar;
 use crate::hash::Fnv1a64;
 use crate::index::{Hit as IndexHit, QuantSpec, Quantizer, TopK};
+use crate::proof::{combined_root, LeafRecord, MembershipProof};
 use crate::state::command::{CanonCommand, Command};
-use crate::state::kernel::{Hit, Kernel, KernelConfig, StateError};
+use crate::state::kernel::{Hit, Kernel, KernelConfig, RepairError, StateError};
 use crate::vector::FixedVector;
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -1044,6 +1045,66 @@ impl ShardedKernel {
     pub fn root_hash(&self) -> u64 {
         root_hash_of(&self.shard_hashes())
     }
+
+    // ------------------------------------------------------------------
+    // Verifiable state receipts (PR-10): per-shard Merkle roots and
+    // record-level proofs/repair, alongside the fast FNV manifest above.
+    // See `crate::proof` for the tree and encoding definitions.
+    // ------------------------------------------------------------------
+
+    /// Per-shard Merkle roots — audit-grade SHA-256 companions to
+    /// [`ShardedKernel::shard_hashes`]. Each is maintained incrementally
+    /// by its kernel (O(log n) per applied command).
+    pub fn merkle_shard_roots(&self) -> Vec<[u8; 32]> {
+        self.shards.iter().map(Kernel::merkle_root).collect()
+    }
+
+    /// Combined Merkle root over the ordered per-shard roots
+    /// ([`crate::proof::combined_root`]) — the receipt's headline value.
+    pub fn merkle_root(&self) -> [u8; 32] {
+        combined_root(&self.merkle_shard_roots())
+    }
+
+    /// Membership proof for `id` on its owning shard (live records and
+    /// tombstones alike). `None` if the id was never inserted.
+    pub fn merkle_proof(&self, id: u64) -> Option<MembershipProof> {
+        self.shards[self.shard_of(id) as usize].merkle_proof(id)
+    }
+
+    /// Bisection access for Merkle-diff: `count` node hashes of `shard`'s
+    /// tree at `level` (0 = leaves) starting at `from`. `None` if the
+    /// shard, level, or range is out of bounds.
+    pub fn merkle_level(
+        &self,
+        shard: u32,
+        level: usize,
+        from: usize,
+        count: usize,
+    ) -> Option<Vec<[u8; 32]>> {
+        self.shards.get(shard as usize)?.merkle_level(level, from, count)
+    }
+
+    /// Canonical leaf encoding of `slot` on `shard` (`None` beyond the
+    /// shard's arena) — the byte string a repairer transfers for a
+    /// diverged record.
+    pub fn merkle_leaf_encoding(&self, shard: u32, slot: u32) -> Option<Vec<u8>> {
+        self.shards.get(shard as usize)?.merkle_leaf_encoding(slot)
+    }
+
+    /// Record-level divergence repair on one shard: un-logged state
+    /// surgery that overwrites `slot` with the canonical record (see
+    /// [`Kernel::repair_slot`]; the shard's logical clock is untouched).
+    /// A shard index out of range reports as `SlotOutOfRange`.
+    pub fn repair_slot(
+        &mut self,
+        shard: u32,
+        slot: u32,
+        rec: &LeafRecord,
+    ) -> Result<(), RepairError> {
+        let kernel =
+            self.shards.get_mut(shard as usize).ok_or(RepairError::SlotOutOfRange)?;
+        kernel.repair_slot(slot, rec)
+    }
 }
 
 /// Root hash over an ordered list of per-shard state hashes (exposed so
@@ -1294,6 +1355,50 @@ mod tests {
         let diverged: Vec<usize> =
             (0..4).filter(|&s| ha[s] != hb[s]).collect();
         assert_eq!(diverged, vec![2], "manifest must pinpoint the diverged shard");
+    }
+
+    #[test]
+    fn merkle_roots_pinpoint_and_repair_single_record_divergence() {
+        let mut a = ShardedKernel::new(flat_config(2), 4);
+        let mut b = ShardedKernel::new(flat_config(2), 4);
+        for (id, v) in vecs(60, 2) {
+            a.apply(Command::insert(id, v.clone())).unwrap();
+            b.apply(Command::insert(id, v)).unwrap();
+        }
+        assert_eq!(a.merkle_root(), b.merkle_root());
+        assert_eq!(a.merkle_shard_roots(), b.merkle_shard_roots());
+
+        // corrupt exactly one record on b via the repair path (seq-neutral)
+        let id = 7u64;
+        let shard = b.shard_of(id);
+        let proof = b.merkle_proof(id).unwrap();
+        assert_eq!(proof.shard, shard as u64);
+        let mut rec = crate::proof::leaf::decode(&proof.record).unwrap();
+        if let crate::proof::LeafBody::Live { vector, .. } = &mut rec.body {
+            vector[0] ^= 1;
+        }
+        b.repair_slot(shard, proof.slot as u32, &rec).unwrap();
+        let (ra, rb) = (a.merkle_shard_roots(), b.merkle_shard_roots());
+        let diverged: Vec<usize> = (0..4).filter(|&s| ra[s] != rb[s]).collect();
+        assert_eq!(diverged, vec![shard as usize], "roots must pinpoint the shard");
+        assert_ne!(a.merkle_root(), b.merkle_root());
+
+        // transfer the canonical leaf from a and repair: full convergence
+        let good_slot = a.merkle_proof(id).unwrap().slot as u32;
+        let good = crate::proof::leaf::decode(
+            &a.merkle_leaf_encoding(shard, good_slot).unwrap(),
+        )
+        .unwrap();
+        b.repair_slot(shard, good_slot, &good).unwrap();
+        assert_eq!(a.merkle_root(), b.merkle_root());
+        assert_eq!(a.shard_hashes(), b.shard_hashes());
+        assert_eq!(a.root_hash(), b.root_hash());
+
+        // bisection accessors agree with the proof path
+        let cap = proof.capacity as usize;
+        let leaves = b.merkle_level(shard, 0, 0, cap).unwrap();
+        assert_eq!(leaves.len(), cap);
+        assert!(b.merkle_level(99, 0, 0, 1).is_none());
     }
 
     #[test]

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Regenerate `proof_golden.json`, the cross-implementation receipt fixture.
+
+This is an independent mirror — pure hashlib, no Rust — of the canonical
+leaf encoding (`rust/src/proof/leaf.rs`), the Merkle tree shape and domain
+tags (`rust/src/proof/tree.rs`), and the combined-root fold. The corpus
+below mirrors `golden_corpus()` in `rust/tests/proof.rs` command for
+command; the test pins every per-slot leaf hash, the shard root, the
+combined root, and one membership proof against this file. If the Rust
+side and this mirror ever disagree, the encoding drifted.
+
+Usage:
+    python3 rust/tests/fixtures/make_proof.py
+"""
+
+import hashlib
+import json
+import os
+
+# Domain tags (tree.rs): leaf 0x00, internal node 0x01, combined root 0x02.
+LEAF_DOMAIN = b"\x00"
+NODE_DOMAIN = b"\x01"
+ROOT_DOMAIN = b"\x02"
+# Canonical encoding of a never-used slot.
+EMPTY_SLOT = b"\x00"
+
+
+def sha(data: bytes) -> bytes:
+    return hashlib.sha256(data).digest()
+
+
+def leaf_hash(encoding: bytes) -> bytes:
+    return sha(LEAF_DOMAIN + encoding)
+
+
+def node_hash(left: bytes, right: bytes) -> bytes:
+    return sha(NODE_DOMAIN + left + right)
+
+
+def combined_root(roots: list) -> bytes:
+    return sha(ROOT_DOMAIN + len(roots).to_bytes(4, "little") + b"".join(roots))
+
+
+def u32(n: int) -> bytes:
+    return n.to_bytes(4, "little")
+
+
+def u64(n: int) -> bytes:
+    return n.to_bytes(8, "little")
+
+
+def i32(n: int) -> bytes:
+    return n.to_bytes(4, "little", signed=True)
+
+
+def encode_live(rid: int, raw: list, meta: dict, links: list) -> bytes:
+    """0x01 | id | dim | raw i32s | n_meta | sorted kv | n_links | targets."""
+    out = b"\x01" + u64(rid) + u32(len(raw)) + b"".join(i32(c) for c in raw)
+    out += u32(len(meta))
+    for k in sorted(meta):
+        v = meta[k]
+        out += u32(len(k)) + k.encode() + u32(len(v)) + v.encode()
+    out += u32(len(links)) + b"".join(u64(t) for t in links)
+    return out
+
+
+def encode_tombstone(rid: int) -> bytes:
+    return b"\x02" + u64(rid)
+
+
+def main() -> None:
+    # Corpus = golden_corpus() in rust/tests/proof.rs: five inserts
+    # (dim 3, raw Q16.16 values given directly), two meta pairs on id 1,
+    # two outgoing links on id 0, then Delete {id: 3}. Single shard, so
+    # slot i simply holds id i.
+    slots = []
+    for i in range(5):
+        raw = [i * 65536, 1000 + i, -i * 7]
+        meta = {"kind": "doc", "lang": "en"} if i == 1 else {}
+        links = [2, 4] if i == 0 else []
+        slots.append(encode_live(i, raw, meta, links))
+    slots[3] = encode_tombstone(3)
+
+    capacity = 8  # next_pow2(5 occupied slots)
+    leaves = [leaf_hash(s) for s in slots]
+    leaves += [leaf_hash(EMPTY_SLOT)] * (capacity - len(leaves))
+    levels = [leaves]
+    while len(levels[-1]) > 1:
+        row = levels[-1]
+        levels.append([node_hash(row[i], row[i + 1]) for i in range(0, len(row), 2)])
+    shard_root = levels[-1][0]
+
+    # Membership proof for id 1 (slot 1): sibling digests, bottom-up.
+    slot = 1
+    path, idx = [], slot
+    for level in levels[:-1]:
+        path.append(level[idx ^ 1])
+        idx //= 2
+
+    golden = {
+        "version": 1,
+        "n_shards": 1,
+        "capacity": capacity,
+        "leaf_hashes": [h.hex() for h in leaves],
+        "shard_root": shard_root.hex(),
+        "merkle_root": combined_root([shard_root]).hex(),
+        "proof_id1": {
+            "id": 1,
+            "shard": 0,
+            "slot": slot,
+            "capacity": capacity,
+            "record": slots[1].hex(),
+            "path": [h.hex() for h in path],
+        },
+    }
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "proof_golden.json")
+    with open(out, "w") as f:
+        json.dump(golden, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

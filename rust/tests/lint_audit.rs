@@ -212,6 +212,8 @@ fn zone_map_spot_checks() {
         ("codec/mod.rs", Zone::State),
         ("wal/mod.rs", Zone::State),
         ("distance/mod.rs", Zone::State),
+        ("proof/mod.rs", Zone::State),
+        ("proof/tree.rs", Zone::State),
         ("distance/float.rs", Zone::Exempt), // file override beats its state dir
         ("http/reactor.rs", Zone::Boundary),
         ("api/mod.rs", Zone::Boundary),

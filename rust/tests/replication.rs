@@ -105,6 +105,98 @@ fn http_replication_with_concurrent_primary_writes() {
     follower.stop();
 }
 
+/// A follower whose state silently diverged in ONE record (same seq, same
+/// log — a flipped bit, paper §9's nightmare case) converges again via the
+/// Merkle-diff walk: O(log n) hashes plus the one record cross the wire,
+/// not the whole state.
+#[test]
+fn merkle_diff_repairs_single_record_divergence_over_http() {
+    use valori::index::QuantSpec;
+    use valori::node::{serve_collections, CollectionManager, CollectionSpec, ManagerConfig};
+    use valori::proof::LeafBody;
+    use valori::replication::merkle_diff_repair;
+
+    let manager = || {
+        Arc::new(
+            CollectionManager::new(
+                ManagerConfig {
+                    spec: CollectionSpec::new(8, 4, true, QuantSpec::None),
+                    workers: 2,
+                    data_dir: None,
+                    default_wal: None,
+                    governor: Default::default(),
+                },
+                None,
+            )
+            .unwrap(),
+        )
+    };
+    let p_mgr = manager();
+    let f_mgr = manager();
+    let p_state = p_mgr.get("default").unwrap();
+    let f_state = f_mgr.get("default").unwrap();
+    // Identical history on both nodes: inserts, a link, meta, a delete.
+    for state in [&p_state, &f_state] {
+        for i in 0..60u64 {
+            let v: Vec<f32> = (0..8).map(|j| ((i * 8 + j) as f32 * 0.013).sin() * 0.6).collect();
+            state.apply(Command::insert(i, v)).unwrap();
+        }
+        state.apply(Command::Link { from: 3, to: 7 }).unwrap();
+        state
+            .apply(Command::SetMeta { id: 7, key: "k".into(), value: "v".into() })
+            .unwrap();
+        state.apply(Command::Delete { id: 11 }).unwrap();
+    }
+    assert_eq!(
+        p_state.with_sharded(|sk| sk.root_hash()),
+        f_state.with_sharded(|sk| sk.root_hash())
+    );
+    // Corrupt one record on the follower via un-logged state surgery:
+    // seq stays equal, so log shipping can never catch this.
+    let proof = f_state.with_sharded(|sk| sk.merkle_proof(7)).unwrap();
+    let mut rec = valori::proof::leaf::decode(&proof.record).unwrap();
+    match &mut rec.body {
+        LeafBody::Live { vector, .. } => vector[0] ^= 1,
+        LeafBody::Tombstone => panic!("id 7 must be live"),
+    }
+    f_state.repair_slot(proof.shard as u32, proof.slot as u32, &rec).unwrap();
+    assert_ne!(
+        p_state.with_sharded(|sk| sk.root_hash()),
+        f_state.with_sharded(|sk| sk.root_hash()),
+        "corruption must diverge the FNV root"
+    );
+
+    let p_srv = serve_collections(Arc::clone(&p_mgr), "127.0.0.1:0", 2).unwrap();
+    let f_srv = serve_collections(Arc::clone(&f_mgr), "127.0.0.1:0", 2).unwrap();
+    let report = merkle_diff_repair(&p_srv.addr(), &f_srv.addr(), "default").unwrap();
+    assert_eq!(report.records_transferred, 1);
+    assert_eq!(report.diverged, vec![(proof.shard as u32, proof.slot as u32, 7)]);
+    // O(log n) on the wire: 2 shape probes + 2 sides x 2 children per
+    // level of the walk — never the full leaf level.
+    let depth = proof.path.len();
+    assert!(
+        report.hashes_transferred <= 2 + 4 * depth.max(1),
+        "walk moved {} hashes for a depth-{depth} tree",
+        report.hashes_transferred
+    );
+    // Full convergence: FNV roots and Merkle roots both bit-identical.
+    assert_eq!(
+        p_state.with_sharded(|sk| sk.root_hash()),
+        f_state.with_sharded(|sk| sk.root_hash())
+    );
+    assert_eq!(
+        p_state.with_sharded(|sk| sk.merkle_root()),
+        f_state.with_sharded(|sk| sk.merkle_root())
+    );
+    // A second walk is a no-op: already converged, nothing moves.
+    let again = merkle_diff_repair(&p_srv.addr(), &f_srv.addr(), "default").unwrap();
+    assert_eq!(again.records_transferred, 0);
+    assert_eq!(again.hashes_transferred, 0);
+    assert_eq!(again.root, report.root);
+    p_srv.stop();
+    f_srv.stop();
+}
+
 #[test]
 fn follower_rejects_conflicting_history() {
     // A follower that already applied a conflicting command must error
